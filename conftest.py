@@ -1,0 +1,8 @@
+"""Allow running `pytest python/tests/` from the repo root: the build-time
+python package lives under python/ (it is not installed — it only runs at
+`make artifacts` time)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,119 @@
+//! P/D adjustment walkthrough (paper §3.3 / Fig. 12c): a scenario's
+//! prompt-engineering update doubles its generation length; the monitor
+//! sees E2E rise while the T_p/E2E share falls, recommends MoreDecode,
+//! the Eq.-1 optimizer picks the new ratio, and dynamic RoCE construction
+//! applies it without interrupting the group.
+//!
+//! Run: `cargo run --release --example pd_adjustment`
+
+use pd_serve::cluster::device::{DeviceId, RoceIp};
+use pd_serve::cluster::engine::EngineModel;
+use pd_serve::cluster::instance::{Instance, InstanceId, Role};
+use pd_serve::coordinator::group::GroupId;
+use pd_serve::coordinator::ratio::{
+    detect_bottleneck, optimal_ratio, Adjustment, DetectorThresholds, WorkloadProfile,
+};
+use pd_serve::coordinator::roce::adjust_ratio;
+use pd_serve::coordinator::setup::{setup_group, SetupConfig};
+use pd_serve::coordinator::MetaStore;
+use pd_serve::serving::sim::{SimConfig, Simulation, WorkloadKind};
+use pd_serve::util::config::ServingConfig;
+use pd_serve::workload::Scenario;
+
+fn scene(gen_mean: f64) -> Scenario {
+    Scenario {
+        name: "scene3", service: "svcA",
+        prompt_mean: 650.0, prompt_cv: 0.45,
+        n_prefixes: 8, prefix_frac: 0.5,
+        gen_mean, gen_cv: 0.6, weight: 1.0,
+    }
+}
+
+fn measure(n_p: usize, n_d: usize, gen_mean: f64) -> (f64, f64, f64) {
+    let mut serving = ServingConfig::default();
+    serving.ttft_slo_ms_per_1k = 1e9; // latency measurement: no censoring
+    serving.ttft_slo_floor_ms = 1e9;
+    let cfg = SimConfig {
+        n_p,
+        n_d,
+        serving,
+        scenarios: vec![scene(gen_mean)],
+        only_scenario: Some(0),
+        // Saturating concurrency so capacity (not the closed loop) is the
+        // bottleneck being measured.
+        workload: WorkloadKind::Closed { concurrency: (n_p + n_d) * 16, requests: 400 },
+        seed: 0xADA,
+        ..Default::default()
+    };
+    let out = Simulation::run(cfg);
+    (
+        out.report.rps(),
+        out.report.e2e.mean(),
+        out.report.ttft_share_of_e2e(),
+    )
+}
+
+fn inst(id: u32) -> Instance {
+    Instance::stateless(
+        InstanceId(id),
+        vec![DeviceId(id * 8)],
+        vec![RoceIp { region: 0, host: id as u16 }],
+        1 << 20,
+        4096,
+    )
+}
+
+fn main() {
+    // --- before: group tuned for short generations (G ≈ 75) ---------------
+    let (np0, nd0) = (3usize, 5usize);
+    let (rps0, e2e0, share0) = measure(np0, nd0, 75.0);
+    println!("before content change  P:D = {np0}:{nd0}  {rps0:.2} rps, E2E {e2e0:.0} ms, T_p share {:.1}%", share0 * 100.0);
+
+    // --- content change: prompt engineering doubles generation ------------
+    let (rps1, e2e1, share1) = measure(np0, nd0, 300.0);
+    println!("after  content change  P:D = {np0}:{nd0}  {rps1:.2} rps, E2E {e2e1:.0} ms, T_p share {:.1}%", share1 * 100.0);
+
+    // --- the monitor raises the alarm --------------------------------------
+    let adj = detect_bottleneck(e2e0, share0, e2e1, share1, &DetectorThresholds::default());
+    println!("detector: {adj:?}");
+    assert_eq!(adj, Adjustment::MoreDecode);
+
+    // --- Eq. 1 picks the new ratio -----------------------------------------
+    let engine = EngineModel::default();
+    let profile = WorkloadProfile::from_means(650, 585, 300, 4, 16, 8.0);
+    let (np1, nd1) = optimal_ratio(&engine, &profile, np0 + nd0, 1);
+    println!("Eq. 1 recommends P:D = {np1}:{nd1}");
+
+    // --- dynamic RoCE construction applies it without interruption --------
+    let mut meta = MetaStore::new();
+    let mut members_roles: Vec<(Instance, Role)> = (0..np0 as u32)
+        .map(|i| (inst(i), Role::Prefill))
+        .chain((np0 as u32..(np0 + nd0) as u32).map(|i| (inst(i), Role::Decode)))
+        .collect();
+    let cfg = SetupConfig::default();
+    let (mut group, _) = setup_group(
+        &mut meta, GroupId(0), "svcA", "scene3", &mut members_roles, &cfg, 4, 16,
+    )
+    .expect("setup");
+    let mut members: Vec<Instance> = members_roles.into_iter().map(|(i, _)| i).collect();
+    let mut spares: Vec<Instance> = (100..104).map(inst).collect();
+    let traces = adjust_ratio(
+        &mut meta, &mut group, &mut members, &mut spares, np1, nd1, &cfg, 4, 16,
+    )
+    .expect("adjust");
+    println!(
+        "dynamic RoCE construction: {} joins, group now {:?}, mesh complete: {}",
+        traces.len(),
+        group.ratio(),
+        group.fully_connected()
+    );
+
+    // --- after adjustment ---------------------------------------------------
+    let (rps2, e2e2, share2) = measure(np1, nd1, 300.0);
+    println!("after  ratio adjustment P:D = {np1}:{nd1}  {rps2:.2} rps, E2E {e2e2:.0} ms, T_p share {:.1}%", share2 * 100.0);
+    println!(
+        "\nthroughput recovered: {rps1:.2} -> {rps2:.2} rps (+{:.0}%)",
+        (rps2 / rps1 - 1.0) * 100.0
+    );
+    assert!(rps2 > rps1, "ratio adjustment must improve throughput");
+}

@@ -1,0 +1,228 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts for rust.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path. Emits, per model variant:
+
+- ``prefill_p{P}.hlo.txt``  — one artifact per prompt-length bucket P
+- ``decode_b{B}.hlo.txt``   — one artifact per decode batch size B
+- ``meta.json``             — shapes/layout the rust runtime needs
+- ``golden.json``           — input/output vectors for rust runtime tests
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Weights are closed over, i.e. baked into the HLO as constants: the artifact
+is the paper's "pre-compiled model" that instances load from a file service.
+
+Perf notes (L2, DESIGN.md §Perf): the KVCache is threaded through both
+entry points and updated with ``dynamic_update_slice`` (no recompute, no
+gather/scatter materialization); layers are unrolled (depth 4) so XLA fuses
+norm+matmul+residual chains; the cache argument is donated in spirit — the
+rust runtime feeds the output buffer of step t as the input of step t+1
+without a host round-trip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (ModelConfig, decode_step, empty_decode_cache,
+                    empty_prefill_cache, init_params, prefill_step)
+
+PREFILL_BUCKETS = (16, 64)
+DECODE_BATCH = 4
+GOLDEN_PROMPT = b"Hello, P/D-Serve! disaggregated serving at scale."
+GOLDEN_DECODE_STEPS = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the baked weights must round-trip through the
+    # text parser — the default elides them as "{...}".
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_fns(cfg: ModelConfig, seed: int = 0):
+    """Jitted prefill/decode closures with weights baked in."""
+    params = init_params(cfg, seed)
+
+    def prefill(tokens, start, nnew, cache):
+        return prefill_step(params, cfg, tokens, start, nnew, cache)
+
+    def decode(tokens, lens, cache):
+        return decode_step(params, cfg, tokens, lens, cache)
+
+    return params, jax.jit(prefill), jax.jit(decode)
+
+
+def lower_prefill(prefill, cfg: ModelConfig, p: int) -> str:
+    s32 = jnp.int32
+    lowered = jax.jit(prefill).lower(
+        jax.ShapeDtypeStruct((p,), s32),
+        jax.ShapeDtypeStruct((), s32),
+        jax.ShapeDtypeStruct((), s32),
+        jax.ShapeDtypeStruct((cfg.n_layers, 2, cfg.n_heads, cfg.max_len,
+                              cfg.head_dim), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_scatter(cfg: ModelConfig, b: int) -> str:
+    """The paper's *operator* RecvScatter (§3.6): restore a received
+    contiguous KVCache (bytes, one prefill request) into slot ``slot`` of the
+    decode instance's block-organized cache, entirely on-device. The
+    *function* variant (host-side byte scatter) lives in rust
+    ``kvcache::scatter``; both are tested for equivalence."""
+
+    def scatter(dcache, slot, pcache):
+        # dcache: [L, 2, B, H, M, hd], pcache: [L, 2, H, M, hd]
+        upd = pcache[:, :, None]  # [L, 2, 1, H, M, hd]
+        return jax.lax.dynamic_update_slice(
+            dcache, upd, (0, 0, slot, 0, 0, 0))
+
+    s32 = jnp.int32
+    lowered = jax.jit(scatter).lower(
+        jax.ShapeDtypeStruct((cfg.n_layers, 2, b, cfg.n_heads, cfg.max_len,
+                              cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((), s32),
+        jax.ShapeDtypeStruct((cfg.n_layers, 2, cfg.n_heads, cfg.max_len,
+                              cfg.head_dim), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_decode(decode, cfg: ModelConfig, b: int) -> str:
+    s32 = jnp.int32
+    lowered = jax.jit(decode).lower(
+        jax.ShapeDtypeStruct((b,), s32),
+        jax.ShapeDtypeStruct((b,), s32),
+        jax.ShapeDtypeStruct((cfg.n_layers, 2, b, cfg.n_heads, cfg.max_len,
+                              cfg.head_dim), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def make_golden(cfg: ModelConfig, prefill, decode) -> dict:
+    """Replay a deterministic request end-to-end in JAX; the rust runtime
+    test replays the same request through the PJRT artifacts and compares."""
+    tokens = list(GOLDEN_PROMPT)
+    p = PREFILL_BUCKETS[0] if len(tokens) <= PREFILL_BUCKETS[0] else \
+        PREFILL_BUCKETS[-1]
+    nnew = len(tokens)
+    assert nnew <= p, "golden prompt must fit the largest prefill bucket"
+    padded = tokens + [0] * (p - nnew)
+
+    cache = empty_prefill_cache(cfg)
+    logits, cache = prefill(jnp.array(padded, jnp.int32),
+                            jnp.int32(0), jnp.int32(nnew), cache)
+    first_token = int(jnp.argmax(logits))
+
+    # Move the prefill cache into decode slot 0 — in rust this is the
+    # block-free transfer path (contiguous bytes + RecvScatter).
+    dcache = empty_decode_cache(cfg, DECODE_BATCH)
+    dcache = dcache.at[:, :, 0].set(cache)
+    lens = jnp.zeros((DECODE_BATCH,), jnp.int32).at[0].set(nnew)
+    tok = jnp.zeros((DECODE_BATCH,), jnp.int32).at[0].set(first_token)
+
+    generated = [first_token]
+    last_logits = None
+    for _ in range(GOLDEN_DECODE_STEPS):
+        dlogits, dcache = decode(tok, lens, dcache)
+        nxt = int(jnp.argmax(dlogits[0]))
+        generated.append(nxt)
+        last_logits = dlogits[0]
+        lens = lens.at[0].add(1)
+        tok = tok.at[0].set(nxt)
+
+    return {
+        "prompt": tokens,
+        "prefill_bucket": p,
+        "nnew": nnew,
+        "first_token": first_token,
+        "generated": generated,
+        "prefill_logits_head": [round(float(x), 4) for x in logits[:8]],
+        "final_logits_head": [round(float(x), 4) for x in last_logits[:8]],
+        "prefill_cache_mean": round(float(jnp.mean(cache)), 6),
+        "prefill_cache_std": round(float(jnp.std(cache)), 6),
+    }
+
+
+def write_artifacts(outdir: str, cfg: ModelConfig, seed: int = 0) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    _params, prefill, decode = build_fns(cfg, seed)
+
+    artifacts = []
+    for p in PREFILL_BUCKETS:
+        text = lower_prefill(prefill, cfg, p)
+        name = f"prefill_p{p}.hlo.txt"
+        with open(os.path.join(outdir, name), "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name, "kind": "prefill", "bucket": p,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+    text = lower_decode(decode, cfg, DECODE_BATCH)
+    name = f"decode_b{DECODE_BATCH}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(text)
+    artifacts.append({
+        "name": name, "kind": "decode", "batch": DECODE_BATCH,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    })
+    text = lower_scatter(cfg, DECODE_BATCH)
+    name = f"scatter_b{DECODE_BATCH}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(text)
+    artifacts.append({
+        "name": name, "kind": "scatter", "batch": DECODE_BATCH,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    })
+
+    meta = {
+        "model": cfg.to_meta(),
+        "seed": seed,
+        "prefill_buckets": list(PREFILL_BUCKETS),
+        "decode_batch": DECODE_BATCH,
+        "kvcache_bytes_per_token": cfg.kvcache_bytes_per_token(),
+        "artifacts": artifacts,
+        # Layouts the rust RecvScatter needs to restore blocks from bytes.
+        "prefill_cache_shape": [cfg.n_layers, 2, cfg.n_heads, cfg.max_len,
+                                cfg.head_dim],
+        "decode_cache_shape": [cfg.n_layers, 2, DECODE_BATCH, cfg.n_heads,
+                               cfg.max_len, cfg.head_dim],
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+    golden = make_golden(cfg, prefill, decode)
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    meta = write_artifacts(args.outdir, cfg, args.seed)
+    names = ", ".join(a["name"] for a in meta["artifacts"])
+    print(f"wrote {names} + meta.json + golden.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""L1 Pallas attention kernels for the P/D-Serve reproduction.
+
+Two entry points, both built on a single flash-style kernel body:
+
+- ``prefill_attention``: causal attention for a chunk of new tokens against
+  the (possibly prefix-populated) KV cache. Used by the prefill phase and by
+  chunked-prefill continuation (the paper's prefix-aware KVCache reuse: the
+  chunk starts at ``start > 0`` and attends over the cached prefix).
+- ``decode_attention``: single-token attention per slot against the paged
+  decode cache. This is the decode-phase hot spot.
+
+Hardware adaptation (paper targets Ascend NPU; we tile for the TPU memory
+model per DESIGN.md §Hardware-Adaptation):
+
+- The grid iterates (head, query-block); BlockSpecs stage one query tile and
+  the full per-head KV stripe HBM->VMEM. For the serving configuration
+  (M=96, head_dim=32, f32) the VMEM working set per grid step is
+  q(16x32) + k(96x32) + v(96x32) + acc ~= 27 KiB, far under the ~16 MiB VMEM
+  budget; the kv fori_loop keeps the softmax streaming (flash running
+  max/sum) so the kernel scales to long caches without materializing the
+  full [P, M] score matrix.
+- Matmuls are MXU-shaped (contraction over head_dim, lanes padded by Mosaic
+  on real TPU); under ``interpret=True`` they lower to plain HLO dots so the
+  CPU PJRT plugin can execute them. Real-TPU lowering would emit a Mosaic
+  custom-call, which the CPU client cannot run — interpret mode is mandatory
+  here (see /opt/xla-example/README.md).
+
+Masking is expressed via an absolute ``limits`` vector (one int32 per query
+row): query row i may attend to cache position j iff ``j <= limits[i]``.
+The L2 model computes ``limits = start + arange(P)`` for prefill and
+``limits = lens`` for decode, which keeps all scalar plumbing out of the
+kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_attn_kernel(q_ref, k_ref, v_ref, lim_ref, o_ref, *, kv_block: int,
+                       kv_len: int):
+    """Flash-attention body for one (head, query-block) grid step.
+
+    q_ref:   [pq, hd]   query tile (VMEM)
+    k_ref:   [M, hd]    full per-head key stripe (VMEM)
+    v_ref:   [M, hd]    full per-head value stripe (VMEM)
+    lim_ref: [pq, 1]    int32 absolute attention limits per query row
+    o_ref:   [pq, hd]   output tile
+    """
+    q = q_ref[...].astype(jnp.float32)
+    lim = lim_ref[...]  # [pq, 1] int32
+    pq, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    n_blocks = kv_len // kv_block
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (pl.ds(i * kv_block, kv_block), slice(None)))
+        v = pl.load(v_ref, (pl.ds(i * kv_block, kv_block), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        # [pq, kv_block] scores for this kv tile.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        idx = i * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (1, kv_block), 1)
+        mask = idx <= lim  # [pq, kv_block]
+        s = jnp.where(mask, s, NEG_INF)
+        # Streaming softmax: rescale previous accumulator by exp(m_i - m_new).
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((pq, hd), jnp.float32)
+    m0 = jnp.full((pq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((pq, 1), jnp.float32)
+    acc, _m, l = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    # Every query row has at least one visible position (its own), so l > 0.
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, limits, *, q_block: int = 16,
+                      kv_block: int = 32, interpret: bool = True):
+    """Chunked-prefill attention.
+
+    q:      [H, P, hd]  queries for the P new tokens
+    k, v:   [H, M, hd]  full KV cache stripes (prefix + new tokens written)
+    limits: [P] int32   row i attends to cache position j iff j <= limits[i]
+    returns [H, P, hd]
+    """
+    h, p, hd = q.shape
+    m = k.shape[1]
+    if p % q_block != 0:
+        raise ValueError(f"P={p} not a multiple of q_block={q_block}")
+    if m % kv_block != 0:
+        raise ValueError(f"M={m} not a multiple of kv_block={kv_block}")
+    grid = (h, p // q_block)
+    kernel = functools.partial(_flash_attn_kernel, kv_block=kv_block,
+                               kv_len=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, q_block, hd), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((None, m, hd), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((None, m, hd), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((q_block, 1), lambda hh, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, q_block, hd), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, p, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, limits[:, None].astype(jnp.int32))
+
+
+def decode_attention(q, k, v, lens, *, kv_block: int = 32,
+                     interpret: bool = True):
+    """Single-step decode attention over the batched decode cache.
+
+    q:    [B, H, hd]     one query per slot
+    k, v: [B, H, M, hd]  per-slot KV cache (new token already written at
+                         position lens[b])
+    lens: [B] int32      slot b attends to positions j <= lens[b]
+    returns [B, H, hd]
+    """
+    b, h, hd = q.shape
+    m = k.shape[2]
+    if m % kv_block != 0:
+        raise ValueError(f"M={m} not a multiple of kv_block={kv_block}")
+    grid = (b, h)
+    kernel = functools.partial(_flash_attn_kernel, kv_block=kv_block,
+                               kv_len=m)
+    q4 = q[:, :, None, :]  # [B, H, 1, hd]: reuse the tile kernel with pq=1.
+    lim = lens.astype(jnp.int32)[:, None, None]  # [B, 1, 1]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, 1, hd), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((None, None, m, hd), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((None, None, m, hd), lambda bb, hh: (bb, hh, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda bb, hh: (bb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, 1, hd),
+                               lambda bb, hh: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, hd), q.dtype),
+        interpret=interpret,
+    )(q4, k, v, lim)
+    return out[:, :, 0, :]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: dense (non-flash) attention with an
+explicit mask, written with no Pallas constructs. pytest asserts the Pallas
+kernels match these to tight tolerances across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, limits):
+    """Dense reference for ``attention.prefill_attention``.
+
+    q: [H, P, hd], k/v: [H, M, hd], limits: [P] int32.
+    """
+    hd = q.shape[-1]
+    m = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(m)[None, :]  # [1, M]
+    mask = idx <= limits[:, None]  # [P, M]
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """Dense reference for ``rmsnorm.rmsnorm``. x: [T, D], w: [D]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)[None, :]
+    return out.astype(x.dtype)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Dense reference for ``attention.decode_attention``.
+
+    q: [B, H, hd], k/v: [B, H, M, hd], lens: [B] int32.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m = k.shape[2]
+    idx = jnp.arange(m)[None, None, :]  # [1, 1, M]
+    mask = idx <= lens[:, None, None]  # [B, 1, M]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

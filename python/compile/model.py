@@ -1,0 +1,213 @@
+"""L2: the serving model — a tiny decoder-only transformer in JAX.
+
+This is the Pangu stand-in (see DESIGN.md §Substitutions): the serving-path
+behaviour P/D-Serve cares about — a prefill phase producing a KVCache, a
+decode phase consuming it under continuous batching, and chunked-prefill
+continuation over a cached prefix — depends on the architecture *shape*,
+not the parameter count. Weights are deterministic (seeded) and are baked
+into the AOT artifact as HLO constants, which models the paper's
+"pre-compiled model loaded from a file service".
+
+Two jit-able entry points, both calling the L1 Pallas kernels:
+
+- ``prefill_step(params, cfg, tokens, start, nnew, cache)``
+    tokens: int32[P] (padded chunk), start: int32[] absolute position of the
+    chunk's first token (non-zero when continuing over a cached prefix —
+    the paper's prefix-aware KVCache reuse), nnew: int32[] valid tokens in
+    the chunk, cache: f32[L, 2, H, M, hd].
+    Returns (logits f32[V] at the last valid token, updated cache).
+
+    Padding rows write garbage KV at positions >= start+nnew; that is
+    harmless: attention limits mask them out, and any later write (next
+    chunk or decode step) at those positions overwrites them first.
+
+- ``decode_step(params, cfg, tokens, lens, cache)``
+    tokens: int32[B] one new token per slot, lens: int32[B] current length
+    per slot (the new KV is written at position lens[b]),
+    cache: f32[L, 2, B, H, M, hd].
+    Returns (logits f32[B, V], updated cache).
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, prefill_attention
+from .kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration; one AOT artifact set per config."""
+
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    max_len: int = 96         # M: prompt bucket max (64) + generation budget
+    mlp_hidden: int = 512
+    name: str = "pd-tiny"
+
+    def kvcache_floats_prefill(self) -> int:
+        return (self.n_layers * 2 * self.n_heads * self.max_len
+                * self.head_dim)
+
+    def kvcache_bytes_per_token(self) -> int:
+        # 4 bytes (f32) * 2 (K and V) * heads*head_dim per layer * layers —
+        # the paper's "2 * bs * hidden * 2 * query_len" accounting, per token.
+        return 4 * 2 * self.n_heads * self.head_dim * self.n_layers
+
+    def to_meta(self) -> dict:
+        return asdict(self)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Deterministic parameter init (seeded normal, 1/sqrt(fan_in) scale)."""
+    key = jax.random.PRNGKey(seed)
+    d, h, hd, v, f = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.vocab,
+                      cfg.mlp_hidden)
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def dense(shape):
+        fan_in = shape[0]
+        return (jax.random.normal(nxt(), shape, jnp.float32)
+                / jnp.sqrt(jnp.float32(fan_in)))
+
+    params = {
+        "tok_emb": jax.random.normal(nxt(), (v, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(nxt(), (cfg.max_len, d),
+                                     jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "out_proj": dense((d, v)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense((d, h * hd)),
+            "wk": dense((d, h * hd)),
+            "wv": dense((d, h * hd)),
+            "wo": dense((h * hd, d)),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "w1": dense((d, f)),
+            "w2": dense((f, d)),
+        })
+    return params
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    """RMSNorm via the L1 Pallas kernel (row-tiled); 1-D inputs (the final
+    logits row) take the [1, D] path."""
+    if x.ndim == 1:
+        return rmsnorm_kernel(x[None, :], w, eps=eps)[0]
+    return rmsnorm_kernel(x, w, eps=eps)
+
+
+def _split_heads(x, n_heads, head_dim):
+    # [T, H*hd] -> [H, T, hd]
+    t = x.shape[0]
+    return jnp.moveaxis(x.reshape(t, n_heads, head_dim), 0, 1)
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, start, nnew, cache,
+                 *, interpret: bool = True):
+    """Run one prefill chunk; see module docstring for the contract."""
+    p = tokens.shape[0]
+    pos = start + jnp.arange(p, dtype=jnp.int32)
+    pos_c = jnp.clip(pos, 0, cfg.max_len - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos_c]  # [P, d]
+    limits = pos  # causal: chunk token i sees cache positions j <= start+i
+    for li, lp in enumerate(params["layers"]):
+        hpre = rmsnorm(x, lp["attn_norm"])
+        q = _split_heads(hpre @ lp["wq"], cfg.n_heads, cfg.head_dim)
+        k = _split_heads(hpre @ lp["wk"], cfg.n_heads, cfg.head_dim)
+        v = _split_heads(hpre @ lp["wv"], cfg.n_heads, cfg.head_dim)
+        # Write the chunk's KV into the cache stripe at [start, start+P).
+        kc = jax.lax.dynamic_update_slice(cache[li, 0], k, (0, start, 0))
+        vc = jax.lax.dynamic_update_slice(cache[li, 1], v, (0, start, 0))
+        cache = cache.at[li, 0].set(kc).at[li, 1].set(vc)
+        attn = prefill_attention(q, kc, vc, limits, interpret=interpret)
+        attn = jnp.moveaxis(attn, 0, 1).reshape(p, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ lp["wo"]
+        hmlp = rmsnorm(x, lp["mlp_norm"])
+        x = x + jax.nn.gelu(hmlp @ lp["w1"]) @ lp["w2"]
+    # Logits only at the last valid token of the chunk.
+    last = jax.lax.dynamic_slice(x, (nnew - 1, 0), (1, cfg.d_model))[0]
+    logits = rmsnorm(last, params["final_norm"]) @ params["out_proj"]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, lens, cache,
+                *, interpret: bool = True):
+    """Run one decode iteration for all B slots; see module docstring."""
+    b = tokens.shape[0]
+    pos_c = jnp.clip(lens, 0, cfg.max_len - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos_c]  # [B, d]
+
+    def write_slot(c, kk, p):
+        # c: [H, M, hd], kk: [H, hd] -> write at position p.
+        return jax.lax.dynamic_update_slice(c, kk[:, None, :], (0, p, 0))
+
+    for li, lp in enumerate(params["layers"]):
+        hpre = rmsnorm(x, lp["attn_norm"])
+        q = (hpre @ lp["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (hpre @ lp["wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        v = (hpre @ lp["wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        kc = jax.vmap(write_slot)(cache[li, 0], k, pos_c)  # [B, H, M, hd]
+        vc = jax.vmap(write_slot)(cache[li, 1], v, pos_c)
+        cache = cache.at[li, 0].set(kc).at[li, 1].set(vc)
+        attn = decode_attention(q, kc, vc, lens, interpret=interpret)
+        attn = attn.reshape(b, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ lp["wo"]
+        hmlp = rmsnorm(x, lp["mlp_norm"])
+        x = x + jax.nn.gelu(hmlp @ lp["w1"]) @ lp["w2"]
+    logits = rmsnorm(x, params["final_norm"]) @ params["out_proj"]
+    return logits, cache
+
+
+def empty_prefill_cache(cfg: ModelConfig):
+    return jnp.zeros((cfg.n_layers, 2, cfg.n_heads, cfg.max_len,
+                      cfg.head_dim), jnp.float32)
+
+
+def empty_decode_cache(cfg: ModelConfig, batch: int):
+    return jnp.zeros((cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_len,
+                      cfg.head_dim), jnp.float32)
+
+
+def _dense_rmsnorm(x, w, eps: float = 1e-5):
+    """Pure-jnp RMSNorm (no Pallas) for the reference forward."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def full_reference_logits(params, cfg: ModelConfig, tokens):
+    """Dense non-incremental forward (no cache, no Pallas) returning logits
+    at every position — the oracle for prefill/decode consistency tests."""
+    t = tokens.shape[0]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+    mask = pos[None, :] <= pos[:, None]  # [T, T] causal
+    for lp in params["layers"]:
+        hpre = _dense_rmsnorm(x, lp["attn_norm"])
+        q = _split_heads(hpre @ lp["wq"], cfg.n_heads, cfg.head_dim)
+        k = _split_heads(hpre @ lp["wk"], cfg.n_heads, cfg.head_dim)
+        v = _split_heads(hpre @ lp["wv"], cfg.n_heads, cfg.head_dim)
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.head_dim))
+        s = jnp.where(mask[None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hqk,hkd->hqd", p, v)
+        attn = jnp.moveaxis(attn, 0, 1).reshape(t, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ lp["wo"]
+        hmlp = _dense_rmsnorm(x, lp["mlp_norm"])
+        x = x + jax.nn.gelu(hmlp @ lp["w1"]) @ lp["w2"]
+    return _dense_rmsnorm(x, params["final_norm"]) @ params["out_proj"]

@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the compute hot-spot. Hypothesis
+sweeps shapes and mask boundaries; fixed cases cover the serving
+configuration and edge masks exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, prefill_attention
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# prefill_attention
+# ---------------------------------------------------------------------------
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("h,p,hd,m", [
+        (4, 16, 32, 96),   # serving config, bucket 16
+        (4, 64, 32, 96),   # serving config, bucket 64
+        (1, 16, 8, 32),    # minimal
+        (2, 32, 16, 64),
+    ])
+    def test_matches_ref(self, h, p, hd, m):
+        q = rand(0, (h, p, hd))
+        k = rand(1, (h, m, hd))
+        v = rand(2, (h, m, hd))
+        limits = jnp.arange(p, dtype=jnp.int32)  # plain causal from 0
+        out = prefill_attention(q, k, v, limits)
+        exp = ref.prefill_attention_ref(q, k, v, limits)
+        np.testing.assert_allclose(out, exp, **TOL)
+
+    def test_prefix_offset_limits(self):
+        """Chunked continuation: limits = start + arange(P) with start > 0."""
+        h, p, hd, m = 4, 16, 32, 96
+        q, k, v = rand(3, (h, p, hd)), rand(4, (h, m, hd)), rand(5, (h, m, hd))
+        start = 40
+        limits = start + jnp.arange(p, dtype=jnp.int32)
+        out = prefill_attention(q, k, v, limits)
+        exp = ref.prefill_attention_ref(q, k, v, limits)
+        np.testing.assert_allclose(out, exp, **TOL)
+
+    def test_limit_zero_sees_only_first_position(self):
+        """A query with limit 0 must equal v[:, 0] exactly (softmax of 1)."""
+        h, p, hd, m = 2, 16, 16, 32
+        q, k, v = rand(6, (h, p, hd)), rand(7, (h, m, hd)), rand(8, (h, m, hd))
+        limits = jnp.zeros((p,), jnp.int32)
+        out = prefill_attention(q, k, v, limits)
+        exp = jnp.broadcast_to(v[:, None, 0, :], (h, p, hd))
+        np.testing.assert_allclose(out, exp, **TOL)
+
+    def test_full_limits_equal_dense_attention(self):
+        """limits = M-1 everywhere -> unmasked attention."""
+        h, p, hd, m = 2, 16, 16, 32
+        q, k, v = rand(9, (h, p, hd)), rand(10, (h, m, hd)), rand(11, (h, m, hd))
+        limits = jnp.full((p,), m - 1, jnp.int32)
+        out = prefill_attention(q, k, v, limits)
+        exp = ref.prefill_attention_ref(q, k, v, limits)
+        np.testing.assert_allclose(out, exp, **TOL)
+
+    def test_rejects_unaligned_shapes(self):
+        q = rand(0, (2, 10, 16))  # P=10 not multiple of q_block=16
+        k = rand(1, (2, 32, 16))
+        v = rand(2, (2, 32, 16))
+        with pytest.raises(ValueError):
+            prefill_attention(q, k, v, jnp.arange(10, dtype=jnp.int32))
+
+    def test_output_dtype_follows_query(self):
+        h, p, hd, m = 1, 16, 8, 32
+        q = rand(12, (h, p, hd)).astype(jnp.bfloat16)
+        k = rand(13, (h, m, hd)).astype(jnp.bfloat16)
+        v = rand(14, (h, m, hd)).astype(jnp.bfloat16)
+        limits = jnp.arange(p, dtype=jnp.int32)
+        out = prefill_attention(q, k, v, limits)
+        assert out.dtype == jnp.bfloat16
+        exp = ref.prefill_attention_ref(q, k, v, limits)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), exp.astype(jnp.float32),
+            rtol=5e-2, atol=5e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        pq=st.sampled_from([1, 2, 4]),       # q blocks of 16
+        hd=st.sampled_from([8, 16, 32]),
+        mblk=st.sampled_from([1, 2, 3]),     # kv blocks of 32
+        start=st.integers(min_value=0, max_value=30),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, h, pq, hd, mblk, start, seed):
+        p, m = pq * 16, mblk * 32
+        start = min(start, m - p) if m > p else 0
+        q = rand(seed, (h, p, hd))
+        k = rand(seed + 1, (h, m, hd))
+        v = rand(seed + 2, (h, m, hd))
+        limits = jnp.minimum(start + jnp.arange(p, dtype=jnp.int32), m - 1)
+        out = prefill_attention(q, k, v, limits)
+        exp = ref.prefill_attention_ref(q, k, v, limits)
+        np.testing.assert_allclose(out, exp, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,hd,m", [
+        (4, 4, 32, 96),    # serving config
+        (1, 1, 8, 32),
+        (8, 2, 16, 64),
+    ])
+    def test_matches_ref(self, b, h, hd, m):
+        q = rand(20, (b, h, hd))
+        k = rand(21, (b, h, m, hd))
+        v = rand(22, (b, h, m, hd))
+        lens = jnp.arange(b, dtype=jnp.int32) * ((m - 1) // max(b - 1, 1))
+        out = decode_attention(q, k, v, lens)
+        exp = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, exp, **TOL)
+
+    def test_len_zero_slot_reads_position_zero(self):
+        b, h, hd, m = 2, 2, 8, 32
+        q = rand(23, (b, h, hd))
+        k = rand(24, (b, h, m, hd))
+        v = rand(25, (b, h, m, hd))
+        lens = jnp.zeros((b,), jnp.int32)
+        out = decode_attention(q, k, v, lens)
+        np.testing.assert_allclose(out, v[:, :, 0, :], **TOL)
+
+    def test_slots_independent(self):
+        """Changing slot 1's cache must not change slot 0's output."""
+        b, h, hd, m = 4, 2, 16, 64
+        q = rand(26, (b, h, hd))
+        k = rand(27, (b, h, m, hd))
+        v = rand(28, (b, h, m, hd))
+        lens = jnp.full((b,), m - 1, jnp.int32)
+        out1 = decode_attention(q, k, v, lens)
+        k2 = k.at[1].set(rand(29, (h, m, hd)))
+        out2 = decode_attention(q, k2, v, lens)
+        np.testing.assert_allclose(out1[0], out2[0], **TOL)
+        assert not np.allclose(out1[1], out2[1])
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4]),
+        h=st.sampled_from([1, 4]),
+        hd=st.sampled_from([8, 32]),
+        mblk=st.sampled_from([1, 3]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, h, hd, mblk, seed):
+        m = mblk * 32
+        q = rand(seed, (b, h, hd))
+        k = rand(seed + 1, (b, h, m, hd))
+        v = rand(seed + 2, (b, h, m, hd))
+        key = jax.random.PRNGKey(seed + 3)
+        lens = jax.random.randint(key, (b,), 0, m)
+        out = decode_attention(q, k, v, lens)
+        exp = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, exp, **TOL)

@@ -1,0 +1,138 @@
+"""L2 correctness: incremental (prefill + decode) inference must equal the
+dense non-incremental forward, including chunked-prefill continuation over
+a cached prefix — the property that makes the paper's prefix-aware KVCache
+reuse sound.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (ModelConfig, decode_step, empty_decode_cache,
+                           empty_prefill_cache, full_reference_logits,
+                           init_params, prefill_step)
+
+# A smaller config than the serving one to keep interpret-mode tests quick.
+CFG = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+                  max_len=64, mlp_hidden=64, name="test-tiny")
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=7)
+
+
+@pytest.fixture(scope="module")
+def prompt():
+    return jnp.array([5, 17, 3, 60, 22, 9, 41, 33, 2, 11, 50, 8], jnp.int32)
+
+
+class TestPrefill:
+    def test_matches_dense_forward(self, params, prompt):
+        t = prompt.shape[0]
+        padded = jnp.pad(prompt, (0, 16 - t))
+        logits, _ = prefill_step(params, CFG, padded, jnp.int32(0),
+                                 jnp.int32(t), empty_prefill_cache(CFG))
+        full = full_reference_logits(params, CFG, prompt)
+        np.testing.assert_allclose(logits, full[t - 1], **TOL)
+
+    def test_padding_does_not_change_logits(self, params, prompt):
+        """Garbage in the padded tail must not leak into the result."""
+        t = prompt.shape[0]
+        pad_a = jnp.pad(prompt, (0, 16 - t))
+        pad_b = jnp.concatenate([prompt,
+                                 jnp.full((16 - t,), 63, jnp.int32)])
+        la, _ = prefill_step(params, CFG, pad_a, jnp.int32(0), jnp.int32(t),
+                             empty_prefill_cache(CFG))
+        lb, _ = prefill_step(params, CFG, pad_b, jnp.int32(0), jnp.int32(t),
+                             empty_prefill_cache(CFG))
+        np.testing.assert_allclose(la, lb, **TOL)
+
+    def test_chunked_continuation_matches_single_shot(self, params):
+        """Two 16-token chunks == one 32-token prefill == dense forward.
+        This is the prefix-aware reuse path: chunk 2 starts at start=16 over
+        the cache chunk 1 left behind."""
+        toks = (jnp.arange(32, dtype=jnp.int32) * 7 + 3) % CFG.vocab
+        full = full_reference_logits(params, CFG, toks)
+        cache = empty_prefill_cache(CFG)
+        _, cache = prefill_step(params, CFG, toks[:16], jnp.int32(0),
+                                jnp.int32(16), cache)
+        logits, _ = prefill_step(params, CFG, toks[16:], jnp.int32(16),
+                                 jnp.int32(16), cache)
+        np.testing.assert_allclose(logits, full[31], **TOL)
+
+
+class TestDecode:
+    def test_decode_continues_prefill_exactly(self, params):
+        """Prefill T tokens then decode the next ones; logits must track the
+        dense forward at every step."""
+        toks = (jnp.arange(20, dtype=jnp.int32) * 5 + 1) % CFG.vocab
+        t = 12
+        full = full_reference_logits(params, CFG, toks)
+        padded = jnp.pad(toks[:t], (0, 16 - t))
+        _, pcache = prefill_step(params, CFG, padded, jnp.int32(0),
+                                 jnp.int32(t), empty_prefill_cache(CFG))
+        b = 3
+        dcache = empty_decode_cache(CFG, b).at[:, :, 1].set(pcache)
+        lens = jnp.zeros((b,), jnp.int32).at[1].set(t)
+        for i in range(t, 20):
+            tok = jnp.zeros((b,), jnp.int32).at[1].set(toks[i])
+            logits, dcache = decode_step(params, CFG, tok, lens, dcache)
+            np.testing.assert_allclose(logits[1], full[i], **TOL)
+            lens = lens.at[1].add(1)
+
+    def test_inactive_slots_do_not_interfere(self, params):
+        """Running garbage decodes in other slots must not perturb slot 0."""
+        toks = (jnp.arange(10, dtype=jnp.int32) * 3 + 2) % CFG.vocab
+        t = 8
+        padded = jnp.pad(toks[:t], (0, 16 - t))
+        _, pcache = prefill_step(params, CFG, padded, jnp.int32(0),
+                                 jnp.int32(t), empty_prefill_cache(CFG))
+
+        def run(other_token):
+            dcache = empty_decode_cache(CFG, 2).at[:, :, 0].set(pcache)
+            lens = jnp.array([t, 0], jnp.int32)
+            tok = jnp.array([toks[t], other_token], jnp.int32)
+            logits, _ = decode_step(params, CFG, tok, lens, dcache)
+            return logits[0]
+
+        np.testing.assert_allclose(run(0), run(33), **TOL)
+
+
+class TestShapes:
+    def test_cache_shapes(self):
+        pc = empty_prefill_cache(CFG)
+        assert pc.shape == (CFG.n_layers, 2, CFG.n_heads, CFG.max_len,
+                            CFG.head_dim)
+        dc = empty_decode_cache(CFG, 4)
+        assert dc.shape == (CFG.n_layers, 2, 4, CFG.n_heads, CFG.max_len,
+                            CFG.head_dim)
+
+    def test_kvcache_accounting(self):
+        cfg = ModelConfig()
+        # 4 bytes * 2 tensors * H*hd * layers
+        assert cfg.kvcache_bytes_per_token() == 4 * 2 * 4 * 32 * 4
+
+    def test_logits_shape(self, params, prompt):
+        t = prompt.shape[0]
+        padded = jnp.pad(prompt, (0, 16 - t))
+        logits, cache = prefill_step(params, CFG, padded, jnp.int32(0),
+                                     jnp.int32(t), empty_prefill_cache(CFG))
+        assert logits.shape == (CFG.vocab,)
+        assert cache.dtype == jnp.float32
+
+
+class TestDeterminism:
+    def test_same_seed_same_params(self):
+        a = init_params(CFG, seed=3)
+        b = init_params(CFG, seed=3)
+        np.testing.assert_array_equal(a["tok_emb"], b["tok_emb"])
+        np.testing.assert_array_equal(a["layers"][0]["wq"],
+                                      b["layers"][0]["wq"])
+
+    def test_different_seed_different_params(self):
+        a = init_params(CFG, seed=3)
+        b = init_params(CFG, seed=4)
+        assert not np.allclose(a["tok_emb"], b["tok_emb"])

@@ -1,0 +1,54 @@
+"""L1 correctness: the Pallas RMSNorm kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rmsnorm import rmsnorm
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestRmsNorm:
+    @pytest.mark.parametrize("t,d", [(16, 128), (64, 128), (4, 32), (1, 128)])
+    def test_matches_ref(self, t, d):
+        x = rand(0, (t, d))
+        w = rand(1, (d,)) + 1.0
+        np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w), **TOL)
+
+    def test_unit_weight_preserves_rms(self):
+        x = rand(2, (16, 128))
+        out = rmsnorm(x, jnp.ones((128,)))
+        rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=-1))
+        np.testing.assert_allclose(rms, jnp.ones((16,)), rtol=1e-4, atol=1e-4)
+
+    def test_scale_invariance(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps effects)."""
+        x = rand(3, (8, 64)) * 5.0
+        w = rand(4, (64,)) + 1.0
+        a = rmsnorm(x, w)
+        b = rmsnorm(3.0 * x, w)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_odd_row_count_single_tile_fallback(self):
+        x = rand(5, (7, 32))  # 7 % 16 != 0 -> single tile
+        w = rand(6, (32,))
+        np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w), **TOL)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t=st.integers(min_value=1, max_value=64),
+        d=st.sampled_from([32, 64, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, t, d, seed):
+        x = rand(seed, (t, d))
+        w = rand(seed + 1, (d,)) + 0.5
+        np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w), **TOL)

@@ -1,0 +1,85 @@
+//! Ablation sweeps over the design choices DESIGN.md calls out:
+//! gateway retry-candidate count, prefill batch window, arrival burstiness
+//! and the retrieval-queue depth. Each point runs the Fig.-14a scenario
+//! and reports the achieved success rate alongside the wall time of the
+//! sweep point. `cargo bench --bench ablation [-- --fast]`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::serving::sim::{Policy, SimConfig, Simulation, WorkloadKind};
+use pd_serve::workload::Scenario;
+
+fn scenario() -> Scenario {
+    Scenario {
+        name: "ablate", service: "svc",
+        prompt_mean: 2500.0, prompt_cv: 0.9,
+        n_prefixes: 8, prefix_frac: 0.5,
+        gen_mean: 60.0, gen_cv: 0.5, weight: 1.0,
+    }
+}
+
+fn base_cfg() -> SimConfig {
+    SimConfig {
+        n_p: 6,
+        n_d: 3,
+        policy: Policy::OnDemand,
+        scenarios: vec![scenario()],
+        only_scenario: Some(0),
+        workload: WorkloadKind::Open { rps: 6.0, duration_ms: 30_000.0 },
+        seed: 0xAB1A7E,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("retry candidates (on-demand probe breadth)");
+    for cand in [1usize, 2, 4, 6] {
+        let mut cfg = base_cfg();
+        cfg.serving.retry_candidates = cand;
+        let ok = Simulation::run(cfg.clone()).report.success_rate();
+        b.bench(
+            &format!("candidates={cand} (success {:.1}%)", ok * 100.0),
+            Some((1.0, "run")),
+            || Simulation::run(cfg.clone()).report.completed,
+        );
+    }
+
+    b.group("prefill batch window");
+    for window in [1.0f64, 6.0, 20.0, 60.0] {
+        let mut cfg = base_cfg();
+        cfg.batch_window_ms = window;
+        let ok = Simulation::run(cfg.clone()).report.success_rate();
+        b.bench(
+            &format!("window={window}ms (success {:.1}%)", ok * 100.0),
+            Some((1.0, "run")),
+            || Simulation::run(cfg.clone()).report.completed,
+        );
+    }
+
+    b.group("arrival burstiness");
+    for burst in [1usize, 4, 8] {
+        let mut cfg = base_cfg();
+        cfg.burst = burst;
+        let ok = Simulation::run(cfg.clone()).report.success_rate();
+        b.bench(
+            &format!("burst={burst} (success {:.1}%)", ok * 100.0),
+            Some((1.0, "run")),
+            || Simulation::run(cfg.clone()).report.completed,
+        );
+    }
+
+    b.group("retrieval queue depth (async retrieval, §3.6)");
+    for depth in [0usize, 2, 8] {
+        let mut cfg = base_cfg();
+        cfg.serving.retrieval_queue = depth;
+        let ok = Simulation::run(cfg.clone()).report.success_rate();
+        b.bench(
+            &format!("depth={depth} (success {:.1}%)", ok * 100.0),
+            Some((1.0, "run")),
+            || Simulation::run(cfg.clone()).report.completed,
+        );
+    }
+
+    println!("\n{}", b.finish());
+}

@@ -1,0 +1,62 @@
+//! HBM substrate benches: PageAttention block allocator, prefix cache,
+//! send-buffer pool. These sit on every admission/completion, so they must
+//! stay well under a microsecond. `cargo bench --bench allocator`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::cluster::hbm::BlockAllocator;
+use pd_serve::cluster::prefix::PrefixCache;
+use pd_serve::kvcache::buffer::SendBufferPool;
+use pd_serve::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(3);
+
+    b.group("BlockAllocator (12 GiB budget, 64 KiB blocks)");
+    let mut alloc = BlockAllocator::new(12 << 30, 64 << 10);
+    b.bench("allocate+release (1.6 MiB seq)", Some((1.0, "seq")), || {
+        let h = alloc.allocate(1600 << 10).unwrap();
+        alloc.release(h).unwrap()
+    });
+    let grow_h = alloc.allocate(64 << 10).unwrap();
+    let mut cur = 64 << 10;
+    b.bench("grow by one token (4 KiB)", Some((1.0, "tok")), || {
+        alloc.grow(grow_h, cur, 4096).unwrap();
+        cur += 4096;
+        if cur > (1 << 30) {
+            alloc.release(grow_h).unwrap();
+            let _ = alloc.allocate(64 << 10).unwrap();
+            cur = 64 << 10;
+        }
+    });
+
+    b.group("PrefixCache (12 GiB, 800 KiB/token)");
+    let mut cache = PrefixCache::new(12 << 30, 800 * 1024);
+    let prefixes: Vec<Vec<i32>> = (0..16)
+        .map(|p| (0..1024).map(|i| ((p * 7 + i) % 256) as i32).collect())
+        .collect();
+    for p in &prefixes {
+        cache.insert(p);
+    }
+    let mut prompt = prefixes[7].clone();
+    prompt.extend_from_slice(&[9, 9, 9, 9]);
+    b.bench("lookup (16 entries, 1k-token prompt)", Some((1.0, "req")), || {
+        cache.lookup(&prompt)
+    });
+    b.bench("insert (duplicate fast path)", Some((1.0, "op")), || {
+        cache.insert(&prefixes[3])
+    });
+
+    b.group("SendBufferPool (bp=4, 96 KiB buffers)");
+    let mut pool = SendBufferPool::new(4, 98_304 / 4);
+    let data = vec![0.5f32; 98_304 / 4];
+    b.bench("acquire+write+release", Some((data.len() as f64 * 4.0, "B")), || {
+        let id = pool.acquire().unwrap();
+        pool.write(id, &data).unwrap();
+        pool.release(id).unwrap()
+    });
+
+    // Keep the RNG alive so the allocator loop above can't be const-folded.
+    std::hint::black_box(rng.next_u64());
+    println!("\n{}", b.finish());
+}

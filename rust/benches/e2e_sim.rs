@@ -1,0 +1,76 @@
+//! End-to-end simulation benches — one per evaluation table/figure family.
+//!
+//! These measure how fast the *simulator* regenerates each paper result
+//! (events/sec of the discrete-event core) and double as regression
+//! anchors for the figures themselves: each bench runs the exact config a
+//! figure uses. `cargo bench --bench e2e_sim -- --fast` for CI.
+
+use pd_serve::bench::Bencher;
+use pd_serve::serving::sim::{
+    Policy, SimConfig, Simulation, TransferDiscipline, WorkloadKind,
+};
+use pd_serve::workload::Scenario;
+
+fn fig14_scenario() -> Scenario {
+    Scenario {
+        name: "fig14", service: "svc",
+        prompt_mean: 2500.0, prompt_cv: 0.9,
+        n_prefixes: 8, prefix_frac: 0.5,
+        gen_mean: 60.0, gen_cv: 0.5, weight: 1.0,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("Fig 12d/13a — closed-loop ratio sweep point");
+    let closed = SimConfig {
+        n_p: 4,
+        n_d: 4,
+        only_scenario: Some(2),
+        workload: WorkloadKind::Closed { concurrency: 48, requests: 200 },
+        ..Default::default()
+    };
+    b.bench("closed loop, 200 requests", Some((200.0, "req")), || {
+        Simulation::run(closed.clone()).report.completed
+    });
+
+    b.group("Fig 14a — open-loop policy comparison point");
+    for (name, policy) in [
+        ("baseline @ 4A", Policy::BaselineQueue),
+        ("on-demand @ 4A", Policy::OnDemand),
+    ] {
+        let cfg = SimConfig {
+            n_p: 6,
+            n_d: 3,
+            policy,
+            scenarios: vec![fig14_scenario()],
+            only_scenario: Some(0),
+            workload: WorkloadKind::Open { rps: 8.0, duration_ms: 20_000.0 },
+            ..Default::default()
+        };
+        b.bench(name, Some((1.0, "run")), || {
+            Simulation::run(cfg.clone()).report.total()
+        });
+    }
+
+    b.group("Fig 14c — transfer discipline point");
+    for (name, transfer) in [
+        ("blocked", TransferDiscipline::Blocked),
+        ("contiguous", TransferDiscipline::Contiguous),
+    ] {
+        let cfg = SimConfig {
+            n_p: 4,
+            n_d: 4,
+            transfer,
+            only_scenario: Some(1),
+            workload: WorkloadKind::Closed { concurrency: 24, requests: 150 },
+            ..Default::default()
+        };
+        b.bench(name, Some((150.0, "req")), || {
+            Simulation::run(cfg.clone()).report.completed
+        });
+    }
+
+    println!("\n{}", b.finish());
+}

@@ -1,0 +1,52 @@
+//! L3 hot-path benches: gateway forwarding decisions.
+//!
+//! The forwarding decision runs once per request per probe round — it must
+//! be microseconds. Covers: SSE registry updates, least-SSE (salted)
+//! ordering, the full probe, and the baseline scheduler pick for
+//! comparison. `cargo bench --bench gateway [-- --fast]`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::gateway::baseline::StaleQueueScheduler;
+use pd_serve::gateway::forward::OnDemandForwarder;
+use pd_serve::gateway::sse::SseRegistry;
+use pd_serve::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for &n_p in &[8usize, 64, 512] {
+        b.group(&format!("gateway ({n_p} prefills)"));
+
+        let mut sse = SseRegistry::new(0..n_p as u32);
+        let mut rng = Rng::new(1);
+        for _ in 0..n_p * 3 {
+            sse.open(rng.below(n_p) as u32);
+        }
+
+        b.bench("sse open+close", Some((1.0, "op")), || {
+            let e = rng.below(n_p) as u32;
+            sse.open(e);
+            sse.close(e);
+        });
+
+        b.bench("least-SSE ordering (salted)", Some((1.0, "op")), || {
+            sse.by_least_loaded_salted(rng.next_u64()).len()
+        });
+
+        let forwarder = OnDemandForwarder::new(4, 5.0);
+        let busy_mask: Vec<bool> = (0..n_p).map(|i| i % 3 != 0).collect();
+        b.bench("on-demand probe (4 candidates)", Some((1.0, "req")), || {
+            forwarder.probe(&sse, 0.0, 1e9, |e| !busy_mask[e as usize])
+        });
+
+        let mut sched = StaleQueueScheduler::new(n_p, 100.0);
+        for i in 0..n_p {
+            sched.maybe_report(i, rng.below(8192), 0.0);
+        }
+        b.bench("baseline shortest-queue pick", Some((1.0, "req")), || {
+            sched.pick_shortest(1024, true)
+        });
+    }
+
+    println!("\n{}", b.finish());
+}

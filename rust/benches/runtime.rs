@@ -1,0 +1,72 @@
+//! Real-model runtime benches: the request-path costs of the PJRT
+//! executables (prefill per bucket, decode iteration, operator
+//! RecvScatter) plus the host transfer path (byte extraction + function
+//! scatter). Requires `make artifacts`; skips gracefully otherwise.
+//! `cargo bench --bench runtime [-- --fast]`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::runtime::model::{bytemuck_cast, bytes_as_f32};
+use pd_serve::runtime::{tokenizer, ServingRuntime};
+
+fn main() {
+    let dir = ["artifacts", "../artifacts"]
+        .iter()
+        .find(|d| std::path::Path::new(&format!("{d}/meta.json")).exists());
+    let Some(dir) = dir else {
+        eprintln!("skipping runtime benches: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let rt = match ServingRuntime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime benches: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bencher::new();
+
+    b.group("prefill executables");
+    let short = tokenizer::encode("short prompt");
+    let long: Vec<i32> = (0..60).map(|i| (i * 3 + 7) % 256).collect();
+    b.bench("prefill bucket 16 (12 tokens)", Some((12.0, "tok")), || {
+        rt.prefill(&short, 0, None).unwrap().logits.len()
+    });
+    b.bench("prefill bucket 64 (60 tokens)", Some((60.0, "tok")), || {
+        rt.prefill(&long, 0, None).unwrap().logits.len()
+    });
+    let chunk1 = rt.prefill(&long[..16], 0, None).unwrap();
+    b.bench("chunked continuation (16 @ start=16)", Some((16.0, "tok")), || {
+        rt.prefill(&long[..16], 16, Some(&chunk1.cache)).unwrap().logits.len()
+    });
+
+    b.group("transfer path (384 KiB KVCache)");
+    let out = rt.prefill(&long, 0, None).unwrap();
+    b.bench("cache -> bytes -> cache (host)", Some((out.cache.len() as f64 * 4.0, "B")), || {
+        let bytes = bytemuck_cast(&out.cache);
+        bytes_as_f32(bytes).len()
+    });
+    let mut handle = rt.new_decode_handle().unwrap();
+    b.bench("operator RecvScatter (PJRT)", Some((out.cache.len() as f64 * 4.0, "B")), || {
+        rt.scatter_device(&mut handle, 0, &out.cache).unwrap()
+    });
+
+    b.group("decode");
+    handle.lens[0] = long.len() as i32;
+    handle.active[0] = true;
+    let mut tok = vec![0i32; handle.batch()];
+    tok[0] = rt.argmax_row(&out.logits, 0);
+    b.bench("decode iteration (batch 4)", Some((4.0, "tok")), || {
+        // Keep lens bounded: reset periodically.
+        if handle.lens[0] as usize >= rt.meta.max_len - 2 {
+            handle.lens[0] = long.len() as i32;
+        }
+        let logits = rt.decode_step(&mut handle, &tok).unwrap();
+        tok[0] = rt.argmax_row(&logits, 0);
+    });
+    let logits = rt.decode_step(&mut handle, &tok).unwrap();
+    b.bench("argmax over vocab row", Some((1.0, "op")), || {
+        rt.argmax_row(&logits, 0)
+    });
+
+    println!("\n{}", b.finish());
+}

@@ -1,0 +1,65 @@
+//! KVCache transfer path benches (paper Fig. 4 / 14c hot path).
+//!
+//! Covers: the RDMA timing model itself, the *function* RecvScatter
+//! (host byte scatter — the data-plane cost the receiver actually pays),
+//! block gather/scatter, and the ECMP/spray spine assignment.
+//! `cargo bench --bench transfer [-- --fast]`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::kvcache::layout::KvLayout;
+use pd_serve::kvcache::scatter::{
+    gather_from_blocks, gather_from_decode, scatter_into_blocks, scatter_into_decode,
+};
+use pd_serve::network::rdma::RdmaModel;
+use pd_serve::network::route;
+use pd_serve::util::prng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let m = RdmaModel::default();
+
+    b.group("rdma timing model");
+    b.bench("blocked_us (420 MiB / 1.6 MiB blocks)", Some((1.0, "op")), || {
+        m.blocked_us(420 << 20, 1600 << 10, 3, 2)
+    });
+    b.bench("contiguous_us (420 MiB)", Some((1.0, "op")), || {
+        m.contiguous_us(420 << 20, 3, 2)
+    });
+
+    b.group("RecvScatter (serving model: L4 H4 M96 hd32, B4)");
+    let layout = KvLayout::new(4, 4, 96, 32, 4);
+    let mut rng = Rng::new(2);
+    let payload: Vec<f32> = (0..layout.prefill_elems()).map(|_| rng.f64() as f32).collect();
+    let mut mirror = vec![0f32; layout.decode_elems()];
+    let shape = vec![4usize, 2, 4, 4, 96, 32];
+    let bytes = layout.prefill_bytes() as f64;
+    b.bench("scatter_into_decode", Some((bytes, "B")), || {
+        scatter_into_decode(&mut mirror, &payload, &shape, 1).unwrap()
+    });
+    b.bench("gather_from_decode", Some((bytes, "B")), || {
+        gather_from_decode(&mirror, &shape, 1).unwrap().len()
+    });
+
+    b.group("block scatter (64 KiB blocks)");
+    let wire: Vec<u8> = (0..(4 << 20)).map(|i| i as u8).collect();
+    let mut blocks = vec![Vec::new(); wire.len().div_ceil(64 << 10)];
+    b.bench("scatter_into_blocks (4 MiB)", Some((wire.len() as f64, "B")), || {
+        scatter_into_blocks(&wire, &mut blocks, 64 << 10).unwrap()
+    });
+    b.bench("gather_from_blocks (4 MiB)", Some((wire.len() as f64, "B")), || {
+        gather_from_blocks(&blocks, wire.len()).unwrap().len()
+    });
+
+    b.group("spine assignment (8 sub-transfers / 8 spines)");
+    let mut flow = 0u64;
+    b.bench("ECMP", Some((1.0, "move")), || {
+        flow += 1;
+        route::assign_ecmp(0, 1, flow, 8, 8).len()
+    });
+    b.bench("path-sprayed", Some((1.0, "move")), || {
+        flow += 1;
+        route::assign_sprayed(flow, 8, 8).len()
+    });
+
+    println!("\n{}", b.finish());
+}

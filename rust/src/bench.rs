@@ -1,0 +1,219 @@
+//! Micro-benchmark harness (the offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations, mean/p50/p99 and throughput reporting, plus a
+//! `--filter` flag and JSON output for regression tracking.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+    pub filter: Option<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let mut cfg = BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 2_000,
+            target_time: Duration::from_secs(2),
+            filter: None,
+        };
+        // `cargo bench -- --filter name --fast`
+        let args: Vec<String> = std::env::args().collect();
+        for i in 0..args.len() {
+            if args[i] == "--filter" && i + 1 < args.len() {
+                cfg.filter = Some(args[i + 1].clone());
+            }
+            if args[i] == "--fast" {
+                cfg.target_time = Duration::from_millis(300);
+                cfg.max_iters = 200;
+            }
+        }
+        cfg
+    }
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub group: String,
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher { cfg: BenchConfig::default(), results: Vec::new(), group: String::new() }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Bencher { cfg, results: Vec::new(), group: String::new() }
+    }
+
+    pub fn group(&mut self, name: &str) {
+        self.group = name.to_string();
+        println!("\n## {name}");
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        if let Some(f) = &self.cfg.filter {
+            !name.contains(f.as_str()) && !self.group.contains(f.as_str())
+        } else {
+            false
+        }
+    }
+
+    /// Time `f` per call. `elements` (optional) reports throughput in
+    /// elements/sec (requests, tokens, bytes — set `unit`).
+    pub fn bench<R>(
+        &mut self,
+        name: &str,
+        elements: Option<(f64, &'static str)>,
+        mut f: impl FnMut() -> R,
+    ) {
+        if self.skip(name) {
+            return;
+        }
+        for _ in 0..self.cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.cfg.min_iters
+            || (start.elapsed() < self.cfg.target_time && iters < self.cfg.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.add(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        let res = BenchResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters,
+            mean_ns: samples.mean(),
+            p50_ns: samples.p50(),
+            p99_ns: samples.p99(),
+            throughput: elements.map(|(n, u)| (n / (samples.mean() / 1e9), u)),
+        };
+        print_result(&res);
+        self.results.push(res);
+    }
+
+    /// Summarize all results; returns JSON lines for regression tracking.
+    pub fn finish(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            let tp = r
+                .throughput
+                .map(|(v, u)| format!(",\"throughput\":{v:.1},\"unit\":\"{u}\""))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "{{\"group\":\"{}\",\"name\":\"{}\",\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1}{}}}\n",
+                r.group, r.name, r.mean_ns, r.p50_ns, r.p99_ns, tp
+            ));
+        }
+        out
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let tp = r
+        .throughput
+        .map(|(v, u)| {
+            if v >= 1e6 {
+                format!("  [{:.2} M{u}/s]", v / 1e6)
+            } else if v >= 1e3 {
+                format!("  [{:.2} k{u}/s]", v / 1e3)
+            } else {
+                format!("  [{v:.1} {u}/s]")
+            }
+        })
+        .unwrap_or_default();
+    println!(
+        "{:<42} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} iters){}",
+        r.name,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+        r.iters,
+        tp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+            filter: None,
+        };
+        let mut b = Bencher::with_config(cfg);
+        b.group("test");
+        let mut acc = 0u64;
+        b.bench("noop", Some((1.0, "op")), || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+        assert!(b.finish().contains("\"name\":\"noop\""));
+    }
+
+    #[test]
+    fn filter_skips() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_time: Duration::from_millis(1),
+            filter: Some("match-me".into()),
+        };
+        let mut b = Bencher::with_config(cfg);
+        b.bench("other", None, || 1);
+        assert!(b.results.is_empty());
+        b.bench("match-me-exactly", None, || 1);
+        assert_eq!(b.results.len(), 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! One xPU device: identity, placement, RoCE address, HBM budget, health.
+//!
+//! Devices are the unit the paper's fault model operates on: "about 1 or 2
+//! faults occur per week over the cluster with 400 GPUs … with tens of
+//! thousands of xPUs, the faults are very common (both recoverable and
+//! unrecoverable)". Faults are classified into levels (paper Fig. 8); only
+//! some require node-level recovery.
+
+use std::fmt;
+
+/// Globally unique device id (dense index into the topology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub u32);
+
+/// A RoCE v2 address. The paper's format is `<P, {<IP1, …>, …}>`; we keep
+/// the IP as a synthetic /16-style pair (region-scoped, "maximum RoCE IPs
+/// are limited in a region, in thousands").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RoceIp {
+    pub region: u16,
+    pub host: u16,
+}
+
+impl fmt::Display for RoceIp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // 10.<region>.<hi>.<lo> — purely cosmetic.
+        write!(
+            f,
+            "10.{}.{}.{}",
+            self.region,
+            self.host >> 8,
+            self.host & 0xff
+        )
+    }
+}
+
+/// Fault classification (paper §3.4: "the faults are classified into
+/// multiple levels, in which some are recoverable without node-level
+/// recovery").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultLevel {
+    /// Transient — recoverable in place (e.g. link flap, ECC-corrected).
+    Recoverable,
+    /// Device lost — instance must be substituted, node survives.
+    DeviceFatal,
+    /// Node lost — all instances on the node must be substituted.
+    NodeFatal,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Ok,
+    Faulty(FaultLevel),
+}
+
+/// One xPU device.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    pub roce: RoceIp,
+    /// Placement: region / rack / node / local index — filled by topology.
+    pub region: u16,
+    pub rack: u16,
+    pub node: u32,
+    pub local_index: u8,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM already pinned by weights + activations + reserved space; the
+    /// remainder is the KVCache budget (paper: "the space left for KVCache
+    /// is at least 30%").
+    pub hbm_reserved_bytes: u64,
+    pub health: Health,
+}
+
+impl Device {
+    pub fn kvcache_budget_bytes(&self) -> u64 {
+        self.hbm_bytes.saturating_sub(self.hbm_reserved_bytes)
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        matches!(self.health, Health::Ok)
+    }
+
+    /// Whether this fault can clear without substitution.
+    pub fn recoverable_in_place(&self) -> bool {
+        matches!(self.health, Health::Faulty(FaultLevel::Recoverable))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device {
+            id: DeviceId(7),
+            roce: RoceIp { region: 1, host: 258 },
+            region: 1,
+            rack: 0,
+            node: 3,
+            local_index: 2,
+            hbm_bytes: 32 << 30,
+            hbm_reserved_bytes: 20 << 30,
+            health: Health::Ok,
+        }
+    }
+
+    #[test]
+    fn kvcache_budget() {
+        let d = dev();
+        assert_eq!(d.kvcache_budget_bytes(), 12 << 30);
+        let mut d2 = d.clone();
+        d2.hbm_reserved_bytes = 40 << 30;
+        assert_eq!(d2.kvcache_budget_bytes(), 0);
+    }
+
+    #[test]
+    fn health_transitions() {
+        let mut d = dev();
+        assert!(d.is_healthy());
+        d.health = Health::Faulty(FaultLevel::Recoverable);
+        assert!(!d.is_healthy());
+        assert!(d.recoverable_in_place());
+        d.health = Health::Faulty(FaultLevel::DeviceFatal);
+        assert!(!d.recoverable_in_place());
+    }
+
+    #[test]
+    fn roce_ip_display() {
+        let ip = RoceIp { region: 3, host: 0x0102 };
+        assert_eq!(ip.to_string(), "10.3.1.2");
+    }
+}

@@ -1,0 +1,208 @@
+//! Analytic inference-engine performance model.
+//!
+//! Converts (batch size, prompt lengths, prefix hits, context lengths)
+//! into TTFT/TPOT milliseconds, implementing the paper's performance
+//! terms: `T_p = TTFT_bs * r_pre` (prefill time under batching and prefix
+//! reuse) and `T_d = ξ + TPOT_bs * G` (decoding occupation). The constants
+//! live in `util::config::EngineConfig` and are sanity-calibrated against
+//! the real PJRT runtime (EXPERIMENTS.md §Calibration); all figure-level
+//! claims use *relative* behaviour, matching the paper's normalized plots.
+//!
+//! Model:
+//! - prefill batch: `base + per_tok * Σ uncached_i + quad * Σ uncached_i·ctx_i`
+//!   (the quadratic term is attention reads over the full context — this is
+//!   what makes 8k prompts disproportionately expensive, Fig. 3b).
+//! - decode iteration: `base + per_row * rows^eff + per_ctx_us * Σ ctx_i`
+//!   (rows batch sublinearly — continuous batching amortizes weights I/O).
+
+use crate::util::config::EngineConfig;
+
+#[derive(Clone, Debug)]
+pub struct EngineModel {
+    cfg: EngineConfig,
+}
+
+/// Per-request prefill description.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillItem {
+    /// Total prompt tokens.
+    pub prompt_len: usize,
+    /// Tokens covered by a cached prefix (0 if miss).
+    pub cached_len: usize,
+}
+
+impl PrefillItem {
+    pub fn uncached(&self) -> usize {
+        self.prompt_len.saturating_sub(self.cached_len)
+    }
+}
+
+impl EngineModel {
+    pub fn new(cfg: EngineConfig) -> Self {
+        EngineModel { cfg }
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Wall time (ms) to prefill one batch.
+    pub fn prefill_batch_ms(&self, items: &[PrefillItem]) -> f64 {
+        if items.is_empty() {
+            return 0.0;
+        }
+        let mut toks = 0f64;
+        let mut quad = 0f64;
+        for it in items {
+            let u = it.uncached() as f64;
+            toks += u;
+            quad += u * it.prompt_len as f64;
+        }
+        self.cfg.prefill_base_ms
+            + self.cfg.prefill_per_token_ms * toks
+            + self.cfg.prefill_quad_ms * quad
+    }
+
+    /// TTFT (ms) for a single prompt prefilled alone.
+    pub fn ttft_ms(&self, prompt_len: usize, cached_len: usize) -> f64 {
+        self.prefill_batch_ms(&[PrefillItem { prompt_len, cached_len }])
+    }
+
+    /// The paper's `r_pre`: T_p with hit / T_p without (in (0, 1]).
+    pub fn r_pre(&self, prompt_len: usize, cached_len: usize) -> f64 {
+        self.ttft_ms(prompt_len, cached_len) / self.ttft_ms(prompt_len, 0)
+    }
+
+    /// Wall time (ms) of one decode iteration over `ctx_lens` (context
+    /// length per active row).
+    pub fn decode_iter_ms(&self, ctx_lens: &[usize]) -> f64 {
+        let rows = ctx_lens.len();
+        if rows == 0 {
+            return 0.0;
+        }
+        let ctx: f64 = ctx_lens.iter().map(|&c| c as f64).sum();
+        self.cfg.decode_base_ms
+            + self.cfg.decode_per_row_ms * (rows as f64).powf(self.cfg.batch_efficiency)
+            + self.cfg.decode_per_ctx_token_us * ctx / 1000.0
+    }
+
+    /// TPOT (ms between tokens) for one request decoding at batch `bs`:
+    /// every request advances one token per iteration, so TPOT equals the
+    /// full iteration wall time (NOT iteration/bs — that is the per-token
+    /// *engine* cost, see `engine_ms_per_token`).
+    pub fn tpot_ms(&self, bs: usize, ctx: usize) -> f64 {
+        self.decode_iter_ms(&vec![ctx; bs])
+    }
+
+    /// Engine-seconds each generated token costs at batch `bs` (the
+    /// amortized serial-resource view: iteration wall time / bs).
+    pub fn engine_ms_per_token(&self, bs: usize, ctx: usize) -> f64 {
+        self.decode_iter_ms(&vec![ctx; bs]) / bs.max(1) as f64
+    }
+
+    /// The paper's `T_d` for one request: transfer time ξ plus `G` decode
+    /// iterations' worth of occupation (`T_d = ξ + TPOT_bs · G`).
+    pub fn t_d_ms(&self, xfer_ms: f64, bs: usize, ctx: usize, gen_tokens: usize) -> f64 {
+        xfer_ms + self.tpot_ms(bs, ctx) * gen_tokens as f64
+    }
+
+    /// Prefill processing capability: batches/sec * batch = requests/sec,
+    /// for homogeneous prompts (paper's `n_p b_p / T_p` with n_p = 1).
+    pub fn prefill_rps(&self, bs: usize, prompt_len: usize, cached_len: usize) -> f64 {
+        let items = vec![PrefillItem { prompt_len, cached_len }; bs];
+        let t = self.prefill_batch_ms(&items);
+        bs as f64 / (t / 1000.0)
+    }
+
+    /// Decode processing capability: requests/sec for prompts generating
+    /// `gen_tokens`, at batch `bs` and mean context `ctx`
+    /// (paper's `n_d b_d / T_d` with n_d = 1, ξ folded in).
+    pub fn decode_rps(&self, bs: usize, ctx: usize, gen_tokens: usize, xfer_ms: f64) -> f64 {
+        let td = xfer_ms + self.tpot_ms(bs, ctx) * gen_tokens as f64;
+        bs as f64 / (td / 1000.0)
+    }
+}
+
+impl Default for EngineModel {
+    fn default() -> Self {
+        EngineModel::new(EngineConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> EngineModel {
+        EngineModel::default()
+    }
+
+    #[test]
+    fn ttft_monotone_in_length() {
+        let m = m();
+        let mut prev = 0.0;
+        for len in [128, 512, 1024, 4096, 8192] {
+            let t = m.ttft_ms(len, 0);
+            assert!(t > prev, "TTFT must grow with length");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn prefix_hit_reduces_ttft_proportionally() {
+        // Fig. 1b: higher hit rate -> lower T_p, roughly linearly.
+        let m = m();
+        let full = m.ttft_ms(1024, 0);
+        let hit70 = m.ttft_ms(1024, 716);
+        let hit30 = m.ttft_ms(1024, 307);
+        assert!(hit70 < hit30 && hit30 < full);
+        let r = m.r_pre(1024, 716);
+        assert!(r > 0.2 && r < 0.5, "70% hit -> r_pre ≈ 0.3-ish, got {r}");
+    }
+
+    #[test]
+    fn quadratic_term_penalizes_long_prompts() {
+        // 8k prompt costs more than 8x a 1k prompt (Fig. 3b's asymmetry).
+        let m = m();
+        let t1k = m.ttft_ms(1024, 0);
+        let t8k = m.ttft_ms(8192, 0);
+        assert!(t8k > 8.0 * t1k, "t8k={t8k} t1k={t1k}");
+    }
+
+    #[test]
+    fn decode_batching_is_sublinear() {
+        let m = m();
+        let t1 = m.decode_iter_ms(&[512]);
+        let t8 = m.decode_iter_ms(&vec![512; 8]);
+        assert!(t8 < 8.0 * t1, "batching must amortize");
+        assert!(t8 > t1, "more rows still cost more");
+        // Per-token engine cost improves with batch; per-request TPOT
+        // degrades only mildly (the continuous-batching tradeoff).
+        assert!(m.engine_ms_per_token(8, 512) < m.engine_ms_per_token(1, 512));
+        assert!(m.tpot_ms(8, 512) < 4.0 * m.tpot_ms(1, 512));
+    }
+
+    #[test]
+    fn t_d_grows_with_tokens_generated() {
+        // Fig. 12b: more generated tokens -> longer decode occupation.
+        let m = m();
+        let short = m.decode_rps(8, 512, 64, 10.0);
+        let long = m.decode_rps(8, 512, 512, 10.0);
+        assert!(short > 3.0 * long, "short={short} long={long}");
+    }
+
+    #[test]
+    fn rps_capability_orders() {
+        // Capability drops with prompt length (prefill) and gen len (decode).
+        let m = m();
+        assert!(m.prefill_rps(4, 512, 0) > m.prefill_rps(4, 2048, 0));
+        assert!(m.decode_rps(16, 512, 128, 5.0) > m.decode_rps(16, 512, 512, 5.0));
+    }
+
+    #[test]
+    fn empty_batches_cost_nothing() {
+        let m = m();
+        assert_eq!(m.prefill_batch_ms(&[]), 0.0);
+        assert_eq!(m.decode_iter_ms(&[]), 0.0);
+    }
+}

@@ -1,0 +1,235 @@
+//! PageAttention-style HBM block allocator (paper §2.2.3 substrate).
+//!
+//! HBM left after weights/activations is carved into fixed-size blocks;
+//! sequences own ordered block lists (block tables). This is the receiver-
+//! side "discrete blocks" structure that block-free transfer must restore
+//! into, and the allocator whose occupancy drives decode admission.
+
+use anyhow::{anyhow, Result};
+
+/// Fixed-size block allocator with free list and per-sequence block tables.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_bytes: usize,
+    total_blocks: usize,
+    free: Vec<u32>,
+    /// seq handle -> block list; `None` entries are released handles.
+    tables: Vec<Option<Vec<u32>>>,
+    free_handles: Vec<u32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeqHandle(pub u32);
+
+impl BlockAllocator {
+    pub fn new(budget_bytes: u64, block_bytes: usize) -> Self {
+        let total_blocks = (budget_bytes / block_bytes as u64) as usize;
+        BlockAllocator {
+            block_bytes,
+            total_blocks,
+            free: (0..total_blocks as u32).rev().collect(),
+            tables: Vec::new(),
+            free_handles: Vec::new(),
+        }
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Blocks needed for `bytes` of KVCache.
+    pub fn blocks_for(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.block_bytes)
+    }
+
+    /// Can a sequence of `bytes` be admitted right now?
+    pub fn can_fit(&self, bytes: usize) -> bool {
+        self.blocks_for(bytes) <= self.free.len()
+    }
+
+    /// Allocate a block table for a new sequence. Fails (no partial
+    /// allocation) if insufficient blocks — the caller then rejects or
+    /// waits, never evicts silently.
+    pub fn allocate(&mut self, bytes: usize) -> Result<SeqHandle> {
+        let n = self.blocks_for(bytes);
+        if n > self.free.len() {
+            return Err(anyhow!(
+                "need {n} blocks, only {} free",
+                self.free.len()
+            ));
+        }
+        let blocks: Vec<u32> = (0..n).map(|_| self.free.pop().unwrap()).collect();
+        let handle = match self.free_handles.pop() {
+            Some(h) => {
+                self.tables[h as usize] = Some(blocks);
+                h
+            }
+            None => {
+                self.tables.push(Some(blocks));
+                (self.tables.len() - 1) as u32
+            }
+        };
+        Ok(SeqHandle(handle))
+    }
+
+    /// Grow a sequence by `extra_bytes` (decode appends KV per token).
+    pub fn grow(&mut self, h: SeqHandle, cur_bytes: usize, extra_bytes: usize) -> Result<usize> {
+        let have = self.blocks_for(cur_bytes.max(1));
+        let need = self.blocks_for(cur_bytes + extra_bytes);
+        let add = need.saturating_sub(have);
+        if add > self.free.len() {
+            return Err(anyhow!("grow needs {add} blocks, {} free", self.free.len()));
+        }
+        let table = self
+            .tables
+            .get_mut(h.0 as usize)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| anyhow!("bad handle {h:?}"))?;
+        for _ in 0..add {
+            table.push(self.free.pop().unwrap());
+        }
+        Ok(add)
+    }
+
+    /// Release a sequence's blocks.
+    pub fn release(&mut self, h: SeqHandle) -> Result<usize> {
+        let slot = self
+            .tables
+            .get_mut(h.0 as usize)
+            .ok_or_else(|| anyhow!("bad handle {h:?}"))?;
+        let blocks = slot.take().ok_or_else(|| anyhow!("double release {h:?}"))?;
+        let n = blocks.len();
+        self.free.extend(blocks);
+        self.free_handles.push(h.0);
+        Ok(n)
+    }
+
+    pub fn table(&self, h: SeqHandle) -> Option<&[u32]> {
+        self.tables.get(h.0 as usize)?.as_deref()
+    }
+
+    /// Occupancy in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn allocate_release_accounting() {
+        let mut a = BlockAllocator::new(1024, 64); // 16 blocks
+        assert_eq!(a.total_blocks(), 16);
+        let h = a.allocate(300).unwrap(); // 5 blocks
+        assert_eq!(a.used_blocks(), 5);
+        assert_eq!(a.table(h).unwrap().len(), 5);
+        assert_eq!(a.release(h).unwrap(), 5);
+        assert_eq!(a.used_blocks(), 0);
+        assert!(a.release(h).is_err(), "double release");
+    }
+
+    #[test]
+    fn allocation_is_all_or_nothing() {
+        let mut a = BlockAllocator::new(256, 64); // 4 blocks
+        let _h = a.allocate(200).unwrap(); // 4 blocks
+        let before = a.free_blocks();
+        assert!(a.allocate(65).is_err());
+        assert_eq!(a.free_blocks(), before, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn grow_allocates_only_boundary_crossings() {
+        let mut a = BlockAllocator::new(1024, 64);
+        let h = a.allocate(64).unwrap(); // exactly 1 block
+        assert_eq!(a.grow(h, 64, 10).unwrap(), 1); // crosses into block 2
+        assert_eq!(a.grow(h, 74, 10).unwrap(), 0); // still inside block 2
+        assert_eq!(a.table(h).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn handles_are_recycled() {
+        let mut a = BlockAllocator::new(1024, 64);
+        let h1 = a.allocate(64).unwrap();
+        a.release(h1).unwrap();
+        let h2 = a.allocate(64).unwrap();
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn blocks_unique_across_live_sequences() {
+        let mut a = BlockAllocator::new(4096, 64);
+        let h1 = a.allocate(500).unwrap();
+        let h2 = a.allocate(500).unwrap();
+        let t1 = a.table(h1).unwrap().to_vec();
+        let t2 = a.table(h2).unwrap().to_vec();
+        for b in &t1 {
+            assert!(!t2.contains(b), "block {b} double-assigned");
+        }
+    }
+
+    #[test]
+    fn prop_no_leak_no_double_assign() {
+        let cfg = prop::Config { cases: 48, ..Default::default() };
+        prop::check(
+            "hbm-allocator-invariants",
+            &cfg,
+            |r| {
+                let blocks = 8 + r.below(64);
+                let seed = r.next_u64();
+                (blocks, seed)
+            },
+            |&(blocks, seed)| {
+                let mut a = BlockAllocator::new((blocks * 64) as u64, 64);
+                let mut rng = Rng::new(seed);
+                let mut live: Vec<(SeqHandle, usize)> = Vec::new();
+                for _ in 0..200 {
+                    if rng.chance(0.55) {
+                        let bytes = 1 + rng.below(64 * 6);
+                        if let Ok(h) = a.allocate(bytes) {
+                            live.push((h, bytes));
+                        }
+                    } else if !live.is_empty() {
+                        let idx = rng.below(live.len());
+                        let (h, _) = live.swap_remove(idx);
+                        a.release(h).map_err(|e| e.to_string())?;
+                    }
+                    // Invariant: used == sum of live tables; all blocks unique.
+                    let mut seen = std::collections::HashSet::new();
+                    let mut used = 0;
+                    for (h, _) in &live {
+                        let t = a.table(*h).ok_or("lost table")?;
+                        used += t.len();
+                        for b in t {
+                            if !seen.insert(*b) {
+                                return Err(format!("block {b} duplicated"));
+                            }
+                        }
+                    }
+                    if used != a.used_blocks() {
+                        return Err(format!(
+                            "accounting: tables hold {used}, allocator says {}",
+                            a.used_blocks()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

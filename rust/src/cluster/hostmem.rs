@@ -1,0 +1,254 @@
+//! Two-tier prefix-aware KVCache: HBM + host-memory pool (paper §6.2,
+//! Discussion/extension: multi-turn conversation).
+//!
+//! "With further growth on the number of prefixes and content length …
+//! available host memory is useful since its capacity is relatively
+//! large. Although loading KVCache from host (local or remote) incurs
+//! extra overhead, compared with the inference on the entire prompt, such
+//! overhead is gradually acceptable."
+//!
+//! Lookup policy: HBM hit is free; a host hit pays a load cost
+//! (bytes / host_load_gbps) and promotes the entry to HBM (evicting LRU
+//! HBM entries into the host tier — a flush, also charged); a miss
+//! computes from scratch and installs in HBM. Fine-grained P/D
+//! organization raises both tiers' hit rates because one group serves one
+//! scenario (the affinity argument of §6.2).
+
+use std::collections::BTreeMap;
+
+/// Where a lookup was served from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierHit {
+    Hbm,
+    /// Served from host memory; carries the load time in ms.
+    Host,
+    Miss,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Two-tier LRU keyed by (scenario, prefix_id) at simulation granularity.
+#[derive(Debug)]
+pub struct TieredPrefixCache {
+    hbm: BTreeMap<(usize, usize), Entry>,
+    host: BTreeMap<(usize, usize), Entry>,
+    hbm_budget: usize,
+    host_budget: usize,
+    hbm_used: usize,
+    host_used: usize,
+    /// Host<->HBM staging bandwidth (GB/s) — PCIe-class.
+    pub host_load_gbps: f64,
+    tick: u64,
+    pub hbm_hits: u64,
+    pub host_hits: u64,
+    pub misses: u64,
+    /// Total ms spent loading/flushing across the run.
+    pub staging_ms: f64,
+}
+
+impl TieredPrefixCache {
+    pub fn new(hbm_budget: usize, host_budget: usize, host_load_gbps: f64) -> Self {
+        TieredPrefixCache {
+            hbm: BTreeMap::new(),
+            host: BTreeMap::new(),
+            hbm_budget,
+            host_budget,
+            hbm_used: 0,
+            host_used: 0,
+            host_load_gbps,
+            tick: 0,
+            hbm_hits: 0,
+            host_hits: 0,
+            misses: 0,
+            staging_ms: 0.0,
+        }
+    }
+
+    fn staging_ms_for(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.host_load_gbps * 1e9) * 1e3
+    }
+
+    /// Look up a prefix; on host hit or miss, the entry ends up resident
+    /// in HBM. Returns the tier served from plus the extra latency (ms)
+    /// this lookup incurred (0 for HBM hits).
+    pub fn lookup(&mut self, key: (usize, usize), bytes: usize) -> (TierHit, f64) {
+        self.tick += 1;
+        if let Some(e) = self.hbm.get_mut(&key) {
+            e.last_used = self.tick;
+            self.hbm_hits += 1;
+            return (TierHit::Hbm, 0.0);
+        }
+        if let Some(e) = self.host.remove(&key) {
+            self.host_used -= e.bytes;
+            self.host_hits += 1;
+            let load_ms = self.staging_ms_for(e.bytes);
+            self.staging_ms += load_ms;
+            self.install_hbm(key, e.bytes);
+            return (TierHit::Host, load_ms);
+        }
+        self.misses += 1;
+        if bytes <= self.hbm_budget {
+            self.install_hbm(key, bytes);
+        }
+        (TierHit::Miss, 0.0)
+    }
+
+    /// Install into HBM, demoting LRU HBM entries to host (flush charged).
+    fn install_hbm(&mut self, key: (usize, usize), bytes: usize) {
+        while self.hbm_used + bytes > self.hbm_budget {
+            let lru = self
+                .hbm
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("HBM over budget while empty");
+            let e = self.hbm.remove(&lru).unwrap();
+            self.hbm_used -= e.bytes;
+            // Demote to host if it fits (flush cost charged).
+            if e.bytes <= self.host_budget {
+                self.staging_ms += self.staging_ms_for(e.bytes);
+                while self.host_used + e.bytes > self.host_budget {
+                    let hlru = self
+                        .host
+                        .iter()
+                        .min_by_key(|(_, he)| he.last_used)
+                        .map(|(k, _)| *k)
+                        .expect("host over budget while empty");
+                    let dropped = self.host.remove(&hlru).unwrap();
+                    self.host_used -= dropped.bytes;
+                }
+                self.host_used += e.bytes;
+                self.host.insert(lru, e);
+            }
+        }
+        self.tick += 1;
+        self.hbm_used += bytes;
+        self.hbm.insert(key, Entry { bytes, last_used: self.tick });
+    }
+
+    pub fn hbm_len(&self) -> usize {
+        self.hbm.len()
+    }
+    pub fn host_len(&self) -> usize {
+        self.host.len()
+    }
+
+    /// Hit rate counting both tiers.
+    pub fn combined_hit_rate(&self) -> f64 {
+        let total = self.hbm_hits + self.host_hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        (self.hbm_hits + self.host_hits) as f64 / total as f64
+    }
+
+    pub fn hbm_hit_rate(&self) -> f64 {
+        let total = self.hbm_hits + self.host_hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hbm_hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    const MB: usize = 1 << 20;
+
+    #[test]
+    fn hbm_hit_is_free_host_hit_pays_load() {
+        let mut c = TieredPrefixCache::new(10 * MB, 100 * MB, 20.0);
+        assert_eq!(c.lookup((0, 1), 4 * MB).0, TierHit::Miss);
+        assert_eq!(c.lookup((0, 1), 4 * MB), (TierHit::Hbm, 0.0));
+        // Fill HBM so (0,1) demotes to host.
+        c.lookup((0, 2), 4 * MB);
+        c.lookup((0, 3), 4 * MB); // evicts (0,1) -> host
+        let (tier, load_ms) = c.lookup((0, 1), 4 * MB);
+        assert_eq!(tier, TierHit::Host);
+        // 4 MiB at 20 GB/s ≈ 0.21 ms.
+        assert!(load_ms > 0.1 && load_ms < 0.5, "load {load_ms}");
+    }
+
+    #[test]
+    fn host_tier_extends_effective_capacity() {
+        // 3 prefixes, HBM fits 2: with host tier the third round-robins
+        // as host hits, never full misses after warmup.
+        let mut c = TieredPrefixCache::new(8 * MB, 64 * MB, 20.0);
+        for round in 0..5 {
+            for p in 0..3 {
+                let (tier, _) = c.lookup((0, p), 4 * MB);
+                if round > 0 {
+                    assert_ne!(tier, TierHit::Miss, "round {round} prefix {p}");
+                }
+            }
+        }
+        assert!(c.combined_hit_rate() > 0.7);
+        assert!(c.hbm_hit_rate() < c.combined_hit_rate());
+    }
+
+    #[test]
+    fn without_host_tier_same_workload_misses() {
+        let mut c = TieredPrefixCache::new(8 * MB, 0, 20.0);
+        let mut misses = 0;
+        for _round in 0..5 {
+            for p in 0..3 {
+                if c.lookup((0, p), 4 * MB).0 == TierHit::Miss {
+                    misses += 1;
+                }
+            }
+        }
+        assert!(misses >= 12, "LRU thrash expected, got {misses} misses");
+    }
+
+    #[test]
+    fn staging_time_accumulates() {
+        let mut c = TieredPrefixCache::new(8 * MB, 64 * MB, 20.0);
+        for p in 0..3 {
+            c.lookup((0, p), 4 * MB);
+        }
+        let before = c.staging_ms;
+        c.lookup((0, 0), 4 * MB); // host hit -> load
+        assert!(c.staging_ms > before);
+    }
+
+    #[test]
+    fn prop_budgets_never_exceeded() {
+        let cfg = prop::Config { cases: 48, ..Default::default() };
+        prop::check(
+            "tiered-budgets",
+            &cfg,
+            |r| (2 + r.below(16), 8 + r.below(64), r.next_u64()),
+            |&(hbm_mb, host_mb, seed)| {
+                let mut c =
+                    TieredPrefixCache::new(hbm_mb * MB, host_mb * MB, 20.0);
+                let mut rng = Rng::new(seed);
+                for _ in 0..300 {
+                    let key = (rng.below(3), rng.below(12));
+                    let bytes = (1 + rng.below(4)) * MB;
+                    c.lookup(key, bytes);
+                    if c.hbm_used > c.hbm_budget {
+                        return Err(format!(
+                            "HBM {} > budget {}",
+                            c.hbm_used, c.hbm_budget
+                        ));
+                    }
+                    if c.host_used > c.host_budget {
+                        return Err(format!(
+                            "host {} > budget {}",
+                            c.host_used, c.host_budget
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,186 @@
+//! P/D instances: the unit the coordinator organizes into groups.
+//!
+//! An instance is a container assigned several xPU devices (all with RoCE
+//! IPs), playing either the prefill or the decoding role after group
+//! initialization (stateless containers have no role until then — paper
+//! §3.2/§3.3). The state here is what the gateway and the simulator probe:
+//! slot occupancy (accept/reject), prefix cache, health, model-load state.
+
+use super::device::{DeviceId, RoceIp};
+use super::prefix::PrefixCache;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId(pub u32);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Prefill,
+    Decode,
+}
+
+impl std::fmt::Display for Role {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Role::Prefill => write!(f, "P"),
+            Role::Decode => write!(f, "D"),
+        }
+    }
+}
+
+/// Lifecycle of a container/instance (paper Fig. 6/7 workflows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Fresh container: devices assigned, no role, no model.
+    Stateless,
+    /// RoCE connections being established to the group.
+    Connecting,
+    /// Loading the pre-compiled model from the file service.
+    LoadingModel,
+    /// Serving and sending health reports.
+    Ready,
+    /// Logically removed (fault or scale-in); no new traffic.
+    Draining,
+    Failed,
+}
+
+#[derive(Debug)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub role: Option<Role>,
+    pub devices: Vec<DeviceId>,
+    pub roce_ips: Vec<RoceIp>,
+    pub state: InstanceState,
+    /// Batch capacity (b_p or b_d).
+    pub batch_size: usize,
+    /// Occupied slots. For prefill this includes requests waiting for
+    /// KVCache transfer ("a prompt continuously occupies one slot in
+    /// prefill if it is waiting for KVCache transfer").
+    pub slots_busy: usize,
+    /// Prefix-aware KVCache held in this instance's HBM.
+    pub prefix_cache: PrefixCache,
+}
+
+impl Instance {
+    pub fn stateless(
+        id: InstanceId,
+        devices: Vec<DeviceId>,
+        roce_ips: Vec<RoceIp>,
+        prefix_budget_bytes: usize,
+        bytes_per_token: usize,
+    ) -> Self {
+        Instance {
+            id,
+            role: None,
+            devices,
+            roce_ips,
+            state: InstanceState::Stateless,
+            batch_size: 0,
+            slots_busy: 0,
+            prefix_cache: PrefixCache::new(prefix_budget_bytes, bytes_per_token),
+        }
+    }
+
+    /// Assign a role + batch size (group initialization or ratio change).
+    pub fn assume_role(&mut self, role: Role, batch_size: usize) {
+        self.role = Some(role);
+        self.batch_size = batch_size;
+        self.state = InstanceState::Connecting;
+    }
+
+    /// The accept/reject signal (paper §3.5): idle means a free slot, ready
+    /// state, and the right role.
+    pub fn accepts(&self) -> bool {
+        self.state == InstanceState::Ready
+            && self.role == Some(Role::Prefill)
+            && self.slots_busy < self.batch_size
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.batch_size.saturating_sub(self.slots_busy)
+    }
+
+    pub fn occupy(&mut self, n: usize) -> bool {
+        if self.slots_busy + n > self.batch_size {
+            return false;
+        }
+        self.slots_busy += n;
+        true
+    }
+
+    pub fn vacate(&mut self, n: usize) {
+        self.slots_busy = self.slots_busy.saturating_sub(n);
+    }
+
+    /// Wipe per-role state (scale-in: "all data in the instances from
+    /// removed groups are then erased").
+    pub fn erase(&mut self) {
+        self.role = None;
+        self.batch_size = 0;
+        self.slots_busy = 0;
+        self.prefix_cache.clear();
+        self.state = InstanceState::Stateless;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> Instance {
+        Instance::stateless(
+            InstanceId(1),
+            vec![DeviceId(0), DeviceId(1)],
+            vec![
+                RoceIp { region: 0, host: 1 },
+                RoceIp { region: 0, host: 2 },
+            ],
+            1 << 20,
+            4096,
+        )
+    }
+
+    #[test]
+    fn lifecycle_to_ready() {
+        let mut i = inst();
+        assert_eq!(i.state, InstanceState::Stateless);
+        assert!(!i.accepts());
+        i.assume_role(Role::Prefill, 4);
+        assert_eq!(i.state, InstanceState::Connecting);
+        i.state = InstanceState::Ready;
+        assert!(i.accepts());
+    }
+
+    #[test]
+    fn accept_reject_on_slots() {
+        let mut i = inst();
+        i.assume_role(Role::Prefill, 2);
+        i.state = InstanceState::Ready;
+        assert!(i.occupy(2));
+        assert!(!i.accepts(), "full instance must reject");
+        assert!(!i.occupy(1), "over-occupancy refused");
+        i.vacate(1);
+        assert!(i.accepts());
+    }
+
+    #[test]
+    fn decode_role_never_accepts_prefill_traffic() {
+        let mut i = inst();
+        i.assume_role(Role::Decode, 16);
+        i.state = InstanceState::Ready;
+        assert!(!i.accepts());
+    }
+
+    #[test]
+    fn erase_returns_to_stateless() {
+        let mut i = inst();
+        i.assume_role(Role::Prefill, 4);
+        i.state = InstanceState::Ready;
+        i.occupy(3);
+        i.prefix_cache.insert(&[1, 2, 3]);
+        i.erase();
+        assert_eq!(i.state, InstanceState::Stateless);
+        assert_eq!(i.role, None);
+        assert_eq!(i.slots_busy, 0);
+        assert!(i.prefix_cache.is_empty());
+    }
+}

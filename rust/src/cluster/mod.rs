@@ -1,0 +1,22 @@
+//! Cluster substrate: the simulated xPU fleet the coordinator manages.
+//!
+//! - `device`: one xPU (NPU) — HBM capacity, RoCE IP, health/fault levels.
+//! - `hbm`: PageAttention-style fixed-size block allocator over HBM.
+//! - `prefix`: prefix-aware KVCache (token trie + LRU) with HBM accounting.
+//! - `engine`: the analytic inference perf model — `TTFT(bs, len, hit)` and
+//!   `TPOT(bs, ctx)` — calibrated against the real PJRT runtime.
+//! - `instance`: a P or D instance (a container holding several devices)
+//!   with the accept/reject and slot state the gateway interacts with.
+
+pub mod device;
+pub mod engine;
+pub mod hbm;
+pub mod hostmem;
+pub mod instance;
+pub mod prefix;
+
+pub use device::{Device, DeviceId, FaultLevel, Health, RoceIp};
+pub use engine::EngineModel;
+pub use hbm::BlockAllocator;
+pub use instance::{Instance, InstanceId, Role};
+pub use prefix::PrefixCache;

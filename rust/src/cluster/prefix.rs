@@ -1,0 +1,244 @@
+//! Prefix-aware KVCache registry with LRU eviction under an HBM budget.
+//!
+//! The paper's premise (§2.2.1): each prefill instance can only keep a few
+//! prefixes' KVCaches resident in HBM, so the hit rate depends on how
+//! prompts are organized across instances. Fine-grained P/D groups route
+//! homologous prompts (one scenario) to the same instances, raising hit
+//! rates without host-memory spill.
+//!
+//! Entries are token sequences; `lookup` returns the longest cached entry
+//! that prefix-matches the prompt (the number of tokens whose KV need not
+//! be recomputed). Insertion evicts least-recently-used entries when the
+//! byte budget would be exceeded.
+
+/// One cached prefix.
+#[derive(Clone, Debug)]
+struct Entry {
+    tokens: Vec<i32>,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Debug)]
+pub struct PrefixCache {
+    budget_bytes: usize,
+    bytes_per_token: usize,
+    used_bytes: usize,
+    entries: Vec<Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize, bytes_per_token: usize) -> Self {
+        PrefixCache {
+            budget_bytes,
+            bytes_per_token,
+            used_bytes: 0,
+            entries: Vec::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest cached prefix of `prompt`, in tokens. Marks the entry used.
+    pub fn lookup(&mut self, prompt: &[i32]) -> usize {
+        self.tick += 1;
+        let mut best: Option<(usize, usize)> = None; // (len, idx)
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.tokens.len() <= prompt.len()
+                && prompt[..e.tokens.len()] == e.tokens[..]
+            {
+                let len = e.tokens.len();
+                if best.map(|(l, _)| len > l).unwrap_or(true) {
+                    best = Some((len, i));
+                }
+            }
+        }
+        match best {
+            Some((len, i)) => {
+                self.entries[i].last_used = self.tick;
+                self.hits += 1;
+                len
+            }
+            None => {
+                self.misses += 1;
+                0
+            }
+        }
+    }
+
+    /// Insert a prefix (e.g. after a prefill computed it). Returns false if
+    /// the prefix alone exceeds the whole budget.
+    pub fn insert(&mut self, prefix: &[i32]) -> bool {
+        if prefix.is_empty() {
+            return true;
+        }
+        // Already present (exact)?
+        if self
+            .entries
+            .iter()
+            .any(|e| e.tokens.len() == prefix.len() && e.tokens[..] == *prefix)
+        {
+            return true;
+        }
+        let bytes = prefix.len() * self.bytes_per_token;
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        while self.used_bytes + bytes > self.budget_bytes {
+            self.evict_lru();
+        }
+        self.tick += 1;
+        self.entries.push(Entry {
+            tokens: prefix.to_vec(),
+            bytes,
+            last_used: self.tick,
+        });
+        self.used_bytes += bytes;
+        true
+    }
+
+    fn evict_lru(&mut self) {
+        if let Some((idx, _)) = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+        {
+            let e = self.entries.swap_remove(idx);
+            self.used_bytes -= e.bytes;
+        }
+    }
+
+    /// Observed hit rate (lookups with any prefix match).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.used_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn toks(xs: &[i32]) -> Vec<i32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn longest_prefix_wins() {
+        let mut c = PrefixCache::new(10_000, 10);
+        c.insert(&toks(&[1, 2]));
+        c.insert(&toks(&[1, 2, 3, 4]));
+        assert_eq!(c.lookup(&[1, 2, 3, 4, 5, 6]), 4);
+        assert_eq!(c.lookup(&[1, 2, 9]), 2);
+        assert_eq!(c.lookup(&[9, 9]), 0);
+    }
+
+    #[test]
+    fn entry_longer_than_prompt_does_not_match() {
+        let mut c = PrefixCache::new(10_000, 10);
+        c.insert(&toks(&[1, 2, 3, 4]));
+        assert_eq!(c.lookup(&[1, 2]), 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        // Budget for exactly two 4-token entries (4 * 10 * 2 = 80).
+        let mut c = PrefixCache::new(80, 10);
+        c.insert(&toks(&[1, 1, 1, 1]));
+        c.insert(&toks(&[2, 2, 2, 2]));
+        // Touch entry 1 so entry 2 is LRU.
+        assert_eq!(c.lookup(&[1, 1, 1, 1, 5]), 4);
+        c.insert(&toks(&[3, 3, 3, 3]));
+        assert_eq!(c.lookup(&[2, 2, 2, 2, 5]), 0, "entry 2 evicted");
+        assert_eq!(c.lookup(&[1, 1, 1, 1, 5]), 4, "entry 1 kept");
+        assert_eq!(c.lookup(&[3, 3, 3, 3, 5]), 4);
+    }
+
+    #[test]
+    fn oversized_prefix_rejected() {
+        let mut c = PrefixCache::new(30, 10);
+        assert!(!c.insert(&toks(&[1, 2, 3, 4])));
+        assert!(c.insert(&toks(&[1, 2, 3])));
+    }
+
+    #[test]
+    fn duplicate_insert_no_double_count() {
+        let mut c = PrefixCache::new(1000, 10);
+        c.insert(&toks(&[1, 2, 3]));
+        let used = c.used_bytes();
+        c.insert(&toks(&[1, 2, 3]));
+        assert_eq!(c.used_bytes(), used);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut c = PrefixCache::new(1000, 10);
+        c.insert(&toks(&[7, 7]));
+        c.lookup(&[7, 7, 1]); // hit
+        c.lookup(&[8, 8]); // miss
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_used_bytes_never_exceeds_budget() {
+        let cfg = prop::Config { cases: 48, ..Default::default() };
+        prop::check(
+            "prefix-budget",
+            &cfg,
+            |r| (200 + r.below(2000), r.next_u64()),
+            |&(budget, seed)| {
+                let mut c = PrefixCache::new(budget, 10);
+                let mut rng = Rng::new(seed);
+                for _ in 0..300 {
+                    let len = 1 + rng.below(40);
+                    let head = rng.below(5) as i32;
+                    let prefix: Vec<i32> = std::iter::once(head)
+                        .chain((1..len).map(|i| i as i32))
+                        .collect();
+                    if rng.chance(0.7) {
+                        c.insert(&prefix);
+                    } else {
+                        c.lookup(&prefix);
+                    }
+                    if c.used_bytes() > budget {
+                        return Err(format!(
+                            "budget {} exceeded: {}",
+                            budget,
+                            c.used_bytes()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

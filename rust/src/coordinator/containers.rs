@@ -1,0 +1,155 @@
+//! ContainerPool: the Kubernetes/volcano stand-in.
+//!
+//! Containers are the minimum resource unit for scaling (paper §2.1
+//! Infrastructure). Each container is assigned `devices_per_instance`
+//! devices of one node from the topology; containers are *stateless* until
+//! a group setup or RoCE join assigns them a role ("the workflow of P/D
+//! setup assumes the containers are stateless, to facilitate the resource
+//! relocation among scenarios or even among services").
+
+use crate::cluster::device::DeviceId;
+use crate::cluster::instance::{Instance, InstanceId};
+use crate::network::topology::Topology;
+
+/// Hands out stateless containers backed by healthy nodes.
+#[derive(Debug)]
+pub struct ContainerPool {
+    /// (node, devices) not yet assigned to a container.
+    free_slots: Vec<(u32, Vec<DeviceId>)>,
+    next_id: u32,
+    prefix_budget_bytes: usize,
+    bytes_per_token: usize,
+}
+
+impl ContainerPool {
+    /// Carve every node of the topology into containers of
+    /// `devices_per_instance` devices.
+    pub fn from_topology(
+        topo: &Topology,
+        prefix_budget_bytes: usize,
+        bytes_per_token: usize,
+    ) -> Self {
+        let per = topo.cfg.devices_per_instance.max(1);
+        let mut free_slots = Vec::new();
+        for node in 0..topo.total_nodes() as u32 {
+            let devs = topo.node_devices(node);
+            for chunk in devs.chunks(per) {
+                if chunk.len() == per {
+                    free_slots.push((node, chunk.to_vec()));
+                }
+            }
+        }
+        // LIFO from the end keeps low node ids handed out first.
+        free_slots.reverse();
+        ContainerPool {
+            free_slots,
+            next_id: 0,
+            prefix_budget_bytes,
+            bytes_per_token,
+        }
+    }
+
+    pub fn available(&self) -> usize {
+        self.free_slots.len()
+    }
+
+    /// Acquire one stateless container (Instance with no role).
+    pub fn acquire(&mut self, topo: &Topology) -> Option<Instance> {
+        let (_node, devices) = self.free_slots.pop()?;
+        let roce_ips = devices.iter().map(|&d| topo.device(d).roce).collect();
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        Some(Instance::stateless(
+            id,
+            devices,
+            roce_ips,
+            self.prefix_budget_bytes,
+            self.bytes_per_token,
+        ))
+    }
+
+    /// Return a container's resources (scale-in: "the instances would be
+    /// released"). The instance must already be erased.
+    pub fn release(&mut self, inst: Instance, topo: &Topology) {
+        debug_assert!(inst.role.is_none(), "release requires erased instance");
+        let node = topo.device(inst.devices[0]).node;
+        self.free_slots.push((node, inst.devices));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::config::ClusterConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&ClusterConfig {
+            regions: 1,
+            racks_per_region: 2,
+            nodes_per_rack: 2,
+            devices_per_node: 8,
+            devices_per_instance: 8,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn pool_covers_all_nodes() {
+        let t = topo();
+        let pool = ContainerPool::from_topology(&t, 1 << 20, 4096);
+        assert_eq!(pool.available(), 4); // 4 nodes, 1 container each
+    }
+
+    #[test]
+    fn acquire_assigns_whole_node_devices() {
+        let t = topo();
+        let mut pool = ContainerPool::from_topology(&t, 1 << 20, 4096);
+        let inst = pool.acquire(&t).unwrap();
+        assert_eq!(inst.devices.len(), 8);
+        assert_eq!(inst.roce_ips.len(), 8);
+        assert!(inst.role.is_none());
+        // All devices on one node.
+        let node = t.device(inst.devices[0]).node;
+        assert!(inst.devices.iter().all(|&d| t.device(d).node == node));
+    }
+
+    #[test]
+    fn exhaustion_and_release() {
+        let t = topo();
+        let mut pool = ContainerPool::from_topology(&t, 1 << 20, 4096);
+        let mut held = Vec::new();
+        while let Some(i) = pool.acquire(&t) {
+            held.push(i);
+        }
+        assert_eq!(held.len(), 4);
+        assert!(pool.acquire(&t).is_none());
+        let mut inst = held.pop().unwrap();
+        inst.erase();
+        pool.release(inst, &t);
+        assert_eq!(pool.available(), 1);
+        assert!(pool.acquire(&t).is_some());
+    }
+
+    #[test]
+    fn smaller_instances_pack_nodes() {
+        let t = Topology::build(&ClusterConfig {
+            regions: 1,
+            racks_per_region: 1,
+            nodes_per_rack: 1,
+            devices_per_node: 8,
+            devices_per_instance: 4,
+            ..Default::default()
+        });
+        let pool = ContainerPool::from_topology(&t, 1 << 20, 4096);
+        assert_eq!(pool.available(), 2); // 8 devices / 4 per instance
+    }
+
+    #[test]
+    fn ids_unique() {
+        let t = topo();
+        let mut pool = ContainerPool::from_topology(&t, 1 << 20, 4096);
+        let a = pool.acquire(&t).unwrap();
+        let b = pool.acquire(&t).unwrap();
+        assert_ne!(a.id, b.id);
+    }
+}

@@ -1,0 +1,191 @@
+//! Automatic fault detection (paper §3.4 / Fig. 8).
+//!
+//! A customized container with a resident process runs per node: it
+//! ① regularly detects device faults and ② records the xPU status to a
+//! file mounted into all instances on the node; ③ MLOps polls that status
+//! and triggers auto substitution. Faults are injected from a seeded
+//! hazard model scaled from the paper's observed rate (~1.5 faults/week
+//! per 400 devices).
+
+use crate::cluster::device::{DeviceId, FaultLevel, Health};
+use crate::network::topology::Topology;
+use crate::util::prng::Rng;
+
+/// Seeded fault injector: produces a time-ordered schedule of faults.
+#[derive(Debug)]
+pub struct FaultInjector {
+    rng: Rng,
+    /// Mean faults per device per millisecond.
+    hazard_per_dev_ms: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_ms: f64,
+    pub device: DeviceId,
+    pub level: FaultLevel,
+}
+
+impl FaultInjector {
+    /// `faults_per_week_per_400` — the paper's observed rate knob.
+    pub fn new(seed: u64, faults_per_week_per_400: f64) -> Self {
+        let per_dev_week = faults_per_week_per_400 / 400.0;
+        let week_ms = 7.0 * 24.0 * 3600.0 * 1e3;
+        FaultInjector { rng: Rng::new(seed), hazard_per_dev_ms: per_dev_week / week_ms }
+    }
+
+    /// Draw the fault schedule for `fleet` devices over a horizon.
+    pub fn schedule(&mut self, fleet: usize, horizon_ms: f64) -> Vec<FaultEvent> {
+        let rate_ms = self.hazard_per_dev_ms * fleet as f64; // fleet-wide rate
+        let mut out = Vec::new();
+        if rate_ms <= 0.0 {
+            return out;
+        }
+        let mut t = 0.0;
+        loop {
+            t += self.rng.exp(rate_ms);
+            if t > horizon_ms {
+                break;
+            }
+            let device = DeviceId(self.rng.below(fleet) as u32);
+            // Paper: most faults recoverable; a minority kill device/node.
+            let level = match self.rng.f64() {
+                x if x < 0.60 => FaultLevel::Recoverable,
+                x if x < 0.92 => FaultLevel::DeviceFatal,
+                _ => FaultLevel::NodeFatal,
+            };
+            out.push(FaultEvent { at_ms: t, device, level });
+        }
+        out
+    }
+}
+
+/// The per-node resident detector: scans its node's devices and writes the
+/// status file (here: an in-memory snapshot the MLOps poller reads).
+#[derive(Debug)]
+pub struct NodeDetector {
+    pub node: u32,
+    pub devices: Vec<DeviceId>,
+    /// Detection period ("regularly detects the faults").
+    pub period_ms: f64,
+}
+
+/// One status-file record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatusRecord {
+    pub device: DeviceId,
+    pub health: Health,
+}
+
+impl NodeDetector {
+    pub fn new(topo: &Topology, node: u32, period_ms: f64) -> Self {
+        NodeDetector { node, devices: topo.node_devices(node), period_ms }
+    }
+
+    /// ①+②: scan now, producing the status file contents.
+    pub fn scan(&self, topo: &Topology) -> Vec<StatusRecord> {
+        self.devices
+            .iter()
+            .map(|&d| StatusRecord { device: d, health: topo.device(d).health })
+            .collect()
+    }
+
+    /// Detection latency for a fault occurring at `fault_ms`: the next
+    /// periodic scan after it.
+    pub fn detection_time(&self, fault_ms: f64) -> f64 {
+        (fault_ms / self.period_ms).floor() * self.period_ms + self.period_ms
+    }
+}
+
+/// ③: the MLOps poll — collapse status files into the set of devices
+/// needing substitution (recoverable ones are left to self-heal).
+pub fn faulty_devices_needing_substitution(records: &[StatusRecord]) -> Vec<DeviceId> {
+    records
+        .iter()
+        .filter_map(|r| match r.health {
+            Health::Faulty(FaultLevel::DeviceFatal)
+            | Health::Faulty(FaultLevel::NodeFatal) => Some(r.device),
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::config::ClusterConfig;
+
+    #[test]
+    fn fault_rate_matches_paper_scale() {
+        // 400 devices, 1.5 faults/week: over 8 simulated weeks expect ~12.
+        let mut inj = FaultInjector::new(1, 1.5);
+        let horizon = 8.0 * 7.0 * 24.0 * 3600.0 * 1e3;
+        let faults = inj.schedule(400, horizon);
+        assert!(
+            (6..=22).contains(&faults.len()),
+            "got {} faults",
+            faults.len()
+        );
+        // Tens of thousands of devices: faults become "very common".
+        let mut inj2 = FaultInjector::new(2, 1.5);
+        let day = 24.0 * 3600.0 * 1e3;
+        let faults_day = inj2.schedule(40_000, day);
+        assert!(faults_day.len() > 10, "got {}", faults_day.len());
+    }
+
+    #[test]
+    fn schedule_sorted_and_in_fleet() {
+        let mut inj = FaultInjector::new(3, 1.5);
+        let faults = inj.schedule(100, 1e9);
+        for w in faults.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+        assert!(faults.iter().all(|f| f.device.0 < 100));
+    }
+
+    #[test]
+    fn level_mix_mostly_recoverable() {
+        let mut inj = FaultInjector::new(4, 1.5);
+        let faults = inj.schedule(40_000, 30.0 * 24.0 * 3600.0 * 1e3);
+        let rec = faults
+            .iter()
+            .filter(|f| f.level == FaultLevel::Recoverable)
+            .count();
+        let frac = rec as f64 / faults.len() as f64;
+        assert!(frac > 0.45 && frac < 0.75, "recoverable frac {frac}");
+    }
+
+    #[test]
+    fn detector_scan_and_poll() {
+        let cfg = ClusterConfig {
+            regions: 1,
+            racks_per_region: 1,
+            nodes_per_rack: 2,
+            devices_per_node: 4,
+            ..Default::default()
+        };
+        let mut topo = Topology::build(&cfg);
+        let det = NodeDetector::new(&topo, 0, 100.0);
+        assert_eq!(det.devices.len(), 4);
+        // Healthy scan: nothing to substitute.
+        let recs = det.scan(&topo);
+        assert!(faulty_devices_needing_substitution(&recs).is_empty());
+        // Break one device fatally, one recoverably.
+        topo.device_mut(DeviceId(1)).health = Health::Faulty(FaultLevel::DeviceFatal);
+        topo.device_mut(DeviceId(2)).health = Health::Faulty(FaultLevel::Recoverable);
+        let recs = det.scan(&topo);
+        let subs = faulty_devices_needing_substitution(&recs);
+        assert_eq!(subs, vec![DeviceId(1)]);
+    }
+
+    #[test]
+    fn detection_latency_is_next_tick() {
+        let cfg = ClusterConfig::default();
+        let topo = Topology::build(&cfg);
+        let det = NodeDetector::new(&topo, 0, 100.0);
+        assert_eq!(det.detection_time(0.0), 100.0);
+        assert_eq!(det.detection_time(99.9), 100.0);
+        assert_eq!(det.detection_time(100.0), 200.0);
+        assert_eq!(det.detection_time(250.0), 300.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! P/D groups: the fine-grained organization unit (paper §3.2).
+//!
+//! A group serves one scenario of one service, holds `n_p` prefill and
+//! `n_d` decode instances, and records the `<role, {<RoCE IPs>, …}>` map
+//! plus the pairwise connection state dynamic RoCE construction maintains.
+//! "Each prefill instance has the chance to forward the request (with
+//! KVCache) to any decoding instance in a group" — i.e. connectivity must
+//! be complete P×D before the group is serving.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::device::RoceIp;
+use crate::cluster::instance::{InstanceId, Role};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GroupId(pub u32);
+
+#[derive(Debug, Clone)]
+pub struct PdGroup {
+    pub id: GroupId,
+    pub service: String,
+    pub scenario: String,
+    /// Role map: instance -> role (the `<P, …>` / `<D, …>` sides).
+    pub roles: BTreeMap<InstanceId, Role>,
+    /// RoCE map: instance -> ordered device IPs (by device id order).
+    pub roce_map: BTreeMap<InstanceId, Vec<RoceIp>>,
+    /// Established P↔D connections (unordered pairs stored as (P, D)).
+    pub connections: BTreeSet<(InstanceId, InstanceId)>,
+    /// Serving flag: set once the setup workflow completes.
+    pub serving: bool,
+}
+
+impl PdGroup {
+    pub fn new(id: GroupId, service: &str, scenario: &str) -> Self {
+        PdGroup {
+            id,
+            service: service.to_string(),
+            scenario: scenario.to_string(),
+            roles: BTreeMap::new(),
+            roce_map: BTreeMap::new(),
+            connections: BTreeSet::new(),
+            serving: false,
+        }
+    }
+
+    pub fn add_member(&mut self, id: InstanceId, role: Role, ips: Vec<RoceIp>) {
+        self.roles.insert(id, role);
+        self.roce_map.insert(id, ips);
+    }
+
+    /// Remove a member (scale-in or fault): drops its role, map entry and
+    /// all its connections. Returns whether it was present.
+    pub fn remove_member(&mut self, id: InstanceId) -> bool {
+        let present = self.roles.remove(&id).is_some();
+        self.roce_map.remove(&id);
+        self.connections.retain(|&(p, d)| p != id && d != id);
+        present
+    }
+
+    pub fn prefills(&self) -> Vec<InstanceId> {
+        self.roles
+            .iter()
+            .filter(|(_, r)| **r == Role::Prefill)
+            .map(|(i, _)| *i)
+            .collect()
+    }
+
+    pub fn decodes(&self) -> Vec<InstanceId> {
+        self.roles
+            .iter()
+            .filter(|(_, r)| **r == Role::Decode)
+            .map(|(i, _)| *i)
+            .collect()
+    }
+
+    /// The P/D ratio (n_p, n_d).
+    pub fn ratio(&self) -> (usize, usize) {
+        (self.prefills().len(), self.decodes().len())
+    }
+
+    pub fn connect(&mut self, p: InstanceId, d: InstanceId) -> bool {
+        debug_assert_eq!(self.roles.get(&p), Some(&Role::Prefill));
+        debug_assert_eq!(self.roles.get(&d), Some(&Role::Decode));
+        self.connections.insert((p, d))
+    }
+
+    /// Full P×D mesh established?
+    pub fn fully_connected(&self) -> bool {
+        let ps = self.prefills();
+        let ds = self.decodes();
+        ps.iter()
+            .all(|p| ds.iter().all(|d| self.connections.contains(&(*p, *d))))
+    }
+
+    /// Connections a joining instance must establish (paper Fig. 7: "new
+    /// connections between these containers with existing P/D instances").
+    pub fn pending_connections_for(&self, id: InstanceId) -> Vec<(InstanceId, InstanceId)> {
+        match self.roles.get(&id) {
+            Some(Role::Prefill) => self
+                .decodes()
+                .into_iter()
+                .filter(|d| !self.connections.contains(&(id, *d)))
+                .map(|d| (id, d))
+                .collect(),
+            Some(Role::Decode) => self
+                .prefills()
+                .into_iter()
+                .filter(|p| !self.connections.contains(&(*p, id)))
+                .map(|p| (p, id))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Serialize the `<role, {ips}>` map the way the paper writes it —
+    /// stored in the MetaStore for newly joining containers.
+    pub fn roce_map_string(&self) -> String {
+        let fmt_side = |role: Role| {
+            let mut parts = Vec::new();
+            for (id, r) in &self.roles {
+                if *r == role {
+                    let ips: Vec<String> = self.roce_map[id]
+                        .iter()
+                        .map(|ip| ip.to_string())
+                        .collect();
+                    parts.push(format!("<{}>", ips.join(", ")));
+                }
+            }
+            parts.join(", ")
+        };
+        format!(
+            "<P, {{{}}}>; <D, {{{}}}>",
+            fmt_side(Role::Prefill),
+            fmt_side(Role::Decode)
+        )
+    }
+
+    /// HBM bytes needed per device for RoCE connection metadata — the §3.7
+    /// concern that meta must fit in "hundreds of MB". Proportional to the
+    /// peer count within the group (not the whole cluster) — the saving
+    /// fine-grained organization buys.
+    pub fn roce_meta_bytes_per_device(&self, per_conn_bytes: usize) -> usize {
+        let (np, nd) = self.ratio();
+        // A prefill device talks to every decode instance's same-index
+        // device and vice versa; worst side dominates.
+        per_conn_bytes * np.max(nd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ip(h: u16) -> RoceIp {
+        RoceIp { region: 0, host: h }
+    }
+
+    fn group_2p1d() -> PdGroup {
+        let mut g = PdGroup::new(GroupId(0), "svcA", "scene1");
+        g.add_member(InstanceId(0), Role::Prefill, vec![ip(0), ip(1)]);
+        g.add_member(InstanceId(1), Role::Prefill, vec![ip(2), ip(3)]);
+        g.add_member(InstanceId(2), Role::Decode, vec![ip(4), ip(5)]);
+        g
+    }
+
+    #[test]
+    fn ratio_and_membership() {
+        let g = group_2p1d();
+        assert_eq!(g.ratio(), (2, 1));
+        assert_eq!(g.prefills(), vec![InstanceId(0), InstanceId(1)]);
+        assert_eq!(g.decodes(), vec![InstanceId(2)]);
+    }
+
+    #[test]
+    fn connectivity_mesh() {
+        let mut g = group_2p1d();
+        assert!(!g.fully_connected());
+        for (p, d) in [(0u32, 2u32), (1, 2)] {
+            g.connect(InstanceId(p), InstanceId(d));
+        }
+        assert!(g.fully_connected());
+    }
+
+    #[test]
+    fn pending_connections_for_joiner() {
+        let mut g = group_2p1d();
+        g.connect(InstanceId(0), InstanceId(2));
+        g.connect(InstanceId(1), InstanceId(2));
+        // A new decode joins: must connect to both prefills.
+        g.add_member(InstanceId(3), Role::Decode, vec![ip(6), ip(7)]);
+        let pending = g.pending_connections_for(InstanceId(3));
+        assert_eq!(
+            pending,
+            vec![
+                (InstanceId(0), InstanceId(3)),
+                (InstanceId(1), InstanceId(3))
+            ]
+        );
+        assert!(!g.fully_connected());
+        for (p, d) in pending {
+            g.connect(p, d);
+        }
+        assert!(g.fully_connected());
+    }
+
+    #[test]
+    fn remove_member_drops_connections() {
+        let mut g = group_2p1d();
+        g.connect(InstanceId(0), InstanceId(2));
+        g.connect(InstanceId(1), InstanceId(2));
+        assert!(g.remove_member(InstanceId(0)));
+        assert_eq!(g.ratio(), (1, 1));
+        assert!(g.connections.iter().all(|&(p, _)| p != InstanceId(0)));
+        assert!(g.fully_connected(), "remaining mesh intact");
+        assert!(!g.remove_member(InstanceId(0)), "double remove");
+    }
+
+    #[test]
+    fn roce_map_string_format() {
+        let g = group_2p1d();
+        let s = g.roce_map_string();
+        assert!(s.starts_with("<P, {<10.0.0.0, 10.0.0.1>, <10.0.0.2, 10.0.0.3>}>"));
+        assert!(s.contains("<D, {<10.0.0.4, 10.0.0.5>}>"));
+    }
+
+    #[test]
+    fn meta_bytes_scale_with_group_not_cluster() {
+        let g = group_2p1d();
+        // 2 prefills max side -> 2 * per_conn.
+        assert_eq!(g.roce_meta_bytes_per_device(1 << 20), 2 << 20);
+    }
+}

@@ -1,0 +1,156 @@
+//! MetaStore: the Zookeeper stand-in (paper §3.2).
+//!
+//! What the workflows actually need from Zookeeper: versioned writes,
+//! ordered change notification (watches), and ephemeral-ish health entries
+//! that the poller can expire. We provide a deterministic, in-process
+//! equivalent: every mutation appends to a change log; watchers hold a
+//! cursor and drain `changes_since`.
+
+use std::collections::BTreeMap;
+
+/// A change-log record. `value = None` means deletion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Change {
+    pub seq: u64,
+    pub key: String,
+    pub value: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct MetaStore {
+    data: BTreeMap<String, (u64, String)>, // key -> (version, value)
+    log: Vec<Change>,
+    seq: u64,
+}
+
+impl MetaStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write (create or replace). Returns the new version.
+    pub fn put(&mut self, key: &str, value: &str) -> u64 {
+        self.seq += 1;
+        let version = self
+            .data
+            .get(key)
+            .map(|(v, _)| v + 1)
+            .unwrap_or(1);
+        self.data.insert(key.to_string(), (version, value.to_string()));
+        self.log.push(Change {
+            seq: self.seq,
+            key: key.to_string(),
+            value: Some(value.to_string()),
+        });
+        version
+    }
+
+    /// Compare-and-set on version; Err(current_version) on conflict.
+    pub fn cas(&mut self, key: &str, expect_version: u64, value: &str) -> Result<u64, u64> {
+        let cur = self.data.get(key).map(|(v, _)| *v).unwrap_or(0);
+        if cur != expect_version {
+            return Err(cur);
+        }
+        Ok(self.put(key, value))
+    }
+
+    pub fn delete(&mut self, key: &str) -> bool {
+        if self.data.remove(key).is_some() {
+            self.seq += 1;
+            self.log.push(Change { seq: self.seq, key: key.to_string(), value: None });
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.data.get(key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn version(&self, key: &str) -> u64 {
+        self.data.get(key).map(|(v, _)| *v).unwrap_or(0)
+    }
+
+    /// All keys under a prefix (Zookeeper children).
+    pub fn children(&self, prefix: &str) -> Vec<(&str, &str)> {
+        self.data
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, (_, v))| (k.as_str(), v.as_str()))
+            .collect()
+    }
+
+    pub fn count_children(&self, prefix: &str) -> usize {
+        self.children(prefix).len()
+    }
+
+    /// Watch semantics: all changes with seq > cursor, plus the new cursor.
+    pub fn changes_since(&self, cursor: u64) -> (Vec<Change>, u64) {
+        let start = self.log.partition_point(|c| c.seq <= cursor);
+        (self.log[start..].to_vec(), self.seq)
+    }
+
+    pub fn cursor(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_version() {
+        let mut m = MetaStore::new();
+        assert_eq!(m.put("a", "1"), 1);
+        assert_eq!(m.put("a", "2"), 2);
+        assert_eq!(m.get("a"), Some("2"));
+        assert_eq!(m.version("a"), 2);
+        assert_eq!(m.get("missing"), None);
+    }
+
+    #[test]
+    fn cas_enforces_versions() {
+        let mut m = MetaStore::new();
+        m.put("k", "v1");
+        assert_eq!(m.cas("k", 1, "v2"), Ok(2));
+        assert_eq!(m.cas("k", 1, "v3"), Err(2));
+        assert_eq!(m.get("k"), Some("v2"));
+        // CAS create: expect version 0.
+        assert_eq!(m.cas("new", 0, "x"), Ok(1));
+    }
+
+    #[test]
+    fn children_by_prefix() {
+        let mut m = MetaStore::new();
+        m.put("/svc/a/roce/inst0", "ip0");
+        m.put("/svc/a/roce/inst1", "ip1");
+        m.put("/svc/b/roce/inst0", "ip9");
+        assert_eq!(m.count_children("/svc/a/roce/"), 2);
+        let kids = m.children("/svc/a/roce/");
+        assert_eq!(kids[0], ("/svc/a/roce/inst0", "ip0"));
+    }
+
+    #[test]
+    fn watch_cursor_drains_in_order() {
+        let mut m = MetaStore::new();
+        let c0 = m.cursor();
+        m.put("a", "1");
+        m.put("b", "2");
+        m.delete("a");
+        let (changes, c1) = m.changes_since(c0);
+        assert_eq!(changes.len(), 3);
+        assert_eq!(changes[2].value, None);
+        assert!(changes.windows(2).all(|w| w[0].seq < w[1].seq));
+        let (none, _) = m.changes_since(c1);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn delete_missing_is_noop() {
+        let mut m = MetaStore::new();
+        assert!(!m.delete("nope"));
+        assert_eq!(m.cursor(), 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! MLOps controller: group-granular scaling, the inference/training tidal
+//! switch, and rolling upgrades (paper §3.3, Fig. 13b).
+//!
+//! The controller plans capacity per scenario from the tidal traffic curve
+//! and executes scale-in/out at *group* granularity (manual or
+//! time-triggered); rolling upgrades walk group by group so the service is
+//! never interrupted ("each group receives a proportion of traffic for
+//! inference (at most group-level failure)").
+
+use crate::cluster::engine::EngineModel;
+use crate::workload::traffic::{diurnal_factor, scene_phase, TRAINING_SWITCH_FRACTION};
+
+use super::ratio::{phi_for_ratio, WorkloadProfile};
+
+/// One group's template: its P/D ratio and per-group capability.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupTemplate {
+    pub n_p: usize,
+    pub n_d: usize,
+    /// Requests/sec one group sustains (from `ratio::phi_for_ratio`).
+    pub group_rps: f64,
+}
+
+impl GroupTemplate {
+    pub fn from_profile(
+        engine: &EngineModel,
+        profile: &WorkloadProfile,
+        n_p: usize,
+        n_d: usize,
+    ) -> Self {
+        let (served, _) = phi_for_ratio(engine, profile, n_p, n_d, f64::INFINITY);
+        GroupTemplate { n_p, n_d, group_rps: served }
+    }
+
+    pub fn instances(&self) -> usize {
+        self.n_p + self.n_d
+    }
+}
+
+/// Groups needed for `rate_rps` with `headroom` (e.g. 1.2 = 20% slack).
+pub fn groups_needed(rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> usize {
+    if rate_rps <= 0.0 {
+        return 0;
+    }
+    ((rate_rps * headroom) / tpl.group_rps).ceil() as usize
+}
+
+/// A scaling decision at a point in time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    ScaleOut { groups: usize },
+    ScaleIn { groups: usize },
+    /// Capacity released to training (tidal trough).
+    SwitchToTraining,
+    /// Capacity reclaimed for inference.
+    SwitchToInference,
+}
+
+#[derive(Clone, Debug)]
+pub struct PlannedAction {
+    pub at_hour: f64,
+    pub action: Action,
+    pub serving_groups: usize,
+}
+
+/// Simulate one day of tidal traffic for a scenario and produce the
+/// scaling timeline of Fig. 13b. `peak_rps` is the scene's peak rate;
+/// decisions are made every `step_h` hours with hysteresis (scale in only
+/// below 70% of the out-threshold) to avoid flapping.
+pub fn plan_day(
+    scene_idx: usize,
+    peak_rps: f64,
+    tpl: &GroupTemplate,
+    step_h: f64,
+    min_groups: usize,
+) -> Vec<PlannedAction> {
+    let mut actions = Vec::new();
+    let mut serving = min_groups.max(1);
+    let mut training = false;
+    let phase = scene_phase(scene_idx);
+    let mut t = 0.0;
+    while t < 24.0 {
+        let rate = peak_rps * diurnal_factor(t, phase);
+        // Tidal switch: trough -> release capacity to training.
+        if rate < peak_rps * TRAINING_SWITCH_FRACTION {
+            if !training {
+                training = true;
+                serving = min_groups.max(1);
+                actions.push(PlannedAction {
+                    at_hour: t,
+                    action: Action::SwitchToTraining,
+                    serving_groups: serving,
+                });
+            }
+        } else {
+            if training {
+                training = false;
+                actions.push(PlannedAction {
+                    at_hour: t,
+                    action: Action::SwitchToInference,
+                    serving_groups: serving,
+                });
+            }
+            let need = groups_needed(rate, tpl, 1.2).max(min_groups).max(1);
+            if need > serving {
+                actions.push(PlannedAction {
+                    at_hour: t,
+                    action: Action::ScaleOut { groups: need - serving },
+                    serving_groups: need,
+                });
+                serving = need;
+            } else if need < serving {
+                // Hysteresis: shrink only to exact-fit capacity (the 1.2
+                // headroom on the way out vs 1.0 on the way in prevents
+                // flapping while never under-provisioning).
+                let relaxed = groups_needed(rate, tpl, 1.0).max(min_groups).max(1);
+                if relaxed < serving {
+                    actions.push(PlannedAction {
+                        at_hour: t,
+                        action: Action::ScaleIn { groups: serving - relaxed },
+                        serving_groups: relaxed,
+                    });
+                    serving = relaxed;
+                }
+            }
+        }
+        t += step_h;
+    }
+    actions
+}
+
+/// Rolling upgrade order: one group after another, never emptying the
+/// serving set. Returns the upgrade waves (each wave = groups upgraded
+/// concurrently; wave size 1 == strict rolling).
+pub fn rolling_upgrade_waves(group_ids: &[u32], wave_size: usize) -> Vec<Vec<u32>> {
+    assert!(wave_size >= 1);
+    let max_wave = group_ids.len().saturating_sub(1).max(1);
+    let w = wave_size.min(max_wave);
+    group_ids.chunks(w).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::engine::EngineModel;
+
+    fn tpl() -> GroupTemplate {
+        let e = EngineModel::default();
+        let p = WorkloadProfile::from_means(1800, 1200, 16, 4, 16, 10.0);
+        GroupTemplate::from_profile(&e, &p, 2, 2)
+    }
+
+    #[test]
+    fn template_capability_positive() {
+        let t = tpl();
+        assert!(t.group_rps > 0.0);
+        assert_eq!(t.instances(), 4);
+    }
+
+    #[test]
+    fn groups_needed_scales() {
+        let t = tpl();
+        let one = groups_needed(t.group_rps * 0.5, &t, 1.0);
+        let four = groups_needed(t.group_rps * 3.5, &t, 1.0);
+        assert_eq!(one, 1);
+        assert_eq!(four, 4);
+        assert_eq!(groups_needed(0.0, &t, 1.2), 0);
+    }
+
+    #[test]
+    fn day_plan_has_tidal_switch_and_scaling() {
+        let t = tpl();
+        let actions = plan_day(0, t.group_rps * 6.0, &t, 0.25, 1);
+        let has = |f: &dyn Fn(&Action) -> bool| actions.iter().any(|a| f(&a.action));
+        assert!(has(&|a| matches!(a, Action::SwitchToTraining)), "{actions:?}");
+        assert!(has(&|a| matches!(a, Action::SwitchToInference)));
+        assert!(has(&|a| matches!(a, Action::ScaleOut { .. })));
+        assert!(has(&|a| matches!(a, Action::ScaleIn { .. })));
+        // Serving groups never below the floor.
+        assert!(actions.iter().all(|a| a.serving_groups >= 1));
+    }
+
+    #[test]
+    fn day_plan_capacity_tracks_traffic() {
+        let t = tpl();
+        let peak = t.group_rps * 6.0;
+        let actions = plan_day(2, peak, &t, 0.25, 1);
+        // At every action point, serving capacity with headroom covers the
+        // instantaneous rate (unless switched to training).
+        for a in &actions {
+            if matches!(a.action, Action::SwitchToTraining) {
+                continue;
+            }
+            let rate = peak * diurnal_factor(a.at_hour, scene_phase(2));
+            let cap = a.serving_groups as f64 * t.group_rps;
+            assert!(
+                cap >= rate * 0.99,
+                "at {}h: cap {cap} < rate {rate}",
+                a.at_hour
+            );
+        }
+    }
+
+    #[test]
+    fn rolling_upgrade_never_empties_service() {
+        let ids = vec![1, 2, 3, 4, 5];
+        let waves = rolling_upgrade_waves(&ids, 2);
+        for w in &waves {
+            assert!(w.len() < ids.len(), "a wave must not take all groups");
+        }
+        let flat: Vec<u32> = waves.into_iter().flatten().collect();
+        assert_eq!(flat, ids);
+        // Single group: degenerate but non-panicking.
+        let one = rolling_upgrade_waves(&[7], 3);
+        assert_eq!(one, vec![vec![7]]);
+    }
+}

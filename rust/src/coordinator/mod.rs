@@ -1,0 +1,33 @@
+//! Coordinator: the MLOps + LLM-Serving control plane (paper §3.2–§3.4).
+//!
+//! - `meta`: the Zookeeper stand-in — versioned KV store with a change log
+//!   (watch semantics), ephemeral health entries.
+//! - `containers`: the Kubernetes/volcano stand-in — stateless containers
+//!   with devices assigned from the topology.
+//! - `group`: P/D groups and the `<role, {RoCE IPs}>` map.
+//! - `setup`: the Fig. 6 group-initialization workflow (gather → init →
+//!   connect → load → health → complete) with a timed trace.
+//! - `roce`: Fig. 7 dynamic RoCE construction — integrating/removing
+//!   stateless containers to change P/D ratios without interruption.
+//! - `ratio`: the Eq. 1 optimizer and the online bottleneck detector.
+//! - `fault`: Fig. 8 automatic fault detection (per-node detector, status
+//!   file, MLOps polling) plus seeded fault injection.
+//! - `recovery`: minimum-cost substitution of a faulty instance.
+//! - `mlops`: group-granular scaling, rolling upgrade, tidal
+//!   inference/training switching (Fig. 13b).
+//! - `modelstore`: pre-compiled model store (SFS vs SSD) with the 4-phase
+//!   load-time model behind Fig. 13d.
+
+pub mod containers;
+pub mod fault;
+pub mod group;
+pub mod meta;
+pub mod mlops;
+pub mod modelstore;
+pub mod ratio;
+pub mod recovery;
+pub mod roce;
+pub mod setup;
+
+pub use group::{GroupId, PdGroup};
+pub use meta::MetaStore;

@@ -1,0 +1,153 @@
+//! Pre-compiled model store: the SFS/SSD load-time model behind Fig. 13d.
+//!
+//! "To avoid the waste on compilation, the models for both prefill and
+//! decoding are pre-compiled … and stored to a file service. LLM with
+//! hundreds of billion parameters is loaded within minutes." Loading has
+//! four phases (the "four further parts" of Fig. 13d): fetch from the
+//! store, deserialize/verify, host→HBM copy, and runtime init/warmup.
+//!
+//! The real artifact path (runtime::ServingRuntime::load_timings) provides
+//! the measured analogue: read / parse / compile per HLO artifact.
+
+/// Storage backends with distinct streaming bandwidth and seek cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalable file service — shared, lower effective bandwidth.
+    Sfs,
+    /// Node-local SSD cache of the model.
+    Ssd,
+}
+
+impl Backend {
+    /// Effective streaming bandwidth (GB/s) under typical contention.
+    pub fn bandwidth_gbps(&self) -> f64 {
+        match self {
+            Backend::Sfs => 1.2,
+            Backend::Ssd => 3.2,
+        }
+    }
+
+    pub fn fixed_latency_ms(&self) -> f64 {
+        match self {
+            Backend::Sfs => 180.0, // metadata + connection setup
+            Backend::Ssd => 12.0,
+        }
+    }
+}
+
+/// One pre-compiled model variant ("the models loaded by prefill and
+/// decoding instances are different").
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub name: String,
+    /// Serialized size in GB.
+    pub size_gb: f64,
+    /// Host→device copy bandwidth (GB/s), PCIe-class.
+    pub h2d_gbps: f64,
+    /// Fixed init/warmup cost (graph load, allocator priming) in ms.
+    pub init_ms: f64,
+}
+
+/// Per-phase breakdown of one load (all ms).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadBreakdown {
+    pub fetch_ms: f64,
+    pub deserialize_ms: f64,
+    pub h2d_ms: f64,
+    pub init_ms: f64,
+}
+
+impl LoadBreakdown {
+    pub fn total_ms(&self) -> f64 {
+        self.fetch_ms + self.deserialize_ms + self.h2d_ms + self.init_ms
+    }
+}
+
+impl ModelArtifact {
+    pub fn new(name: &str, size_gb: f64) -> Self {
+        ModelArtifact {
+            name: name.to_string(),
+            size_gb,
+            h2d_gbps: 24.0,
+            init_ms: 2_500.0,
+        }
+    }
+
+    /// Load-time model. `optimized` enables the paper's "*" variants
+    /// (pipelined fetch+deserialize and parallel shard load ≈ 2.2x on the
+    /// streaming phases).
+    pub fn load_breakdown(&self, backend: Backend, optimized: bool) -> LoadBreakdown {
+        let stream_speedup = if optimized { 2.2 } else { 1.0 };
+        let fetch_ms = backend.fixed_latency_ms()
+            + self.size_gb / backend.bandwidth_gbps() * 1e3 / stream_speedup;
+        // Deserialize ~ 5 GB/s of CPU work, overlapped when optimized.
+        let deser = self.size_gb / 5.0 * 1e3;
+        let deserialize_ms = if optimized { deser * 0.25 } else { deser };
+        let h2d_ms = self.size_gb / self.h2d_gbps * 1e3;
+        LoadBreakdown {
+            fetch_ms,
+            deserialize_ms,
+            h2d_ms,
+            init_ms: self.init_ms,
+        }
+    }
+
+    pub fn load_ms(&self, backend: Backend, optimized: bool) -> f64 {
+        self.load_breakdown(backend, optimized).total_ms()
+    }
+}
+
+/// The two models of Fig. 13d (per-role variants share the size here).
+pub fn fig13d_models() -> Vec<ModelArtifact> {
+    vec![
+        ModelArtifact::new("M1", 35.0),  // ~70B-class fp16 shard per instance
+        ModelArtifact::new("M2", 95.0),  // ~190B-class
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssd_beats_sfs() {
+        for m in fig13d_models() {
+            let sfs = m.load_ms(Backend::Sfs, false);
+            let ssd = m.load_ms(Backend::Ssd, false);
+            assert!(ssd < sfs, "{}: ssd {ssd} vs sfs {sfs}", m.name);
+        }
+    }
+
+    #[test]
+    fn optimized_variants_faster() {
+        let m = &fig13d_models()[1];
+        for b in [Backend::Sfs, Backend::Ssd] {
+            assert!(m.load_ms(b, true) < m.load_ms(b, false));
+        }
+    }
+
+    #[test]
+    fn minutes_scale_for_large_model() {
+        // "LLM with hundreds of billion parameters is loaded within
+        // minutes": M2 over SFS lands in 1–10 min unoptimized.
+        let m = &fig13d_models()[1];
+        let t_min = m.load_ms(Backend::Sfs, false) / 60_000.0;
+        assert!(t_min > 1.0 && t_min < 10.0, "{t_min} minutes");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let m = &fig13d_models()[0];
+        let b = m.load_breakdown(Backend::Ssd, true);
+        assert!((b.total_ms() - m.load_ms(Backend::Ssd, true)).abs() < 1e-9);
+        assert!(b.fetch_ms > 0.0 && b.deserialize_ms > 0.0 && b.h2d_ms > 0.0);
+    }
+
+    #[test]
+    fn larger_model_loads_slower() {
+        let ms = fig13d_models();
+        assert!(
+            ms[1].load_ms(Backend::Ssd, false) > ms[0].load_ms(Backend::Ssd, false)
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! P/D ratio optimization (paper Eq. 1) and the online bottleneck detector
+//! (Fig. 12c): minimize the mismatch between prefill and decoding
+//! processing capability, `n_p b_p / T_p ≈ n_d b_d / T_d`.
+
+use crate::cluster::engine::EngineModel;
+
+/// A profiled workload pattern for one scenario (means are enough: the
+/// optimizer works on capability, not individual requests).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadProfile {
+    pub prompt_len: usize,
+    /// Expected cached-prefix tokens at the serving instances.
+    pub cached_len: usize,
+    pub gen_len: usize,
+    /// Mean context length during decode (prompt + half the generation).
+    pub ctx_len: usize,
+    pub batch_p: usize,
+    pub batch_d: usize,
+    /// KVCache transfer time ξ (ms).
+    pub xfer_ms: f64,
+}
+
+impl WorkloadProfile {
+    pub fn from_means(prompt_len: usize, cached_len: usize, gen_len: usize,
+                      batch_p: usize, batch_d: usize, xfer_ms: f64) -> Self {
+        WorkloadProfile {
+            prompt_len,
+            cached_len,
+            gen_len,
+            ctx_len: prompt_len + gen_len / 2,
+            batch_p,
+            batch_d,
+            xfer_ms,
+        }
+    }
+}
+
+/// Per-instance capabilities (requests/sec) for the profile.
+pub fn capabilities(engine: &EngineModel, p: &WorkloadProfile) -> (f64, f64) {
+    let rp = engine.prefill_rps(p.batch_p, p.prompt_len, p.cached_len);
+    let rd = engine.decode_rps(p.batch_d, p.ctx_len, p.gen_len, p.xfer_ms);
+    (rp, rd)
+}
+
+/// Served RPS and per-instance Φ for a concrete ratio.
+pub fn phi_for_ratio(
+    engine: &EngineModel,
+    p: &WorkloadProfile,
+    n_p: usize,
+    n_d: usize,
+    input_rps: f64,
+) -> (f64, f64) {
+    let (rp, rd) = capabilities(engine, p);
+    let served = input_rps.min(n_p as f64 * rp).min(n_d as f64 * rd);
+    (served, served / (n_p + n_d).max(1) as f64)
+}
+
+/// Eq. 1: pick (n_p, n_d) with `n_p + n_d = total` maximizing the
+/// bottleneck capability (equivalently minimizing the mismatch).
+/// `min_each` guards single-point failure ("single point failure should be
+/// also avoided per scenario").
+pub fn optimal_ratio(
+    engine: &EngineModel,
+    p: &WorkloadProfile,
+    total: usize,
+    min_each: usize,
+) -> (usize, usize) {
+    let (rp, rd) = capabilities(engine, p);
+    let mut best = (min_each, total - min_each);
+    let mut best_cap = f64::NEG_INFINITY;
+    for n_p in min_each..=(total - min_each) {
+        let n_d = total - n_p;
+        let cap = (n_p as f64 * rp).min(n_d as f64 * rd);
+        if cap > best_cap {
+            best_cap = cap;
+            best = (n_p, n_d);
+        }
+    }
+    best
+}
+
+/// Minimal instance counts to carry `input_rps` with the profile.
+pub fn min_instances_for_traffic(
+    engine: &EngineModel,
+    p: &WorkloadProfile,
+    input_rps: f64,
+    min_each: usize,
+) -> (usize, usize) {
+    let (rp, rd) = capabilities(engine, p);
+    let n_p = ((input_rps / rp).ceil() as usize).max(min_each);
+    let n_d = ((input_rps / rd).ceil() as usize).max(min_each);
+    (n_p, n_d)
+}
+
+/// The online detector (paper §3.3 / Fig. 12c): compare current E2E and
+/// the T_p/E2E proportion against a baseline window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Adjustment {
+    /// E2E ↑ and T_p share ↑ — prefill is the bottleneck.
+    MorePrefill,
+    /// E2E ↑ and T_p share ↓ — decoding occupies much, add decode.
+    MoreDecode,
+    Balanced,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorThresholds {
+    /// Relative E2E growth that raises the alarm (e.g. 0.2 = +20%).
+    pub e2e_growth: f64,
+    /// Absolute change of the T_p/E2E share that picks the direction.
+    pub share_delta: f64,
+}
+
+impl Default for DetectorThresholds {
+    fn default() -> Self {
+        DetectorThresholds { e2e_growth: 0.2, share_delta: 0.05 }
+    }
+}
+
+pub fn detect_bottleneck(
+    baseline_e2e_ms: f64,
+    baseline_tp_share: f64,
+    current_e2e_ms: f64,
+    current_tp_share: f64,
+    th: &DetectorThresholds,
+) -> Adjustment {
+    if current_e2e_ms <= baseline_e2e_ms * (1.0 + th.e2e_growth) {
+        return Adjustment::Balanced;
+    }
+    let delta = current_tp_share - baseline_tp_share;
+    if delta > th.share_delta {
+        Adjustment::MorePrefill
+    } else if delta < -th.share_delta {
+        Adjustment::MoreDecode
+    } else {
+        Adjustment::Balanced
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile_gen_heavy() -> WorkloadProfile {
+        // Short, mostly-cached prompts that generate many tokens: prefill
+        // is cheap per request, decode occupation is the bottleneck.
+        WorkloadProfile::from_means(300, 280, 400, 4, 16, 10.0)
+    }
+
+    fn profile_prompt_heavy() -> WorkloadProfile {
+        WorkloadProfile::from_means(6000, 1000, 16, 4, 16, 10.0)
+    }
+
+    #[test]
+    fn optimal_ratio_tracks_workload_shape() {
+        let e = EngineModel::default();
+        let (np_gen, nd_gen) = optimal_ratio(&e, &profile_gen_heavy(), 12, 1);
+        let (np_pr, nd_pr) = optimal_ratio(&e, &profile_prompt_heavy(), 12, 1);
+        // Generation-heavy wants more decode; prompt-heavy wants more prefill.
+        assert!(nd_gen > np_gen, "gen-heavy: {np_gen}:{nd_gen}");
+        assert!(np_pr > np_gen, "prompt-heavy should shift toward prefill");
+        assert_eq!(np_gen + nd_gen, 12);
+        assert_eq!(np_pr + nd_pr, 12);
+    }
+
+    #[test]
+    fn optimum_beats_naive_ratios_by_large_margin() {
+        // Fig. 13a: optimum ratio ≥ 60% throughput over the worse ratios.
+        let e = EngineModel::default();
+        let p = profile_gen_heavy();
+        let total = 12;
+        let (np, nd) = optimal_ratio(&e, &p, total, 1);
+        let (best_served, _) = phi_for_ratio(&e, &p, np, nd, f64::INFINITY);
+        let mut worst = f64::INFINITY;
+        for n_p in 1..total {
+            let (served, _) = phi_for_ratio(&e, &p, n_p, total - n_p, f64::INFINITY);
+            worst = worst.min(served);
+        }
+        assert!(best_served > 1.6 * worst, "best {best_served} worst {worst}");
+    }
+
+    #[test]
+    fn eq1_optimum_is_bottleneck_maximal() {
+        // The definition: the chosen split maximizes min(n_p·r_p, n_d·r_d)
+        // over all integer splits (integer rounding means it is only
+        // *approximately* mismatch-minimal, so we assert the definition).
+        let e = EngineModel::default();
+        let p = profile_gen_heavy();
+        let (rp, rd) = capabilities(&e, &p);
+        let (np, nd) = optimal_ratio(&e, &p, 20, 1);
+        let best_cap = (np as f64 * rp).min(nd as f64 * rd);
+        for n_p in 1..20 {
+            let cap = (n_p as f64 * rp).min((20 - n_p) as f64 * rd);
+            assert!(best_cap >= cap - 1e-9, "np={n_p}: {cap} > {best_cap}");
+        }
+    }
+
+    #[test]
+    fn min_each_guards_single_point() {
+        let e = EngineModel::default();
+        let (np, nd) = optimal_ratio(&e, &profile_prompt_heavy(), 10, 2);
+        assert!(np >= 2 && nd >= 2);
+    }
+
+    #[test]
+    fn min_instances_scale_with_traffic() {
+        let e = EngineModel::default();
+        let p = profile_gen_heavy();
+        let (np1, nd1) = min_instances_for_traffic(&e, &p, 10.0, 1);
+        let (np2, nd2) = min_instances_for_traffic(&e, &p, 40.0, 1);
+        assert!(np2 >= np1 && nd2 >= nd1);
+        assert!(nd2 >= 3 * nd1, "4x traffic ≈ 4x decode instances");
+    }
+
+    #[test]
+    fn detector_directions() {
+        let th = DetectorThresholds::default();
+        // Stable: no action.
+        assert_eq!(
+            detect_bottleneck(1000.0, 0.3, 1050.0, 0.32, &th),
+            Adjustment::Balanced
+        );
+        // E2E up, T_p share up -> prefill-bound.
+        assert_eq!(
+            detect_bottleneck(1000.0, 0.3, 1500.0, 0.45, &th),
+            Adjustment::MorePrefill
+        );
+        // E2E up, T_p share down -> decode-bound (Fig. 12c's case).
+        assert_eq!(
+            detect_bottleneck(1000.0, 0.3, 1500.0, 0.18, &th),
+            Adjustment::MoreDecode
+        );
+        // E2E up but share unchanged: ambiguous, hold.
+        assert_eq!(
+            detect_bottleneck(1000.0, 0.3, 1500.0, 0.31, &th),
+            Adjustment::Balanced
+        );
+    }
+
+    #[test]
+    fn phi_for_ratio_respects_input_traffic() {
+        let e = EngineModel::default();
+        let p = profile_gen_heavy();
+        let (served, phi) = phi_for_ratio(&e, &p, 4, 8, 1.0);
+        assert!((served - 1.0).abs() < 1e-12, "traffic-bound");
+        assert!((phi - 1.0 / 12.0).abs() < 1e-12);
+    }
+}

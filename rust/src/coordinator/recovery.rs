@@ -1,0 +1,186 @@
+//! Minimum-cost auto recovery (paper §3.4, Fig. 13c).
+//!
+//! On a fatal device fault: the owning instance is *logically removed*
+//! first (meta update → no new traffic, group peers notified), then one
+//! stateless container substitutes it via dynamic RoCE construction —
+//! "only substitutes the fault one with minimum cost and does no harm to
+//! running service". Running requests on the faulty instance are covered
+//! by protection: connections stopped, users answered with default texts,
+//! decode meta pruned at prefills.
+
+use crate::cluster::device::DeviceId;
+use crate::cluster::instance::{Instance, Role};
+
+use super::group::PdGroup;
+use super::meta::MetaStore;
+use super::roce;
+use super::setup::{SetupConfig, WorkflowTrace};
+
+/// Outcome of one recovery.
+#[derive(Debug)]
+pub struct RecoveryReport {
+    pub failed_instance: u32,
+    pub substitute_instance: u32,
+    pub role: Role,
+    /// Timeline from fault occurrence to serving substitute.
+    pub trace: WorkflowTrace,
+    /// Requests in flight on the failed instance (terminated by protection).
+    pub protected_requests: usize,
+}
+
+/// Find which instance (if any) owns the faulty device.
+pub fn owner_of(members: &[Instance], dev: DeviceId) -> Option<usize> {
+    members.iter().position(|i| i.devices.contains(&dev))
+}
+
+/// Execute the full recovery workflow.
+///
+/// Timing: `detect_ms` (periodic detector latency) + logical removal
+/// (meta, instant) + container acquisition + RoCE join + model load +
+/// health + meta propagation, all recorded in the trace.
+#[allow(clippy::too_many_arguments)]
+pub fn recover(
+    meta: &mut MetaStore,
+    group: &mut PdGroup,
+    members: &mut Vec<Instance>,
+    spare: Instance,
+    failed_idx: usize,
+    cfg: &SetupConfig,
+    detect_ms: f64,
+    in_flight: usize,
+) -> Result<RecoveryReport, String> {
+    let role = members[failed_idx]
+        .role
+        .ok_or("failed instance has no role")?;
+    let batch = members[failed_idx].batch_size;
+    let failed_id = members[failed_idx].id.0;
+
+    let mut trace = WorkflowTrace::default();
+    trace.push("fault occurred", 0.0, 0.0);
+    trace.push("① detector scan picks up fault", 0.0, detect_ms);
+
+    // Logical removal: meta first, then peers ("updated (logically
+    // removed), to avoid forwarding further requests" + "sent to all
+    // instances in this group to avoid actual transmission/forwarding").
+    let mut failed = members.swap_remove(failed_idx);
+    roce::leave_group(meta, group, &mut failed)?;
+    let t_removed = detect_ms + 5.0;
+    trace.push("② logical removal (meta + peers)", detect_ms, t_removed);
+
+    // Protection for running requests: stop connections, default texts.
+    trace.push(
+        format!("③ protection: terminate {in_flight} running requests"),
+        detect_ms,
+        t_removed,
+    );
+
+    // Substitute: one newly added stateless container (minimum cost).
+    let mut sub = spare;
+    let join_trace = roce::join_group(meta, group, &mut sub, role, cfg, batch, t_removed)?;
+    for s in &join_trace.steps {
+        trace.push(format!("④ {}", s.label.trim()), s.start_ms, s.end_ms);
+    }
+    let sub_id = sub.id.0;
+    members.push(sub);
+
+    // Erase all status of the fault one.
+    trace.push("⑤ fault instance state erased", trace.total_ms(), trace.total_ms());
+
+    Ok(RecoveryReport {
+        failed_instance: failed_id,
+        substitute_instance: sub_id,
+        role,
+        trace,
+        protected_requests: in_flight,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::RoceIp;
+    use crate::cluster::instance::InstanceId;
+    use crate::coordinator::group::GroupId;
+    use crate::coordinator::setup::setup_group;
+
+    fn inst(id: u32) -> Instance {
+        Instance::stateless(
+            InstanceId(id),
+            vec![DeviceId(id * 4), DeviceId(id * 4 + 1)],
+            vec![
+                RoceIp { region: 0, host: (id * 4) as u16 },
+                RoceIp { region: 0, host: (id * 4 + 1) as u16 },
+            ],
+            1 << 20,
+            4096,
+        )
+    }
+
+    fn serving() -> (MetaStore, PdGroup, Vec<Instance>) {
+        let mut meta = MetaStore::new();
+        let mut m = vec![
+            (inst(0), Role::Prefill),
+            (inst(1), Role::Decode),
+            (inst(2), Role::Decode),
+        ];
+        let cfg = SetupConfig::default();
+        let (g, _) =
+            setup_group(&mut meta, GroupId(0), "svc", "sc", &mut m, &cfg, 4, 16).unwrap();
+        (meta, g, m.into_iter().map(|(i, _)| i).collect())
+    }
+
+    #[test]
+    fn owner_lookup() {
+        let (_m, _g, members) = serving();
+        assert_eq!(owner_of(&members, DeviceId(5)), Some(1));
+        assert_eq!(owner_of(&members, DeviceId(99)), None);
+    }
+
+    #[test]
+    fn recovery_substitutes_with_one_container() {
+        let (mut meta, mut group, mut members) = serving();
+        let cfg = SetupConfig::default();
+        let before_ratio = group.ratio();
+        let report = recover(
+            &mut meta, &mut group, &mut members, inst(9), 1, &cfg, 100.0, 3,
+        )
+        .unwrap();
+        assert_eq!(report.role, Role::Decode);
+        assert_eq!(report.failed_instance, 1);
+        assert_eq!(report.substitute_instance, 9);
+        assert_eq!(group.ratio(), before_ratio, "ratio restored");
+        assert!(group.fully_connected());
+        assert_eq!(members.len(), 3);
+        assert_eq!(report.protected_requests, 3);
+        // The substitute inherited role + batch size.
+        let sub = members.iter().find(|i| i.id.0 == 9).unwrap();
+        assert_eq!(sub.role, Some(Role::Decode));
+        assert_eq!(sub.batch_size, 16);
+    }
+
+    #[test]
+    fn recovery_timeline_has_detection_then_load() {
+        let (mut meta, mut group, mut members) = serving();
+        let cfg = SetupConfig::default();
+        let report = recover(
+            &mut meta, &mut group, &mut members, inst(9), 0, &cfg, 250.0, 0,
+        )
+        .unwrap();
+        let t = &report.trace;
+        // Detection step ends at 250 ms; model load dominates the rest.
+        let detect = t.steps.iter().find(|s| s.label.contains("detector")).unwrap();
+        assert_eq!(detect.end_ms, 250.0);
+        let load = t.steps.iter().find(|s| s.label.contains("load")).unwrap();
+        assert!(load.end_ms - load.start_ms > 1_000.0, "load is the long pole");
+        assert!(t.total_ms() >= load.end_ms);
+    }
+
+    #[test]
+    fn meta_no_longer_routes_to_failed() {
+        let (mut meta, mut group, mut members) = serving();
+        let cfg = SetupConfig::default();
+        // Fail the (only) prefill: entrance must switch to the substitute.
+        recover(&mut meta, &mut group, &mut members, inst(9), 0, &cfg, 100.0, 0).unwrap();
+        assert_eq!(meta.get("/svc/svc/sc/g0/entrance"), Some("9"));
+    }
+}

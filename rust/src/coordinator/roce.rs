@@ -1,0 +1,275 @@
+//! Fig. 7: dynamic RoCE construction — changing a group's P/D ratio (or
+//! substituting a fault) without service interruption.
+//!
+//! Two steps: (1) *RoCE construction for newly added but stateless
+//! containers*: the MetaStore sends the recorded map to the joiner, the
+//! joiner connects to the existing instances of the opposite role, loads
+//! the pre-compiled model for its role and reports health; (2) *taking
+//! effect*: the MetaStore pushes updated decode meta to all prefills so
+//! forwarding includes the new member. Removal is the mirror image
+//! (logical removal first, then connection teardown).
+
+use crate::cluster::instance::{Instance, InstanceState, Role};
+
+use super::group::PdGroup;
+use super::meta::MetaStore;
+use super::setup::{SetupConfig, WorkflowTrace};
+
+/// Integrate a stateless container into a serving group with `role`.
+/// Returns the timed trace of the join.
+pub fn join_group(
+    meta: &mut MetaStore,
+    group: &mut PdGroup,
+    inst: &mut Instance,
+    role: Role,
+    cfg: &SetupConfig,
+    batch: usize,
+    start_ms: f64,
+) -> Result<WorkflowTrace, String> {
+    if !group.serving {
+        return Err("group not serving; use setup_group".into());
+    }
+    if inst.role.is_some() {
+        return Err("container must be stateless".into());
+    }
+    let mut trace = WorkflowTrace::default();
+    let base = format!("/svc/{}/{}/g{}", group.service, group.scenario, group.id.0);
+    let mut t = start_ms;
+
+    // ① The store sends the existing RoCE map; the joiner establishes
+    // connections to all opposite-role instances (with confirmations).
+    let map = meta
+        .get(&format!("{base}/roce_map"))
+        .ok_or("no recorded RoCE map")?
+        .to_string();
+    debug_assert!(map.contains("<P, {"));
+    group.add_member(inst.id, role, inst.roce_ips.clone());
+    inst.assume_role(role, batch);
+    inst.state = InstanceState::Connecting;
+    let pending = group.pending_connections_for(inst.id);
+    let n_conn = pending.len();
+    for (p, d) in pending {
+        group.connect(p, d);
+    }
+    let conn_ms = cfg.connect_ms_per_pair * n_conn as f64;
+    trace.push("① RoCE construction (join + confirm)", t, t + conn_ms);
+    t += conn_ms;
+
+    // Load the pre-compiled model for the role, then ② health report.
+    inst.state = InstanceState::LoadingModel;
+    let model = match role {
+        Role::Prefill => &cfg.prefill_model,
+        Role::Decode => &cfg.decode_model,
+    };
+    let load_ms = model.load_ms(cfg.backend, cfg.optimized_load);
+    trace.push("  load pre-compiled model", t, t + load_ms);
+    t += load_ms;
+    inst.state = InstanceState::Ready;
+    meta.put(&format!("{base}/health/{}", inst.id.0), "ok");
+    trace.push("② health report", t, t + cfg.health_ms);
+    t += cfg.health_ms;
+
+    // ③ Take effect: update meta so prefills see the new decode set (and
+    // the entrance list if a prefill joined).
+    meta.put(&format!("{base}/roce_map"), &group.roce_map_string());
+    let entrance: Vec<String> =
+        group.prefills().iter().map(|p| p.0.to_string()).collect();
+    meta.put(&format!("{base}/entrance"), &entrance.join(","));
+    trace.push("③ meta updated to prefills", t, t);
+
+    if !group.fully_connected() {
+        return Err("mesh incomplete after join".into());
+    }
+    Ok(trace)
+}
+
+/// Logically remove an instance (scale-in or fault): meta first (no new
+/// traffic), then connections, then erase. The instance returns to the
+/// stateless state and can be released to the container pool.
+pub fn leave_group(
+    meta: &mut MetaStore,
+    group: &mut PdGroup,
+    inst: &mut Instance,
+) -> Result<(), String> {
+    let base = format!("/svc/{}/{}/g{}", group.service, group.scenario, group.id.0);
+    if !group.remove_member(inst.id) {
+        return Err(format!("instance {} not in group", inst.id.0));
+    }
+    // Meta updates propagate the removal before any teardown (the paper's
+    // ordering: "the meta information recorded in the Zookeeper is updated
+    // (logically removed), to avoid forwarding further requests").
+    meta.delete(&format!("{base}/health/{}", inst.id.0));
+    meta.put(&format!("{base}/roce_map"), &group.roce_map_string());
+    let entrance: Vec<String> =
+        group.prefills().iter().map(|p| p.0.to_string()).collect();
+    meta.put(&format!("{base}/entrance"), &entrance.join(","));
+    inst.erase();
+    Ok(())
+}
+
+/// Change a group's ratio to (np, nd) by joining/removing containers.
+/// `spares` supplies stateless containers; removed instances are pushed
+/// back. Returns the join traces (removal is instant at this granularity).
+#[allow(clippy::too_many_arguments)]
+pub fn adjust_ratio(
+    meta: &mut MetaStore,
+    group: &mut PdGroup,
+    members: &mut Vec<Instance>,
+    spares: &mut Vec<Instance>,
+    target_np: usize,
+    target_nd: usize,
+    cfg: &SetupConfig,
+    batch_p: usize,
+    batch_d: usize,
+) -> Result<Vec<WorkflowTrace>, String> {
+    let mut traces = Vec::new();
+    // Remove surplus (gradually; group keeps serving).
+    for (role, target) in [(Role::Prefill, target_np), (Role::Decode, target_nd)] {
+        loop {
+            let have: Vec<_> = match role {
+                Role::Prefill => group.prefills(),
+                Role::Decode => group.decodes(),
+            };
+            if have.len() <= target {
+                break;
+            }
+            let victim = *have.last().unwrap();
+            let idx = members
+                .iter()
+                .position(|i| i.id == victim)
+                .ok_or("member not tracked")?;
+            let mut inst = members.swap_remove(idx);
+            leave_group(meta, group, &mut inst)?;
+            spares.push(inst);
+        }
+    }
+    // Add deficits.
+    for (role, target, batch) in [
+        (Role::Prefill, target_np, batch_p),
+        (Role::Decode, target_nd, batch_d),
+    ] {
+        loop {
+            let have = match role {
+                Role::Prefill => group.prefills().len(),
+                Role::Decode => group.decodes().len(),
+            };
+            if have >= target {
+                break;
+            }
+            let mut inst = spares.pop().ok_or("no spare containers")?;
+            let trace = join_group(meta, group, &mut inst, role, cfg, batch, 0.0)?;
+            traces.push(trace);
+            members.push(inst);
+        }
+    }
+    Ok(traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::{DeviceId, RoceIp};
+    use crate::cluster::instance::InstanceId;
+    use crate::coordinator::group::GroupId;
+    use crate::coordinator::setup::setup_group;
+
+    fn inst(id: u32) -> Instance {
+        Instance::stateless(
+            InstanceId(id),
+            vec![DeviceId(id)],
+            vec![RoceIp { region: 0, host: id as u16 }],
+            1 << 20,
+            4096,
+        )
+    }
+
+    fn serving_group() -> (MetaStore, PdGroup, Vec<Instance>) {
+        let mut meta = MetaStore::new();
+        let mut members = vec![
+            (inst(0), Role::Prefill),
+            (inst(1), Role::Prefill),
+            (inst(2), Role::Decode),
+        ];
+        let cfg = SetupConfig::default();
+        let (group, _) = setup_group(
+            &mut meta, GroupId(0), "svc", "sc", &mut members, &cfg, 4, 16,
+        )
+        .unwrap();
+        (meta, group, members.into_iter().map(|(i, _)| i).collect())
+    }
+
+    #[test]
+    fn join_decode_updates_mesh_and_meta() {
+        let (mut meta, mut group, _members) = serving_group();
+        let mut joiner = inst(9);
+        let cfg = SetupConfig::default();
+        let trace =
+            join_group(&mut meta, &mut group, &mut joiner, Role::Decode, &cfg, 16, 0.0)
+                .unwrap();
+        assert_eq!(group.ratio(), (2, 2));
+        assert!(group.fully_connected());
+        assert_eq!(joiner.state, InstanceState::Ready);
+        assert!(trace.total_ms() > 0.0);
+        // Meta reflects the new map.
+        assert!(meta
+            .get("/svc/svc/sc/g0/roce_map")
+            .unwrap()
+            .contains("10.0.0.9"));
+    }
+
+    #[test]
+    fn join_requires_stateless() {
+        let (mut meta, mut group, _m) = serving_group();
+        let mut joiner = inst(9);
+        joiner.assume_role(Role::Decode, 16);
+        let cfg = SetupConfig::default();
+        assert!(join_group(
+            &mut meta, &mut group, &mut joiner, Role::Decode, &cfg, 16, 0.0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn leave_updates_entrance_and_erases() {
+        let (mut meta, mut group, mut members) = serving_group();
+        let mut p0 = members.remove(0);
+        leave_group(&mut meta, &mut group, &mut p0).unwrap();
+        assert_eq!(group.ratio(), (1, 1));
+        assert_eq!(meta.get("/svc/svc/sc/g0/entrance"), Some("1"));
+        assert_eq!(p0.role, None);
+        assert!(group.fully_connected());
+    }
+
+    #[test]
+    fn adjust_ratio_converges_both_directions() {
+        let (mut meta, mut group, mut members) = serving_group();
+        let mut spares = vec![inst(10), inst(11), inst(12)];
+        let cfg = SetupConfig::default();
+        // 2:1 -> 1:3 (remove a prefill, add two decodes).
+        adjust_ratio(
+            &mut meta, &mut group, &mut members, &mut spares, 1, 3, &cfg, 4, 16,
+        )
+        .unwrap();
+        assert_eq!(group.ratio(), (1, 3));
+        assert!(group.fully_connected());
+        assert_eq!(members.len(), 4);
+        // Back to 2:1.
+        adjust_ratio(
+            &mut meta, &mut group, &mut members, &mut spares, 2, 1, &cfg, 4, 16,
+        )
+        .unwrap();
+        assert_eq!(group.ratio(), (2, 1));
+        assert!(group.fully_connected());
+    }
+
+    #[test]
+    fn adjust_fails_without_spares() {
+        let (mut meta, mut group, mut members) = serving_group();
+        let mut spares = Vec::new();
+        let cfg = SetupConfig::default();
+        let res = adjust_ratio(
+            &mut meta, &mut group, &mut members, &mut spares, 4, 4, &cfg, 4, 16,
+        );
+        assert!(res.is_err());
+    }
+}

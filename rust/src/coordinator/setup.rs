@@ -1,0 +1,299 @@
+//! The Fig. 6 workflow: P/D setup for a group.
+//!
+//! Two parts: *gathering information* (each instance's resident LLM-Serving
+//! process reports its ordered RoCE IPs to the MetaStore until the count
+//! matches) and *initializing the group* (connection establishment with
+//! verification, pre-compiled model load by role, first health reports,
+//! completion once every report is confirmed — prefills then labeled as
+//! the request entrance).
+//!
+//! The workflow is a pure state-machine over (MetaStore, instances) with a
+//! simulated wall-clock; every step lands in a `WorkflowTrace` so the
+//! recovery/scaling figures (13c/13d) can plot timelines.
+
+use crate::cluster::instance::{Instance, InstanceState, Role};
+
+use super::group::{GroupId, PdGroup};
+use super::meta::MetaStore;
+use super::modelstore::{Backend, ModelArtifact};
+
+/// Timing knobs for the workflow steps (ms).
+#[derive(Clone, Debug)]
+pub struct SetupConfig {
+    /// RoCE IP discovery (hccn tool) + report to the store, per instance.
+    pub gather_ms: f64,
+    /// Connection establishment + verification per P×D pair (parallel per
+    /// instance; an instance's cost is its own pair count × this).
+    pub connect_ms_per_pair: f64,
+    /// First health report round-trip.
+    pub health_ms: f64,
+    /// Model store backend + optimization flags.
+    pub backend: Backend,
+    pub optimized_load: bool,
+    /// Per-role models.
+    pub prefill_model: ModelArtifact,
+    pub decode_model: ModelArtifact,
+}
+
+impl Default for SetupConfig {
+    fn default() -> Self {
+        SetupConfig {
+            gather_ms: 40.0,
+            connect_ms_per_pair: 15.0,
+            health_ms: 25.0,
+            backend: Backend::Ssd,
+            optimized_load: true,
+            prefill_model: ModelArtifact::new("prefill", 35.0),
+            decode_model: ModelArtifact::new("decode", 35.0),
+        }
+    }
+}
+
+/// One timed step of a workflow.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStep {
+    pub label: String,
+    pub start_ms: f64,
+    pub end_ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct WorkflowTrace {
+    pub steps: Vec<TraceStep>,
+}
+
+impl WorkflowTrace {
+    pub fn push(&mut self, label: impl Into<String>, start_ms: f64, end_ms: f64) {
+        self.steps.push(TraceStep { label: label.into(), start_ms, end_ms });
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| s.end_ms)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{:>10.1} → {:>10.1} ms  {}\n",
+                s.start_ms, s.end_ms, s.label
+            ));
+        }
+        out
+    }
+}
+
+/// Run the full setup workflow; mutates the instances through their
+/// lifecycle and returns the serving group plus the timed trace.
+pub fn setup_group(
+    meta: &mut MetaStore,
+    group_id: GroupId,
+    service: &str,
+    scenario: &str,
+    members: &mut [(Instance, Role)],
+    cfg: &SetupConfig,
+    batch_p: usize,
+    batch_d: usize,
+) -> Result<(PdGroup, WorkflowTrace), String> {
+    let mut trace = WorkflowTrace::default();
+    let mut group = PdGroup::new(group_id, service, scenario);
+    let base = format!("/svc/{service}/{scenario}/g{}", group_id.0);
+
+    // ① Gather: every instance reports its ordered RoCE IPs.
+    let n = members.len();
+    if n == 0 {
+        return Err("empty group".into());
+    }
+    let mut t = 0.0;
+    for (inst, role) in members.iter_mut() {
+        let ips: Vec<String> = inst.roce_ips.iter().map(|ip| ip.to_string()).collect();
+        meta.put(
+            &format!("{base}/roce/{}", inst.id.0),
+            &format!("{role}:{}", ips.join(",")),
+        );
+        group.add_member(inst.id, *role, inst.roce_ips.clone());
+    }
+    // Reports happen in parallel; gathering completes when the count
+    // matches the expected instance number.
+    if meta.count_children(&format!("{base}/roce/")) != n {
+        return Err("gather incomplete".into());
+    }
+    trace.push("① gather RoCE IPs", t, t + cfg.gather_ms);
+    t += cfg.gather_ms;
+
+    // ② Init order delivered once the collection is complete.
+    meta.put(&format!("{base}/init"), "ordered");
+    trace.push("② init order delivered", t, t);
+
+    // ③ Establish connections (full P×D mesh). Instances connect in
+    // parallel; the step lasts as long as the busiest side.
+    let ps = group.prefills();
+    let ds = group.decodes();
+    if ps.is_empty() || ds.is_empty() {
+        return Err("group must contain at least one prefill and one decode".into());
+    }
+    for (inst, _) in members.iter_mut() {
+        inst.state = InstanceState::Connecting;
+    }
+    for &p in &ps {
+        for &d in &ds {
+            group.connect(p, d);
+        }
+    }
+    let conn_ms = cfg.connect_ms_per_pair * ps.len().max(ds.len()) as f64;
+    trace.push("③ establish connections", t, t + conn_ms);
+    t += conn_ms;
+    if !group.fully_connected() {
+        return Err("mesh incomplete after connect".into());
+    }
+
+    // ④ Load pre-compiled models by role (parallel across instances; the
+    // step lasts as long as the slower role's load).
+    let mut load_p = 0.0f64;
+    let mut load_d = 0.0f64;
+    for (inst, role) in members.iter_mut() {
+        inst.state = InstanceState::LoadingModel;
+        match role {
+            Role::Prefill => {
+                inst.assume_role(Role::Prefill, batch_p);
+                inst.state = InstanceState::LoadingModel;
+                load_p = cfg.prefill_model.load_ms(cfg.backend, cfg.optimized_load);
+            }
+            Role::Decode => {
+                inst.assume_role(Role::Decode, batch_d);
+                inst.state = InstanceState::LoadingModel;
+                load_d = cfg.decode_model.load_ms(cfg.backend, cfg.optimized_load);
+            }
+        }
+    }
+    let load_ms = load_p.max(load_d);
+    trace.push("④ load pre-compiled models", t, t + load_ms);
+    t += load_ms;
+
+    // ⑤ First health reports.
+    for (inst, _) in members.iter_mut() {
+        inst.state = InstanceState::Ready;
+        meta.put(&format!("{base}/health/{}", inst.id.0), "ok");
+    }
+    trace.push("⑤ health reports", t, t + cfg.health_ms);
+    t += cfg.health_ms;
+
+    // ⑥ Completion: confirm all reports, label prefills as entrance.
+    if meta.count_children(&format!("{base}/health/")) != n {
+        return Err("health reports incomplete".into());
+    }
+    let entrance: Vec<String> = ps.iter().map(|p| p.0.to_string()).collect();
+    meta.put(&format!("{base}/entrance"), &entrance.join(","));
+    meta.put(&format!("{base}/roce_map"), &group.roce_map_string());
+    group.serving = true;
+    trace.push("⑥ complete (prefills = entrance)", t, t);
+
+    Ok((group, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::{DeviceId, RoceIp};
+    use crate::cluster::instance::InstanceId;
+
+    fn inst(id: u32) -> Instance {
+        Instance::stateless(
+            InstanceId(id),
+            vec![DeviceId(id * 2), DeviceId(id * 2 + 1)],
+            vec![
+                RoceIp { region: 0, host: (id * 2) as u16 },
+                RoceIp { region: 0, host: (id * 2 + 1) as u16 },
+            ],
+            1 << 20,
+            4096,
+        )
+    }
+
+    fn members(np: usize, nd: usize) -> Vec<(Instance, Role)> {
+        let mut v = Vec::new();
+        for i in 0..np {
+            v.push((inst(i as u32), Role::Prefill));
+        }
+        for i in 0..nd {
+            v.push((inst((np + i) as u32), Role::Decode));
+        }
+        v
+    }
+
+    #[test]
+    fn full_workflow_reaches_serving() {
+        let mut meta = MetaStore::new();
+        let mut m = members(2, 1);
+        let cfg = SetupConfig::default();
+        let (group, trace) = setup_group(
+            &mut meta, GroupId(0), "svcA", "scene1", &mut m, &cfg, 4, 16,
+        )
+        .unwrap();
+        assert!(group.serving);
+        assert!(group.fully_connected());
+        assert_eq!(group.ratio(), (2, 1));
+        assert_eq!(trace.steps.len(), 6);
+        // Instances ended Ready with the right roles/batches.
+        for (inst, role) in &m {
+            assert_eq!(inst.state, InstanceState::Ready);
+            assert_eq!(inst.role, Some(*role));
+        }
+        assert_eq!(m[0].0.batch_size, 4);
+        assert_eq!(m[2].0.batch_size, 16);
+        // MetaStore carries entrance + map.
+        assert_eq!(meta.get("/svc/svcA/scene1/g0/entrance"), Some("0,1"));
+        assert!(meta.get("/svc/svcA/scene1/g0/roce_map").unwrap().contains("<P, {"));
+    }
+
+    #[test]
+    fn trace_ordered_and_dominated_by_model_load() {
+        let mut meta = MetaStore::new();
+        let mut m = members(1, 1);
+        let cfg = SetupConfig::default();
+        let (_g, trace) =
+            setup_group(&mut meta, GroupId(1), "s", "x", &mut m, &cfg, 4, 16).unwrap();
+        for w in trace.steps.windows(2) {
+            assert!(w[1].start_ms >= w[0].start_ms);
+        }
+        let load = trace
+            .steps
+            .iter()
+            .find(|s| s.label.contains("load"))
+            .unwrap();
+        let load_dur = load.end_ms - load.start_ms;
+        assert!(load_dur > 0.5 * trace.total_ms(), "load dominates setup");
+    }
+
+    #[test]
+    fn rejects_role_less_groups() {
+        let mut meta = MetaStore::new();
+        let cfg = SetupConfig::default();
+        let mut only_p = members(2, 0);
+        assert!(setup_group(&mut meta, GroupId(2), "s", "x", &mut only_p, &cfg, 4, 16)
+            .is_err());
+        let mut empty: Vec<(Instance, Role)> = Vec::new();
+        assert!(setup_group(&mut meta, GroupId(3), "s", "x", &mut empty, &cfg, 4, 16)
+            .is_err());
+    }
+
+    #[test]
+    fn connect_time_scales_with_larger_side() {
+        let mut meta = MetaStore::new();
+        let cfg = SetupConfig::default();
+        let mut small = members(1, 1);
+        let (_, t1) =
+            setup_group(&mut meta, GroupId(4), "s", "a", &mut small, &cfg, 4, 16).unwrap();
+        let mut big = members(4, 1);
+        let (_, t2) =
+            setup_group(&mut meta, GroupId(5), "s", "b", &mut big, &cfg, 4, 16).unwrap();
+        let dur = |t: &WorkflowTrace| {
+            let s = t.steps.iter().find(|s| s.label.contains("connections")).unwrap();
+            s.end_ms - s.start_ms
+        };
+        assert!((dur(&t2) / dur(&t1) - 4.0).abs() < 1e-9);
+    }
+}

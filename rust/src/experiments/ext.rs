@@ -1,0 +1,171 @@
+//! Extension experiments (paper §6, Discussion): speculative decoding
+//! placement ablation and the host-memory KVCache tier for multi-turn
+//! conversation. `pdserve repro --fig spec|hostmem`.
+
+use crate::cluster::engine::EngineModel;
+use crate::cluster::hostmem::{TieredPrefixCache, TierHit};
+use crate::serving::speculative::{k_sweep, DraftPlacement};
+use crate::util::prng::Rng;
+
+/// §6.1 — speculative decoding: speedup vs K for three placements.
+pub struct SpecAblation {
+    /// (placement name, Vec<(k, speedup)>).
+    pub series: Vec<(&'static str, Vec<(usize, f64)>)>,
+}
+
+pub fn spec_ablation() -> SpecAblation {
+    let engine = EngineModel::default();
+    let (bs, ctx, alpha) = (16, 725, 0.75);
+    let placements = [
+        ("CPU draft (60 ms/tok)", DraftPlacement::Cpu { per_token_ms: 60.0 }),
+        ("CPU draft (2 ms/tok)", DraftPlacement::Cpu { per_token_ms: 2.0 }),
+        (
+            "disaggregated draft (paper)",
+            DraftPlacement::Disaggregated { per_token_ms: 1.2, interference: 0.08 },
+        ),
+    ];
+    SpecAblation {
+        series: placements
+            .into_iter()
+            .map(|(name, p)| (name, k_sweep(&engine, alpha, p, bs, ctx, 12)))
+            .collect(),
+    }
+}
+
+/// §6.2 — host-memory pool: hit rates and staging overhead for a
+/// multi-turn workload whose prefix working set exceeds HBM, with and
+/// without the host tier, under scenario-affine vs mixed forwarding.
+pub struct HostmemAblation {
+    /// (config name, hbm hit %, combined hit %, staging ms/request).
+    pub rows: Vec<(&'static str, f64, f64, f64)>,
+}
+
+pub fn hostmem_ablation() -> HostmemAblation {
+    const MB: usize = 1 << 20;
+    let prefix_bytes = 900 * MB; // ~1.1k-token prefix of a 13B-class model
+    let requests = 4_000usize;
+    let n_prefixes_per_scene = 12usize; // 12 * 900MB = 10.8GB > 8GB HBM
+    let scenes = 3usize;
+
+    let run = |host_budget: usize, affine: bool| -> (f64, f64, f64) {
+        let mut rng = Rng::new(0xEC7);
+        // Affine forwarding: this instance sees ONE scenario; mixed pool:
+        // it sees all three (the §6.2 affinity argument).
+        let mut cache = TieredPrefixCache::new(8 << 30, host_budget, 20.0);
+        for _ in 0..requests {
+            let scene = if affine { 0 } else { rng.below(scenes) };
+            // Zipf-ish reuse: recent-turn prefixes are hot.
+            let p = if rng.chance(0.6) {
+                rng.below(3)
+            } else {
+                rng.below(n_prefixes_per_scene)
+            };
+            let (hit, _ms) = cache.lookup((scene, p), prefix_bytes);
+            let _ = hit == TierHit::Hbm;
+        }
+        (
+            cache.hbm_hit_rate() * 100.0,
+            cache.combined_hit_rate() * 100.0,
+            cache.staging_ms / requests as f64,
+        )
+    };
+
+    let rows = vec![
+        ("mixed pool, HBM only", {
+            let r = run(0, false);
+            r
+        }),
+        ("mixed pool, +host tier", run(64 << 30, false)),
+        ("affine group, HBM only", run(0, true)),
+        ("affine group, +host tier", run(64 << 30, true)),
+    ]
+    .into_iter()
+    .map(|(n, (a, b, c))| (n, a, b, c))
+    .collect();
+    HostmemAblation { rows }
+}
+
+pub fn run(which: &str) {
+    if which == "spec" {
+        let f = spec_ablation();
+        println!("\n### §6.1 — speculative decoding speedup vs K (α=0.75, bs=16)");
+        for (name, sweep) in &f.series {
+            let best = sweep
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let line: Vec<String> = sweep
+                .iter()
+                .step_by(2)
+                .map(|(k, s)| format!("K={k}:{s:.2}x"))
+                .collect();
+            println!(
+                "{name:<30} {}  (best K={} at {:.2}x)",
+                line.join("  "),
+                best.0,
+                best.1
+            );
+        }
+    }
+    if which == "hostmem" {
+        let f = hostmem_ablation();
+        super::table(
+            "§6.2 — host-memory KVCache tier (multi-turn working set > HBM)",
+            ("config", "hit rates / staging"),
+            &f.rows
+                .iter()
+                .map(|(n, hbm, comb, stage)| {
+                    (
+                        n.to_string(),
+                        format!(
+                            "HBM {hbm:.0}%  combined {comb:.0}%  staging {stage:.2} ms/req"
+                        ),
+                    )
+                })
+                .collect::<Vec<_>>(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disaggregated_draft_wins_the_ablation() {
+        let f = spec_ablation();
+        let best = |name: &str| {
+            f.series
+                .iter()
+                .find(|(n, _)| n.contains(name))
+                .unwrap()
+                .1
+                .iter()
+                .map(|(_, s)| *s)
+                .fold(0.0f64, f64::max)
+        };
+        assert!(best("disaggregated") > best("60 ms"));
+        assert!(best("disaggregated") > 1.5);
+        assert!(best("60 ms") < 1.05, "slow CPU draft must not help");
+    }
+
+    #[test]
+    fn host_tier_and_affinity_compose() {
+        let f = hostmem_ablation();
+        let get = |name: &str| f.rows.iter().find(|r| r.0 == name).unwrap();
+        let mixed_hbm = get("mixed pool, HBM only");
+        let mixed_host = get("mixed pool, +host tier");
+        let affine_hbm = get("affine group, HBM only");
+        let affine_host = get("affine group, +host tier");
+        // Host tier raises combined hit rate in both organizations.
+        assert!(mixed_host.2 > mixed_hbm.2 + 5.0);
+        assert!(affine_host.2 >= affine_hbm.2);
+        // Affinity raises HBM hit rate over the mixed pool.
+        assert!(affine_hbm.1 > mixed_hbm.1 + 10.0);
+        // Affine + host is the best combined configuration.
+        assert!(affine_host.2 >= mixed_host.2);
+        // Staging cost exists only when the host tier is used.
+        assert_eq!(mixed_hbm.3, 0.0);
+        assert!(mixed_host.3 > 0.0);
+    }
+}

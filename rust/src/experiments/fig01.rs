@@ -1,0 +1,121 @@
+//! Fig. 1 — performance degradation derives from the diversity.
+//!
+//! (a) Prompt and prefix lengths across Scene 1–6: distinct distributions
+//!     per scene (the diversity premise).
+//! (b) TTFT (actually T_p, with batch processing and cached prefixes) as a
+//!     function of the prefix hit rate: hit rate dominates prefill time.
+
+use crate::cluster::engine::EngineModel;
+use crate::util::prng::Rng;
+use crate::util::stats::{normalize, Summary};
+use crate::workload::standard_scenarios;
+
+pub struct Fig1a {
+    /// Per scene: (name, prompt p10/p50/p90, prefix p50).
+    pub rows: Vec<(String, f64, f64, f64, f64)>,
+}
+
+pub struct Fig1b {
+    /// (hit_rate, normalized T_p).
+    pub series: Vec<(f64, f64)>,
+}
+
+pub fn fig1a(samples: usize) -> Fig1a {
+    let scenes = standard_scenarios();
+    let mut rng = Rng::new(11);
+    let mut rows = Vec::new();
+    for (idx, sc) in scenes.iter().enumerate() {
+        let mut prompt = Summary::new();
+        let mut prefix = Summary::new();
+        for i in 0..samples {
+            let r = sc.sample(idx, i as u64, 0.0, &mut rng);
+            prompt.add(r.prompt_len as f64);
+            prefix.add(r.prefix_len as f64);
+        }
+        rows.push((
+            format!("{} ({})", sc.name, sc.service),
+            prompt.percentile(10.0),
+            prompt.p50(),
+            prompt.p90(),
+            prefix.p50(),
+        ));
+    }
+    Fig1a { rows }
+}
+
+pub fn fig1b() -> Fig1b {
+    let engine = EngineModel::default();
+    let prompt_len = 2048usize;
+    let bs = 4;
+    let mut raw = Vec::new();
+    let rates: Vec<f64> = (0..=19).map(|i| i as f64 * 0.05).collect();
+    for &hr in &rates {
+        let cached = (prompt_len as f64 * hr) as usize;
+        let items = vec![
+            crate::cluster::engine::PrefillItem { prompt_len, cached_len: cached };
+            bs
+        ];
+        raw.push(engine.prefill_batch_ms(&items));
+    }
+    let norm = normalize(&raw);
+    Fig1b { series: rates.into_iter().zip(norm).collect() }
+}
+
+pub fn run(which: &str) {
+    if which != "1b" {
+        let f = fig1a(4000);
+        let rows: Vec<(String, String)> = f
+            .rows
+            .iter()
+            .map(|(name, p10, p50, p90, pre)| {
+                (
+                    name.clone(),
+                    format!(
+                        "prompt p10/p50/p90 = {p10:.0}/{p50:.0}/{p90:.0} tok, prefix p50 = {pre:.0} tok"
+                    ),
+                )
+            })
+            .collect();
+        super::table("Fig 1a — prompt/prefix diversity across scenes",
+                     ("scene", "lengths"), &rows);
+    }
+    if which != "1a" {
+        let f = fig1b();
+        let series: Vec<f64> = f.series.iter().map(|(_, t)| *t).collect();
+        super::table(
+            "Fig 1b — T_p vs prefix hit rate (prompt 2048, bs 4, normalized)",
+            ("hit rate", "T_p (norm)"),
+            &f.series
+                .iter()
+                .step_by(4)
+                .map(|(h, t)| (format!("{:.0}%", h * 100.0), format!("{t:.3}")))
+                .collect::<Vec<_>>(),
+        );
+        println!("shape: {}", super::spark(&series));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenes_have_distinct_prompt_medians() {
+        let f = fig1a(2000);
+        let mut medians: Vec<f64> = f.rows.iter().map(|r| r.2).collect();
+        medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Fig. 1a property: scene medians span > 5x.
+        assert!(medians.last().unwrap() / medians.first().unwrap() > 5.0);
+    }
+
+    #[test]
+    fn ttft_decreases_monotonically_with_hit_rate() {
+        let f = fig1b();
+        for w in f.series.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9, "T_p must fall as hit rate rises");
+        }
+        // At 95% hit, T_p is a small fraction of the miss case.
+        assert!(f.series.last().unwrap().1 < 0.35);
+        assert!((f.series[0].1 - 1.0).abs() < 1e-9);
+    }
+}

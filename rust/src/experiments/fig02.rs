@@ -1,0 +1,142 @@
+//! Fig. 2 — changes and mismatch in disaggregated LLMs.
+//!
+//! (a) Tidal traffic per scenario over a day (the combination of requests
+//!     changes over time).
+//! (b) The P/D capability mismatch across ratios for a fixed group size:
+//!     only the Eq.-1 split balances `n_p b_p/T_p` against `n_d b_d/T_d`.
+
+use crate::cluster::engine::EngineModel;
+use crate::coordinator::ratio::{capabilities, WorkloadProfile};
+use crate::util::stats::normalize;
+use crate::workload::standard_scenarios;
+use crate::workload::traffic::scene_rate_rps;
+
+pub struct Fig2a {
+    /// Per scene: normalized hourly rate series (24 points).
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+pub struct Fig2b {
+    /// Per (n_p, n_d): (prefill capability, decode capability, bottleneck),
+    /// all normalized to the best bottleneck.
+    pub rows: Vec<(usize, usize, f64, f64, f64)>,
+}
+
+pub fn fig2a() -> Fig2a {
+    let scenes = standard_scenarios();
+    let tw: f64 = scenes.iter().map(|s| s.weight).sum();
+    let series = scenes
+        .iter()
+        .enumerate()
+        .map(|(i, sc)| {
+            let raw: Vec<f64> = (0..24)
+                .map(|h| scene_rate_rps(sc, i, h as f64, 100.0, tw))
+                .collect();
+            (sc.name.to_string(), normalize(&raw))
+        })
+        .collect();
+    Fig2a { series }
+}
+
+pub fn fig2b(total: usize) -> Fig2b {
+    let engine = EngineModel::default();
+    // Scene-3-like profile: balanced-ish prompt/generation.
+    let profile = WorkloadProfile::from_means(650, 325, 150, 4, 16, 8.0);
+    let (rp, rd) = capabilities(&engine, &profile);
+    let mut rows = Vec::new();
+    let mut best = 0f64;
+    for n_p in 1..total {
+        let n_d = total - n_p;
+        let pc = n_p as f64 * rp;
+        let dc = n_d as f64 * rd;
+        best = best.max(pc.min(dc));
+        rows.push((n_p, n_d, pc, dc, pc.min(dc)));
+    }
+    Fig2b {
+        rows: rows
+            .into_iter()
+            .map(|(p, d, pc, dc, b)| (p, d, pc / best, dc / best, b / best))
+            .collect(),
+    }
+}
+
+pub fn run(which: &str) {
+    if which != "2b" {
+        let f = fig2a();
+        println!("\n### Fig 2a — tidal traffic per scenario (24h, normalized)");
+        for (name, s) in &f.series {
+            let peak_h = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            println!("{name:<8} {}  (peak {peak_h:02}:00)", super::spark(s));
+        }
+    }
+    if which != "2a" {
+        let f = fig2b(8);
+        let rows: Vec<(String, String)> = f
+            .rows
+            .iter()
+            .map(|(p, d, pc, dc, b)| {
+                (
+                    format!("P:D = {p}:{d}"),
+                    format!("prefill {pc:.2}  decode {dc:.2}  bottleneck {b:.2}"),
+                )
+            })
+            .collect();
+        super::table(
+            "Fig 2b — P/D capability mismatch (8 instances, normalized)",
+            ("ratio", "capability"),
+            &rows,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_mix_changes_over_day() {
+        let f = fig2a();
+        // At least 3 distinct peak hours across scenes.
+        let peaks: std::collections::BTreeSet<usize> = f
+            .series
+            .iter()
+            .map(|(_, s)| {
+                s.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        assert!(peaks.len() >= 3, "peaks: {peaks:?}");
+        // phases are the mechanism
+        let _ = crate::workload::traffic::scene_phase(0);
+    }
+
+    #[test]
+    fn exactly_one_ratio_region_is_balanced() {
+        let f = fig2b(8);
+        let best_idx = f
+            .rows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .4.partial_cmp(&b.1 .4).unwrap())
+            .unwrap()
+            .0;
+        // The bottleneck curve rises then falls around the optimum.
+        for i in 0..best_idx {
+            assert!(f.rows[i].4 <= f.rows[i + 1].4 + 1e-9);
+        }
+        for i in best_idx..f.rows.len() - 1 {
+            assert!(f.rows[i].4 + 1e-9 >= f.rows[i + 1].4);
+        }
+        // At least one extreme ratio wastes most of the fleet.
+        let worst_extreme = f.rows.first().unwrap().4.min(f.rows.last().unwrap().4);
+        assert!(worst_extreme < 0.6, "worst extreme {worst_extreme}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Fig. 4 — block-fixed transfer fails to fully utilize bandwidth.
+//!
+//! (a) Extra control cost vs payload size for block-by-block transfer
+//!     (smaller blocks = more confirmations = more waste).
+//! (b) Achieved D2D bandwidth utilization: discrete blocks vs contiguous.
+
+use crate::network::rdma::RdmaModel;
+
+pub struct Fig4a {
+    /// (payload MiB, block KiB, control fraction of total time).
+    pub rows: Vec<(usize, usize, f64)>,
+}
+
+pub struct Fig4b {
+    /// (payload MiB, utilization blocked, utilization contiguous).
+    pub rows: Vec<(usize, f64, f64)>,
+}
+
+pub fn fig4a() -> Fig4a {
+    let m = RdmaModel::default();
+    let mut rows = Vec::new();
+    for &payload_mib in &[1usize, 4, 16, 64] {
+        for &block_kib in &[16usize, 64, 256, 1024] {
+            let bytes = payload_mib << 20;
+            let total = m.blocked_us(bytes, block_kib << 10, 3, 1);
+            let wire = m.wire_us(bytes);
+            rows.push((payload_mib, block_kib, (total - wire) / total));
+        }
+    }
+    Fig4a { rows }
+}
+
+pub fn fig4b() -> Fig4b {
+    let m = RdmaModel::default();
+    // PageAttention-sized blocks: a 16-token block of a 13B-class model
+    // split over 8 devices ≈ 1.6 MB per device per block.
+    let block = 1600 << 10;
+    let rows = [1usize, 2, 4, 8, 16, 32, 64, 128, 420]
+        .iter()
+        .map(|&mib| {
+            let bytes = mib << 20;
+            let ub = m.utilization(bytes, m.blocked_us(bytes, block, 3, 1));
+            let uc = m.utilization(bytes, m.contiguous_us(bytes, 3, 1));
+            (mib, ub, uc)
+        })
+        .collect();
+    Fig4b { rows }
+}
+
+pub fn run(which: &str) {
+    if which != "4b" {
+        let f = fig4a();
+        let rows: Vec<(String, String)> = f
+            .rows
+            .iter()
+            .map(|(p, b, frac)| {
+                (
+                    format!("{p:>3} MiB / {b:>4} KiB blocks"),
+                    format!("{:.1}% of transfer time is control", frac * 100.0),
+                )
+            })
+            .collect();
+        super::table("Fig 4a — control overhead of block-fixed transfer",
+                     ("payload / block", "overhead"), &rows);
+    }
+    if which != "4a" {
+        let f = fig4b();
+        let rows: Vec<(String, String)> = f
+            .rows
+            .iter()
+            .map(|(mib, ub, uc)| {
+                (
+                    format!("{mib:>3} MiB"),
+                    format!(
+                        "blocked {:.0}%  contiguous {:.0}%",
+                        ub * 100.0,
+                        uc * 100.0
+                    ),
+                )
+            })
+            .collect();
+        super::table("Fig 4b — D2D bandwidth utilization",
+                     ("payload", "utilization"), &rows);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_fraction_rises_as_blocks_shrink() {
+        let f = fig4a();
+        // For each payload size, overhead decreases with block size.
+        for chunk in f.rows.chunks(4) {
+            for w in chunk.windows(2) {
+                assert!(w[0].2 > w[1].2, "{:?} vs {:?}", w[0], w[1]);
+            }
+        }
+        // 16 KiB blocks on a big payload: control dominates (> 50%).
+        let worst = f.rows.iter().find(|r| r.0 == 64 && r.1 == 16).unwrap();
+        assert!(worst.2 > 0.5, "control fraction {}", worst.2);
+    }
+
+    #[test]
+    fn contiguous_utilization_dominates_everywhere() {
+        let f = fig4b();
+        for (mib, ub, uc) in &f.rows {
+            assert!(uc > ub, "{mib} MiB: {uc} <= {ub}");
+        }
+        // Large contiguous payloads approach line rate.
+        assert!(f.rows.last().unwrap().2 > 0.95);
+        // Blocked caps well below line rate even on the largest payload.
+        assert!(f.rows.last().unwrap().1 < 0.75);
+        // And the gap is material in the Fig. 14c regime (420 MiB).
+        let big = f.rows.last().unwrap();
+        assert!(big.2 - big.1 > 0.2);
+    }
+}

@@ -1,0 +1,270 @@
+//! Fig. 13 — P/D adjustment and auto workflows.
+//!
+//! (a) Throughput across P/D ratios: the Eq.-1 optimum wins by ≥ 60%.
+//! (b) A day of tidal traffic: group-granular scale-in/out actions plus
+//!     the inference/training switch.
+//! (c) Auto recovery timeline: fault → detection → logical removal →
+//!     substitute container → RoCE join → model load → serving.
+//! (d) Pre-compiled model load time: SFS vs SSD, two models, optimized
+//!     variants, the four load phases — plus the real artifact timings.
+
+use crate::cluster::engine::EngineModel;
+use crate::cluster::instance::{Instance, Role};
+use crate::coordinator::group::GroupId;
+use crate::coordinator::mlops::{plan_day, GroupTemplate, PlannedAction};
+use crate::coordinator::modelstore::{fig13d_models, Backend};
+use crate::coordinator::ratio::WorkloadProfile;
+use crate::coordinator::recovery::{recover, RecoveryReport};
+use crate::coordinator::setup::{setup_group, SetupConfig};
+use crate::coordinator::MetaStore;
+use crate::serving::sim::{SimConfig, Simulation, WorkloadKind};
+use crate::workload::Scenario;
+
+use super::Scale;
+
+pub struct Fig13a {
+    /// (n_p, n_d, sustained rps).
+    pub rows: Vec<(usize, usize, f64)>,
+    pub best_over_worst: f64,
+}
+
+pub fn fig13a(scale: Scale) -> Fig13a {
+    let sc = Scenario {
+        name: "scene3", service: "svcA",
+        prompt_mean: 650.0, prompt_cv: 0.45,
+        n_prefixes: 8, prefix_frac: 0.5,
+        gen_mean: 150.0, gen_cv: 0.6, weight: 1.0,
+    };
+    let total = 8;
+    let mut rows = Vec::new();
+    // Capacity measurement: closed loop at saturating concurrency with
+    // early termination disabled (the paper's methodology measures max
+    // sustained throughput below the success-rate knee).
+    let mut serving = crate::util::config::ServingConfig::default();
+    serving.ttft_slo_ms_per_1k = 1e9;
+    serving.ttft_slo_floor_ms = 1e9;
+    for n_p in 1..total {
+        let n_d = total - n_p;
+        let cfg = SimConfig {
+            n_p,
+            n_d,
+            serving: serving.clone(),
+            scenarios: vec![sc.clone()],
+            only_scenario: Some(0),
+            workload: WorkloadKind::Closed {
+                concurrency: total * 8,
+                requests: scale.closed_requests,
+            },
+            seed: 0xF16_13A,
+            ..Default::default()
+        };
+        let out = Simulation::run(cfg);
+        rows.push((n_p, n_d, out.report.rps()));
+    }
+    let best = rows.iter().map(|r| r.2).fold(0.0, f64::max);
+    let worst = rows.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    Fig13a { rows, best_over_worst: best / worst }
+}
+
+pub fn fig13b() -> Vec<PlannedAction> {
+    let engine = EngineModel::default();
+    let profile = WorkloadProfile::from_means(1800, 1350, 16, 4, 16, 8.0);
+    let tpl = GroupTemplate::from_profile(&engine, &profile, 2, 2);
+    plan_day(0, tpl.group_rps * 6.0, &tpl, 0.25, 1)
+}
+
+pub fn fig13c() -> RecoveryReport {
+    fn inst(id: u32) -> Instance {
+        Instance::stateless(
+            crate::cluster::instance::InstanceId(id),
+            vec![crate::cluster::device::DeviceId(id * 8)],
+            vec![crate::cluster::device::RoceIp { region: 0, host: id as u16 }],
+            1 << 20,
+            4096,
+        )
+    }
+    let mut meta = MetaStore::new();
+    let mut members = vec![
+        (inst(0), Role::Prefill),
+        (inst(1), Role::Prefill),
+        (inst(2), Role::Decode),
+        (inst(3), Role::Decode),
+    ];
+    let cfg = SetupConfig::default();
+    let (mut group, _) = setup_group(
+        &mut meta, GroupId(0), "svcA", "scene1", &mut members, &cfg, 4, 16,
+    )
+    .expect("setup");
+    let mut insts: Vec<Instance> = members.into_iter().map(|(i, _)| i).collect();
+    // Device fault on the decode instance idx 2; detector period 5 s.
+    recover(&mut meta, &mut group, &mut insts, inst(9), 2, &cfg, 5_000.0, 7)
+        .expect("recovery")
+}
+
+pub struct Fig13dRow {
+    pub model: String,
+    pub backend: &'static str,
+    pub optimized: bool,
+    pub fetch_ms: f64,
+    pub deserialize_ms: f64,
+    pub h2d_ms: f64,
+    pub init_ms: f64,
+    pub total_s: f64,
+}
+
+pub fn fig13d() -> Vec<Fig13dRow> {
+    let mut rows = Vec::new();
+    for m in fig13d_models() {
+        for (backend, name) in [(Backend::Sfs, "SFS"), (Backend::Ssd, "SSD")] {
+            for optimized in [false, true] {
+                let b = m.load_breakdown(backend, optimized);
+                rows.push(Fig13dRow {
+                    model: format!("{}{}", m.name, if optimized { "*" } else { "" }),
+                    backend: name,
+                    optimized,
+                    fetch_ms: b.fetch_ms,
+                    deserialize_ms: b.deserialize_ms,
+                    h2d_ms: b.h2d_ms,
+                    init_ms: b.init_ms,
+                    total_s: b.total_ms() / 1e3,
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn run(which: &str, scale: Scale, artifacts_dir: Option<&str>) {
+    if which == "13" || which == "13a" {
+        let f = fig13a(scale);
+        let rows: Vec<(String, String)> = f
+            .rows
+            .iter()
+            .map(|(p, d, rps)| (format!("P:D = {p}:{d}"), format!("{rps:.2} rps")))
+            .collect();
+        super::table("Fig 13a — throughput across P/D ratios", ("ratio", "throughput"), &rows);
+        println!(
+            "optimum over worst ratio: {:.0}% improvement",
+            (f.best_over_worst - 1.0) * 100.0
+        );
+    }
+    if which == "13" || which == "13b" {
+        let actions = fig13b();
+        println!("\n### Fig 13b — a day of tidal traffic (scaling timeline)");
+        for a in &actions {
+            println!(
+                "{:>5.2} h  {:<28}  serving groups: {}",
+                a.at_hour,
+                format!("{:?}", a.action),
+                a.serving_groups
+            );
+        }
+    }
+    if which == "13" || which == "13c" {
+        let r = fig13c();
+        println!("\n### Fig 13c — auto recovery timeline (fault at t=0)");
+        print!("{}", r.trace.render());
+        println!(
+            "substituted instance {} with container {} ({} requests protected); \
+             total {:.1} s",
+            r.failed_instance,
+            r.substitute_instance,
+            r.protected_requests,
+            r.trace.total_ms() / 1e3
+        );
+    }
+    if which == "13" || which == "13d" {
+        let rows: Vec<(String, String)> = fig13d()
+            .iter()
+            .map(|r| {
+                (
+                    format!("{:<4} {}", r.model, r.backend),
+                    format!(
+                        "fetch {:.1}s  deser {:.1}s  h2d {:.1}s  init {:.1}s  total {:.1}s",
+                        r.fetch_ms / 1e3,
+                        r.deserialize_ms / 1e3,
+                        r.h2d_ms / 1e3,
+                        r.init_ms / 1e3,
+                        r.total_s
+                    ),
+                )
+            })
+            .collect();
+        super::table("Fig 13d — pre-compiled model load (4 phases; * = optimized)",
+                     ("model/store", "phases"), &rows);
+        // Real analogue: the AOT artifacts' measured load phases.
+        if let Some(dir) = artifacts_dir.or(Some("artifacts")) {
+            if std::path::Path::new(&format!("{dir}/meta.json")).exists() {
+                match crate::runtime::ServingRuntime::load(dir) {
+                    Ok(rt) => {
+                        println!("\nmeasured (real artifacts via PJRT):");
+                        for t in &rt.load_timings {
+                            println!(
+                                "  {:<24} read {:>7.1} ms  parse {:>7.1} ms  compile {:>8.1} ms",
+                                t.name, t.read_ms, t.parse_ms, t.compile_ms
+                            );
+                        }
+                    }
+                    Err(e) => println!("(real artifact load skipped: {e})"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_ratio_beats_worst_by_60_percent() {
+        let f = fig13a(Scale::fast());
+        assert!(
+            f.best_over_worst >= 1.6,
+            "best/worst = {:.2}, paper claims >= 1.6x",
+            f.best_over_worst
+        );
+    }
+
+    #[test]
+    fn day_plan_contains_scale_actions_and_switches() {
+        let actions = fig13b();
+        let kinds: std::collections::BTreeSet<String> = actions
+            .iter()
+            .map(|a| format!("{:?}", std::mem::discriminant(&a.action)))
+            .collect();
+        assert!(kinds.len() >= 3, "need scale in+out and switches: {actions:?}");
+    }
+
+    #[test]
+    fn recovery_is_minutes_dominated_by_model_load() {
+        let r = fig13c();
+        let total = r.trace.total_ms();
+        assert!(total > 10_000.0 && total < 600_000.0, "total {total} ms");
+        let load = r
+            .trace
+            .steps
+            .iter()
+            .find(|s| s.label.contains("load"))
+            .expect("load step");
+        assert!((load.end_ms - load.start_ms) / total > 0.4);
+    }
+
+    #[test]
+    fn ssd_and_optimization_strictly_help() {
+        let rows = fig13d();
+        let get = |model: &str, backend: &str, opt: bool| {
+            rows.iter()
+                .find(|r| r.model.trim_end_matches('*') == model
+                    && r.backend == backend
+                    && r.optimized == opt)
+                .unwrap()
+                .total_s
+        };
+        for m in ["M1", "M2"] {
+            assert!(get(m, "SSD", false) < get(m, "SFS", false));
+            assert!(get(m, "SFS", true) < get(m, "SFS", false));
+            assert!(get(m, "SSD", true) < get(m, "SSD", false));
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Headline numbers (abstract): +60% E2E throughput from ratio
+//! adjustment, +42% TTFT SLO from on-demand forwarding, −46% D2D transfer
+//! time from block-free transfer, and 6.7× throughput vs *aggregated*
+//! serving.
+//!
+//! The aggregated comparator models a fleet where every instance runs
+//! prefill and decode mixed (the pre-disaggregation deployment). Using the
+//! serial-engine-seconds view (each instance's xPU is one serial resource):
+//!
+//! - **no prefix reuse**: the mixed pool serves every scenario, so the HBM
+//!   prefix cache thrashes (our simulator measures < 35% hit rate there vs
+//!   > 90% per-scenario) — we charge full-prompt prefill;
+//! - **small decode batch**: KVCaches share HBM with prefill activations
+//!   and the TPOT SLO bounds how long a prefill batch may stall decoding,
+//!   capping the aggregated decode batch at a quarter of the
+//!   disaggregated one;
+//! - **interference stall**: decode tokens issued while a prefill batch
+//!   occupies the engine wait; at duty cycle ρ the per-token cost inflates
+//!   by (1 + ρ);
+//! - **utilization headroom**: without on-demand forwarding the aggregated
+//!   pool must keep ~35% headroom to hold its TTFT tail (vs ~5% for
+//!   P/D-Serve, Eq. 2).
+//!
+//! These four effects compose multiplicatively; DESIGN.md and
+//! EXPERIMENTS.md record the resulting factor next to the paper's 6.7×.
+
+use crate::cluster::engine::EngineModel;
+use crate::coordinator::ratio::{optimal_ratio, phi_for_ratio, WorkloadProfile};
+
+use super::fig13::fig13a;
+use super::fig14::{fig14a, fig14c};
+use super::Scale;
+
+pub struct Headline {
+    pub throughput_gain: f64,
+    pub slo_gain_points: f64,
+    pub d2d_reduction: f64,
+    pub vs_aggregated: f64,
+}
+
+/// Aggregated-serving throughput per instance (requests/sec), in the
+/// engine-seconds-per-request view (see module docs for the assumptions).
+pub fn aggregated_phi(engine: &EngineModel, p: &WorkloadProfile) -> f64 {
+    let bd = (p.batch_d / 4).max(1);
+    // Mixed pool: prefix cache thrashes -> full prompt recompute.
+    let tp_s = engine.ttft_ms(p.prompt_len, 0) / 1e3;
+    let tok_s = engine.engine_ms_per_token(bd, p.ctx_len) / 1e3;
+    let decode_s = p.gen_len as f64 * tok_s;
+    let duty = tp_s / (tp_s + decode_s);
+    let per_request_engine_s = tp_s + decode_s * (1.0 + duty);
+    let utilization = 0.65;
+    utilization / per_request_engine_s
+}
+
+/// Disaggregated throughput per instance under P/D-Serve: fine-grained
+/// groups (prefix hits), Eq.-1 ratio, on-demand forwarding (Eq. 2 lets the
+/// fleet run near capacity).
+pub fn disaggregated_phi(engine: &EngineModel, p: &WorkloadProfile, total: usize) -> f64 {
+    let (np, nd) = optimal_ratio(engine, p, total, 1);
+    let (_, phi) = phi_for_ratio(engine, p, np, nd, f64::INFINITY);
+    0.95 * phi
+}
+
+pub fn compute(scale: Scale) -> Headline {
+    // 1) Ratio adjustment: best vs worst sustained throughput (Fig. 13a).
+    let f13 = fig13a(scale);
+    let throughput_gain = f13.best_over_worst - 1.0;
+
+    // 2) TTFT SLO: success-rate gap at 4A (Fig. 14a).
+    let f14a = fig14a(scale);
+    let last = f14a.rows.last().unwrap();
+    let slo_gain_points = (last.2 - last.1) * 100.0;
+
+    // 3) D2D transfer-time reduction (Fig. 14c).
+    let f14c = fig14c(scale);
+
+    // 4) vs aggregated: disaggregated Φ at the Eq.-1 optimum over the
+    //    aggregated comparator, same fleet size. Fine-grained organization
+    //    gives the disaggregated arm its ~90% prefix hit rate.
+    let engine = EngineModel::default();
+    let profile = WorkloadProfile::from_means(650, 585, 150, 4, 32, 8.0);
+    let phi_disagg = disaggregated_phi(&engine, &profile, 24);
+    let phi_agg = aggregated_phi(&engine, &profile);
+    let vs_aggregated = phi_disagg / phi_agg;
+
+    Headline {
+        throughput_gain,
+        slo_gain_points,
+        d2d_reduction: f14c.reduction,
+        vs_aggregated,
+    }
+}
+
+pub fn run(scale: Scale) {
+    let h = compute(scale);
+    super::table(
+        "Headline — paper abstract vs this reproduction",
+        ("claim", "paper / measured"),
+        &[
+            (
+                "E2E throughput (ratio adj.)".into(),
+                format!("+60% / +{:.0}%", h.throughput_gain * 100.0),
+            ),
+            (
+                "TTFT SLO (on-demand fwd)".into(),
+                format!("+42.3 pts / +{:.1} pts", h.slo_gain_points),
+            ),
+            (
+                "D2D transfer time".into(),
+                format!("-46% / -{:.0}%", h.d2d_reduction * 100.0),
+            ),
+            (
+                "throughput vs aggregated".into(),
+                format!("6.7x / {:.1}x", h.vs_aggregated),
+            ),
+        ],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_shapes_hold() {
+        let h = compute(Scale::fast());
+        assert!(h.throughput_gain >= 0.6, "throughput gain {:.2}", h.throughput_gain);
+        assert!(h.slo_gain_points >= 10.0, "SLO gap {:.1} pts", h.slo_gain_points);
+        assert!(
+            h.d2d_reduction > 0.25 && h.d2d_reduction < 0.75,
+            "D2D reduction {:.2}",
+            h.d2d_reduction
+        );
+        assert!(
+            h.vs_aggregated > 3.0,
+            "disaggregated should win by multiples: {:.1}x",
+            h.vs_aggregated
+        );
+    }
+
+    #[test]
+    fn aggregated_model_sane() {
+        let engine = EngineModel::default();
+        let p = WorkloadProfile::from_means(650, 325, 150, 4, 16, 8.0);
+        let phi = aggregated_phi(&engine, &p);
+        assert!(phi > 0.0 && phi < 100.0);
+        // More generated tokens -> lower aggregated throughput.
+        let p_long = WorkloadProfile::from_means(650, 325, 400, 4, 16, 8.0);
+        assert!(aggregated_phi(&engine, &p_long) < phi);
+        // Disaggregated wins on the same profile.
+        assert!(disaggregated_phi(&engine, &p, 24) > phi);
+    }
+}

@@ -1,0 +1,110 @@
+//! Experiment runners: one per paper figure (see DESIGN.md experiment
+//! index). Each runner prints the figure's series in paper order and
+//! returns structured data so tests can assert the *shape* of the result
+//! (who wins, by what factor, where crossovers fall).
+//!
+//! Reproduce with `pdserve repro --fig <id>` (`--fig all` for everything);
+//! add `--fast` to shrink workloads for CI.
+
+pub mod ext;
+pub mod fig01;
+pub mod fig02;
+pub mod fig03;
+pub mod fig04;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod headline;
+
+use crate::util::cli::ParsedArgs;
+
+/// Shared experiment sizing (full fidelity vs CI-fast).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub sim_duration_ms: f64,
+    pub closed_requests: usize,
+}
+
+impl Scale {
+    pub fn full() -> Self {
+        Scale { sim_duration_ms: 90_000.0, closed_requests: 400 }
+    }
+    pub fn fast() -> Self {
+        Scale { sim_duration_ms: 20_000.0, closed_requests: 120 }
+    }
+}
+
+pub fn cmd_repro(args: &ParsedArgs) -> i32 {
+    let fig = args.get_or("fig", "all").to_string();
+    let scale = if args.has("fast") { Scale::fast() } else { Scale::full() };
+    let all = fig == "all";
+    let mut ran = 0;
+    {
+        let mut want = |ids: &[&str]| -> bool {
+            let hit = all || ids.iter().any(|i| *i == fig);
+            if hit {
+                ran += 1;
+            }
+            hit
+        };
+        if want(&["1", "1a", "1b"]) {
+            fig01::run(&fig);
+        }
+        if want(&["2", "2a", "2b"]) {
+            fig02::run(&fig);
+        }
+        if want(&["3", "3a", "3b"]) {
+            fig03::run(&fig, scale);
+        }
+        if want(&["4", "4a", "4b"]) {
+            fig04::run(&fig);
+        }
+        if want(&["12", "12a", "12b", "12c", "12d"]) {
+            fig12::run(if all { "12" } else { &fig }, scale);
+        }
+        if want(&["13", "13a", "13b", "13c", "13d"]) {
+            fig13::run(if all { "13" } else { &fig }, scale, args.get("artifacts"));
+        }
+        if want(&["14", "14a", "14b", "14c", "14d"]) {
+            fig14::run(if all { "14" } else { &fig }, scale);
+        }
+        if want(&["headline"]) {
+            headline::run(scale);
+        }
+        if want(&["spec", "ext"]) {
+            ext::run("spec");
+        }
+        if want(&["hostmem", "ext"]) {
+            ext::run("hostmem");
+        }
+    }
+    if ran == 0 {
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, headline, all)");
+        return 2;
+    }
+    0
+}
+
+/// Render a simple two-column table.
+pub fn table(title: &str, header: (&str, &str), rows: &[(String, String)]) {
+    println!("\n### {title}");
+    println!("{:<32} {}", header.0, header.1);
+    for (a, b) in rows {
+        println!("{a:<32} {b}");
+    }
+}
+
+/// Terminal sparkline for a series (min-max normalized).
+pub fn spark(series: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if series.is_empty() {
+        return String::new();
+    }
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    let min = series.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-12);
+    series
+        .iter()
+        .map(|x| TICKS[(((x - min) / span) * 7.0).round() as usize])
+        .collect()
+}

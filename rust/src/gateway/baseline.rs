@@ -1,0 +1,150 @@
+//! Baseline global schedulers (prior work; Figs. 3a/3b/14a/14b).
+//!
+//! The baseline forwards a request *immediately* into one prefill's local
+//! queue, chosen by a pending-token estimate that is refreshed only every
+//! report period ("each prefill instance regularly communicates to the
+//! scheduler (e.g., reporting the queue every 100ms)"). The estimate is
+//! doubly wrong: stale between reports, and blind to the prefix-hit and
+//! batch-size effects on actual TTFT — the Fig. 3a gap.
+
+/// The scheduler's (possibly stale) view of one prefill.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefillView {
+    /// Pending tokens (queue + running batch) as of the last report.
+    pub pending_tokens: usize,
+    /// When the last report arrived (ms).
+    pub reported_at_ms: f64,
+    /// Whether any report has landed yet (the first always does).
+    pub reported_once: bool,
+}
+
+/// Pending-token shortest-queue scheduler with periodic reports.
+#[derive(Debug)]
+pub struct StaleQueueScheduler {
+    views: Vec<PrefillView>,
+    pub report_period_ms: f64,
+    rr_cursor: usize,
+}
+
+impl StaleQueueScheduler {
+    pub fn new(n_prefill: usize, report_period_ms: f64) -> Self {
+        StaleQueueScheduler {
+            views: vec![PrefillView::default(); n_prefill],
+            report_period_ms,
+            rr_cursor: 0,
+        }
+    }
+
+    /// A report from instance `i` (only lands if a period elapsed — the
+    /// regular cadence, not instantaneous truth).
+    pub fn maybe_report(&mut self, i: usize, pending_tokens: usize, now_ms: f64) -> bool {
+        let v = &mut self.views[i];
+        if !v.reported_once || now_ms - v.reported_at_ms + 1e-9 >= self.report_period_ms {
+            v.pending_tokens = pending_tokens;
+            v.reported_at_ms = now_ms;
+            v.reported_once = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Choose the prefill with the fewest pending tokens per the stale
+    /// view. With `book=true` the scheduler optimistically adds the
+    /// request's tokens to its local view (a mitigation the paper's
+    /// baseline lacks — between 100ms reports it keeps sending arrivals to
+    /// the same "shortest" instance, the herding behind Fig. 3/14a).
+    pub fn pick_shortest(&mut self, prompt_tokens: usize, book: bool) -> usize {
+        let (i, _) = self
+            .views
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, v)| v.pending_tokens)
+            .expect("no prefills");
+        if book {
+            self.views[i].pending_tokens += prompt_tokens;
+        }
+        i
+    }
+
+    /// Plain round-robin (the other classic baseline).
+    pub fn pick_round_robin(&mut self) -> usize {
+        let i = self.rr_cursor % self.views.len();
+        self.rr_cursor += 1;
+        i
+    }
+
+    /// TTFT estimate from pending tokens alone (the blue line of Fig. 3a):
+    /// tokens / nominal token rate. Ignores prefix hits and batch effects.
+    pub fn estimate_ttft_ms(&self, i: usize, token_rate_per_ms: f64) -> f64 {
+        self.views[i].pending_tokens as f64 / token_rate_per_ms
+    }
+
+    pub fn view(&self, i: usize) -> PrefillView {
+        self.views[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_respect_period() {
+        let mut s = StaleQueueScheduler::new(2, 100.0);
+        assert!(s.maybe_report(0, 500, 0.0));
+        assert!(!s.maybe_report(0, 900, 50.0), "mid-period report dropped");
+        assert_eq!(s.view(0).pending_tokens, 500);
+        assert!(s.maybe_report(0, 900, 100.0));
+        assert_eq!(s.view(0).pending_tokens, 900);
+    }
+
+    #[test]
+    fn shortest_queue_picks_min_and_books() {
+        let mut s = StaleQueueScheduler::new(3, 100.0);
+        s.maybe_report(0, 1000, 0.0);
+        s.maybe_report(1, 200, 0.0);
+        s.maybe_report(2, 600, 0.0);
+        assert_eq!(s.pick_shortest(500, true), 1);
+        // Bookkeeping: instance 1 now at 700, so next pick is 2.
+        assert_eq!(s.pick_shortest(500, true), 2);
+    }
+
+    #[test]
+    fn unbooked_scheduler_herds_between_reports() {
+        // The paper-baseline failure mode: without local booking, every
+        // arrival inside one report period lands on the same instance.
+        let mut s = StaleQueueScheduler::new(3, 100.0);
+        s.maybe_report(0, 1000, 0.0);
+        s.maybe_report(1, 200, 0.0);
+        s.maybe_report(2, 600, 0.0);
+        let picks: Vec<usize> = (0..5).map(|_| s.pick_shortest(800, false)).collect();
+        assert_eq!(picks, vec![1; 5], "all herd onto instance 1");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut s = StaleQueueScheduler::new(3, 100.0);
+        let picks: Vec<usize> = (0..6).map(|_| s.pick_round_robin()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn estimate_ignores_prefix_hits() {
+        // The Fig. 3a failure mode in miniature: two instances with equal
+        // pending tokens get equal estimates, even if one would serve its
+        // queue 3x faster thanks to cached prefixes.
+        let mut s = StaleQueueScheduler::new(2, 100.0);
+        s.maybe_report(0, 2048, 0.0);
+        s.maybe_report(1, 2048, 0.0);
+        assert_eq!(s.estimate_ttft_ms(0, 2.0), s.estimate_ttft_ms(1, 2.0));
+    }
+}

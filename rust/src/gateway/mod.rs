@@ -1,0 +1,18 @@
+//! Gateway: SSE connection tracking and prefill-selection policies
+//! (paper §3.5, Fig. 9).
+//!
+//! - `sse`: the connection registry — one SSE connection per live request,
+//!   maintained for the *entire* LLM lifecycle (prefill + decode), which is
+//!   exactly why the count alone cannot indicate an idle prefill.
+//! - `forward`: on-demand forwarding — least-SSE candidate ordering,
+//!   accept/reject probing, deadline-bounded retries.
+//! - `baseline`: the prior-work schedulers (round-robin, shortest queue by
+//!   pending tokens with stale periodic reports) that Figs. 3a/3b/14a/14b
+//!   compare against.
+
+pub mod baseline;
+pub mod forward;
+pub mod sse;
+
+pub use forward::{ForwardDecision, OnDemandForwarder};
+pub use sse::SseRegistry;

@@ -1,0 +1,129 @@
+//! SSE connection registry.
+//!
+//! Streaming responses ride server-sent events; every component on the
+//! path (decoding → prefill → gateway) maintains the connection until the
+//! last token. The gateway therefore knows, per prefill entrance, how many
+//! requests are *alive* through it — a workload hint ("the SSE directly
+//! hints the workload of a group") but not an idleness signal, since the
+//! count covers decode time too.
+
+use std::collections::BTreeMap;
+
+/// Per-entrance live-connection counts.
+#[derive(Debug, Default)]
+pub struct SseRegistry {
+    counts: BTreeMap<u32, usize>,
+    opened: u64,
+    closed: u64,
+}
+
+impl SseRegistry {
+    pub fn new(entrances: impl IntoIterator<Item = u32>) -> Self {
+        SseRegistry {
+            counts: entrances.into_iter().map(|e| (e, 0)).collect(),
+            opened: 0,
+            closed: 0,
+        }
+    }
+
+    /// A request was routed through entrance `e`; connection stays open
+    /// until `close` (end of decode).
+    pub fn open(&mut self, e: u32) {
+        *self.counts.entry(e).or_insert(0) += 1;
+        self.opened += 1;
+    }
+
+    pub fn close(&mut self, e: u32) {
+        let c = self.counts.entry(e).or_insert(0);
+        debug_assert!(*c > 0, "close without open on entrance {e}");
+        *c = c.saturating_sub(1);
+        self.closed += 1;
+    }
+
+    pub fn count(&self, e: u32) -> usize {
+        self.counts.get(&e).copied().unwrap_or(0)
+    }
+
+    pub fn live(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    /// Entrances ordered by ascending live-connection count (ties by id) —
+    /// the paper's candidate ordering ("chooses the one with the least
+    /// number of SSE connections").
+    pub fn by_least_loaded(&self) -> Vec<u32> {
+        let mut v: Vec<(usize, u32)> =
+            self.counts.iter().map(|(e, c)| (*c, *e)).collect();
+        v.sort();
+        v.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// Like `by_least_loaded`, but ties are broken pseudo-randomly by
+    /// `salt` — real gateways don't all prefer entrance 0 when counts tie.
+    pub fn by_least_loaded_salted(&self, salt: u64) -> Vec<u32> {
+        let mut v: Vec<(usize, u64, u32)> = self
+            .counts
+            .iter()
+            .map(|(e, c)| {
+                let mut h = salt ^ (*e as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                (*c, crate::util::prng::splitmix64(&mut h), *e)
+            })
+            .collect();
+        v.sort();
+        v.into_iter().map(|(_, _, e)| e).collect()
+    }
+
+    /// Register a new entrance (scale-out / recovery substitute).
+    pub fn add_entrance(&mut self, e: u32) {
+        self.counts.entry(e).or_insert(0);
+    }
+
+    /// Remove an entrance (scale-in / fault). Its connections are dropped.
+    pub fn remove_entrance(&mut self, e: u32) -> usize {
+        self.counts.remove(&e).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_close_accounting() {
+        let mut r = SseRegistry::new([0, 1, 2]);
+        r.open(1);
+        r.open(1);
+        r.open(2);
+        assert_eq!(r.count(1), 2);
+        assert_eq!(r.live(), 3);
+        r.close(1);
+        assert_eq!(r.count(1), 1);
+        assert_eq!(r.live(), 2);
+    }
+
+    #[test]
+    fn least_loaded_ordering() {
+        let mut r = SseRegistry::new([0, 1, 2]);
+        r.open(0);
+        r.open(0);
+        r.open(2);
+        assert_eq!(r.by_least_loaded(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn entrance_lifecycle() {
+        let mut r = SseRegistry::new([0]);
+        r.add_entrance(7);
+        r.open(7);
+        assert_eq!(r.by_least_loaded(), vec![0, 7]);
+        assert_eq!(r.remove_entrance(7), 1);
+        assert_eq!(r.count(7), 0);
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn ties_broken_by_id() {
+        let r = SseRegistry::new([3, 1, 2]);
+        assert_eq!(r.by_least_loaded(), vec![1, 2, 3]);
+    }
+}

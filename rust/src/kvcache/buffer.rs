@@ -1,0 +1,186 @@
+//! Sender-side contiguous buffer pool (paper §3.6).
+//!
+//! A prefill instance reserves, in advance, a fixed set of contiguous HBM
+//! buffers sized for one request's full KVCache. A request occupies one
+//! buffer from prefill completion until its D2D transfer finishes ("a
+//! prompt continuously occupies one slot in prefill if it is waiting for
+//! KVCache transfer"), which is exactly what bounds how many requests a
+//! prefill accepts — the accept/reject signal the gateway's on-demand
+//! forwarding relies on.
+
+use anyhow::{anyhow, Result};
+
+/// Pool of equal-sized contiguous send buffers.
+#[derive(Debug)]
+pub struct SendBufferPool {
+    buf_elems: usize,
+    free: Vec<usize>,
+    in_use: Vec<bool>,
+    /// Backing storage: one flat allocation per buffer, reused across
+    /// requests (no allocation on the hot path after construction).
+    storage: Vec<Vec<f32>>,
+}
+
+/// RAII-less handle; the pool validates ids on release (the coordinator
+/// owns lifecycle, not drop order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BufferId(pub usize);
+
+impl SendBufferPool {
+    /// `count` buffers of `buf_elems` f32 each — the reserved HBM budget.
+    pub fn new(count: usize, buf_elems: usize) -> Self {
+        SendBufferPool {
+            buf_elems,
+            free: (0..count).rev().collect(),
+            in_use: vec![false; count],
+            storage: vec![vec![0f32; buf_elems]; count],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.available()
+    }
+
+    /// Reserve a buffer; `None` when exhausted (the prefill then rejects
+    /// new requests rather than queueing them).
+    pub fn acquire(&mut self) -> Option<BufferId> {
+        let id = self.free.pop()?;
+        self.in_use[id] = true;
+        Some(BufferId(id))
+    }
+
+    pub fn release(&mut self, id: BufferId) -> Result<()> {
+        let BufferId(i) = id;
+        if i >= self.in_use.len() {
+            return Err(anyhow!("buffer id {i} out of range"));
+        }
+        if !self.in_use[i] {
+            return Err(anyhow!("double release of buffer {i}"));
+        }
+        self.in_use[i] = false;
+        self.free.push(i);
+        Ok(())
+    }
+
+    /// Fill a buffer with a request's cache (copy from the runtime output).
+    pub fn write(&mut self, id: BufferId, data: &[f32]) -> Result<()> {
+        if data.len() != self.buf_elems {
+            return Err(anyhow!(
+                "payload {} elems, buffer holds {}",
+                data.len(),
+                self.buf_elems
+            ));
+        }
+        if !self.in_use[id.0] {
+            return Err(anyhow!("write to unacquired buffer {}", id.0));
+        }
+        self.storage[id.0].copy_from_slice(data);
+        Ok(())
+    }
+
+    pub fn read(&self, id: BufferId) -> Result<&[f32]> {
+        if !self.in_use[id.0] {
+            return Err(anyhow!("read of unacquired buffer {}", id.0));
+        }
+        Ok(&self.storage[id.0])
+    }
+
+    /// (offset, len) view for a per-layer transfer trigger.
+    pub fn read_range(&self, id: BufferId, offset: usize, len: usize) -> Result<&[f32]> {
+        let buf = self.read(id)?;
+        if offset + len > buf.len() {
+            return Err(anyhow!("range {offset}+{len} beyond buffer"));
+        }
+        Ok(&buf[offset..offset + len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut pool = SendBufferPool::new(2, 8);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.acquire().is_none(), "pool exhausted must reject");
+        pool.release(a).unwrap();
+        assert_eq!(pool.available(), 1);
+        let c = pool.acquire().unwrap();
+        assert_eq!(c, a, "freed buffer is reused");
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut pool = SendBufferPool::new(1, 4);
+        let a = pool.acquire().unwrap();
+        pool.release(a).unwrap();
+        assert!(pool.release(a).is_err());
+    }
+
+    #[test]
+    fn write_read_roundtrip_and_ranges() {
+        let mut pool = SendBufferPool::new(1, 8);
+        let id = pool.acquire().unwrap();
+        pool.write(id, &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]).unwrap();
+        assert_eq!(pool.read(id).unwrap()[3], 3.0);
+        assert_eq!(pool.read_range(id, 2, 3).unwrap(), &[2.0, 3.0, 4.0]);
+        assert!(pool.read_range(id, 6, 3).is_err());
+        assert!(pool.write(id, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn read_unacquired_rejected() {
+        let mut pool = SendBufferPool::new(2, 4);
+        let a = pool.acquire().unwrap();
+        pool.release(a).unwrap();
+        assert!(pool.read(a).is_err());
+    }
+
+    #[test]
+    fn prop_pool_never_oversubscribes() {
+        let cfg = prop::Config { cases: 64, ..Default::default() };
+        prop::check(
+            "pool-invariants",
+            &cfg,
+            |r| {
+                let cap = 1 + r.below(8);
+                let ops: Vec<bool> = (0..64).map(|_| r.chance(0.6)).collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut pool = SendBufferPool::new(*cap, 4);
+                let mut held = Vec::new();
+                for &acq in ops {
+                    if acq {
+                        if let Some(id) = pool.acquire() {
+                            if held.contains(&id) {
+                                return Err(format!("duplicate handout {id:?}"));
+                            }
+                            held.push(id);
+                        } else if held.len() != *cap {
+                            return Err("rejected while not full".into());
+                        }
+                    } else if let Some(id) = held.pop() {
+                        pool.release(id).map_err(|e| e.to_string())?;
+                    }
+                    if held.len() + pool.available() != *cap {
+                        return Err("capacity leak".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Offset arithmetic for KVCache layouts.
+//!
+//! Prefill (sender) layout — one request, contiguous:
+//!   `[L, 2, H, M, hd]` f32, flattened row-major. "Given the index of a
+//!   layer, the offset and the length can be quickly calculated" (§3.6):
+//!   per-layer K/V stripes are contiguous ranges, so either per-layer or
+//!   whole-model transfer is a (offset, len) pair.
+//!
+//! Decode (receiver) layout — B slots, block-organized:
+//!   `[L, 2, B, H, M, hd]` f32. A request's cache lands strided across
+//!   layers/KV — the "discrete blocks" the receiver must restore.
+
+/// Static layout description shared by sender and receiver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_len: usize,
+    pub head_dim: usize,
+    pub decode_batch: usize,
+}
+
+impl KvLayout {
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        max_len: usize,
+        head_dim: usize,
+        decode_batch: usize,
+    ) -> Self {
+        KvLayout { n_layers, n_heads, max_len, head_dim, decode_batch }
+    }
+
+    /// Elements of one (layer, K-or-V) stripe: `[H, M, hd]`.
+    pub fn stripe_elems(&self) -> usize {
+        self.n_heads * self.max_len * self.head_dim
+    }
+
+    /// Total elements of one request's contiguous cache `[L, 2, H, M, hd]`.
+    pub fn prefill_elems(&self) -> usize {
+        self.n_layers * 2 * self.stripe_elems()
+    }
+
+    /// Total elements of the decode cache `[L, 2, B, H, M, hd]`.
+    pub fn decode_elems(&self) -> usize {
+        self.n_layers * 2 * self.decode_batch * self.stripe_elems()
+    }
+
+    /// Bytes of one request's cache (f32).
+    pub fn prefill_bytes(&self) -> usize {
+        self.prefill_elems() * 4
+    }
+
+    /// Offset (elements) of layer `l`'s K (kv=0) or V (kv=1) stripe in the
+    /// sender's contiguous buffer.
+    pub fn prefill_stripe_offset(&self, l: usize, kv: usize) -> usize {
+        debug_assert!(l < self.n_layers && kv < 2);
+        (l * 2 + kv) * self.stripe_elems()
+    }
+
+    /// (offset, len) in elements for transferring layer `l` only — the
+    /// per-layer transfer trigger (§3.6 flexibility path).
+    pub fn layer_range(&self, l: usize) -> (usize, usize) {
+        (self.prefill_stripe_offset(l, 0), 2 * self.stripe_elems())
+    }
+
+    /// Offset (elements) of slot `b`'s stripe for (layer `l`, `kv`) inside
+    /// the decode cache.
+    pub fn decode_stripe_offset(&self, l: usize, kv: usize, slot: usize) -> usize {
+        debug_assert!(l < self.n_layers && kv < 2 && slot < self.decode_batch);
+        ((l * 2 + kv) * self.decode_batch + slot) * self.stripe_elems()
+    }
+
+    /// Number of discrete chunks a request's cache shatters into at the
+    /// receiver (the "blocks" of the block-vs-contiguous comparison).
+    pub fn decode_chunks_per_request(&self) -> usize {
+        self.n_layers * 2
+    }
+
+    /// PageAttention view: number of fixed-size token blocks per sequence
+    /// given `block_tokens` tokens per block.
+    pub fn token_blocks(&self, block_tokens: usize) -> usize {
+        self.max_len.div_ceil(block_tokens)
+    }
+
+    /// Bytes of one PageAttention token block (all layers, K+V).
+    pub fn token_block_bytes(&self, block_tokens: usize) -> usize {
+        4 * 2 * self.n_layers * self.n_heads * self.head_dim * block_tokens
+    }
+
+    /// From `meta.json` shapes.
+    pub fn from_shapes(prefill_shape: &[usize], decode_shape: &[usize]) -> Option<Self> {
+        if prefill_shape.len() != 5 || decode_shape.len() != 6 {
+            return None;
+        }
+        let l = KvLayout {
+            n_layers: prefill_shape[0],
+            n_heads: prefill_shape[2],
+            max_len: prefill_shape[3],
+            head_dim: prefill_shape[4],
+            decode_batch: decode_shape[2],
+        };
+        // Shapes must be consistent with each other.
+        let expect_decode = [l.n_layers, 2, l.decode_batch, l.n_heads, l.max_len, l.head_dim];
+        if prefill_shape[1] != 2 || decode_shape != expect_decode {
+            return None;
+        }
+        Some(l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serving_layout() -> KvLayout {
+        KvLayout::new(4, 4, 96, 32, 4)
+    }
+
+    #[test]
+    fn elems_match_shapes() {
+        let l = serving_layout();
+        assert_eq!(l.prefill_elems(), 4 * 2 * 4 * 96 * 32);
+        assert_eq!(l.decode_elems(), 4 * 2 * 4 * 4 * 96 * 32);
+        assert_eq!(l.prefill_bytes(), l.prefill_elems() * 4);
+    }
+
+    #[test]
+    fn stripe_offsets_partition_buffer() {
+        let l = serving_layout();
+        let mut offsets: Vec<usize> = Vec::new();
+        for layer in 0..l.n_layers {
+            for kv in 0..2 {
+                offsets.push(l.prefill_stripe_offset(layer, kv));
+            }
+        }
+        // Strictly increasing by stripe_elems, covering the whole buffer.
+        for w in offsets.windows(2) {
+            assert_eq!(w[1] - w[0], l.stripe_elems());
+        }
+        assert_eq!(offsets.last().unwrap() + l.stripe_elems(), l.prefill_elems());
+    }
+
+    #[test]
+    fn layer_range_covers_k_and_v() {
+        let l = serving_layout();
+        let (off, len) = l.layer_range(2);
+        assert_eq!(off, l.prefill_stripe_offset(2, 0));
+        assert_eq!(off + len, l.prefill_stripe_offset(3, 0));
+    }
+
+    #[test]
+    fn decode_offsets_disjoint_across_slots() {
+        let l = serving_layout();
+        let a = l.decode_stripe_offset(1, 0, 0);
+        let b = l.decode_stripe_offset(1, 0, 1);
+        assert_eq!(b - a, l.stripe_elems());
+        let last = l.decode_stripe_offset(l.n_layers - 1, 1, l.decode_batch - 1);
+        assert_eq!(last + l.stripe_elems(), l.decode_elems());
+    }
+
+    #[test]
+    fn from_shapes_roundtrip() {
+        let l = serving_layout();
+        let p = [4usize, 2, 4, 96, 32];
+        let d = [4usize, 2, 4, 4, 96, 32];
+        assert_eq!(KvLayout::from_shapes(&p, &d), Some(l));
+        let bad = [4usize, 2, 8, 4, 96, 32]; // batch mismatch is fine; heads must match
+        assert_eq!(
+            KvLayout::from_shapes(&p, &bad),
+            Some(KvLayout::new(4, 4, 96, 32, 8))
+        );
+        let inconsistent = [5usize, 2, 4, 4, 96, 32];
+        assert_eq!(KvLayout::from_shapes(&p, &inconsistent), None);
+    }
+
+    #[test]
+    fn token_block_math() {
+        let l = serving_layout();
+        assert_eq!(l.token_blocks(16), 6);
+        assert_eq!(l.token_blocks(32), 3);
+        // One 16-token block: 4B * 2 * L4 * H4 * hd32 * 16 tokens.
+        assert_eq!(l.token_block_bytes(16), 4 * 2 * 4 * 4 * 32 * 16);
+    }
+}

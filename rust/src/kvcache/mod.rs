@@ -1,0 +1,21 @@
+//! KVCache layout math, sender-side contiguous buffers and RecvScatter —
+//! the data-plane half of the paper's §3.6 block-free D2D transfer.
+//!
+//! - `layout`: offset arithmetic for the prefill (contiguous, per-request)
+//!   and decode (block-organized, per-slot) cache layouts, plus
+//!   PageAttention block views.
+//! - `buffer`: the prefill instance's reserved pool of contiguous send
+//!   buffers ("it is hard to ensure the prepare of contiguous buffers for
+//!   all of them … reserving all of these contiguous buffers … is possible
+//!   in prefill in advance").
+//! - `scatter`: the *function* RecvScatter — restore received bytes into
+//!   the receiver's discrete block layout on the host. The *operator*
+//!   variant is the AOT-compiled `scatter_b4.hlo.txt` executed by
+//!   `runtime::ServingRuntime::scatter_device`.
+
+pub mod buffer;
+pub mod layout;
+pub mod scatter;
+
+pub use buffer::SendBufferPool;
+pub use layout::KvLayout;

@@ -1,0 +1,267 @@
+//! Function RecvScatter: restore a received contiguous KVCache into the
+//! receiver's discrete layouts on the host (paper §3.6).
+//!
+//! Two receivers exist in this repo:
+//! - the *real* decode cache `[L, 2, B, H, M, hd]` fed back into the PJRT
+//!   decode executable (`scatter_into_decode`), and
+//! - the *simulated* PageAttention block table used by the transfer
+//!   experiments (`scatter_into_blocks`), where the payload shatters into
+//!   fixed-size token blocks.
+//!
+//! Equivalence with the operator RecvScatter (the AOT-compiled HLO) is
+//! asserted in `rust/tests/runtime_golden.rs`.
+
+use anyhow::{anyhow, Result};
+
+use super::layout::KvLayout;
+
+/// Scatter one request's contiguous cache (`[L, 2, H, M, hd]`, flattened)
+/// into slot `slot` of a host mirror of the decode cache
+/// (`decode_shape = [L, 2, B, H, M, hd]`, flattened).
+pub fn scatter_into_decode(
+    decode_mirror: &mut [f32],
+    prefill_cache: &[f32],
+    decode_shape: &[usize],
+    slot: usize,
+) -> Result<()> {
+    if decode_shape.len() != 6 {
+        return Err(anyhow!("decode shape must be rank 6"));
+    }
+    let (l, two, b, h, m, hd) = (
+        decode_shape[0],
+        decode_shape[1],
+        decode_shape[2],
+        decode_shape[3],
+        decode_shape[4],
+        decode_shape[5],
+    );
+    if two != 2 {
+        return Err(anyhow!("decode shape dim 1 must be 2 (K and V)"));
+    }
+    if slot >= b {
+        return Err(anyhow!("slot {slot} out of range (batch {b})"));
+    }
+    let layout = KvLayout::new(l, h, m, hd, b);
+    if prefill_cache.len() != layout.prefill_elems() {
+        return Err(anyhow!(
+            "payload {} elems, expected {}",
+            prefill_cache.len(),
+            layout.prefill_elems()
+        ));
+    }
+    if decode_mirror.len() != layout.decode_elems() {
+        return Err(anyhow!(
+            "decode mirror {} elems, expected {}",
+            decode_mirror.len(),
+            layout.decode_elems()
+        ));
+    }
+    let stripe = layout.stripe_elems();
+    for layer in 0..l {
+        for kv in 0..2 {
+            let src = layout.prefill_stripe_offset(layer, kv);
+            let dst = layout.decode_stripe_offset(layer, kv, slot);
+            decode_mirror[dst..dst + stripe]
+                .copy_from_slice(&prefill_cache[src..src + stripe]);
+        }
+    }
+    Ok(())
+}
+
+/// Extract slot `slot` back out of a decode mirror (the inverse view, used
+/// by tests and by decode->decode migration experiments).
+pub fn gather_from_decode(
+    decode_mirror: &[f32],
+    decode_shape: &[usize],
+    slot: usize,
+) -> Result<Vec<f32>> {
+    if decode_shape.len() != 6 {
+        return Err(anyhow!("decode shape must be rank 6"));
+    }
+    let layout = KvLayout::new(
+        decode_shape[0],
+        decode_shape[3],
+        decode_shape[4],
+        decode_shape[5],
+        decode_shape[2],
+    );
+    if slot >= layout.decode_batch {
+        return Err(anyhow!("slot out of range"));
+    }
+    let stripe = layout.stripe_elems();
+    let mut out = vec![0f32; layout.prefill_elems()];
+    for layer in 0..layout.n_layers {
+        for kv in 0..2 {
+            let src = layout.decode_stripe_offset(layer, kv, slot);
+            let dst = layout.prefill_stripe_offset(layer, kv);
+            out[dst..dst + stripe]
+                .copy_from_slice(&decode_mirror[src..src + stripe]);
+        }
+    }
+    Ok(out)
+}
+
+/// Scatter a contiguous byte payload into a list of fixed-size discrete
+/// blocks (the simulated PageAttention receiver). Returns how many blocks
+/// were (fully or partially) filled. `blocks` are pre-allocated by the HBM
+/// block allocator; the final block may be partially used.
+pub fn scatter_into_blocks(
+    payload: &[u8],
+    blocks: &mut [Vec<u8>],
+    block_bytes: usize,
+) -> Result<usize> {
+    let needed = payload.len().div_ceil(block_bytes);
+    if blocks.len() < needed {
+        return Err(anyhow!(
+            "need {needed} blocks for {} bytes, have {}",
+            payload.len(),
+            blocks.len()
+        ));
+    }
+    for (i, chunk) in payload.chunks(block_bytes).enumerate() {
+        blocks[i].clear();
+        blocks[i].extend_from_slice(chunk);
+    }
+    Ok(needed)
+}
+
+/// Reassemble a contiguous payload from discrete blocks (sender-side
+/// gather when the prefill HBM is block-managed; inverse of
+/// `scatter_into_blocks`).
+pub fn gather_from_blocks(blocks: &[Vec<u8>], total_bytes: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(total_bytes);
+    for b in blocks {
+        let take = (total_bytes - out.len()).min(b.len());
+        out.extend_from_slice(&b[..take]);
+        if out.len() == total_bytes {
+            break;
+        }
+    }
+    if out.len() != total_bytes {
+        return Err(anyhow!(
+            "blocks hold {} bytes, need {total_bytes}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn layout() -> KvLayout {
+        KvLayout::new(2, 2, 32, 8, 3)
+    }
+
+    fn decode_shape(l: &KvLayout) -> Vec<usize> {
+        vec![l.n_layers, 2, l.decode_batch, l.n_heads, l.max_len, l.head_dim]
+    }
+
+    #[test]
+    fn scatter_then_gather_roundtrips() {
+        let l = layout();
+        let shape = decode_shape(&l);
+        let mut rng = Rng::new(1);
+        let payload: Vec<f32> = (0..l.prefill_elems())
+            .map(|_| rng.f64() as f32)
+            .collect();
+        let mut mirror = vec![0f32; l.decode_elems()];
+        scatter_into_decode(&mut mirror, &payload, &shape, 1).unwrap();
+        let back = gather_from_decode(&mirror, &shape, 1).unwrap();
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn scatter_leaves_other_slots_untouched() {
+        let l = layout();
+        let shape = decode_shape(&l);
+        let payload = vec![1.0f32; l.prefill_elems()];
+        let mut mirror = vec![-2.0f32; l.decode_elems()];
+        scatter_into_decode(&mut mirror, &payload, &shape, 0).unwrap();
+        // Slots 1 and 2 must still be all -2.
+        for slot in 1..l.decode_batch {
+            let back = gather_from_decode(&mirror, &shape, slot).unwrap();
+            assert!(back.iter().all(|&x| x == -2.0), "slot {slot} perturbed");
+        }
+    }
+
+    #[test]
+    fn scatter_rejects_bad_sizes() {
+        let l = layout();
+        let shape = decode_shape(&l);
+        let mut mirror = vec![0f32; l.decode_elems()];
+        assert!(scatter_into_decode(&mut mirror, &[0.0; 3], &shape, 0).is_err());
+        let payload = vec![0f32; l.prefill_elems()];
+        assert!(scatter_into_decode(&mut mirror, &payload, &shape, 99).is_err());
+    }
+
+    #[test]
+    fn block_scatter_roundtrip() {
+        let mut rng = Rng::new(2);
+        let payload: Vec<u8> = (0..1000).map(|_| rng.below(256) as u8).collect();
+        let block_bytes = 96;
+        let mut blocks = vec![Vec::new(); 11]; // ceil(1000/96) = 11
+        let used = scatter_into_blocks(&payload, &mut blocks, block_bytes).unwrap();
+        assert_eq!(used, 11);
+        let back = gather_from_blocks(&blocks, payload.len()).unwrap();
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn block_scatter_insufficient_blocks() {
+        let payload = vec![0u8; 1000];
+        let mut blocks = vec![Vec::new(); 2];
+        assert!(scatter_into_blocks(&payload, &mut blocks, 96).is_err());
+    }
+
+    #[test]
+    fn prop_scatter_gather_identity_random_layouts() {
+        let cfg = prop::Config { cases: 40, ..Default::default() };
+        prop::check(
+            "scatter-gather-identity",
+            &cfg,
+            |r| {
+                let l = KvLayout::new(
+                    1 + r.below(3),
+                    1 + r.below(4),
+                    8 * (1 + r.below(4)),
+                    4 * (1 + r.below(4)),
+                    1 + r.below(4),
+                );
+                let slot = r.below(l.decode_batch);
+                let seed = r.next_u64();
+                (l, slot, seed)
+            },
+            |&(l, slot, seed)| {
+                let shape = vec![
+                    l.n_layers, 2, l.decode_batch, l.n_heads, l.max_len, l.head_dim,
+                ];
+                let mut rng = Rng::new(seed);
+                let payload: Vec<f32> =
+                    (0..l.prefill_elems()).map(|_| rng.f64() as f32).collect();
+                let mut mirror = vec![0f32; l.decode_elems()];
+                scatter_into_decode(&mut mirror, &payload, &shape, slot)
+                    .map_err(|e| e.to_string())?;
+                let back = gather_from_decode(&mirror, &shape, slot)
+                    .map_err(|e| e.to_string())?;
+                if back != payload {
+                    return Err("roundtrip mismatch".into());
+                }
+                // Total mass conservation: scattered elements == payload.
+                let nonzero: usize =
+                    mirror.iter().filter(|&&x| x != 0.0).count();
+                let expect_nonzero =
+                    payload.iter().filter(|&&x| x != 0.0).count();
+                if nonzero != expect_nonzero {
+                    return Err(format!(
+                        "leak: {nonzero} nonzero in mirror vs {expect_nonzero}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

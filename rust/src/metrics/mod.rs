@@ -1,0 +1,210 @@
+//! Serving metrics: request outcomes, SLO attainment, throughput Φ.
+//!
+//! Implements the paper's E2E performance accounting:
+//! `Φ = min{I_t, n_p b_p / T_p, n_d b_d / T_d} / (n_p + n_d)` — throughput
+//! per instance — plus TTFT/E2E percentile summaries and the success-rate
+//! metric of Fig. 14a ("desired success rate is 100%, which implies no
+//! requests break the timeout thresholds").
+
+use crate::util::stats::Summary;
+
+/// Outcome of one request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    Completed {
+        ttft_ms: f64,
+        e2e_ms: f64,
+        xfer_ms: f64,
+        gen_tokens: usize,
+    },
+    /// Terminated by early intervention (gateway or prefill) — the request
+    /// broke its TTFT threshold.
+    TimedOut {
+        waited_ms: f64,
+    },
+}
+
+/// Aggregator over a run.
+#[derive(Debug, Default)]
+pub struct ServingReport {
+    pub ttft: Summary,
+    pub e2e: Summary,
+    pub xfer: Summary,
+    pub completed: usize,
+    pub timed_out: usize,
+    pub tokens_out: u64,
+    /// Virtual duration covered (ms) — set by the driver at the end.
+    pub duration_ms: f64,
+    /// Instance counts, for per-instance throughput.
+    pub n_prefill: usize,
+    pub n_decode: usize,
+}
+
+impl ServingReport {
+    pub fn new(n_prefill: usize, n_decode: usize) -> Self {
+        ServingReport { n_prefill, n_decode, ..Default::default() }
+    }
+
+    pub fn record(&mut self, outcome: &Outcome) {
+        match outcome {
+            Outcome::Completed { ttft_ms, e2e_ms, xfer_ms, gen_tokens } => {
+                self.completed += 1;
+                self.ttft.add(*ttft_ms);
+                self.e2e.add(*e2e_ms);
+                self.xfer.add(*xfer_ms);
+                self.tokens_out += *gen_tokens as u64;
+            }
+            Outcome::TimedOut { .. } => self.timed_out += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.completed + self.timed_out
+    }
+
+    /// Fig. 14a's success rate.
+    pub fn success_rate(&self) -> f64 {
+        if self.total() == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.total() as f64
+    }
+
+    /// Completed requests per second.
+    pub fn rps(&self) -> f64 {
+        if self.duration_ms <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// The paper's Φ: requests/sec per instance.
+    pub fn phi(&self) -> f64 {
+        let n = self.n_prefill + self.n_decode;
+        if n == 0 {
+            return 0.0;
+        }
+        self.rps() / n as f64
+    }
+
+    /// Output tokens per second (decode goodput).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.duration_ms <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / (self.duration_ms / 1000.0)
+    }
+
+    /// TTFT SLO attainment at a fixed threshold.
+    pub fn ttft_slo_attainment(&mut self, threshold_ms: f64) -> f64 {
+        // Timed-out requests count against the SLO.
+        let ok = self.ttft.count() as f64 * self.ttft.fraction_le(threshold_ms);
+        let total = self.total() as f64;
+        if total == 0.0 {
+            return 1.0;
+        }
+        ok / total
+    }
+
+    /// Mean T_p / E2E proportion — the ratio-adjustment alarm signal
+    /// (Fig. 12c: "the proportion of T_p hints the P/D bottleneck").
+    pub fn ttft_share_of_e2e(&self) -> f64 {
+        if self.e2e.mean() <= 0.0 {
+            return 0.0;
+        }
+        self.ttft.mean() / self.e2e.mean()
+    }
+
+    pub fn one_line(&mut self) -> String {
+        format!(
+            "n={} ok={:.1}% rps={:.2} phi={:.3} ttft(p50/p99)={:.0}/{:.0}ms \
+             e2e(p50/p99)={:.0}/{:.0}ms tok/s={:.0}",
+            self.total(),
+            self.success_rate() * 100.0,
+            self.rps(),
+            self.phi(),
+            self.ttft.p50(),
+            self.ttft.p99(),
+            self.e2e.p50(),
+            self.e2e.p99(),
+            self.tokens_per_sec()
+        )
+    }
+}
+
+/// The paper's bottleneck formula: Φ for given instance counts/capabilities
+/// (requests/sec each) under input traffic `it_rps`.
+pub fn phi_bottleneck(
+    it_rps: f64,
+    n_p: usize,
+    prefill_rps_each: f64,
+    n_d: usize,
+    decode_rps_each: f64,
+) -> f64 {
+    let p_cap = n_p as f64 * prefill_rps_each;
+    let d_cap = n_d as f64 * decode_rps_each;
+    let served = it_rps.min(p_cap).min(d_cap);
+    served / (n_p + n_d) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(ttft: f64, e2e: f64) -> Outcome {
+        Outcome::Completed { ttft_ms: ttft, e2e_ms: e2e, xfer_ms: 5.0, gen_tokens: 100 }
+    }
+
+    #[test]
+    fn success_rate_and_rps() {
+        let mut r = ServingReport::new(2, 2);
+        for _ in 0..9 {
+            r.record(&done(100.0, 1000.0));
+        }
+        r.record(&Outcome::TimedOut { waited_ms: 600.0 });
+        r.duration_ms = 10_000.0;
+        assert!((r.success_rate() - 0.9).abs() < 1e-12);
+        assert!((r.rps() - 0.9).abs() < 1e-12);
+        assert!((r.phi() - 0.225).abs() < 1e-12);
+        assert!((r.tokens_per_sec() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment_counts_timeouts_against() {
+        let mut r = ServingReport::new(1, 1);
+        r.record(&done(100.0, 500.0));
+        r.record(&done(400.0, 900.0));
+        r.record(&Outcome::TimedOut { waited_ms: 700.0 });
+        // Threshold 200: only the first completes in time; 1/3 attainment.
+        assert!((r.ttft_slo_attainment(200.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((r.ttft_slo_attainment(500.0) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_share_signal() {
+        let mut r = ServingReport::new(1, 1);
+        r.record(&done(300.0, 1000.0));
+        assert!((r.ttft_share_of_e2e() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phi_bottleneck_takes_min() {
+        // Prefill-bound.
+        let phi = phi_bottleneck(100.0, 2, 10.0, 2, 50.0);
+        assert!((phi - 20.0 / 4.0).abs() < 1e-12);
+        // Traffic-bound.
+        let phi2 = phi_bottleneck(5.0, 2, 10.0, 2, 50.0);
+        assert!((phi2 - 5.0 / 4.0).abs() < 1e-12);
+        // Decode-bound.
+        let phi3 = phi_bottleneck(100.0, 4, 10.0, 1, 8.0);
+        assert!((phi3 - 8.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_sane() {
+        let mut r = ServingReport::new(0, 0);
+        assert_eq!(r.success_rate(), 1.0);
+        assert_eq!(r.phi(), 0.0);
+        assert_eq!(r.ttft_slo_attainment(100.0), 1.0);
+    }
+}

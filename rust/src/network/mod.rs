@@ -1,0 +1,17 @@
+//! Network substrate: the RoCE v2 fabric (paper §3.7).
+//!
+//! - `topology`: regions → racks → nodes → devices; devices attach
+//!   directly to ToR switches (no host-network hop), ToRs uplink to a
+//!   spine layer.
+//! - `route`: ECMP spine selection, path diversity and conflict counting
+//!   for the multi-hop sub-transfers of one D2D KVCache move.
+//! - `rdma`: the transfer-time model — per-block control round-trips vs
+//!   contiguous whole-payload transfer, bandwidth sharing, utilization.
+
+pub mod rdma;
+pub mod route;
+pub mod topology;
+
+pub use rdma::RdmaModel;
+pub use route::ecmp_spine;
+pub use topology::Topology;

@@ -1,0 +1,185 @@
+//! RDMA D2D transfer-time model (paper §2.2.3 / §3.6 / Fig. 4, 14c, 14d).
+//!
+//! Two transfer disciplines over the same link:
+//!
+//! - **Discrete blocks** (the vLLM-style baseline): the payload is sent as
+//!   `ceil(S / block)` messages, each paying a control round-trip
+//!   (sender/receiver confirmation) plus per-message software overhead.
+//!   Controls serialize with the data on the QP, wasting bandwidth.
+//! - **Contiguous** (P/D-Serve): one meta-exchange up front ("one
+//!   communication with a low cost exchange of the meta"), then the whole
+//!   payload streams as bytes.
+//!
+//! Conflict scaling: a transfer whose spine path is shared by `k`
+//! concurrent transfers sees `1/k` of the link for the shared portion —
+//! the source of the hundreds-of-ms variance in Fig. 14d.
+
+/// Transfer-engine constants. Times in microseconds, bandwidth in Gbit/s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RdmaModel {
+    /// Per-device RoCE link rate (the paper: "hundreds of Gb per second").
+    pub link_gbps: f64,
+    /// One sender↔receiver control round-trip (per-block confirmation).
+    pub ctrl_rt_us: f64,
+    /// Per-message software/doorbell overhead at the sender.
+    pub per_msg_sw_us: f64,
+    /// Per-hop propagation+switching latency.
+    pub hop_latency_us: f64,
+    /// Fixed cost of the one-time meta exchange for contiguous mode.
+    pub meta_exchange_us: f64,
+}
+
+impl Default for RdmaModel {
+    fn default() -> Self {
+        // ctrl_rt covers the receiver-side block allocate + confirm
+        // round-trip per message (multi-hop RTT + both software stacks);
+        // per_msg_sw is the sender-side doorbell/completion handling.
+        // Calibrated so the blocked-vs-contiguous gap on production-sized
+        // KVCaches reproduces the paper's measured 46% reduction (Fig 14c).
+        RdmaModel {
+            link_gbps: 200.0,
+            ctrl_rt_us: 40.0,
+            per_msg_sw_us: 12.0,
+            hop_latency_us: 2.0,
+            meta_exchange_us: 10.0,
+        }
+    }
+}
+
+impl RdmaModel {
+    /// Pure wire time for `bytes` at full link rate (µs).
+    pub fn wire_us(&self, bytes: usize) -> f64 {
+        bytes as f64 * 8.0 / (self.link_gbps * 1e3)
+    }
+
+    /// Discrete block-by-block transfer (µs): each block pays control +
+    /// software overhead, serialized ("transfer one by one").
+    pub fn blocked_us(&self, bytes: usize, block_bytes: usize, hops: usize, sharers: usize) -> f64 {
+        debug_assert!(block_bytes > 0);
+        let n = bytes.div_ceil(block_bytes) as f64;
+        let path = hops as f64 * self.hop_latency_us;
+        let wire = self.wire_us(bytes) * sharers.max(1) as f64;
+        path + n * (self.ctrl_rt_us + self.per_msg_sw_us) + wire
+    }
+
+    /// Contiguous whole-payload transfer (µs): one meta exchange, then
+    /// bytes as a whole.
+    pub fn contiguous_us(&self, bytes: usize, hops: usize, sharers: usize) -> f64 {
+        let path = hops as f64 * self.hop_latency_us;
+        let wire = self.wire_us(bytes) * sharers.max(1) as f64;
+        path + self.meta_exchange_us + self.per_msg_sw_us + wire
+    }
+
+    /// Per-layer-triggered contiguous transfer (µs): `layers` trigger
+    /// points, each a contiguous range (paper's flexibility path). Overlaps
+    /// with compute, so only the *last* layer's transfer tail is exposed;
+    /// this returns the total occupancy on the wire.
+    pub fn per_layer_us(&self, bytes: usize, layers: usize, hops: usize, sharers: usize) -> f64 {
+        debug_assert!(layers > 0);
+        let path = hops as f64 * self.hop_latency_us;
+        let wire = self.wire_us(bytes) * sharers.max(1) as f64;
+        path + layers as f64 * (self.meta_exchange_us + self.per_msg_sw_us) + wire
+    }
+
+    /// Achieved D2D bandwidth utilization in [0, 1]: wire time over total.
+    pub fn utilization(&self, bytes: usize, total_us: f64) -> f64 {
+        if total_us <= 0.0 {
+            return 0.0;
+        }
+        (self.wire_us(bytes) / total_us).min(1.0)
+    }
+
+    /// Convenience: ms variants used by the simulator.
+    pub fn blocked_ms(&self, bytes: usize, block_bytes: usize, hops: usize, sharers: usize) -> f64 {
+        self.blocked_us(bytes, block_bytes, hops, sharers) / 1e3
+    }
+
+    pub fn contiguous_ms(&self, bytes: usize, hops: usize, sharers: usize) -> f64 {
+        self.contiguous_us(bytes, hops, sharers) / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> RdmaModel {
+        RdmaModel::default()
+    }
+
+    #[test]
+    fn contiguous_beats_blocked() {
+        let m = m();
+        // A production-sized per-device share (420 MB ≈ 4.2k-token prompt
+        // of a 13B-class model over 8 devices) in PageAttention-sized
+        // 1.6 MB token blocks — the Fig. 14c regime.
+        let bytes = 420 << 20;
+        let blocked = m.blocked_us(bytes, 1600 << 10, 3, 1);
+        let contig = m.contiguous_us(bytes, 3, 1);
+        assert!(contig < blocked);
+        let saving = 1.0 - contig / blocked;
+        // Paper reports 46% average transfer-time reduction; the model
+        // should put this regime in the same ballpark (30-70%).
+        assert!(saving > 0.3 && saving < 0.7, "saving {saving}");
+    }
+
+    #[test]
+    fn small_blocks_hurt_more() {
+        // Fig. 4a: control cost grows as blocks shrink.
+        let m = m();
+        let bytes = 16 << 20;
+        let t16k = m.blocked_us(bytes, 16 << 10, 3, 1);
+        let t64k = m.blocked_us(bytes, 64 << 10, 3, 1);
+        let t1m = m.blocked_us(bytes, 1 << 20, 3, 1);
+        assert!(t16k > t64k && t64k > t1m);
+    }
+
+    #[test]
+    fn utilization_improves_with_contiguous() {
+        // Fig. 4b / 14c: utilization under discrete blocks is low.
+        let m = m();
+        let bytes = 8 << 20;
+        let u_blocked = m.utilization(bytes, m.blocked_us(bytes, 32 << 10, 3, 1));
+        let u_contig = m.utilization(bytes, m.contiguous_us(bytes, 3, 1));
+        assert!(u_contig > 0.9, "contiguous util {u_contig}");
+        assert!(u_blocked < 0.6, "blocked util {u_blocked}");
+    }
+
+    #[test]
+    fn sharers_scale_wire_time() {
+        let m = m();
+        let bytes = 4 << 20;
+        let alone = m.contiguous_us(bytes, 3, 1);
+        let shared = m.contiguous_us(bytes, 3, 2);
+        assert!(shared > 1.7 * alone - m.meta_exchange_us - 3.0 * m.hop_latency_us);
+        assert!(shared < 2.0 * alone);
+    }
+
+    #[test]
+    fn per_layer_total_between_extremes() {
+        let m = m();
+        let bytes = 4 << 20;
+        let whole = m.contiguous_us(bytes, 3, 1);
+        let per_layer = m.per_layer_us(bytes, 80, 3, 1);
+        let blocked = m.blocked_us(bytes, 16 << 10, 3, 1);
+        assert!(per_layer > whole);
+        assert!(per_layer < blocked);
+    }
+
+    #[test]
+    fn wire_time_matches_link_rate() {
+        let m = m();
+        // 200 Gb/s = 25 GB/s -> 1 MiB in ~41.9 µs.
+        let t = m.wire_us(1 << 20);
+        assert!((t - 41.94).abs() < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn ms_helpers_consistent() {
+        let m = m();
+        assert!((m.contiguous_ms(1 << 20, 3, 1) * 1e3
+            - m.contiguous_us(1 << 20, 3, 1))
+            .abs()
+            < 1e-9);
+    }
+}

@@ -1,0 +1,167 @@
+//! ECMP routing over the ToR↔spine fabric, conflict accounting and the
+//! path-diversity spraying the paper requires ("the conflict should be
+//! avoided among those sub-transfers, which requires the infrastructure to
+//! fully utilize the path diversity between ToR and spine switches").
+//!
+//! A D2D KVCache move between a P and a D instance is N parallel
+//! sub-transfers (one per device pair, same local index). Each cross-rack
+//! sub-transfer hashes onto one spine; two sub-transfers on the same spine
+//! at the same time share bandwidth — that is the "conflict" behind the
+//! hundreds-of-ms tail in Fig. 14d.
+
+use crate::util::prng::splitmix64;
+
+/// Default 5-tuple-style ECMP hash: deterministic per flow, oblivious to
+/// load — collisions are luck (the baseline behaviour).
+pub fn ecmp_spine(src_tor: usize, dst_tor: usize, flow_id: u64, n_spines: usize) -> usize {
+    debug_assert!(n_spines > 0);
+    let mut h = (src_tor as u64) << 40 ^ (dst_tor as u64) << 20 ^ flow_id;
+    (splitmix64(&mut h) % n_spines as u64) as usize
+}
+
+/// Path-diverse assignment: sub-transfer `i` of a move is *spread* across
+/// spines deterministically (round-robin from a per-move base), so the N
+/// sub-transfers of one KVCache move never self-conflict when N <= spines.
+pub fn sprayed_spine(base_flow: u64, sub_index: usize, n_spines: usize) -> usize {
+    debug_assert!(n_spines > 0);
+    let mut h = base_flow;
+    let base = (splitmix64(&mut h) % n_spines as u64) as usize;
+    (base + sub_index) % n_spines
+}
+
+/// Count, for each spine, how many of the given assignments land on it and
+/// return the worst-case sharer count (1 = conflict-free).
+pub fn max_sharers(assignments: &[usize], n_spines: usize) -> usize {
+    let mut counts = vec![0usize; n_spines];
+    for &a in assignments {
+        counts[a] += 1;
+    }
+    counts.into_iter().max().unwrap_or(0)
+}
+
+/// Conflict statistics for one KVCache move with `n_sub` sub-transfers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConflictStats {
+    /// Worst sharer count on any spine (>= 1).
+    pub max_sharers: usize,
+    /// Number of sub-transfers not alone on their spine.
+    pub conflicted: usize,
+}
+
+/// Evaluate a spine assignment produced by either policy.
+pub fn conflicts(assignments: &[usize], n_spines: usize) -> ConflictStats {
+    let mut counts = vec![0usize; n_spines];
+    for &a in assignments {
+        counts[a] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(0);
+    let conflicted = assignments
+        .iter()
+        .filter(|&&a| counts[a] > 1)
+        .count();
+    ConflictStats { max_sharers: max.max(1), conflicted }
+}
+
+/// Assign all sub-transfers of one move via plain ECMP (each sub-transfer
+/// is its own flow — what per-QP hashing does in practice).
+pub fn assign_ecmp(
+    src_tor: usize,
+    dst_tor: usize,
+    move_id: u64,
+    n_sub: usize,
+    n_spines: usize,
+) -> Vec<usize> {
+    (0..n_sub)
+        .map(|i| ecmp_spine(src_tor, dst_tor, move_id.wrapping_mul(131).wrapping_add(i as u64), n_spines))
+        .collect()
+}
+
+/// Assign via path-diversity spraying.
+pub fn assign_sprayed(move_id: u64, n_sub: usize, n_spines: usize) -> Vec<usize> {
+    (0..n_sub).map(|i| sprayed_spine(move_id, i, n_spines)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn ecmp_is_deterministic_and_bounded() {
+        for flow in 0..100u64 {
+            let a = ecmp_spine(1, 2, flow, 4);
+            let b = ecmp_spine(1, 2, flow, 4);
+            assert_eq!(a, b);
+            assert!(a < 4);
+        }
+    }
+
+    #[test]
+    fn ecmp_spreads_over_spines() {
+        let mut counts = [0usize; 4];
+        for flow in 0..4000u64 {
+            counts[ecmp_spine(3, 7, flow, 4)] += 1;
+        }
+        for c in counts {
+            assert!(c > 800 && c < 1200, "uneven spread: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn spraying_is_conflict_free_when_subs_fit() {
+        // 8 sub-transfers over 8 spines: never self-conflict.
+        for move_id in 0..200u64 {
+            let a = assign_sprayed(move_id, 8, 8);
+            let st = conflicts(&a, 8);
+            assert_eq!(st.max_sharers, 1, "move {move_id}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn ecmp_often_conflicts_spraying_rarely() {
+        // The quantitative heart of Fig. 14d: with 8 sub-transfers over 8
+        // spines, random ECMP collides with probability ~1 - 8!/8^8 ≈ 0.998;
+        // spraying never does.
+        let mut ecmp_conflicted = 0;
+        for move_id in 0..500u64 {
+            let a = assign_ecmp(0, 1, move_id, 8, 8);
+            if conflicts(&a, 8).max_sharers > 1 {
+                ecmp_conflicted += 1;
+            }
+        }
+        assert!(
+            ecmp_conflicted > 450,
+            "ECMP should almost always collide: {ecmp_conflicted}/500"
+        );
+    }
+
+    #[test]
+    fn max_sharers_counts() {
+        assert_eq!(max_sharers(&[0, 0, 1], 2), 2);
+        assert_eq!(max_sharers(&[0, 1, 2, 3], 4), 1);
+        assert_eq!(max_sharers(&[], 4), 0);
+    }
+
+    #[test]
+    fn prop_spray_minimizes_worst_case() {
+        // For any n_sub <= n_spines, sprayed assignment achieves the
+        // theoretical optimum of ceil(n_sub / n_spines) = 1 sharer.
+        let cfg = prop::Config { cases: 64, ..Default::default() };
+        prop::check(
+            "spray-optimal",
+            &cfg,
+            |r| {
+                let n_spines = 2 + r.below(14);
+                let n_sub = 1 + r.below(n_spines);
+                (r.next_u64(), n_sub, n_spines)
+            },
+            |&(id, n_sub, n_spines)| {
+                let st = conflicts(&assign_sprayed(id, n_sub, n_spines), n_spines);
+                if st.max_sharers != 1 {
+                    return Err(format!("sharers {} != 1", st.max_sharers));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Cluster fabric layout: regions → racks → nodes → devices, ToR + spine.
+//!
+//! Mirrors the paper's infrastructure (§3.7): NPUs connect *directly* to
+//! top-of-rack switches with RoCE v2 (one hop less than host networking);
+//! ToRs connect to a spine layer for cluster-level transfer; regions
+//! provide disaster isolation. Intra-node transfers ride HCCS and bypass
+//! the fabric entirely.
+
+use crate::cluster::device::{Device, DeviceId, Health, RoceIp};
+use crate::util::config::ClusterConfig;
+
+/// Hop classification for a device pair — determines both latency and
+/// which resources a transfer can conflict on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PathKind {
+    /// Same node: HCCS, no fabric involvement.
+    IntraNode,
+    /// Same rack: through the shared ToR only.
+    IntraRack,
+    /// Cross-rack (same or different region): ToR → spine → ToR.
+    CrossRack,
+}
+
+impl PathKind {
+    /// Network hops traversed (0 for HCCS).
+    pub fn hops(&self) -> usize {
+        match self {
+            PathKind::IntraNode => 0,
+            PathKind::IntraRack => 1,
+            PathKind::CrossRack => 3,
+        }
+    }
+}
+
+/// Immutable fabric description + device inventory.
+#[derive(Debug)]
+pub struct Topology {
+    pub cfg: ClusterConfig,
+    pub devices: Vec<Device>,
+}
+
+impl Topology {
+    /// Lay out `cfg.total_devices()` devices; RoCE hosts are dense within
+    /// each region (the paper's "maximum RoCE IPs are limited in a region,
+    /// in thousands").
+    pub fn build(cfg: &ClusterConfig) -> Topology {
+        let mut devices = Vec::with_capacity(cfg.total_devices());
+        let mut id = 0u32;
+        for region in 0..cfg.regions {
+            let mut host_in_region = 0u16;
+            for rack in 0..cfg.racks_per_region {
+                for node_in_rack in 0..cfg.nodes_per_rack {
+                    let node = (region * cfg.racks_per_region * cfg.nodes_per_rack
+                        + rack * cfg.nodes_per_rack
+                        + node_in_rack) as u32;
+                    for local in 0..cfg.devices_per_node {
+                        devices.push(Device {
+                            id: DeviceId(id),
+                            roce: RoceIp {
+                                region: region as u16,
+                                host: host_in_region,
+                            },
+                            region: region as u16,
+                            rack: rack as u16,
+                            node,
+                            local_index: local as u8,
+                            hbm_bytes: (cfg.hbm_gb * (1u64 << 30) as f64) as u64,
+                            // ~60% pinned by weights/activations/reserved.
+                            hbm_reserved_bytes: (cfg.hbm_gb * 0.6
+                                * (1u64 << 30) as f64)
+                                as u64,
+                            health: Health::Ok,
+                        });
+                        id += 1;
+                        host_in_region += 1;
+                    }
+                }
+            }
+        }
+        Topology { cfg: cfg.clone(), devices }
+    }
+
+    pub fn device(&self, id: DeviceId) -> &Device {
+        &self.devices[id.0 as usize]
+    }
+
+    pub fn device_mut(&mut self, id: DeviceId) -> &mut Device {
+        &mut self.devices[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Devices of one node, in local-index order (instance assignment).
+    pub fn node_devices(&self, node: u32) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .filter(|d| d.node == node)
+            .map(|d| d.id)
+            .collect()
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.cfg.regions * self.cfg.racks_per_region * self.cfg.nodes_per_rack
+    }
+
+    /// Classify the path between two devices.
+    pub fn path_kind(&self, a: DeviceId, b: DeviceId) -> PathKind {
+        let da = self.device(a);
+        let db = self.device(b);
+        if da.node == db.node {
+            PathKind::IntraNode
+        } else if da.region == db.region && da.rack == db.rack {
+            PathKind::IntraRack
+        } else {
+            PathKind::CrossRack
+        }
+    }
+
+    /// Global ToR index for a device (one logical data-plane ToR per rack).
+    pub fn tor_of(&self, d: DeviceId) -> usize {
+        let dev = self.device(d);
+        dev.region as usize * self.cfg.racks_per_region + dev.rack as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ClusterConfig {
+        ClusterConfig {
+            regions: 2,
+            racks_per_region: 2,
+            nodes_per_rack: 2,
+            devices_per_node: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builds_expected_count_and_unique_ips() {
+        let t = Topology::build(&small_cfg());
+        assert_eq!(t.len(), 2 * 2 * 2 * 4);
+        let mut ips: Vec<(u16, u16)> =
+            t.devices.iter().map(|d| (d.roce.region, d.roce.host)).collect();
+        ips.sort();
+        ips.dedup();
+        assert_eq!(ips.len(), t.len(), "RoCE IPs must be unique");
+    }
+
+    #[test]
+    fn hosts_dense_per_region() {
+        let t = Topology::build(&small_cfg());
+        let max_host = t
+            .devices
+            .iter()
+            .filter(|d| d.region == 0)
+            .map(|d| d.roce.host)
+            .max()
+            .unwrap();
+        assert_eq!(max_host as usize, t.len() / 2 - 1);
+    }
+
+    #[test]
+    fn path_kinds() {
+        let t = Topology::build(&small_cfg());
+        // Devices 0..4 share node 0; 4..8 are node 1 in the same rack.
+        assert_eq!(t.path_kind(DeviceId(0), DeviceId(1)), PathKind::IntraNode);
+        assert_eq!(t.path_kind(DeviceId(0), DeviceId(4)), PathKind::IntraRack);
+        // Device in rack 1 (region 0): offset 2 nodes * 4 devices = 8.
+        assert_eq!(t.path_kind(DeviceId(0), DeviceId(8)), PathKind::CrossRack);
+        // Cross-region.
+        let half = t.len() as u32 / 2;
+        assert_eq!(t.path_kind(DeviceId(0), DeviceId(half)), PathKind::CrossRack);
+        assert_eq!(PathKind::IntraNode.hops(), 0);
+        assert_eq!(PathKind::CrossRack.hops(), 3);
+    }
+
+    #[test]
+    fn node_devices_ordered() {
+        let t = Topology::build(&small_cfg());
+        let devs = t.node_devices(1);
+        assert_eq!(devs.len(), 4);
+        let locals: Vec<u8> =
+            devs.iter().map(|&d| t.device(d).local_index).collect();
+        assert_eq!(locals, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn tor_indices_partition_racks() {
+        let t = Topology::build(&small_cfg());
+        assert_eq!(t.tor_of(DeviceId(0)), 0);
+        assert_eq!(t.tor_of(DeviceId(8)), 1); // rack 1, region 0
+        let half = t.len() as u32 / 2;
+        assert_eq!(t.tor_of(DeviceId(half)), 2); // rack 0, region 1
+    }
+}

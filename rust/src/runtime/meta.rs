@@ -1,0 +1,160 @@
+//! Artifact metadata: shapes and layouts emitted by `python/compile/aot.py`.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/meta.json`. All the layout facts the L3 transfer path
+/// (contiguous buffer offsets, RecvScatter) needs about the model.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_batch: usize,
+    pub kvcache_bytes_per_token: usize,
+    pub prefill_cache_shape: Vec<usize>,
+    pub decode_cache_shape: Vec<usize>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub bucket: Option<usize>,
+    pub sha256: String,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &str) -> Result<ModelMeta> {
+        let path = format!("{dir}/meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let j = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let model = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let need = |v: Option<usize>, what: &str| {
+            v.ok_or_else(|| anyhow!("meta.json missing {what}"))
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    name: a.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    kind: a.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                    bucket: a.get("bucket").and_then(Json::as_usize),
+                    sha256: a.get("sha256").and_then(Json::as_str).unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            name: model
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("model")
+                .to_string(),
+            vocab: need(model.get("vocab").and_then(Json::as_usize), "vocab")?,
+            d_model: need(model.get("d_model").and_then(Json::as_usize), "d_model")?,
+            n_layers: need(model.get("n_layers").and_then(Json::as_usize), "n_layers")?,
+            n_heads: need(model.get("n_heads").and_then(Json::as_usize), "n_heads")?,
+            head_dim: need(model.get("head_dim").and_then(Json::as_usize), "head_dim")?,
+            max_len: need(model.get("max_len").and_then(Json::as_usize), "max_len")?,
+            prefill_buckets: j
+                .get("prefill_buckets")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing prefill_buckets"))?,
+            decode_batch: need(j.get("decode_batch").and_then(Json::as_usize), "decode_batch")?,
+            kvcache_bytes_per_token: need(
+                j.get("kvcache_bytes_per_token").and_then(Json::as_usize),
+                "kvcache_bytes_per_token",
+            )?,
+            prefill_cache_shape: j
+                .get("prefill_cache_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing prefill_cache_shape"))?,
+            decode_cache_shape: j
+                .get("decode_cache_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing decode_cache_shape"))?,
+            artifacts,
+        })
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    /// f32 element count of one request's full KVCache (the contiguous
+    /// send buffer size at the prefill sender).
+    pub fn prefill_cache_elems(&self) -> usize {
+        self.prefill_cache_shape.iter().product()
+    }
+
+    pub fn decode_cache_elems(&self) -> usize {
+        self.decode_cache_shape.iter().product()
+    }
+
+    /// Bytes of one request's KVCache — what D2D transfer actually moves.
+    pub fn prefill_cache_bytes(&self) -> usize {
+        self.prefill_cache_elems() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "d_model": 128, "n_layers": 4, "n_heads": 4,
+                "head_dim": 32, "max_len": 96, "mlp_hidden": 512,
+                "name": "pd-tiny"},
+      "seed": 0,
+      "prefill_buckets": [16, 64],
+      "decode_batch": 4,
+      "kvcache_bytes_per_token": 4096,
+      "artifacts": [
+        {"name": "prefill_p16.hlo.txt", "kind": "prefill", "bucket": 16,
+         "sha256": "ab"},
+        {"name": "decode_b4.hlo.txt", "kind": "decode", "batch": 4,
+         "sha256": "cd"}
+      ],
+      "prefill_cache_shape": [4, 2, 4, 96, 32],
+      "decode_cache_shape": [4, 2, 4, 4, 96, 32]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.prefill_buckets, vec![16, 64]);
+        assert_eq!(m.prefill_cache_elems(), 4 * 2 * 4 * 96 * 32);
+        assert_eq!(m.artifacts.len(), 2);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.bucket_for(10), Some(16));
+        assert_eq!(m.bucket_for(16), Some(16));
+        assert_eq!(m.bucket_for(17), Some(64));
+        assert_eq!(m.bucket_for(65), None);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(ModelMeta::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime: load AOT artifacts (`artifacts/*.hlo.txt`) on the PJRT CPU
+//! client and execute them on the request path.
+//!
+//! This is the only boundary between the rust coordinator and the
+//! python-authored model; after `make artifacts`, the binary is fully
+//! self-contained. One compiled executable per model variant (prefill
+//! prompt-length bucket, decode batch, scatter) — the paper's
+//! "pre-compiled model loaded in minutes" (here: milliseconds-to-seconds).
+
+pub mod meta;
+pub mod model;
+pub mod tokenizer;
+
+pub use meta::ModelMeta;
+pub use model::{DecodeHandle, PrefillOutput, ServingRuntime};

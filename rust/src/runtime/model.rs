@@ -1,0 +1,330 @@
+//! The serving runtime: compiled prefill/decode/scatter executables plus
+//! the KVCache handling that moves bytes between them.
+//!
+//! Request-path contract (mirrors the paper's §3.6):
+//!
+//! 1. `prefill()` runs a prompt chunk and returns the request's full
+//!    KVCache as one **contiguous f32 buffer** — the sender-side buffer
+//!    ("there are no discrete blocks at the sender, all key-value pairs are
+//!    managed one after another").
+//! 2. The L3 transfer path ships those bytes (simulated RDMA timing +
+//!    integrity) to a decode instance.
+//! 3. `scatter_device()` (operator RecvScatter: an AOT-compiled HLO that
+//!    restores the bytes into slot `b` of the block-organized decode cache)
+//!    or `scatter_host()` (function RecvScatter in `kvcache::scatter`)
+//!    lands the cache; `decode_step()` then generates tokens under
+//!    continuous batching.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::meta::ModelMeta;
+
+/// Result of one prefill execution.
+pub struct PrefillOutput {
+    /// Logits at the last valid token, length `vocab`.
+    pub logits: Vec<f32>,
+    /// The request's contiguous KVCache `[L, 2, H, M, hd]` — the paper's
+    /// sender-side contiguous buffer, ready for block-free D2D transfer.
+    pub cache: Vec<f32>,
+    /// Wall time of the executable run (for engine-model calibration).
+    pub exec_ms: f64,
+}
+
+/// Per-decode-instance state: the resident decode cache plus slot lengths.
+pub struct DecodeHandle {
+    cache: Literal,
+    /// Current sequence length per slot (position where the next KV lands).
+    pub lens: Vec<i32>,
+    /// Slot occupancy, managed by the caller (continuous batching).
+    pub active: Vec<bool>,
+    batch: usize,
+}
+
+impl DecodeHandle {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Host copy of the decode cache (tests / function-RecvScatter path).
+    pub fn cache_to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.cache.to_vec::<f32>()?)
+    }
+
+    /// Replace the decode cache from a host vector (function-RecvScatter).
+    pub fn cache_from_vec(&mut self, data: &[f32], shape: &[usize]) -> Result<()> {
+        let bytes: &[u8] = bytemuck_cast(data);
+        self.cache = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            shape,
+            bytes,
+        )?;
+        Ok(())
+    }
+}
+
+/// View an f32 slice as bytes (little-endian host layout — same layout the
+/// PJRT CPU client uses).
+pub fn bytemuck_cast(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+/// View a byte slice as f32s. Panics if misaligned or truncated.
+pub fn bytes_as_f32(data: &[u8]) -> Vec<f32> {
+    assert_eq!(data.len() % 4, 0, "byte length not a multiple of 4");
+    data.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Load+compile timings per artifact (the paper's Fig. 13d phases).
+#[derive(Clone, Debug)]
+pub struct LoadTiming {
+    pub name: String,
+    pub read_ms: f64,
+    pub parse_ms: f64,
+    pub compile_ms: f64,
+}
+
+/// The compiled model: one executable per variant, resident for the whole
+/// process lifetime (loaded once, python never invoked again).
+pub struct ServingRuntime {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    pub meta: ModelMeta,
+    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
+    decode: PjRtLoadedExecutable,
+    scatter: PjRtLoadedExecutable,
+    pub load_timings: Vec<LoadTiming>,
+}
+
+impl ServingRuntime {
+    /// Load every artifact in `dir` on a fresh PJRT CPU client.
+    pub fn load(dir: &str) -> Result<ServingRuntime> {
+        let meta = ModelMeta::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let mut prefill = BTreeMap::new();
+        let mut decode = None;
+        let mut scatter = None;
+        let mut load_timings = Vec::new();
+        for art in &meta.artifacts {
+            let path = format!("{dir}/{}", art.name);
+            let t0 = Instant::now();
+            // Phase 1: read from the "file service" (SFS/SSD in the paper).
+            let _bytes = std::fs::read(&path)
+                .with_context(|| format!("reading artifact {path}"))?;
+            let read_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // Phase 2: parse HLO text (ids reassigned; see aot.py).
+            let t1 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let parse_ms = t1.elapsed().as_secs_f64() * 1e3;
+            // Phase 3: PJRT compile.
+            let t2 = Instant::now();
+            let exe = client.compile(&comp)?;
+            let compile_ms = t2.elapsed().as_secs_f64() * 1e3;
+            load_timings.push(LoadTiming {
+                name: art.name.clone(),
+                read_ms,
+                parse_ms,
+                compile_ms,
+            });
+            match art.kind.as_str() {
+                "prefill" => {
+                    let bucket = art
+                        .bucket
+                        .ok_or_else(|| anyhow!("prefill artifact missing bucket"))?;
+                    prefill.insert(bucket, exe);
+                }
+                "decode" => decode = Some(exe),
+                "scatter" => scatter = Some(exe),
+                other => return Err(anyhow!("unknown artifact kind {other}")),
+            }
+        }
+        Ok(ServingRuntime {
+            client,
+            meta,
+            prefill,
+            decode: decode.ok_or_else(|| anyhow!("no decode artifact"))?,
+            scatter: scatter.ok_or_else(|| anyhow!("no scatter artifact"))?,
+            load_timings,
+        })
+    }
+
+    /// Run prefill for `tokens` starting at absolute position `start`
+    /// (non-zero when continuing over a cached prefix), over an optional
+    /// existing cache (`None` = zero cache).
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        start: i32,
+        cache: Option<&[f32]>,
+    ) -> Result<PrefillOutput> {
+        let nnew = tokens.len();
+        let bucket = self
+            .meta
+            .bucket_for(nnew)
+            .ok_or_else(|| anyhow!("prompt chunk of {nnew} exceeds largest bucket"))?;
+        let exe = &self.prefill[&bucket];
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+        let tok_lit = Literal::vec1(&padded);
+        let start_lit = Literal::scalar(start);
+        let nnew_lit = Literal::scalar(nnew as i32);
+        let cache_lit = match cache {
+            Some(data) => {
+                if data.len() != self.meta.prefill_cache_elems() {
+                    return Err(anyhow!(
+                        "cache has {} elems, expected {}",
+                        data.len(),
+                        self.meta.prefill_cache_elems()
+                    ));
+                }
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &self.meta.prefill_cache_shape,
+                    bytemuck_cast(data),
+                )?
+            }
+            None => self.zero_literal(&self.meta.prefill_cache_shape)?,
+        };
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(&[tok_lit, start_lit, nnew_lit, cache_lit])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(anyhow!("prefill returned {} outputs", parts.len()));
+        }
+        Ok(PrefillOutput {
+            logits: parts[0].to_vec::<f32>()?,
+            cache: parts[1].to_vec::<f32>()?,
+            exec_ms,
+        })
+    }
+
+    /// Fresh decode handle with an all-zero cache and empty slots.
+    pub fn new_decode_handle(&self) -> Result<DecodeHandle> {
+        let b = self.meta.decode_batch;
+        Ok(DecodeHandle {
+            cache: self.zero_literal(&self.meta.decode_cache_shape)?,
+            lens: vec![0; b],
+            active: vec![false; b],
+            batch: b,
+        })
+    }
+
+    /// Operator RecvScatter: restore a received contiguous KVCache into
+    /// decode slot `slot` on-device (AOT-compiled HLO, no host loop).
+    pub fn scatter_device(
+        &self,
+        handle: &mut DecodeHandle,
+        slot: usize,
+        cache: &[f32],
+    ) -> Result<f64> {
+        if slot >= handle.batch {
+            return Err(anyhow!("slot {slot} out of range"));
+        }
+        if cache.len() != self.meta.prefill_cache_elems() {
+            return Err(anyhow!(
+                "scatter payload {} elems, expected {}",
+                cache.len(),
+                self.meta.prefill_cache_elems()
+            ));
+        }
+        let pcache = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &self.meta.prefill_cache_shape,
+            bytemuck_cast(cache),
+        )?;
+        let slot_lit = Literal::scalar(slot as i32);
+        let t0 = Instant::now();
+        // Pass literals by reference: cloning the decode cache here would
+        // copy the full [L,2,B,H,M,hd] tensor on every admission
+        // (EXPERIMENTS.md §Perf: 4.7 ms -> see after).
+        let args: [&Literal; 3] = [&handle.cache, &slot_lit, &pcache];
+        let result = self.scatter.execute::<&Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        handle.cache = tuple.to_tuple1()?;
+        Ok(t0.elapsed().as_secs_f64() * 1e3)
+    }
+
+    /// One decode iteration for all slots. `tokens[b]` is the next input
+    /// token for slot `b` (ignored for inactive slots — pass 0). Returns
+    /// flattened logits `[B * vocab]`; the cache advances in place and
+    /// `lens[b]` increments for active slots.
+    pub fn decode_step(
+        &self,
+        handle: &mut DecodeHandle,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != handle.batch {
+            return Err(anyhow!("expected {} tokens", handle.batch));
+        }
+        let tok_lit = Literal::vec1(tokens);
+        let lens_lit = Literal::vec1(&handle.lens);
+        // Reference args: no clone of the resident cache per token step.
+        let args: [&Literal; 3] = [&tok_lit, &lens_lit, &handle.cache];
+        let result = self.decode.execute::<&Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(anyhow!("decode returned {} outputs", parts.len()));
+        }
+        // Take ownership of the new cache instead of cloning it.
+        handle.cache = parts.pop().unwrap();
+        for b in 0..handle.batch {
+            if handle.active[b] {
+                handle.lens[b] += 1;
+            }
+        }
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    /// Greedy argmax over one slot's logits row.
+    pub fn argmax_row(&self, logits: &[f32], slot: usize) -> i32 {
+        let v = self.meta.vocab;
+        let row = &logits[slot * v..(slot + 1) * v];
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    fn zero_literal(&self, shape: &[usize]) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        let zeros = vec![0u8; elems * 4];
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            shape,
+            &zeros,
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_casts_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, 1e-9];
+        let bytes = bytemuck_cast(&xs);
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(bytes_as_f32(bytes), xs);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn bytes_as_f32_rejects_truncated() {
+        bytes_as_f32(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,46 @@
+//! Byte-level tokenizer: token id == byte value (vocab 256).
+//!
+//! The serving model is trained on nothing (deterministic random weights,
+//! see DESIGN.md §Substitutions), so a byte vocabulary keeps the
+//! text<->token mapping trivial, lossless and dependency-free while still
+//! exercising the full tokenize -> prefill -> decode -> detokenize path.
+
+/// Encode UTF-8 text to token ids (one per byte).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids back to text (lossy on invalid UTF-8 sequences).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "Hello, P/D-Serve!";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let text = "héllo ✓";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn out_of_range_clamped() {
+        assert_eq!(decode(&[72, 300, -5]), "H\u{fffd}\0".replace('\u{fffd}', "\u{fffd}"));
+        // 300 clamps to 255 (invalid UTF-8 alone -> replacement char),
+        // -5 clamps to 0 (NUL).
+        let s = decode(&[300]);
+        assert_eq!(s, "\u{fffd}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Serving: the request path.
+//!
+//! - `sim`: the discrete-event P/D serving simulator — gateway policy,
+//!   prefill batching, KVCache transfer, continuous-batching decode — used
+//!   by every evaluation figure.
+//! - `server`: the *real* serving engine: same policies, but prefill and
+//!   decode execute the AOT-compiled model on the PJRT CPU client and the
+//!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
+
+pub mod server;
+pub mod speculative;
+pub mod sim;
+
+pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WorkloadKind};

@@ -1,0 +1,1174 @@
+//! The discrete-event P/D serving simulator.
+//!
+//! One parameterized simulator covers the paper's evaluation space:
+//!
+//! - **Policy**: `OnDemand` (queue-free prefill + gateway retries upon
+//!   rejection, §3.5) vs `BaselineQueue` (stale pending-token scheduler +
+//!   prefill local queues, prior work).
+//! - **Transfer**: `Contiguous` (block-free + RecvScatter, §3.6) vs
+//!   `Blocked` (per-block control round-trips), with ECMP vs path-sprayed
+//!   spine assignment for the conflict model (§3.7).
+//! - **Workload**: open-loop Poisson (SLO/timeout studies) or closed-loop
+//!   constant concurrency (the paper's throughput methodology).
+//!
+//! Time unit: milliseconds (virtual).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::engine::{EngineModel, PrefillItem};
+use crate::gateway::baseline::StaleQueueScheduler;
+use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
+use crate::gateway::sse::SseRegistry;
+use crate::metrics::{Outcome, ServingReport};
+use crate::network::rdma::RdmaModel;
+use crate::network::route;
+use crate::sim::EventQueue;
+use crate::util::config::{EngineConfig, ServingConfig};
+use crate::util::prng::Rng;
+use crate::util::stats::Welford;
+use crate::workload::{Request, Scenario};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Prior work: immediate assignment into local queues via stale
+    /// pending-token reports.
+    BaselineQueue,
+    /// P/D-Serve: queue-free prefill, accept/reject, gateway retries.
+    OnDemand,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferDiscipline {
+    /// Per-block transfers with control round-trips (vLLM-style).
+    Blocked,
+    /// Contiguous buffer + RecvScatter (P/D-Serve).
+    Contiguous,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum WorkloadKind {
+    Open { rps: f64, duration_ms: f64 },
+    Closed { concurrency: usize, requests: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_p: usize,
+    pub n_d: usize,
+    pub engine: EngineConfig,
+    pub rdma: RdmaModel,
+    pub serving: ServingConfig,
+    pub policy: Policy,
+    pub transfer: TransferDiscipline,
+    /// Path-diversity spraying for sub-transfers (vs plain ECMP).
+    pub spray: bool,
+    pub scenarios: Vec<Scenario>,
+    /// Restrict traffic to one scenario (fine-grained group sims).
+    pub only_scenario: Option<usize>,
+    pub workload: WorkloadKind,
+    pub seed: u64,
+    /// Full-model KVCache bytes per token (all layers, K+V).
+    pub kv_bytes_per_token: usize,
+    /// Devices per instance: sub-transfer fan-out and per-device share.
+    pub devices_per_instance: usize,
+    /// Spines available between the P and D racks.
+    pub n_spines: usize,
+    /// PageAttention block size in tokens (Blocked discipline).
+    pub block_tokens: usize,
+    /// Per-prefill-instance HBM budget for prefix-aware KVCaches (bytes).
+    pub prefix_budget_bytes: usize,
+    /// Small window to let a batch fill before prefill launches (ms).
+    pub batch_window_ms: f64,
+    /// Whether the baseline scheduler books tokens locally between the
+    /// periodic reports (the paper's baseline does not — it herds).
+    pub baseline_books: bool,
+    /// Baseline selection signal: least-SSE connections (the paper's
+    /// "original version", live but lifecycle-polluted) vs stale
+    /// pending-token reports (the Fig. 3a estimator).
+    pub baseline_least_sse: bool,
+    /// Arrival burst size (multiple gateways + user-population traffic
+    /// deliver requests in clumps, not a smooth Poisson stream).
+    pub burst: usize,
+    /// Number of gateways. Each maintains only its *own* SSE connections
+    /// (the paper: "there are multiple gateways in a cluster"), so each
+    /// baseline gateway balances on a partial view; on-demand recovers
+    /// from the same partial view through accept/reject probing.
+    pub n_gateways: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_p: 4,
+            n_d: 4,
+            engine: EngineConfig::default(),
+            rdma: RdmaModel::default(),
+            serving: ServingConfig::default(),
+            policy: Policy::OnDemand,
+            transfer: TransferDiscipline::Contiguous,
+            spray: true,
+            scenarios: crate::workload::standard_scenarios(),
+            only_scenario: None,
+            workload: WorkloadKind::Closed { concurrency: 32, requests: 400 },
+            seed: 0x5EED,
+            kv_bytes_per_token: 800 * 1024, // ~13B-class fp16
+            devices_per_instance: 8,
+            n_spines: 8,
+            block_tokens: 16,
+            prefix_budget_bytes: 12 << 30, // 12 GB of HBM for prefixes
+            batch_window_ms: 6.0,
+            baseline_books: false,
+            baseline_least_sse: true,
+            burst: 4,
+            n_gateways: 4,
+        }
+    }
+}
+
+/// Aggregate output + auxiliary series.
+#[derive(Debug)]
+pub struct SimOutput {
+    pub report: ServingReport,
+    /// Mean achieved D2D utilization over all transfers.
+    pub xfer_utilization: f64,
+    /// Observed prefix hit rate at prefills.
+    pub prefix_hit_rate: f64,
+    /// Fraction of wall time each prefill spent computing.
+    pub prefill_busy_frac: Vec<f64>,
+    /// Gateway retry rounds per accepted request (on-demand only).
+    pub retries_per_accept: f64,
+    /// Transfer time samples (ms) for variance studies.
+    pub xfer_samples: Vec<f64>,
+    /// Per-scenario (completed, timed_out) counts.
+    pub per_scenario: Vec<(usize, usize)>,
+    /// Per-scenario TTFT means (ms) over completed requests.
+    pub per_scenario_ttft: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// Internal state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReqPhase {
+    AtGateway,
+    Accepted(usize),
+    InBatch(usize),
+    AwaitTransfer(usize),
+    Transferring(usize),
+    Decoding(usize),
+    Finished,
+}
+
+struct ReqState {
+    req: Request,
+    deadline_ms: f64,
+    phase: ReqPhase,
+    cached_len: usize,
+    ttft_ms: f64,
+    xfer_ms: f64,
+    entrance: usize,
+    /// Owning gateway (fixed at arrival).
+    gw: usize,
+    /// Tokens still to generate once decoding.
+    remaining: usize,
+}
+
+/// Per-prefill-instance simulated state.
+struct PState {
+    busy: bool,
+    /// Accepted, waiting for the batch window (on-demand path).
+    accepted: Vec<u64>,
+    /// Local queue (baseline path).
+    queue: VecDeque<u64>,
+    /// Requests whose KVCache sits in a send buffer (slot held).
+    awaiting: usize,
+    busy_ms: f64,
+    window_open: bool,
+    prefix: SimPrefixCache,
+}
+
+/// Per-decode-instance simulated state.
+struct DState {
+    active: Vec<u64>,
+    retrieval: VecDeque<u64>,
+    /// Transfers in flight toward this instance.
+    reserved: usize,
+    iter_scheduled: bool,
+}
+
+/// Prefix-aware KVCache at simulation granularity: keyed by
+/// (scenario, prefix_id) with byte accounting + LRU.
+struct SimPrefixCache {
+    entries: BTreeMap<(usize, usize), (u64, usize)>, // key -> (last_used, bytes)
+    used: usize,
+    budget: usize,
+    tick: u64,
+    hits: u64,
+    lookups: u64,
+}
+
+impl SimPrefixCache {
+    fn new(budget: usize) -> Self {
+        SimPrefixCache { entries: BTreeMap::new(), used: 0, budget, tick: 0, hits: 0, lookups: 0 }
+    }
+
+    /// Non-mutating hit probe (the prefill knows its own cache contents —
+    /// this is exactly the knowledge the remote scheduler *lacks*).
+    fn peek(&self, key: (usize, usize)) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Returns true on hit; on miss inserts (computing the prefix warms it).
+    fn lookup_or_insert(&mut self, key: (usize, usize), bytes: usize) -> bool {
+        self.tick += 1;
+        self.lookups += 1;
+        if let Some((last, _)) = self.entries.get_mut(&key) {
+            *last = self.tick;
+            self.hits += 1;
+            return true;
+        }
+        if bytes <= self.budget {
+            while self.used + bytes > self.budget {
+                let lru = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, (last, _))| *last)
+                    .map(|(k, _)| *k)
+                    .expect("over budget with empty cache");
+                let (_, b) = self.entries.remove(&lru).unwrap();
+                self.used -= b;
+            }
+            self.entries.insert(key, (self.tick, bytes));
+            self.used += bytes;
+        }
+        false
+    }
+
+    fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Arrival(u64),
+    GatewayRetry,
+    ReportTick,
+    PrefillLaunch(usize),
+    PrefillDone(usize),
+    TransferDone(u64),
+    DecodeIter(usize),
+}
+
+pub struct Simulation {
+    cfg: SimConfig,
+    engine: EngineModel,
+    q: EventQueue<Ev>,
+    reqs: Vec<ReqState>,
+    ps: Vec<PState>,
+    ds: Vec<DState>,
+    /// One SSE registry per gateway — each sees only its own connections.
+    gw_sse: Vec<SseRegistry>,
+    forwarder: OnDemandForwarder,
+    baseline: StaleQueueScheduler,
+    pending: VecDeque<u64>, // gateway-held (on-demand)
+    batches: BTreeMap<usize, Vec<u64>>, // running prefill batches
+    spine_load: Vec<usize>,
+    /// Spine slots held by in-flight transfers, released on TransferDone.
+    inflight_assignments: Vec<(u64, Vec<usize>)>,
+    rng: Rng,
+    report: ServingReport,
+    util: Welford,
+    xfer_samples: Vec<f64>,
+    retries: u64,
+    accepts: u64,
+    injected: usize,
+    finished: usize,
+    per_scenario: Vec<(usize, usize)>,
+    per_scenario_ttft: Vec<(f64, usize)>, // (sum, count)
+    closed_gen: Option<crate::workload::ClosedLoopGen>,
+    open_done_injecting: bool,
+    retry_tick_scheduled: bool,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig) -> Self {
+        let engine = EngineModel::new(cfg.engine.clone());
+        let ps = (0..cfg.n_p)
+            .map(|_| PState {
+                busy: false,
+                accepted: Vec::new(),
+                queue: VecDeque::new(),
+                awaiting: 0,
+                busy_ms: 0.0,
+                window_open: false,
+                prefix: SimPrefixCache::new(cfg.prefix_budget_bytes),
+            })
+            .collect();
+        let ds = (0..cfg.n_d)
+            .map(|_| DState {
+                active: Vec::new(),
+                retrieval: VecDeque::new(),
+                reserved: 0,
+                iter_scheduled: false,
+            })
+            .collect();
+        let gw_sse: Vec<SseRegistry> = (0..cfg.n_gateways.max(1))
+            .map(|_| SseRegistry::new(0..cfg.n_p as u32))
+            .collect();
+        let forwarder = OnDemandForwarder::new(
+            cfg.serving.retry_candidates,
+            cfg.serving.retry_interval_ms,
+        );
+        let baseline = StaleQueueScheduler::new(cfg.n_p, cfg.serving.report_period_ms);
+        let report = ServingReport::new(cfg.n_p, cfg.n_d);
+        let rng = Rng::new(cfg.seed ^ 0xABCD);
+        let spine_load = vec![0usize; cfg.n_spines];
+        Simulation {
+            engine,
+            q: EventQueue::new(),
+            reqs: Vec::new(),
+            ps,
+            ds,
+            gw_sse,
+            forwarder,
+            baseline,
+            pending: VecDeque::new(),
+            batches: BTreeMap::new(),
+            spine_load,
+            inflight_assignments: Vec::new(),
+            rng,
+            report,
+            util: Welford::new(),
+            xfer_samples: Vec::new(),
+            retries: 0,
+            accepts: 0,
+            injected: 0,
+            finished: 0,
+            per_scenario: vec![(0, 0); cfg.scenarios.len()],
+            per_scenario_ttft: vec![(0.0, 0); cfg.scenarios.len()],
+            closed_gen: None,
+            open_done_injecting: false,
+            retry_tick_scheduled: false,
+            cfg,
+        }
+    }
+
+    pub fn run(cfg: SimConfig) -> SimOutput {
+        let mut sim = Simulation::new(cfg);
+        sim.prime();
+        sim.event_loop();
+        sim.finish()
+    }
+
+    fn prime(&mut self) {
+        match self.cfg.workload {
+            WorkloadKind::Open { rps, duration_ms } => {
+                let mut g = crate::workload::OpenLoopGen::new(
+                    self.cfg.scenarios.clone(),
+                    self.cfg.seed,
+                );
+                if let Some(s) = self.cfg.only_scenario {
+                    g = g.only_scenario(s);
+                }
+                // Bursty arrivals: Poisson-spaced clumps of `burst`
+                // requests (several gateways deliver concurrently).
+                let burst = self.cfg.burst.max(1);
+                let clumps = g.window(rps / burst as f64, duration_ms);
+                for clump in &clumps {
+                    let clump_at = clump.arrival_ms;
+                    // The clump head plus (burst - 1) fresh samples.
+                    let mut members = vec![clump.clone()];
+                    for _ in 1..burst {
+                        members.push(g.sample_at(clump_at));
+                    }
+                    for r in members {
+                        let id = self.add_request(r);
+                        self.q.push(clump_at, Ev::Arrival(id));
+                        self.injected += 1;
+                    }
+                }
+                self.open_done_injecting = true;
+            }
+            WorkloadKind::Closed { concurrency, requests } => {
+                let mut g = crate::workload::ClosedLoopGen::new(
+                    self.cfg.scenarios.clone(),
+                    concurrency,
+                    self.cfg.seed,
+                );
+                if let Some(s) = self.cfg.only_scenario {
+                    g = g.only_scenario(s);
+                }
+                for _ in 0..concurrency.min(requests) {
+                    let r = g.next_request(0.0);
+                    let id = self.add_request(r);
+                    self.q.push(0.0, Ev::Arrival(id));
+                    self.injected += 1;
+                }
+                self.closed_gen = Some(g);
+            }
+        }
+        if self.cfg.policy == Policy::BaselineQueue {
+            self.q.push(0.0, Ev::ReportTick);
+        }
+    }
+
+    fn add_request(&mut self, req: Request) -> u64 {
+        let deadline = req.arrival_ms
+            + self.cfg.serving.ttft_threshold_ms(req.prompt_len);
+        let id = self.reqs.len() as u64;
+        let remaining = req.gen_len;
+        self.reqs.push(ReqState {
+            req,
+            deadline_ms: deadline,
+            phase: ReqPhase::AtGateway,
+            cached_len: 0,
+            ttft_ms: 0.0,
+            xfer_ms: 0.0,
+            entrance: usize::MAX,
+            gw: id as usize % self.gw_sse.len(),
+            remaining,
+        });
+        id
+    }
+
+    // -- event loop ---------------------------------------------------------
+
+    fn event_loop(&mut self) {
+        let hard_cap = 100_000_000u64;
+        while let Some((_, ev)) = self.q.pop() {
+            match ev {
+                Ev::Arrival(id) => self.on_arrival(id),
+                Ev::GatewayRetry => {
+                    self.retry_tick_scheduled = false;
+                    self.gateway_round();
+                }
+                Ev::ReportTick => self.on_report_tick(),
+                Ev::PrefillLaunch(p) => self.on_prefill_launch(p),
+                Ev::PrefillDone(p) => self.on_prefill_done(p),
+                Ev::TransferDone(id) => self.on_transfer_done(id),
+                Ev::DecodeIter(d) => self.on_decode_iter(d),
+            }
+            if self.q.processed() > hard_cap {
+                panic!("simulation runaway: {} events", self.q.processed());
+            }
+            if self.done() {
+                break;
+            }
+        }
+        self.report.duration_ms = self.q.now();
+    }
+
+    fn done(&self) -> bool {
+        match self.cfg.workload {
+            WorkloadKind::Open { .. } => {
+                self.open_done_injecting && self.finished == self.injected
+            }
+            WorkloadKind::Closed { requests, .. } => self.finished >= requests,
+        }
+    }
+
+    // -- gateway ------------------------------------------------------------
+
+    fn on_arrival(&mut self, id: u64) {
+        match self.cfg.policy {
+            Policy::OnDemand => {
+                self.pending.push_back(id);
+                self.gateway_round();
+            }
+            Policy::BaselineQueue => {
+                let tokens = self.reqs[id as usize].req.prompt_len;
+                let p = if self.cfg.baseline_least_sse {
+                    // "The original version uses the local queue in prefill,
+                    // and the gateway chooses the one with minimum SSE
+                    // connections" — live signal, but it counts the entire
+                    // LLM lifecycle (decode included), so it cannot tell an
+                    // idle prefill from a busy one.
+                    let gw = self.reqs[id as usize].gw;
+                    let salt = self.rng.next_u64();
+                    self.gw_sse[gw].by_least_loaded_salted(salt)[0] as usize
+                } else {
+                    self.baseline.pick_shortest(tokens, self.cfg.baseline_books)
+                };
+                if self.ps[p].queue.len() >= self.cfg.serving.local_queue_cap {
+                    // Queue overflow: terminated immediately.
+                    self.finish_timeout(id);
+                    return;
+                }
+                self.reqs[id as usize].entrance = p;
+                let gw = self.reqs[id as usize].gw;
+                self.gw_sse[gw].open(p as u32);
+                self.ps[p].queue.push_back(id);
+                self.reqs[id as usize].phase = ReqPhase::Accepted(p);
+                self.try_open_window(p);
+            }
+        }
+    }
+
+    /// One on-demand probing round over the gateway's pending list.
+    fn gateway_round(&mut self) {
+        let now = self.q.now();
+        let mut still_pending = VecDeque::new();
+        while let Some(id) = self.pending.pop_front() {
+            let deadline = self.reqs[id as usize].deadline_ms;
+            let gw = self.reqs[id as usize].gw;
+            let decision = if now >= deadline {
+                ForwardDecision::Timeout
+            } else {
+                // Inline least-SSE probing with the prefill-side accept
+                // check: an instance accepts only when it is idle AND the
+                // batch it would form still meets everyone's TTFT
+                // threshold (the prefill knows its own cache + engine —
+                // exactly the knowledge a remote estimator lacks).
+                let salt = self.rng.next_u64();
+                let order = self.gw_sse[gw].by_least_loaded_salted(salt);
+                let mut got = None;
+                for e in order.into_iter().take(self.forwarder.retry_candidates) {
+                    if self.prefill_accepts(e as usize, id, now) {
+                        got = Some(e);
+                        break;
+                    }
+                }
+                match got {
+                    Some(e) => ForwardDecision::Accept(e),
+                    None => ForwardDecision::RetryLater,
+                }
+            };
+            match decision {
+                ForwardDecision::Accept(e) => {
+                    let p = e as usize;
+                    self.accepts += 1;
+                    self.reqs[id as usize].entrance = p;
+                    self.reqs[id as usize].phase = ReqPhase::Accepted(p);
+                    self.gw_sse[gw].open(e);
+                    self.ps[p].accepted.push(id);
+                    self.try_open_window(p);
+                }
+                ForwardDecision::RetryLater => {
+                    self.retries += 1;
+                    still_pending.push_back(id);
+                }
+                ForwardDecision::Timeout => {
+                    self.finish_timeout(id);
+                }
+            }
+        }
+        self.pending = still_pending;
+        if !self.pending.is_empty() && !self.retry_tick_scheduled {
+            self.retry_tick_scheduled = true;
+            self.q
+                .push_after(self.cfg.serving.retry_interval_ms, Ev::GatewayRetry);
+        }
+    }
+
+    /// The prefill-side accept/reject: idle, has capacity, and adding this
+    /// request keeps the predicted batch TTFT within every member's
+    /// threshold.
+    fn prefill_accepts(&self, p: usize, id: u64, now: f64) -> bool {
+        let st = &self.ps[p];
+        let bp = self.cfg.serving.prefill_batch;
+        if st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
+            return false;
+        }
+        if st.accepted.is_empty() {
+            return true; // gets its own batch; pre/post checks still apply
+        }
+        let mut items = Vec::with_capacity(st.accepted.len() + 1);
+        let mut min_slack = f64::INFINITY;
+        for &aid in st.accepted.iter().chain(std::iter::once(&id)) {
+            let r = &self.reqs[aid as usize];
+            let hit = st.prefix.peek((r.req.scenario, r.req.prefix_id));
+            items.push(PrefillItem {
+                prompt_len: r.req.prompt_len,
+                cached_len: if hit { r.req.prefix_len } else { 0 },
+            });
+            min_slack = min_slack.min((r.deadline_ms - now).max(0.0));
+        }
+        self.engine.prefill_batch_ms(&items) <= min_slack * 0.95
+    }
+
+    fn on_report_tick(&mut self) {
+        let now = self.q.now();
+        for i in 0..self.ps.len() {
+            let pending: usize = self.ps[i]
+                .queue
+                .iter()
+                .map(|&id| self.reqs[id as usize].req.prompt_len)
+                .sum::<usize>()
+                + self
+                    .batches
+                    .get(&i)
+                    .map(|b| {
+                        b.iter()
+                            .map(|&id| self.reqs[id as usize].req.prompt_len)
+                            .sum()
+                    })
+                    .unwrap_or(0);
+            self.baseline.maybe_report(i, pending, now);
+        }
+        if !self.done() {
+            self.q
+                .push_after(self.cfg.serving.report_period_ms, Ev::ReportTick);
+        }
+    }
+
+    // -- prefill ------------------------------------------------------------
+
+    fn try_open_window(&mut self, p: usize) {
+        let st = &mut self.ps[p];
+        if st.busy || st.window_open {
+            return;
+        }
+        let has_work = !st.accepted.is_empty() || !st.queue.is_empty();
+        if has_work {
+            st.window_open = true;
+            self.q.push_after(self.cfg.batch_window_ms, Ev::PrefillLaunch(p));
+        }
+    }
+
+    fn on_prefill_launch(&mut self, p: usize) {
+        let now = self.q.now();
+        self.ps[p].window_open = false;
+        if self.ps[p].busy {
+            return;
+        }
+        // Adaptive batch formation (paper §2.2.2: "more prompts can be
+        // treated simultaneously in a single batch, as long as the TTFT
+        // does not exceed a given threshold"). The prefill *does* know its
+        // own prefix-cache contents, so its prediction is accurate — unlike
+        // the remote scheduler's pending-token estimate.
+        let bp = self.cfg.serving.prefill_batch;
+        let mut batch: Vec<u64> = Vec::new();
+        let mut items: Vec<PrefillItem> = Vec::new();
+        let mut min_slack = f64::INFINITY;
+        loop {
+            if batch.len() >= bp {
+                break;
+            }
+            // Next candidate from the policy's source.
+            let cand = match self.cfg.policy {
+                Policy::OnDemand => self.ps[p].accepted.first().copied(),
+                Policy::BaselineQueue => self.ps[p].queue.front().copied(),
+            };
+            let Some(id) = cand else { break };
+            // Pre-execution timeout check (both policies).
+            if now > self.reqs[id as usize].deadline_ms {
+                self.pop_candidate(p, id);
+                let gw = self.reqs[id as usize].gw;
+                self.gw_sse[gw].close(p as u32);
+                self.finish_timeout(id);
+                continue;
+            }
+            let (scenario, prefix_id, prefix_len, prompt_len) = {
+                let r = &self.reqs[id as usize].req;
+                (r.scenario, r.prefix_id, r.prefix_len, r.prompt_len)
+            };
+            let hit = self.ps[p].prefix.peek((scenario, prefix_id));
+            let cached = if hit { prefix_len } else { 0 };
+            let cand_item = PrefillItem { prompt_len, cached_len: cached };
+            let mut trial = items.clone();
+            trial.push(cand_item);
+            let predicted = self.engine.prefill_batch_ms(&trial);
+            let slack = (self.reqs[id as usize].deadline_ms - now).max(0.0);
+            let new_min_slack = min_slack.min(slack);
+            if predicted > new_min_slack * 0.95 && !batch.is_empty() {
+                // Adding this prompt would push someone past their TTFT
+                // threshold; launch what we have, candidate stays.
+                break;
+            }
+            // Accept into the batch (warms the prefix cache).
+            self.pop_candidate(p, id);
+            let bytes = prefix_len * self.cfg.kv_bytes_per_token;
+            let hit2 = self.ps[p]
+                .prefix
+                .lookup_or_insert((scenario, prefix_id), bytes);
+            debug_assert_eq!(hit, hit2);
+            self.reqs[id as usize].cached_len = cached;
+            self.reqs[id as usize].phase = ReqPhase::InBatch(p);
+            items = trial;
+            batch.push(id);
+            min_slack = new_min_slack;
+        }
+        if batch.is_empty() {
+            self.try_open_window(p);
+            return;
+        }
+        let dur = self.engine.prefill_batch_ms(&items);
+        self.ps[p].busy = true;
+        self.ps[p].busy_ms += dur;
+        self.batches.insert(p, batch);
+        self.q.push_after(dur, Ev::PrefillDone(p));
+    }
+
+    /// Remove `id` from instance `p`'s admission source (front element).
+    fn pop_candidate(&mut self, p: usize, id: u64) {
+        match self.cfg.policy {
+            Policy::OnDemand => {
+                debug_assert_eq!(self.ps[p].accepted.first(), Some(&id));
+                self.ps[p].accepted.remove(0);
+            }
+            Policy::BaselineQueue => {
+                debug_assert_eq!(self.ps[p].queue.front(), Some(&id));
+                self.ps[p].queue.pop_front();
+            }
+        }
+    }
+
+    fn on_prefill_done(&mut self, p: usize) {
+        let now = self.q.now();
+        let batch = self.batches.remove(&p).unwrap_or_default();
+        self.ps[p].busy = false;
+        for id in batch {
+            let r = &mut self.reqs[id as usize];
+            r.ttft_ms = now - r.req.arrival_ms;
+            // Post-execution timeout check (Fig. 14b: "the timeout check is
+            // conducted before and after the prefill inference").
+            if now > r.deadline_ms {
+                let gw = r.gw;
+                self.gw_sse[gw].close(p as u32);
+                self.finish_timeout(id);
+                continue;
+            }
+            r.phase = ReqPhase::AwaitTransfer(p);
+            self.ps[p].awaiting += 1;
+            self.try_start_transfer(id);
+        }
+        // More work may be waiting.
+        self.try_open_window(p);
+        if self.cfg.policy == Policy::OnDemand && !self.pending.is_empty() {
+            self.gateway_round();
+        }
+    }
+
+    // -- transfer -----------------------------------------------------------
+
+    fn try_start_transfer(&mut self, id: u64) {
+        let ReqPhase::AwaitTransfer(p) = self.reqs[id as usize].phase else {
+            return;
+        };
+        // Pick the decode with the most headroom (slots + retrieval space).
+        let bd = self.cfg.serving.decode_batch;
+        let rq_cap = self.cfg.serving.retrieval_queue;
+        let mut best: Option<(usize, usize)> = None; // (load, idx)
+        for (i, d) in self.ds.iter().enumerate() {
+            let commit = d.active.len() + d.reserved + d.retrieval.len();
+            if commit < bd + rq_cap {
+                let load = commit;
+                if best.map(|(l, _)| load < l).unwrap_or(true) {
+                    best = Some((load, i));
+                }
+            }
+        }
+        let Some((_, d)) = best else {
+            // All decodes saturated: the request keeps holding its prefill
+            // slot; a decode completion will retry.
+            return;
+        };
+        // Transfer timing: sub-transfers across devices, spine conflicts.
+        let bytes_total =
+            self.reqs[id as usize].req.prompt_len * self.cfg.kv_bytes_per_token;
+        let per_dev = bytes_total / self.cfg.devices_per_instance.max(1);
+        let move_id = self.rng.next_u64();
+        let assignment = if self.cfg.spray {
+            route::assign_sprayed(move_id, self.cfg.devices_per_instance, self.cfg.n_spines)
+        } else {
+            route::assign_ecmp(0, 1, move_id, self.cfg.devices_per_instance, self.cfg.n_spines)
+        };
+        // Sharers: worst overlap with transfers already in flight.
+        let mut max_sharers = 1usize;
+        for &s in &assignment {
+            self.spine_load[s] += 1;
+            max_sharers = max_sharers.max(self.spine_load[s]);
+        }
+        let block_bytes = self.cfg.block_tokens * self.cfg.kv_bytes_per_token
+            / self.cfg.devices_per_instance.max(1);
+        let dur = match self.cfg.transfer {
+            TransferDiscipline::Contiguous => {
+                self.cfg.rdma.contiguous_ms(per_dev, 3, max_sharers)
+            }
+            TransferDiscipline::Blocked => {
+                self.cfg.rdma.blocked_ms(per_dev, block_bytes.max(1), 3, max_sharers)
+            }
+        };
+        let ideal = self.cfg.rdma.wire_us(per_dev) / 1e3;
+        self.util.add((ideal / dur).min(1.0));
+        self.xfer_samples.push(dur);
+        let r = &mut self.reqs[id as usize];
+        r.xfer_ms = dur;
+        r.phase = ReqPhase::Transferring(d);
+        self.ds[d].reserved += 1;
+        self.ps[p].awaiting -= 1;
+        // Remember spine slots to release: encode in a side map via event
+        // payload — we release at TransferDone by re-deriving assignment
+        // deterministically from move_id.
+        self.inflight_assignments.push((id, assignment));
+        self.q.push_after(dur, Ev::TransferDone(id));
+    }
+
+    fn on_transfer_done(&mut self, id: u64) {
+        // Release spine load.
+        if let Some(pos) = self
+            .inflight_assignments
+            .iter()
+            .position(|(rid, _)| *rid == id)
+        {
+            let (_, assignment) = self.inflight_assignments.swap_remove(pos);
+            for s in assignment {
+                self.spine_load[s] = self.spine_load[s].saturating_sub(1);
+            }
+        }
+        let ReqPhase::Transferring(d) = self.reqs[id as usize].phase else {
+            return;
+        };
+        self.ds[d].reserved -= 1;
+        let bd = self.cfg.serving.decode_batch;
+        if self.ds[d].active.len() < bd {
+            self.ds[d].active.push(id);
+            self.reqs[id as usize].phase = ReqPhase::Decoding(d);
+            self.schedule_decode_iter(d);
+        } else {
+            self.ds[d].retrieval.push_back(id);
+            self.reqs[id as usize].phase = ReqPhase::Decoding(d);
+        }
+    }
+
+    // -- decode -------------------------------------------------------------
+
+    fn schedule_decode_iter(&mut self, d: usize) {
+        if self.ds[d].iter_scheduled || self.ds[d].active.is_empty() {
+            return;
+        }
+        let ctx: Vec<usize> = self.ds[d]
+            .active
+            .iter()
+            .map(|&id| {
+                let r = &self.reqs[id as usize].req;
+                r.prompt_len + r.gen_len / 2
+            })
+            .collect();
+        let dur = self.engine.decode_iter_ms(&ctx);
+        self.ds[d].iter_scheduled = true;
+        self.q.push_after(dur, Ev::DecodeIter(d));
+    }
+
+    fn on_decode_iter(&mut self, d: usize) {
+        let now = self.q.now();
+        self.ds[d].iter_scheduled = false;
+        // Each active request generated one token this iteration.
+        let active = self.ds[d].active.clone();
+        let mut completed = Vec::new();
+        for id in active {
+            let r = &mut self.reqs[id as usize];
+            r.remaining = r.remaining.saturating_sub(1);
+            if r.remaining == 0 {
+                completed.push(id);
+            }
+        }
+        for id in completed {
+            self.ds[d].active.retain(|&x| x != id);
+            let r = &mut self.reqs[id as usize];
+            r.phase = ReqPhase::Finished;
+            let entrance = r.entrance;
+            let outcome = Outcome::Completed {
+                ttft_ms: r.ttft_ms,
+                e2e_ms: now - r.req.arrival_ms,
+                xfer_ms: r.xfer_ms,
+                gen_tokens: r.req.gen_len,
+            };
+            if entrance != usize::MAX {
+                let gw = self.reqs[id as usize].gw;
+                self.gw_sse[gw].close(entrance as u32);
+            }
+            let sc = self.reqs[id as usize].req.scenario;
+            self.per_scenario[sc].0 += 1;
+            self.per_scenario_ttft[sc].0 += self.reqs[id as usize].ttft_ms;
+            self.per_scenario_ttft[sc].1 += 1;
+            self.report.record(&outcome);
+            self.finished += 1;
+            self.inject_replacement(now);
+            // Asynchronous retrieval: a completed request triggers the next
+            // pull from the bounded queue.
+            if let Some(nid) = self.ds[d].retrieval.pop_front() {
+                self.ds[d].active.push(nid);
+            }
+        }
+        // Saturated decodes freed slots: requests parked in prefill retry.
+        let parked: Vec<u64> = self
+            .reqs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| matches!(r.phase, ReqPhase::AwaitTransfer(_)))
+            .map(|(i, _)| i as u64)
+            .collect();
+        for id in parked {
+            self.try_start_transfer(id);
+        }
+        self.schedule_decode_iter(d);
+    }
+
+    fn inject_replacement(&mut self, now: f64) {
+        if let Some(g) = &mut self.closed_gen {
+            if let WorkloadKind::Closed { requests, .. } = self.cfg.workload {
+                if self.injected < requests {
+                    let r = g.next_request(now);
+                    let id = self.add_request(r);
+                    self.injected += 1;
+                    self.q.push(now, Ev::Arrival(id));
+                }
+            }
+        }
+    }
+
+    fn finish_timeout(&mut self, id: u64) {
+        let now = self.q.now();
+        let r = &mut self.reqs[id as usize];
+        r.phase = ReqPhase::Finished;
+        let sc = r.req.scenario;
+        self.per_scenario[sc].1 += 1;
+        self.report.record(&Outcome::TimedOut {
+            waited_ms: now - r.req.arrival_ms,
+        });
+        self.finished += 1;
+        self.inject_replacement(now);
+    }
+
+    fn finish(mut self) -> SimOutput {
+        let total_busy: Vec<f64> = self
+            .ps
+            .iter()
+            .map(|p| {
+                if self.report.duration_ms > 0.0 {
+                    p.busy_ms / self.report.duration_ms
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let hits: f64 = {
+            let (h, l) = self.ps.iter().fold((0u64, 0u64), |(h, l), p| {
+                (h + p.prefix.hits, l + p.prefix.lookups)
+            });
+            debug_assert!(self
+                .ps
+                .iter()
+                .all(|p| (0.0..=1.0).contains(&p.prefix.hit_rate())));
+            if l == 0 { 0.0 } else { h as f64 / l as f64 }
+        };
+        SimOutput {
+            xfer_utilization: self.util.mean(),
+            prefix_hit_rate: hits,
+            prefill_busy_frac: total_busy,
+            retries_per_accept: if self.accepts == 0 {
+                0.0
+            } else {
+                self.retries as f64 / self.accepts as f64
+            },
+            xfer_samples: std::mem::take(&mut self.xfer_samples),
+            per_scenario: std::mem::take(&mut self.per_scenario),
+            per_scenario_ttft: self
+                .per_scenario_ttft
+                .iter()
+                .map(|&(sum, n)| if n == 0 { 0.0 } else { sum / n as f64 })
+                .collect(),
+            report: self.report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        SimConfig {
+            n_p: 3,
+            n_d: 3,
+            only_scenario: Some(0), // scene1: long prompts, few tokens out
+            workload: WorkloadKind::Closed { concurrency: 12, requests: 120 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn closed_loop_conserves_requests() {
+        let out = Simulation::run(small_cfg());
+        assert_eq!(out.report.total(), 120, "every request accounted for");
+        assert!(out.report.duration_ms > 0.0);
+        assert!(out.report.completed > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = Simulation::run(small_cfg());
+        let b = Simulation::run(small_cfg());
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.report.timed_out, b.report.timed_out);
+        assert!((a.report.duration_ms - b.report.duration_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefix_cache_warms_within_scenario() {
+        // Fine-grained organization: one scenario per group -> the prefix
+        // pool fits and the hit rate climbs well above zero.
+        let out = Simulation::run(small_cfg());
+        assert!(
+            out.prefix_hit_rate > 0.5,
+            "hit rate {} too low for single-scenario group",
+            out.prefix_hit_rate
+        );
+    }
+
+    #[test]
+    fn open_loop_times_out_under_overload() {
+        // Far more traffic than 1 prefill can carry: the baseline local
+        // queues must start breaking timeouts.
+        let cfg = SimConfig {
+            n_p: 1,
+            n_d: 1,
+            policy: Policy::BaselineQueue,
+            only_scenario: Some(0),
+            workload: WorkloadKind::Open { rps: 40.0, duration_ms: 20_000.0 },
+            ..Default::default()
+        };
+        let out = Simulation::run(cfg);
+        assert!(out.report.timed_out > 0, "overload must produce timeouts");
+        assert!(out.report.success_rate() < 0.9);
+    }
+
+    #[test]
+    fn on_demand_beats_baseline_under_heavy_load() {
+        // Fig. 14a's direction: with heterogeneous prompts (the paper's
+        // 8k-behind-2k head-of-line example), on-demand forwarding
+        // sustains a clearly higher success rate than queued baseline.
+        let sc = crate::workload::Scenario {
+            name: "fig14a-test",
+            service: "svc",
+            prompt_mean: 2500.0,
+            prompt_cv: 0.9,
+            n_prefixes: 8,
+            prefix_frac: 0.5,
+            gen_mean: 60.0,
+            gen_cv: 0.5,
+            weight: 1.0,
+        };
+        let mk = |policy| SimConfig {
+            n_p: 6,
+            n_d: 3,
+            policy,
+            scenarios: vec![sc.clone()],
+            only_scenario: Some(0),
+            workload: WorkloadKind::Open { rps: 4.0, duration_ms: 60_000.0 },
+            ..Default::default()
+        };
+        let base = Simulation::run(mk(Policy::BaselineQueue));
+        let ond = Simulation::run(mk(Policy::OnDemand));
+        assert!(
+            ond.report.success_rate() > base.report.success_rate() + 0.05,
+            "on-demand {} vs baseline {}",
+            ond.report.success_rate(),
+            base.report.success_rate()
+        );
+        assert!(ond.report.success_rate() > 0.95);
+    }
+
+    #[test]
+    fn contiguous_transfer_faster_than_blocked() {
+        let mk = |transfer| SimConfig {
+            transfer,
+            only_scenario: Some(1), // long prompts -> big KVCaches
+            workload: WorkloadKind::Closed { concurrency: 8, requests: 60 },
+            ..small_cfg()
+        };
+        let mut blocked = Simulation::run(mk(TransferDiscipline::Blocked));
+        let mut contig = Simulation::run(mk(TransferDiscipline::Contiguous));
+        let b = blocked.report.xfer.mean();
+        let c = contig.report.xfer.mean();
+        assert!(c < b, "contiguous {c} ms !< blocked {b} ms");
+        assert!(contig.xfer_utilization > blocked.xfer_utilization);
+        // keep borrow checker quiet about mut (Summary::mean needs &self only)
+        let _ = (blocked.report.xfer.p50(), contig.report.xfer.p50());
+    }
+
+    #[test]
+    fn prop_conservation_across_random_configs() {
+        // Every injected request ends exactly once (completed or timed
+        // out), for random fleet shapes, policies and loads.
+        let cfg = crate::util::prop::Config { cases: 12, ..Default::default() };
+        crate::util::prop::check(
+            "sim-conservation",
+            &cfg,
+            |r| {
+                let n_p = 1 + r.below(6);
+                let n_d = 1 + r.below(6);
+                let policy = if r.chance(0.5) {
+                    Policy::OnDemand
+                } else {
+                    Policy::BaselineQueue
+                };
+                let transfer = if r.chance(0.5) {
+                    TransferDiscipline::Contiguous
+                } else {
+                    TransferDiscipline::Blocked
+                };
+                let closed = r.chance(0.5);
+                let scenario = r.below(6);
+                let seed = r.next_u64();
+                (n_p, n_d, policy, transfer, closed, scenario, seed)
+            },
+            |&(n_p, n_d, policy, transfer, closed, scenario, seed)| {
+                let workload = if closed {
+                    WorkloadKind::Closed { concurrency: 8, requests: 40 }
+                } else {
+                    WorkloadKind::Open { rps: 6.0, duration_ms: 8_000.0 }
+                };
+                let cfg = SimConfig {
+                    n_p,
+                    n_d,
+                    policy,
+                    transfer,
+                    only_scenario: Some(scenario),
+                    workload,
+                    seed,
+                    ..Default::default()
+                };
+                let out = Simulation::run(cfg);
+                let total = out.report.total();
+                let per_sc: usize = out
+                    .per_scenario
+                    .iter()
+                    .map(|(a, b)| a + b)
+                    .sum();
+                if closed && total != 40 {
+                    return Err(format!("closed loop lost requests: {total}"));
+                }
+                if per_sc != total {
+                    return Err(format!(
+                        "per-scenario accounting {per_sc} != total {total}"
+                    ));
+                }
+                if out.report.duration_ms <= 0.0 && total > 0 {
+                    return Err("zero duration with traffic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn retries_occur_only_when_saturated() {
+        // Light load: effectively no retries needed.
+        let cfg = SimConfig {
+            workload: WorkloadKind::Open { rps: 2.0, duration_ms: 20_000.0 },
+            only_scenario: Some(5), // tiny prompts
+            ..small_cfg()
+        };
+        let out = Simulation::run(cfg);
+        assert!(out.retries_per_accept < 1.0, "{}", out.retries_per_accept);
+        assert!(out.report.success_rate() > 0.95);
+    }
+}

@@ -1,0 +1,179 @@
+//! Speculative decoding extension (paper §6.1).
+//!
+//! A small autoregressive draft model proposes K tokens; the large model
+//! verifies them in one batched forward pass and accepts a prefix of them
+//! (distribution-preserving, Leviathan et al.). The paper's deployment
+//! question is *placement*: if the draft is cheap enough it runs on CPU
+//! inside the decode instance; otherwise it is itself disaggregated — its
+//! prefill part co-located with the large model's prefill instance, its
+//! decode part with the large decode instance, "to facilitate different
+//! batch sizes in P/D and less interruption incurred by P/D mixture".
+//!
+//! This module models the decode-side speedup and the placement tradeoff
+//! analytically on top of `cluster::engine`, and is exercised by the
+//! `spec_decode` ablation (`pdserve repro --fig spec`).
+
+use crate::cluster::engine::EngineModel;
+
+/// Where the draft model runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DraftPlacement {
+    /// Draft on host CPU of the decode instance: no xPU contention, but a
+    /// fixed per-token CPU latency that serializes with verification.
+    Cpu { per_token_ms: f64 },
+    /// Draft disaggregated onto the same xPUs (paper's scheme): fast draft
+    /// steps, paying a small interruption share on the large model.
+    Disaggregated {
+        per_token_ms: f64,
+        /// Fraction of large-model throughput lost to sharing (< 1).
+        interference: f64,
+    },
+}
+
+/// Speculative decoding configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Draft length K.
+    pub k: usize,
+    /// Per-token acceptance probability α (i.i.d. approximation).
+    pub alpha: f64,
+    pub placement: DraftPlacement,
+}
+
+impl SpecConfig {
+    /// Expected accepted tokens per verification round:
+    /// E = Σ_{i=1..K} α^i + α^K·(bonus token) ≈ (1-α^{K+1})/(1-α) - 1 + 1.
+    /// We use the standard closed form including the bonus token the
+    /// verifier emits itself.
+    pub fn expected_tokens_per_round(&self) -> f64 {
+        let a = self.alpha.clamp(0.0, 0.9999);
+        let k = self.k as f64;
+        if a < 1e-9 {
+            return 1.0;
+        }
+        // (1 - a^(K+1)) / (1 - a): expected accepted prefix + bonus.
+        (1.0 - a.powf(k + 1.0)) / (1.0 - a)
+    }
+
+    /// Wall time of one speculation round (ms): K draft steps plus one
+    /// large-model verification iteration at batch `bs`.
+    pub fn round_ms(&self, engine: &EngineModel, bs: usize, ctx: usize) -> f64 {
+        let verify_ms = engine.tpot_ms(bs, ctx);
+        match self.placement {
+            DraftPlacement::Cpu { per_token_ms } => {
+                self.k as f64 * per_token_ms + verify_ms
+            }
+            DraftPlacement::Disaggregated { per_token_ms, interference } => {
+                self.k as f64 * per_token_ms
+                    + verify_ms * (1.0 + interference)
+            }
+        }
+    }
+
+    /// Effective TPOT (ms/token) under speculation.
+    pub fn effective_tpot_ms(&self, engine: &EngineModel, bs: usize, ctx: usize) -> f64 {
+        self.round_ms(engine, bs, ctx) / self.expected_tokens_per_round()
+    }
+
+    /// Speedup over plain decoding at the same batch/context.
+    pub fn speedup(&self, engine: &EngineModel, bs: usize, ctx: usize) -> f64 {
+        engine.tpot_ms(bs, ctx) / self.effective_tpot_ms(engine, bs, ctx)
+    }
+}
+
+/// Sweep K for a placement and return (k, speedup) — the ablation series.
+pub fn k_sweep(
+    engine: &EngineModel,
+    alpha: f64,
+    placement: DraftPlacement,
+    bs: usize,
+    ctx: usize,
+    k_max: usize,
+) -> Vec<(usize, f64)> {
+    (1..=k_max)
+        .map(|k| {
+            let cfg = SpecConfig { k, alpha, placement };
+            (k, cfg.speedup(engine, bs, ctx))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> EngineModel {
+        EngineModel::default()
+    }
+
+    // A 1B-class draft on host CPU can easily take tens of ms per token.
+    const CPU_SLOW: DraftPlacement = DraftPlacement::Cpu { per_token_ms: 60.0 };
+    const CPU_FAST: DraftPlacement = DraftPlacement::Cpu { per_token_ms: 2.0 };
+    const DISAGG: DraftPlacement =
+        DraftPlacement::Disaggregated { per_token_ms: 1.2, interference: 0.08 };
+
+    #[test]
+    fn expected_tokens_closed_form() {
+        let c = SpecConfig { k: 4, alpha: 0.0, placement: CPU_FAST };
+        assert!((c.expected_tokens_per_round() - 1.0).abs() < 1e-9);
+        let c = SpecConfig { k: 4, alpha: 0.8, placement: CPU_FAST };
+        // (1 - 0.8^5) / 0.2 = 3.3616
+        assert!((c.expected_tokens_per_round() - 3.3616).abs() < 1e-3);
+        // More K, more expected tokens (diminishing).
+        let e2 = SpecConfig { k: 2, alpha: 0.8, placement: CPU_FAST }
+            .expected_tokens_per_round();
+        let e8 = SpecConfig { k: 8, alpha: 0.8, placement: CPU_FAST }
+            .expected_tokens_per_round();
+        assert!(e8 > e2 && e8 < 5.0);
+    }
+
+    #[test]
+    fn good_draft_speeds_up_decoding() {
+        let e = engine();
+        let c = SpecConfig { k: 4, alpha: 0.8, placement: DISAGG };
+        let s = c.speedup(&e, 16, 725);
+        assert!(s > 1.5, "speedup {s}");
+    }
+
+    #[test]
+    fn slow_cpu_draft_can_lose() {
+        // The paper's condition: "when the inference latency using CPU is
+        // unacceptable, it has to be treated using NPUs".
+        let e = engine();
+        let slow = SpecConfig { k: 4, alpha: 0.8, placement: CPU_SLOW };
+        assert!(slow.speedup(&e, 16, 725) < 1.0, "slow CPU draft must lose");
+        let fast = SpecConfig { k: 4, alpha: 0.8, placement: CPU_FAST };
+        assert!(fast.speedup(&e, 16, 725) > 1.0);
+    }
+
+    #[test]
+    fn disaggregated_beats_slow_cpu_at_same_alpha() {
+        let e = engine();
+        let cpu = SpecConfig { k: 4, alpha: 0.7, placement: CPU_SLOW };
+        let dis = SpecConfig { k: 4, alpha: 0.7, placement: DISAGG };
+        assert!(dis.speedup(&e, 16, 725) > cpu.speedup(&e, 16, 725));
+    }
+
+    #[test]
+    fn k_sweep_has_interior_optimum_for_cpu_draft() {
+        // Draft cost grows linearly in K while acceptance saturates, so
+        // speedup peaks at a finite K.
+        let e = engine();
+        let sweep = k_sweep(&e, 0.75, CPU_FAST, 16, 725, 16);
+        let best = sweep
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(best.0 < 16, "optimum K {} should be interior", best.0);
+        assert!(sweep.last().unwrap().1 < best.1);
+    }
+
+    #[test]
+    fn zero_alpha_never_helps() {
+        let e = engine();
+        for k in [1, 2, 4, 8] {
+            let c = SpecConfig { k, alpha: 0.0, placement: DISAGG };
+            assert!(c.speedup(&e, 16, 725) <= 1.0);
+        }
+    }
+}

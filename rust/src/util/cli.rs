@@ -1,0 +1,120 @@
+//! Tiny declarative CLI parser (the offline stand-in for `clap`).
+//!
+//! Supports `binary <subcommand> --flag value --switch positional...` with
+//! typed accessors, defaults and generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ParsedArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+/// Parse argv (without the program name). A token `--name` followed by a
+/// non-`--` token is a flag with value; a trailing or `--x --y` form makes
+/// `--x` a boolean switch. The first bare token becomes the subcommand if
+/// `expect_subcommand`; the rest are positional.
+pub fn parse(args: &[String], expect_subcommand: bool) -> ParsedArgs {
+    let mut out = ParsedArgs::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.switches.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            if expect_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Parse the current process args.
+pub fn parse_env(expect_subcommand: bool) -> ParsedArgs {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    parse(&args, expect_subcommand)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // NB: `--flag value` binds greedily, so boolean switches must come
+        // before another `--flag` or at the end.
+        let p = parse(
+            &s(&["serve", "extra", "--verbose", "--config", "c.toml"]),
+            true,
+        );
+        assert_eq!(p.subcommand.as_deref(), Some("serve"));
+        assert_eq!(p.get("config"), Some("c.toml"));
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let p = parse(&s(&["--n", "42", "--rate", "1.5"]), false);
+        assert_eq!(p.get_usize("n", 0), 42);
+        assert!((p.get_f64("rate", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(p.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn adjacent_switches() {
+        let p = parse(&s(&["--a", "--b", "--c", "v"]), false);
+        assert!(p.has("a"));
+        assert!(p.has("b"));
+        assert_eq!(p.get("c"), Some("v"));
+    }
+}

@@ -1,0 +1,393 @@
+//! Configuration system: a TOML-subset parser plus the typed configs every
+//! layer consumes (cluster shape, engine perf model, serving policy).
+//!
+//! Grammar supported: `[section]` headers, `key = value` with string,
+//! integer, float, bool and flat array values, `#` comments. This covers
+//! the repo's config files (`configs/*.toml`) without the full TOML spec.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(x) => Some(*x as f64),
+            Value::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(x) if *x >= 0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub type Section = BTreeMap<String, Value>;
+
+/// A parsed config document: section name -> key -> value. Keys before any
+/// `[section]` land in the "" root section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut current = String::new();
+        doc.sections.insert(current.clone(), Section::new());
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", ln + 1))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {}", ln + 1, e))?;
+                doc.sections.get_mut(&current).unwrap().insert(key, val);
+            } else {
+                return Err(format!("line {}: expected key = value", ln + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &str) -> Result<Doc, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Doc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|x| x.strip_suffix('"'))
+            .ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Typed configs
+// ---------------------------------------------------------------------------
+
+/// Shape of the simulated cluster (paper §3.7: regions → racks → nodes →
+/// NPUs, ToR + spine switches, RoCE v2 direct device attachment).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub regions: usize,
+    pub racks_per_region: usize,
+    pub nodes_per_rack: usize,
+    pub devices_per_node: usize,
+    pub hbm_gb: f64,
+    pub tor_uplinks: usize,      // paths from each ToR to the spine layer
+    pub spine_count: usize,
+    pub link_gbps: f64,          // per-device RoCE link
+    pub devices_per_instance: usize,
+    pub kv_block_bytes: usize,   // PageAttention block size
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            regions: 2,
+            racks_per_region: 8,
+            nodes_per_rack: 4,
+            devices_per_node: 8,
+            hbm_gb: 32.0,
+            tor_uplinks: 4,
+            spine_count: 4,
+            link_gbps: 200.0,
+            devices_per_instance: 8,
+            kv_block_bytes: 64 * 1024,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_devices(&self) -> usize {
+        self.regions * self.racks_per_region * self.nodes_per_rack
+            * self.devices_per_node
+    }
+
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = ClusterConfig::default();
+        ClusterConfig {
+            regions: doc.usize_or("cluster", "regions", d.regions),
+            racks_per_region: doc.usize_or("cluster", "racks_per_region", d.racks_per_region),
+            nodes_per_rack: doc.usize_or("cluster", "nodes_per_rack", d.nodes_per_rack),
+            devices_per_node: doc.usize_or("cluster", "devices_per_node", d.devices_per_node),
+            hbm_gb: doc.f64_or("cluster", "hbm_gb", d.hbm_gb),
+            tor_uplinks: doc.usize_or("cluster", "tor_uplinks", d.tor_uplinks),
+            spine_count: doc.usize_or("cluster", "spine_count", d.spine_count),
+            link_gbps: doc.f64_or("cluster", "link_gbps", d.link_gbps),
+            devices_per_instance: doc.usize_or("cluster", "devices_per_instance", d.devices_per_instance),
+            kv_block_bytes: doc.usize_or("cluster", "kv_block_bytes", d.kv_block_bytes),
+        }
+    }
+}
+
+/// Analytic inference-engine perf model constants (see `cluster::engine`).
+/// Times in milliseconds. Calibrated against the real PJRT runtime in
+/// EXPERIMENTS.md §Calibration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Fixed per-batch prefill launch overhead.
+    pub prefill_base_ms: f64,
+    /// Per-token per-batch-row prefill compute cost.
+    pub prefill_per_token_ms: f64,
+    /// Superlinear attention term (quadratic in non-cached length).
+    pub prefill_quad_ms: f64,
+    /// Fixed per-iteration decode overhead.
+    pub decode_base_ms: f64,
+    /// Per-row decode cost within an iteration.
+    pub decode_per_row_ms: f64,
+    /// Per cached-token attention read cost per row (decode).
+    pub decode_per_ctx_token_us: f64,
+    /// Batch efficiency exponent (0 < e <= 1): cost ~ rows^e per iteration.
+    pub batch_efficiency: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        // Defaults calibrated so a 1k-token prefill at bs=1 ≈ 350 ms and
+        // TPOT at bs=8 ≈ 45 ms — mid-range 13B-class numbers, matching the
+        // relative trends in the paper's Figs. 1b/3a/12.
+        EngineConfig {
+            prefill_base_ms: 18.0,
+            prefill_per_token_ms: 0.30,
+            prefill_quad_ms: 0.000010,
+            decode_base_ms: 22.0,
+            decode_per_row_ms: 2.6,
+            decode_per_ctx_token_us: 0.9,
+            batch_efficiency: 0.82,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = EngineConfig::default();
+        EngineConfig {
+            prefill_base_ms: doc.f64_or("engine", "prefill_base_ms", d.prefill_base_ms),
+            prefill_per_token_ms: doc.f64_or("engine", "prefill_per_token_ms", d.prefill_per_token_ms),
+            prefill_quad_ms: doc.f64_or("engine", "prefill_quad_ms", d.prefill_quad_ms),
+            decode_base_ms: doc.f64_or("engine", "decode_base_ms", d.decode_base_ms),
+            decode_per_row_ms: doc.f64_or("engine", "decode_per_row_ms", d.decode_per_row_ms),
+            decode_per_ctx_token_us: doc.f64_or("engine", "decode_per_ctx_token_us", d.decode_per_ctx_token_us),
+            batch_efficiency: doc.f64_or("engine", "batch_efficiency", d.batch_efficiency),
+        }
+    }
+}
+
+/// Gateway / serving policy knobs (paper §3.5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// TTFT SLO per 1k prompt tokens (ms); threshold scales with length.
+    pub ttft_slo_ms_per_1k: f64,
+    /// Absolute floor for the TTFT timeout threshold (ms).
+    pub ttft_slo_floor_ms: f64,
+    /// Max number of prefill candidates the gateway retries (top-ranked).
+    pub retry_candidates: usize,
+    /// Gateway re-poll interval while all prefills reject (ms).
+    pub retry_interval_ms: f64,
+    /// Prefill batch size.
+    pub prefill_batch: usize,
+    /// Decode batch size (slots per decode instance).
+    pub decode_batch: usize,
+    /// Bounded async-retrieval queue depth at decode (paper §3.6: small,
+    /// "a completed request triggers next retrieval").
+    pub retrieval_queue: usize,
+    /// Baseline-only: per-prefill local queue capacity.
+    pub local_queue_cap: usize,
+    /// Scheduler report period for the baseline global scheduler (ms).
+    pub report_period_ms: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            ttft_slo_ms_per_1k: 600.0,
+            ttft_slo_floor_ms: 300.0,
+            retry_candidates: 4,
+            retry_interval_ms: 5.0,
+            prefill_batch: 4,
+            decode_batch: 16,
+            retrieval_queue: 2,
+            local_queue_cap: 64,
+            report_period_ms: 100.0,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = ServingConfig::default();
+        ServingConfig {
+            ttft_slo_ms_per_1k: doc.f64_or("serving", "ttft_slo_ms_per_1k", d.ttft_slo_ms_per_1k),
+            ttft_slo_floor_ms: doc.f64_or("serving", "ttft_slo_floor_ms", d.ttft_slo_floor_ms),
+            retry_candidates: doc.usize_or("serving", "retry_candidates", d.retry_candidates),
+            retry_interval_ms: doc.f64_or("serving", "retry_interval_ms", d.retry_interval_ms),
+            prefill_batch: doc.usize_or("serving", "prefill_batch", d.prefill_batch),
+            decode_batch: doc.usize_or("serving", "decode_batch", d.decode_batch),
+            retrieval_queue: doc.usize_or("serving", "retrieval_queue", d.retrieval_queue),
+            local_queue_cap: doc.usize_or("serving", "local_queue_cap", d.local_queue_cap),
+            report_period_ms: doc.f64_or("serving", "report_period_ms", d.report_period_ms),
+        }
+    }
+
+    /// TTFT timeout threshold for a prompt of `len` tokens — the paper notes
+    /// "the timeout threshold for 1k is quite different from that of 8k".
+    pub fn ttft_threshold_ms(&self, prompt_len: usize) -> f64 {
+        (self.ttft_slo_ms_per_1k * prompt_len as f64 / 1024.0)
+            .max(self.ttft_slo_floor_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "pd" # trailing
+            [cluster]
+            regions = 3
+            hbm_gb = 64.5
+            flag = true
+            sizes = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "name", "?"), "pd");
+        assert_eq!(doc.usize_or("cluster", "regions", 0), 3);
+        assert!((doc.f64_or("cluster", "hbm_gb", 0.0) - 64.5).abs() < 1e-12);
+        assert!(doc.bool_or("cluster", "flag", false));
+        match doc.get("cluster", "sizes").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("x = @").is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_and_total() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.total_devices(), 2 * 8 * 4 * 8);
+        let doc = Doc::parse("[cluster]\nregions = 1\n").unwrap();
+        let c2 = ClusterConfig::from_doc(&doc);
+        assert_eq!(c2.regions, 1);
+        assert_eq!(c2.racks_per_region, c.racks_per_region);
+    }
+
+    #[test]
+    fn ttft_threshold_scales_with_length() {
+        let s = ServingConfig::default();
+        assert_eq!(s.ttft_threshold_ms(64), s.ttft_slo_floor_ms);
+        let t8k = s.ttft_threshold_ms(8192);
+        let t1k = s.ttft_threshold_ms(1024);
+        assert!(t8k > 7.0 * t1k && t8k < 9.0 * t1k);
+    }
+
+    #[test]
+    fn hash_in_string_preserved() {
+        let doc = Doc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a#b");
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: deterministic PRNG, statistics, JSON, config, CLI
+//! parsing and a mini property-testing framework.
+//!
+//! These exist because the build environment is offline: `rand`, `serde`,
+//! `clap` and `proptest` are not in the vendored crate set (DESIGN.md
+//! §Substitutions), so the library ships small, tested equivalents.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;

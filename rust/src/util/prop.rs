@@ -1,0 +1,141 @@
+//! Mini property-testing framework (the offline stand-in for `proptest`).
+//!
+//! A property is a closure over a seeded `Rng`-driven generator; `check`
+//! runs N cases, and on failure reports the case seed so the exact input
+//! can be replayed with `replay`. Generators are plain functions
+//! `Fn(&mut Rng) -> T`, composable with ordinary rust.
+
+use super::prng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor PDSERVE_PROP_CASES / PDSERVE_PROP_SEED for CI tuning.
+        let cases = std::env::var("PDSERVE_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        let seed = std::env::var("PDSERVE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs; panics (test failure) with
+/// the replay seed on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &Config,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{} \
+                 (replay seed {case_seed:#x}): {msg}\ninput: {input:#?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn replay<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    prop(&gen(&mut rng))
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> usize {
+        move |r| lo + r.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Rng) -> f64 {
+        move |r| r.uniform(lo, hi)
+    }
+
+    pub fn vec_of<T>(
+        len: impl Fn(&mut Rng) -> usize,
+        item: impl Fn(&mut Rng) -> T,
+    ) -> impl Fn(&mut Rng) -> Vec<T> {
+        move |r| {
+            let n = len(r);
+            (0..n).map(|_| item(r)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 50, seed: 1 };
+        check("sum-commutes", &cfg, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        let cfg = Config { cases: 10, seed: 2 };
+        check("always-fails", &cfg, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case() {
+        // Find a failing seed for x >= 5, then replay it.
+        let mut root = Rng::new(3);
+        let mut failing = None;
+        for _ in 0..100 {
+            let s = root.next_u64();
+            let mut r = Rng::new(s);
+            if r.below(10) >= 5 {
+                failing = Some(s);
+                break;
+            }
+        }
+        let s = failing.expect("should find one");
+        let res = replay(
+            s,
+            |r| r.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("x={x}")) },
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn gen_vec_bounds() {
+        let mut r = Rng::new(4);
+        let g = gen::vec_of(gen::usize_in(1, 5), gen::usize_in(10, 20));
+        for _ in 0..100 {
+            let v = g(&mut r);
+            assert!((1..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| (10..=20).contains(&x)));
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Statistics: Welford accumulators, percentile summaries and histograms.
+//!
+//! Every experiment and bench in this repo reports through these types so
+//! output formatting is uniform (mean / p50 / p99 / max, SLO attainment).
+
+/// Streaming mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Exact-percentile summary: stores samples, sorts on query.
+///
+/// Fine for experiment-sized sample counts (≤ millions); the serving hot
+/// path uses `Welford` + `Histogram` instead.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new(), sorted: true }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100], nearest-rank with linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(0.0)
+    }
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+
+    /// Fraction of samples `<= threshold` — SLO attainment.
+    pub fn fraction_le(&mut self, threshold: f64) -> f64 {
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        let idx = self.samples.partition_point(|&x| x <= threshold);
+        idx as f64 / self.samples.len() as f64
+    }
+
+    pub fn report(&mut self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p90={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.max(),
+            u = unit
+        )
+    }
+}
+
+/// Fixed-bucket histogram over [lo, hi) with overflow bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    counts: Vec<u64>,
+    overflow: u64,
+    underflow: u64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / buckets as f64,
+            counts: vec![0; buckets],
+            overflow: 0,
+            underflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else {
+            let idx = ((x - self.lo) / self.width) as usize;
+            if idx >= self.counts.len() {
+                self.overflow += 1;
+            } else {
+                self.counts[idx] += 1;
+            }
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return self.lo;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo + (i as f64 + 1.0) * self.width;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Normalize a series to [0, 1] by its max — the paper reports all results
+/// "normalized to a standard range 0~1".
+pub fn normalize(xs: &[f64]) -> Vec<f64> {
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if max <= 0.0 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| x / max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.add(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn summary_slo_fraction() {
+        let mut s = Summary::new();
+        for i in 1..=10 {
+            s.add(i as f64);
+        }
+        assert!((s.fraction_le(5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(s.fraction_le(100.0), 1.0);
+        assert_eq!(s.fraction_le(0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_percentile_within_bucket_width() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.add((i % 100) as f64 + 0.5);
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 50.0).abs() <= 1.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_overflow() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-1.0);
+        h.add(100.0);
+        h.add(5.0);
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.percentile(100.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn normalize_unit_max() {
+        let out = normalize(&[1.0, 2.0, 4.0]);
+        assert_eq!(out, vec![0.25, 0.5, 1.0]);
+    }
+}

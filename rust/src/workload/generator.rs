@@ -1,0 +1,175 @@
+//! Request generators: open-loop Poisson arrivals (rate-driven, for SLO /
+//! timeout experiments) and closed-loop constant-concurrency (the paper's
+//! throughput methodology: "the tests are conducted by maintaining the
+//! constant requests (one completed triggers new one added)").
+
+use crate::util::prng::Rng;
+
+use super::{Request, Scenario};
+
+/// Open loop: Poisson arrivals at a (possibly time-varying) rate, sampling
+/// scenarios by weight.
+pub struct OpenLoopGen {
+    scenarios: Vec<Scenario>,
+    weights: Vec<f64>,
+    rng: Rng,
+    next_id: u64,
+    now_ms: f64,
+}
+
+impl OpenLoopGen {
+    pub fn new(scenarios: Vec<Scenario>, seed: u64) -> Self {
+        let weights = scenarios.iter().map(|s| s.weight).collect();
+        OpenLoopGen { scenarios, weights, rng: Rng::new(seed), next_id: 0, now_ms: 0.0 }
+    }
+
+    /// Restrict to a single scenario (per-scene experiments).
+    pub fn only_scenario(mut self, idx: usize) -> Self {
+        self.weights = self
+            .scenarios
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == idx { 1.0 } else { 0.0 })
+            .collect();
+        self
+    }
+
+    /// Next arrival at aggregate rate `rps`; advances internal time.
+    pub fn next(&mut self, rps: f64) -> Request {
+        debug_assert!(rps > 0.0);
+        self.now_ms += self.rng.exp(rps) * 1000.0;
+        let sc_idx = self.rng.weighted(&self.weights);
+        let id = self.next_id;
+        self.next_id += 1;
+        let arrival = self.now_ms;
+        self.scenarios[sc_idx].sample(sc_idx, id, arrival, &mut self.rng)
+    }
+
+    /// Sample one request at a fixed arrival time without advancing the
+    /// generator's clock (burst/clumped-arrival construction).
+    pub fn sample_at(&mut self, at_ms: f64) -> Request {
+        let sc_idx = self.rng.weighted(&self.weights);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.scenarios[sc_idx].sample(sc_idx, id, at_ms, &mut self.rng)
+    }
+
+    /// Generate all arrivals within a window at constant rate.
+    pub fn window(&mut self, rps: f64, duration_ms: f64) -> Vec<Request> {
+        let end = self.now_ms + duration_ms;
+        let mut out = Vec::new();
+        loop {
+            let r = self.next(rps);
+            if r.arrival_ms > end {
+                self.now_ms = end;
+                break;
+            }
+            out.push(r);
+        }
+        out
+    }
+}
+
+/// Closed loop: at most `concurrency` requests in flight; completing one
+/// immediately admits the next. The driver (simulator) calls `next_request`
+/// whenever it has a free slot.
+pub struct ClosedLoopGen {
+    scenarios: Vec<Scenario>,
+    weights: Vec<f64>,
+    rng: Rng,
+    next_id: u64,
+    pub concurrency: usize,
+}
+
+impl ClosedLoopGen {
+    pub fn new(scenarios: Vec<Scenario>, concurrency: usize, seed: u64) -> Self {
+        let weights = scenarios.iter().map(|s| s.weight).collect();
+        ClosedLoopGen { scenarios, weights, rng: Rng::new(seed), next_id: 0, concurrency }
+    }
+
+    pub fn only_scenario(mut self, idx: usize) -> Self {
+        self.weights = self
+            .scenarios
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == idx { 1.0 } else { 0.0 })
+            .collect();
+        self
+    }
+
+    pub fn next_request(&mut self, now_ms: f64) -> Request {
+        let sc_idx = self.rng.weighted(&self.weights);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.scenarios[sc_idx].sample(sc_idx, id, now_ms, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::standard_scenarios;
+
+    #[test]
+    fn open_loop_rate_matches() {
+        let mut g = OpenLoopGen::new(standard_scenarios(), 1);
+        let reqs = g.window(50.0, 60_000.0); // 50 rps for 60 s
+        let n = reqs.len() as f64;
+        assert!((n - 3000.0).abs() < 250.0, "got {n} arrivals");
+        // Arrivals strictly increasing.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn open_loop_scenario_mix_follows_weights() {
+        let scenes = standard_scenarios();
+        let tw: f64 = scenes.iter().map(|s| s.weight).sum();
+        let mut g = OpenLoopGen::new(scenes.clone(), 2);
+        let reqs = g.window(100.0, 120_000.0);
+        let mut counts = vec![0usize; scenes.len()];
+        for r in &reqs {
+            counts[r.scenario] += 1;
+        }
+        for (i, sc) in scenes.iter().enumerate() {
+            let expect = sc.weight / tw;
+            let got = counts[i] as f64 / reqs.len() as f64;
+            assert!(
+                (got - expect).abs() < 0.03,
+                "scene {i}: {got} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn only_scenario_filters() {
+        let mut g = OpenLoopGen::new(standard_scenarios(), 3).only_scenario(2);
+        for _ in 0..100 {
+            assert_eq!(g.next(10.0).scenario, 2);
+        }
+    }
+
+    #[test]
+    fn closed_loop_ids_unique() {
+        let mut g = ClosedLoopGen::new(standard_scenarios(), 8, 4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..500 {
+            let r = g.next_request(i as f64);
+            assert!(seen.insert(r.id));
+        }
+    }
+
+    #[test]
+    fn generators_deterministic_by_seed() {
+        let mut a = OpenLoopGen::new(standard_scenarios(), 7);
+        let mut b = OpenLoopGen::new(standard_scenarios(), 7);
+        for _ in 0..50 {
+            let ra = a.next(20.0);
+            let rb = b.next(20.0);
+            assert_eq!(ra.prompt_len, rb.prompt_len);
+            assert_eq!(ra.scenario, rb.scenario);
+            assert_eq!(ra.arrival_ms, rb.arrival_ms);
+        }
+    }
+}

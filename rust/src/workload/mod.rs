@@ -1,0 +1,205 @@
+//! Workloads: the six production scenarios (Scene 1–6, two services) and
+//! the tidal traffic that drives every experiment.
+//!
+//! The paper derives its requests from real services ("the requests from
+//! upstream services actually contain the scenario information"); we keep
+//! the same structure synthetically: each scenario has its own
+//! prompt-length distribution, a small pool of shared prefixes (the
+//! system/context part that prompt engineering produces), and its own
+//! generation-length distribution. Diversity *across* scenes and
+//! similarity *within* a scene is the property P/D-Serve exploits.
+
+pub mod generator;
+pub mod trace;
+pub mod traffic;
+
+pub use generator::{ClosedLoopGen, OpenLoopGen};
+
+use crate::util::prng::Rng;
+
+/// One scenario's statistical profile.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub service: &'static str,
+    /// Log-normal prompt length parameters (tokens).
+    pub prompt_mean: f64,
+    pub prompt_cv: f64,
+    /// Number of distinct prefixes in this scenario's pool.
+    pub n_prefixes: usize,
+    /// Fraction of the prompt covered by the shared prefix.
+    pub prefix_frac: f64,
+    /// Log-normal generation length parameters (tokens).
+    pub gen_mean: f64,
+    pub gen_cv: f64,
+    /// Relative traffic weight at peak.
+    pub weight: f64,
+}
+
+/// The six scenes of Fig. 1a/2a: two services, disparate prompt shapes.
+pub fn standard_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            // Candidate-pool classification: long fixed context, tiny output.
+            name: "scene1", service: "svcA",
+            prompt_mean: 1800.0, prompt_cv: 0.15,
+            n_prefixes: 6, prefix_frac: 0.75,
+            gen_mean: 16.0, gen_cv: 0.4, weight: 1.2,
+        },
+        Scenario {
+            // Summarization: very long varied prompts, long outputs.
+            name: "scene2", service: "svcA",
+            prompt_mean: 4200.0, prompt_cv: 0.35,
+            n_prefixes: 12, prefix_frac: 0.2,
+            gen_mean: 220.0, gen_cv: 0.5, weight: 0.6,
+        },
+        Scenario {
+            // Chat: short prompts, medium outputs.
+            name: "scene3", service: "svcA",
+            prompt_mean: 650.0, prompt_cv: 0.45,
+            n_prefixes: 8, prefix_frac: 0.5,
+            gen_mean: 150.0, gen_cv: 0.6, weight: 1.5,
+        },
+        Scenario {
+            // RAG QA: long retrieved context, short answers.
+            name: "scene4", service: "svcB",
+            prompt_mean: 3000.0, prompt_cv: 0.25,
+            n_prefixes: 10, prefix_frac: 0.55,
+            gen_mean: 90.0, gen_cv: 0.4, weight: 0.9,
+        },
+        Scenario {
+            // Code assist: medium prompts, medium-long outputs.
+            name: "scene5", service: "svcB",
+            prompt_mean: 1300.0, prompt_cv: 0.5,
+            n_prefixes: 16, prefix_frac: 0.35,
+            gen_mean: 130.0, gen_cv: 0.7, weight: 0.8,
+        },
+        Scenario {
+            // Intent understanding: tiny prompts, tiny outputs, high QPS.
+            name: "scene6", service: "svcB",
+            prompt_mean: 320.0, prompt_cv: 0.3,
+            n_prefixes: 4, prefix_frac: 0.8,
+            gen_mean: 10.0, gen_cv: 0.3, weight: 2.0,
+        },
+    ]
+}
+
+/// A generated request (simulation granularity: lengths, not tokens).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub scenario: usize,
+    pub arrival_ms: f64,
+    pub prompt_len: usize,
+    /// Which of the scenario's prefixes this prompt uses.
+    pub prefix_id: usize,
+    /// Length of that shared prefix (tokens).
+    pub prefix_len: usize,
+    /// Tokens this request will generate.
+    pub gen_len: usize,
+}
+
+impl Scenario {
+    /// Draw one request at `arrival_ms`.
+    pub fn sample(&self, scenario_idx: usize, id: u64, arrival_ms: f64, rng: &mut Rng) -> Request {
+        let prompt_len = lognormal_len(rng, self.prompt_mean, self.prompt_cv, 16);
+        let prefix_id = rng.below(self.n_prefixes);
+        let prefix_len =
+            ((prompt_len as f64 * self.prefix_frac) as usize).min(prompt_len);
+        let gen_len = lognormal_len(rng, self.gen_mean, self.gen_cv, 1);
+        Request {
+            id,
+            scenario: scenario_idx,
+            arrival_ms,
+            prompt_len,
+            prefix_id,
+            prefix_len,
+            gen_len,
+        }
+    }
+
+    /// Synthetic token sequence for a prefix (real-model path & prefix
+    /// cache keys): deterministic per (scenario, prefix_id).
+    pub fn prefix_tokens(&self, scenario_idx: usize, prefix_id: usize, len: usize) -> Vec<i32> {
+        let mut rng = Rng::new(
+            0x5EED_0000 ^ (scenario_idx as u64) << 32 ^ prefix_id as u64,
+        );
+        (0..len).map(|_| rng.below(256) as i32).collect()
+    }
+}
+
+/// Log-normal with given mean and coefficient of variation, floored.
+fn lognormal_len(rng: &mut Rng, mean: f64, cv: f64, min: usize) -> usize {
+    let sigma2 = (1.0 + cv * cv).ln();
+    let mu = mean.ln() - sigma2 / 2.0;
+    (rng.lognormal(mu, sigma2.sqrt()).round() as usize).max(min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_scenes_two_services() {
+        let s = standard_scenarios();
+        assert_eq!(s.len(), 6);
+        let services: std::collections::BTreeSet<_> =
+            s.iter().map(|x| x.service).collect();
+        assert_eq!(services.len(), 2);
+    }
+
+    #[test]
+    fn sample_respects_scenario_stats() {
+        let scenes = standard_scenarios();
+        let mut rng = Rng::new(42);
+        for (idx, sc) in scenes.iter().enumerate() {
+            let n = 4000;
+            let mut sum_p = 0f64;
+            let mut sum_g = 0f64;
+            for i in 0..n {
+                let r = sc.sample(idx, i, 0.0, &mut rng);
+                assert!(r.prefix_len <= r.prompt_len);
+                assert!(r.prefix_id < sc.n_prefixes);
+                assert!(r.gen_len >= 1);
+                sum_p += r.prompt_len as f64;
+                sum_g += r.gen_len as f64;
+            }
+            let mean_p = sum_p / n as f64;
+            let mean_g = sum_g / n as f64;
+            assert!(
+                (mean_p - sc.prompt_mean).abs() / sc.prompt_mean < 0.12,
+                "{}: prompt mean {mean_p} vs {}",
+                sc.name,
+                sc.prompt_mean
+            );
+            assert!(
+                (mean_g - sc.gen_mean).abs() / sc.gen_mean < 0.25,
+                "{}: gen mean {mean_g} vs {}",
+                sc.name,
+                sc.gen_mean
+            );
+        }
+    }
+
+    #[test]
+    fn scenes_are_diverse_fig1a() {
+        // The Fig. 1a property: prompt-length distributions differ strongly
+        // across scenes (max mean / min mean > 5x).
+        let s = standard_scenarios();
+        let means: Vec<f64> = s.iter().map(|x| x.prompt_mean).collect();
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 5.0);
+    }
+
+    #[test]
+    fn prefix_tokens_deterministic_and_distinct() {
+        let s = &standard_scenarios()[0];
+        let a = s.prefix_tokens(0, 1, 64);
+        let b = s.prefix_tokens(0, 1, 64);
+        let c = s.prefix_tokens(0, 2, 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

@@ -1,0 +1,106 @@
+//! Request traces: persist generated workloads as JSON so experiments can
+//! be replayed bit-for-bit across machines (the paper's requests come
+//! from collected fine-tune datasets; ours come from seeded generators,
+//! and a saved trace freezes one draw).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::Request;
+
+/// Serialize a trace to JSON text.
+pub fn to_json(requests: &[Request]) -> String {
+    let items: Vec<Json> = requests
+        .iter()
+        .map(|r| {
+            crate::jobj! {
+                "id" => r.id as usize,
+                "scenario" => r.scenario,
+                "arrival_ms" => r.arrival_ms,
+                "prompt_len" => r.prompt_len,
+                "prefix_id" => r.prefix_id,
+                "prefix_len" => r.prefix_len,
+                "gen_len" => r.gen_len,
+            }
+        })
+        .collect();
+    Json::Arr(items).to_string_pretty()
+}
+
+/// Parse a trace back.
+pub fn from_json(text: &str) -> Result<Vec<Request>> {
+    let j = Json::parse(text).map_err(|e| anyhow!("trace: {e}"))?;
+    let arr = j.as_arr().ok_or_else(|| anyhow!("trace must be an array"))?;
+    arr.iter()
+        .map(|it| {
+            let need = |k: &str| {
+                it.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("trace item missing {k}"))
+            };
+            Ok(Request {
+                id: need("id")? as u64,
+                scenario: need("scenario")? as usize,
+                arrival_ms: need("arrival_ms")?,
+                prompt_len: need("prompt_len")? as usize,
+                prefix_id: need("prefix_id")? as usize,
+                prefix_len: need("prefix_len")? as usize,
+                gen_len: need("gen_len")? as usize,
+            })
+        })
+        .collect()
+}
+
+pub fn save(path: &str, requests: &[Request]) -> Result<()> {
+    std::fs::write(path, to_json(requests))
+        .map_err(|e| anyhow!("write {path}: {e}"))
+}
+
+pub fn load(path: &str) -> Result<Vec<Request>> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow!("read {path}: {e}"))?;
+    from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{standard_scenarios, OpenLoopGen};
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let mut g = OpenLoopGen::new(standard_scenarios(), 5);
+        let reqs = g.window(20.0, 5_000.0);
+        assert!(!reqs.is_empty());
+        let back = from_json(&to_json(&reqs)).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.prefix_id, b.prefix_id);
+            assert_eq!(a.prefix_len, b.prefix_len);
+            assert_eq!(a.gen_len, b.gen_len);
+            assert!((a.arrival_ms - b.arrival_ms).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip(){
+        let mut g = OpenLoopGen::new(standard_scenarios(), 6);
+        let reqs = g.window(10.0, 2_000.0);
+        let path = std::env::temp_dir().join("pdserve_trace_test.json");
+        let path = path.to_str().unwrap();
+        save(path, &reqs).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("[{\"id\": 1}]").is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Tidal traffic curves (paper Fig. 2a / 13b).
+//!
+//! Each scenario's arrival rate follows a diurnal pattern: low overnight
+//! (when the paper's platform flips capacity to training), ramping through
+//! the morning, peaking in the afternoon/evening. Scenes peak at different
+//! hours, so the *combination* of requests changes over the day — the
+//! traffic-change driver for P/D ratio adjustment.
+
+use super::Scenario;
+
+/// Diurnal shape in [0, 1]: two-bump curve with a per-scene phase shift.
+pub fn diurnal_factor(hour: f64, phase_h: f64) -> f64 {
+    let h = (hour - phase_h).rem_euclid(24.0);
+    // Night trough 1am-6am, morning peak ~11h, evening peak ~20h.
+    let morning = gaussian(h, 11.0, 3.0);
+    let evening = gaussian(h, 20.0, 2.5);
+    let base = 0.08;
+    (base + 0.9 * morning + 0.75 * evening).min(1.0)
+}
+
+fn gaussian(x: f64, mu: f64, sigma: f64) -> f64 {
+    // Wrap-around distance on the 24h circle.
+    let mut d = (x - mu).abs();
+    if d > 12.0 {
+        d = 24.0 - d;
+    }
+    (-(d * d) / (2.0 * sigma * sigma)).exp()
+}
+
+/// Per-scene phase shifts (hours): office-hour scenes vs consumer-evening
+/// scenes peak apart.
+pub fn scene_phase(scene_idx: usize) -> f64 {
+    const PHASES: [f64; 6] = [0.0, 1.5, 6.0, -1.0, 2.5, 4.0];
+    PHASES[scene_idx % PHASES.len()]
+}
+
+/// Arrival rate (requests/sec) for a scene at wall-clock `hour`, given the
+/// fleet-wide peak rate budget.
+pub fn scene_rate_rps(sc: &Scenario, scene_idx: usize, hour: f64, peak_total_rps: f64, total_weight: f64) -> f64 {
+    let share = sc.weight / total_weight;
+    peak_total_rps * share * diurnal_factor(hour, scene_phase(scene_idx))
+}
+
+/// The train/infer switch threshold: below this fraction of peak, capacity
+/// is released to training (paper: "inference at daytime and training at
+/// night").
+pub const TRAINING_SWITCH_FRACTION: f64 = 0.15;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::standard_scenarios;
+
+    #[test]
+    fn diurnal_has_night_trough_and_day_peak() {
+        let night = diurnal_factor(3.5, 0.0);
+        let day = diurnal_factor(11.0, 0.0);
+        let evening = diurnal_factor(20.0, 0.0);
+        assert!(night < 0.2, "night {night}");
+        assert!(day > 0.8, "day {day}");
+        assert!(evening > 0.6, "evening {evening}");
+    }
+
+    #[test]
+    fn factor_bounded_and_periodic() {
+        for i in 0..96 {
+            let h = i as f64 * 0.25;
+            let f = diurnal_factor(h, 0.0);
+            assert!((0.0..=1.0).contains(&f));
+            let f24 = diurnal_factor(h + 24.0, 0.0);
+            assert!((f - f24).abs() < 1e-9, "24h periodicity");
+        }
+    }
+
+    #[test]
+    fn scenes_peak_at_different_hours() {
+        // Fig. 2a: the combination of prompts changes over time.
+        let scenes = standard_scenarios();
+        let tw: f64 = scenes.iter().map(|s| s.weight).sum();
+        let peak_hour = |idx: usize| -> usize {
+            (0..24)
+                .max_by(|&a, &b| {
+                    let ra = scene_rate_rps(&scenes[idx], idx, a as f64, 100.0, tw);
+                    let rb = scene_rate_rps(&scenes[idx], idx, b as f64, 100.0, tw);
+                    ra.partial_cmp(&rb).unwrap()
+                })
+                .unwrap()
+        };
+        let hours: std::collections::BTreeSet<usize> =
+            (0..6).map(peak_hour).collect();
+        assert!(hours.len() >= 3, "peaks too synchronized: {hours:?}");
+    }
+
+    #[test]
+    fn training_switch_engages_each_day() {
+        // Every scene has a trough window somewhere in the day where its
+        // rate drops below the training-switch threshold (tidal capacity
+        // release); phases shift *where* that window is, not whether it
+        // exists.
+        let scenes = standard_scenarios();
+        let tw: f64 = scenes.iter().map(|s| s.weight).sum();
+        for (i, sc) in scenes.iter().enumerate() {
+            let rates: Vec<f64> = (0..96)
+                .map(|q| scene_rate_rps(sc, i, q as f64 * 0.25, 100.0, tw))
+                .collect();
+            let peak = rates.iter().cloned().fold(0.0, f64::max);
+            let trough = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                trough < peak * TRAINING_SWITCH_FRACTION,
+                "scene {i}: trough {trough} never drops below {} of peak {peak}",
+                TRAINING_SWITCH_FRACTION
+            );
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! The shipped config file must parse into every typed config without
+//! falling back to defaults silently.
+
+use pd_serve::util::config::{ClusterConfig, Doc, EngineConfig, ServingConfig};
+
+fn load() -> Doc {
+    let path = ["configs/default.toml", "../configs/default.toml"]
+        .into_iter()
+        .find(|p| std::path::Path::new(p).exists())
+        .expect("configs/default.toml present");
+    Doc::load(path).expect("parses")
+}
+
+#[test]
+fn default_config_parses_fully() {
+    let doc = load();
+    assert_eq!(doc.str_or("", "name", "?"), "pd-serve-default");
+
+    let cluster = ClusterConfig::from_doc(&doc);
+    assert_eq!(cluster.regions, 2);
+    assert_eq!(cluster.total_devices(), 2 * 8 * 4 * 8);
+    assert_eq!(cluster.spine_count, 8);
+
+    let engine = EngineConfig::from_doc(&doc);
+    assert!((engine.prefill_per_token_ms - 0.30).abs() < 1e-12);
+    assert!((engine.prefill_quad_ms - 1e-5).abs() < 1e-12);
+
+    let serving = ServingConfig::from_doc(&doc);
+    assert_eq!(serving.prefill_batch, 4);
+    assert_eq!(serving.decode_batch, 16);
+    assert!((serving.ttft_threshold_ms(1024) - 600.0).abs() < 1e-9);
+}
+
+#[test]
+fn config_values_differ_from_defaults_where_specified() {
+    // Guards against the parser silently ignoring the file: spine_count is
+    // 8 in the file but 4 in the built-in default.
+    let doc = load();
+    let cluster = ClusterConfig::from_doc(&doc);
+    assert_ne!(cluster.spine_count, ClusterConfig::default().spine_count);
+}

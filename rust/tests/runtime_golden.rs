@@ -1,0 +1,230 @@
+//! Integration: replay `artifacts/golden.json` (recorded by the python AOT
+//! path) through the rust PJRT runtime. This closes the cross-language
+//! loop — if the HLO text round-trip, the literal plumbing, the scatter
+//! path or the decode loop were wrong, tokens would diverge immediately.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use pd_serve::runtime::model::{bytemuck_cast, bytes_as_f32};
+use pd_serve::runtime::ServingRuntime;
+use pd_serve::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(&format!("{dir}/meta.json")).exists() {
+            return Some(dir.to_string());
+        }
+    }
+    None
+}
+
+struct Golden {
+    prompt: Vec<i32>,
+    nnew: usize,
+    first_token: i32,
+    generated: Vec<i32>,
+    prefill_logits_head: Vec<f64>,
+    final_logits_head: Vec<f64>,
+    prefill_cache_mean: f64,
+    prefill_cache_std: f64,
+}
+
+fn load_golden(dir: &str) -> Golden {
+    let text = std::fs::read_to_string(format!("{dir}/golden.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    Golden {
+        prompt: j
+            .get("prompt")
+            .and_then(Json::as_usize_vec)
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect(),
+        nnew: j.get("nnew").and_then(Json::as_usize).unwrap(),
+        first_token: j.get("first_token").and_then(Json::as_i64).unwrap() as i32,
+        generated: j
+            .get("generated")
+            .and_then(Json::as_usize_vec)
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i32)
+            .collect(),
+        prefill_logits_head: j
+            .get("prefill_logits_head")
+            .and_then(Json::as_f64_vec)
+            .unwrap(),
+        final_logits_head: j
+            .get("final_logits_head")
+            .and_then(Json::as_f64_vec)
+            .unwrap(),
+        prefill_cache_mean: j.get("prefill_cache_mean").and_then(Json::as_f64).unwrap(),
+        prefill_cache_std: j.get("prefill_cache_std").and_then(Json::as_f64).unwrap(),
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn golden_replay_matches_python() {
+    let dir = require_artifacts!();
+    let golden = load_golden(&dir);
+    let rt = ServingRuntime::load(&dir).unwrap();
+
+    // --- prefill ---
+    let out = rt.prefill(&golden.prompt, 0, None).unwrap();
+    assert_eq!(golden.nnew, golden.prompt.len());
+    assert_eq!(out.logits.len(), rt.meta.vocab);
+    for (i, &exp) in golden.prefill_logits_head.iter().enumerate() {
+        assert!(
+            (out.logits[i] as f64 - exp).abs() < 2e-3,
+            "prefill logit {i}: rust={} python={exp}",
+            out.logits[i]
+        );
+    }
+    let first = rt.argmax_row(&out.logits, 0);
+    assert_eq!(first, golden.first_token, "first generated token differs");
+
+    // Cache statistics sanity (full-tensor comparison happens implicitly
+    // through the decode trace below).
+    let n = out.cache.len() as f64;
+    let mean = out.cache.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = out.cache.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    assert!((mean - golden.prefill_cache_mean).abs() < 1e-4, "cache mean");
+    assert!((var.sqrt() - golden.prefill_cache_std).abs() < 1e-4, "cache std");
+
+    // --- transfer: contiguous bytes -> operator RecvScatter into slot 0 ---
+    let bytes = bytemuck_cast(&out.cache).to_vec(); // "the wire"
+    let restored = bytes_as_f32(&bytes);
+    let mut handle = rt.new_decode_handle().unwrap();
+    rt.scatter_device(&mut handle, 0, &restored).unwrap();
+    handle.lens[0] = golden.nnew as i32;
+    handle.active[0] = true;
+
+    // --- decode trace: every token must match the python replay exactly ---
+    let b = handle.batch();
+    let mut tok = vec![0i32; b];
+    tok[0] = first;
+    let mut produced = vec![first];
+    let mut last_logits = Vec::new();
+    for _ in 0..(golden.generated.len() - 1) {
+        let logits = rt.decode_step(&mut handle, &tok).unwrap();
+        let nxt = rt.argmax_row(&logits, 0);
+        produced.push(nxt);
+        last_logits = logits[..rt.meta.vocab].to_vec();
+        tok[0] = nxt;
+    }
+    assert_eq!(produced, golden.generated, "token trace diverged");
+    for (i, &exp) in golden.final_logits_head.iter().enumerate() {
+        assert!(
+            (last_logits[i] as f64 - exp).abs() < 2e-3,
+            "final logit {i}: rust={} python={exp}",
+            last_logits[i]
+        );
+    }
+}
+
+#[test]
+fn scatter_device_and_host_paths_agree() {
+    // The paper's §3.6 transparency/flexibility tradeoff: the *operator*
+    // RecvScatter (AOT HLO) and the *function* RecvScatter (host byte
+    // scatter in kvcache::scatter) must land identical caches.
+    let dir = require_artifacts!();
+    let rt = ServingRuntime::load(&dir).unwrap();
+    let prompt = pd_serve::runtime::tokenizer::encode("scatter equivalence");
+    let out = rt.prefill(&prompt, 0, None).unwrap();
+
+    let slot = 2usize;
+    // Operator path.
+    let mut h_dev = rt.new_decode_handle().unwrap();
+    rt.scatter_device(&mut h_dev, slot, &out.cache).unwrap();
+    let dev_cache = h_dev.cache_to_vec().unwrap();
+
+    // Function path (host mirror scatter).
+    let mut h_host = rt.new_decode_handle().unwrap();
+    let mut mirror = h_host.cache_to_vec().unwrap();
+    pd_serve::kvcache::scatter::scatter_into_decode(
+        &mut mirror,
+        &out.cache,
+        &rt.meta.decode_cache_shape,
+        slot,
+    )
+    .unwrap();
+    h_host
+        .cache_from_vec(&mirror, &rt.meta.decode_cache_shape)
+        .unwrap();
+    let host_cache = h_host.cache_to_vec().unwrap();
+
+    assert_eq!(dev_cache.len(), host_cache.len());
+    let diff = dev_cache
+        .iter()
+        .zip(&host_cache)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert_eq!(diff, 0, "{diff} elements differ between scatter paths");
+}
+
+#[test]
+fn prefix_continuation_matches_single_shot() {
+    // Chunked prefill over a cached prefix (start > 0) must produce the
+    // same logits as prefilling the whole prompt at once — the correctness
+    // property behind prefix-aware KVCache reuse.
+    let dir = require_artifacts!();
+    let rt = ServingRuntime::load(&dir).unwrap();
+    let full: Vec<i32> = (0..32).map(|i| (i * 7 + 3) % 256).collect();
+
+    let single = rt.prefill(&full, 0, None).unwrap();
+
+    let chunk1 = rt.prefill(&full[..16], 0, None).unwrap();
+    let chunk2 = rt.prefill(&full[16..], 16, Some(&chunk1.cache)).unwrap();
+
+    let max_diff = single
+        .logits
+        .iter()
+        .zip(&chunk2.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "chunked vs single-shot logits diff {max_diff}");
+}
+
+#[test]
+fn decode_slots_are_isolated() {
+    // Continuous batching invariant: activity in other slots must not
+    // change an active slot's token stream.
+    let dir = require_artifacts!();
+    let rt = ServingRuntime::load(&dir).unwrap();
+    let prompt = pd_serve::runtime::tokenizer::encode("slot isolation");
+
+    let out = rt.prefill(&prompt, 0, None).unwrap();
+    let run = |other_tok: i32, other_active: bool| {
+        let mut h = rt.new_decode_handle().unwrap();
+        rt.scatter_device(&mut h, 0, &out.cache).unwrap();
+        h.lens[0] = prompt.len() as i32;
+        h.active[0] = true;
+        if other_active {
+            h.lens[1] = 3;
+            h.active[1] = true;
+        }
+        let mut tok = vec![0i32; h.batch()];
+        tok[0] = rt.argmax_row(&out.logits, 0);
+        tok[1] = other_tok;
+        let mut trace = Vec::new();
+        for _ in 0..4 {
+            let logits = rt.decode_step(&mut h, &tok).unwrap();
+            let nxt = rt.argmax_row(&logits, 0);
+            trace.push(nxt);
+            tok[0] = nxt;
+        }
+        trace
+    };
+    assert_eq!(run(0, false), run(99, true));
+}
