@@ -1,0 +1,50 @@
+//! Fleet-loop benches: how fast the closed-loop simulator turns one
+//! compressed tidal day, dynamic vs frozen control — the regression anchor
+//! for the `serving::fleet` event path (shared queue + per-group sims +
+//! control ticks). `cargo bench --bench fleet -- --fast` for CI.
+
+use pd_serve::bench::Bencher;
+use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+
+fn day(adjust: bool, scale: bool) -> FleetConfig {
+    FleetConfig {
+        scenes: vec![2, 5],
+        peak_total_rps: 20.0,
+        ms_per_hour: 1_000.0,
+        control_period_ms: 1_000.0,
+        slice_ms: 500.0,
+        adjust_ratio: adjust,
+        scale_groups: scale,
+        seed: 0xBE7C,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("fleet — one compressed tidal day (2 scenes)");
+    for (name, adjust, scale) in [
+        ("closed loop (ratio + scaling)", true, true),
+        ("ratio only", true, false),
+        ("frozen (static baseline)", false, false),
+    ] {
+        let cfg = day(adjust, scale);
+        b.bench(name, Some((1.0, "day")), || {
+            FleetSim::new(cfg.clone()).run().completed
+        });
+    }
+
+    b.group("fleet — control-plane overhead vs fleet width");
+    for scenes in [vec![2usize], vec![0, 2, 5], vec![0, 1, 2, 3, 4, 5]] {
+        let mut cfg = day(true, true);
+        let n = scenes.len();
+        cfg.scenes = scenes;
+        let name = format!("{n} scene groups");
+        b.bench(&name, Some((n as f64, "group-day")), || {
+            FleetSim::new(cfg.clone()).run().completed
+        });
+    }
+
+    println!("\n{}", b.finish());
+}

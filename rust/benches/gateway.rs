@@ -36,7 +36,9 @@ fn main() {
         let forwarder = OnDemandForwarder::new(4, 5.0);
         let busy_mask: Vec<bool> = (0..n_p).map(|i| i % 3 != 0).collect();
         b.bench("on-demand probe (4 candidates)", Some((1.0, "req")), || {
-            forwarder.probe(&sse, 0.0, 1e9, |e| !busy_mask[e as usize])
+            forwarder.probe(&sse, rng.next_u64(), 0.0, 1e9, |e| {
+                !busy_mask[e as usize]
+            })
         });
 
         let mut sched = StaleQueueScheduler::new(n_p, 100.0);

@@ -7,6 +7,8 @@
 //! never interrupted ("each group receives a proportion of traffic for
 //! inference (at most group-level failure)").
 
+use anyhow::{bail, Result};
+
 use crate::cluster::engine::EngineModel;
 use crate::workload::traffic::{diurnal_factor, scene_phase, TRAINING_SWITCH_FRACTION};
 
@@ -38,11 +40,27 @@ impl GroupTemplate {
 }
 
 /// Groups needed for `rate_rps` with `headroom` (e.g. 1.2 = 20% slack).
-pub fn groups_needed(rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> usize {
-    if rate_rps <= 0.0 {
-        return 0;
+///
+/// A template whose `group_rps` is zero, negative or non-finite cannot
+/// carry any traffic; planning with it is a configuration error, not an
+/// "infinitely many groups" capacity plan (`inf as usize` saturates to
+/// `usize::MAX` and would otherwise propagate silently).
+pub fn groups_needed(rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> Result<usize> {
+    if !tpl.group_rps.is_finite() || tpl.group_rps <= 0.0 {
+        bail!(
+            "degenerate group template: group_rps = {} (n_p={}, n_d={})",
+            tpl.group_rps,
+            tpl.n_p,
+            tpl.n_d
+        );
     }
-    ((rate_rps * headroom) / tpl.group_rps).ceil() as usize
+    if !rate_rps.is_finite() || !headroom.is_finite() || headroom <= 0.0 {
+        bail!("invalid capacity query: rate_rps={rate_rps}, headroom={headroom}");
+    }
+    if rate_rps <= 0.0 {
+        return Ok(0);
+    }
+    Ok(((rate_rps * headroom) / tpl.group_rps).ceil() as usize)
 }
 
 /// A scaling decision at a point in time.
@@ -73,7 +91,7 @@ pub fn plan_day(
     tpl: &GroupTemplate,
     step_h: f64,
     min_groups: usize,
-) -> Vec<PlannedAction> {
+) -> Result<Vec<PlannedAction>> {
     let mut actions = Vec::new();
     let mut serving = min_groups.max(1);
     let mut training = false;
@@ -101,7 +119,7 @@ pub fn plan_day(
                     serving_groups: serving,
                 });
             }
-            let need = groups_needed(rate, tpl, 1.2).max(min_groups).max(1);
+            let need = groups_needed(rate, tpl, 1.2)?.max(min_groups).max(1);
             if need > serving {
                 actions.push(PlannedAction {
                     at_hour: t,
@@ -113,7 +131,7 @@ pub fn plan_day(
                 // Hysteresis: shrink only to exact-fit capacity (the 1.2
                 // headroom on the way out vs 1.0 on the way in prevents
                 // flapping while never under-provisioning).
-                let relaxed = groups_needed(rate, tpl, 1.0).max(min_groups).max(1);
+                let relaxed = groups_needed(rate, tpl, 1.0)?.max(min_groups).max(1);
                 if relaxed < serving {
                     actions.push(PlannedAction {
                         at_hour: t,
@@ -126,7 +144,7 @@ pub fn plan_day(
         }
         t += step_h;
     }
-    actions
+    Ok(actions)
 }
 
 /// Rolling upgrade order: one group after another, never emptying the
@@ -160,17 +178,34 @@ mod tests {
     #[test]
     fn groups_needed_scales() {
         let t = tpl();
-        let one = groups_needed(t.group_rps * 0.5, &t, 1.0);
-        let four = groups_needed(t.group_rps * 3.5, &t, 1.0);
+        let one = groups_needed(t.group_rps * 0.5, &t, 1.0).unwrap();
+        let four = groups_needed(t.group_rps * 3.5, &t, 1.0).unwrap();
         assert_eq!(one, 1);
         assert_eq!(four, 4);
-        assert_eq!(groups_needed(0.0, &t, 1.2), 0);
+        assert_eq!(groups_needed(0.0, &t, 1.2).unwrap(), 0);
+    }
+
+    #[test]
+    fn groups_needed_rejects_degenerate_template() {
+        // Regression: a zero-capability template divided through to
+        // `inf`, which `as usize` saturates to usize::MAX — an absurd
+        // "plan" that a caller would happily try to provision.
+        let dead = GroupTemplate { n_p: 2, n_d: 2, group_rps: 0.0 };
+        assert!(groups_needed(10.0, &dead, 1.2).is_err());
+        let nan = GroupTemplate { n_p: 1, n_d: 1, group_rps: f64::NAN };
+        assert!(groups_needed(10.0, &nan, 1.2).is_err());
+        // Invalid queries are errors too, not silent zeros.
+        let t = tpl();
+        assert!(groups_needed(f64::INFINITY, &t, 1.2).is_err());
+        assert!(groups_needed(10.0, &t, 0.0).is_err());
+        // And the planner propagates instead of provisioning usize::MAX.
+        assert!(plan_day(0, 10.0, &dead, 0.25, 1).is_err());
     }
 
     #[test]
     fn day_plan_has_tidal_switch_and_scaling() {
         let t = tpl();
-        let actions = plan_day(0, t.group_rps * 6.0, &t, 0.25, 1);
+        let actions = plan_day(0, t.group_rps * 6.0, &t, 0.25, 1).unwrap();
         let has = |f: &dyn Fn(&Action) -> bool| actions.iter().any(|a| f(&a.action));
         assert!(has(&|a| matches!(a, Action::SwitchToTraining)), "{actions:?}");
         assert!(has(&|a| matches!(a, Action::SwitchToInference)));
@@ -184,7 +219,7 @@ mod tests {
     fn day_plan_capacity_tracks_traffic() {
         let t = tpl();
         let peak = t.group_rps * 6.0;
-        let actions = plan_day(2, peak, &t, 0.25, 1);
+        let actions = plan_day(2, peak, &t, 0.25, 1).unwrap();
         // At every action point, serving capacity with headroom covers the
         // instantaneous rate (unless switched to training).
         for a in &actions {

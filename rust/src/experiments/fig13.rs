@@ -71,6 +71,7 @@ pub fn fig13b() -> Vec<PlannedAction> {
     let profile = WorkloadProfile::from_means(1800, 1350, 16, 4, 16, 8.0);
     let tpl = GroupTemplate::from_profile(&engine, &profile, 2, 2);
     plan_day(0, tpl.group_rps * 6.0, &tpl, 0.25, 1)
+        .expect("default engine template has positive capability")
 }
 
 pub fn fig13c() -> RecoveryReport {

@@ -1,0 +1,196 @@
+//! Fig. 13a companion — dynamic P/D ratio vs every static ratio, measured
+//! end to end under the same tidal day instead of analytically.
+//!
+//! Two scenario groups with opposed workload shapes share one instance
+//! budget: a prompt-heavy digest scene (Eq.-1 optimum ≈ 5:1) and a
+//! generation-heavy chat scene (optimum ≈ 1:5). Every *uniform* static
+//! ratio is wrong for at least one of them; the closed loop
+//! (`serving::fleet`) adapts each group from 3:3 toward its own optimum
+//! mid-run. The dynamic fleet must therefore beat every static ratio on
+//! E2E throughput — the Fig. 13a story under scenario diversity.
+//!
+//! All variants see the identical arrival stream (the fleet PRNG draws the
+//! same sequence regardless of ratio policy), so the comparison is paired.
+
+use crate::serving::fleet::{FleetConfig, FleetSim};
+use crate::workload::Scenario;
+
+use super::Scale;
+
+pub struct FleetRow {
+    pub label: String,
+    pub rps: f64,
+    pub slo_attainment: f64,
+    pub completed: usize,
+    pub adjustments: usize,
+}
+
+pub struct FleetCompare {
+    /// Dynamic first, then static ratios in P-ascending order.
+    pub rows: Vec<FleetRow>,
+    pub dynamic_rps: f64,
+    pub best_static_rps: f64,
+    pub dynamic_adjustments: usize,
+}
+
+/// Two shapes with opposed Eq.-1 optima (cf. `ratio::optimal_ratio`).
+fn opposed_scenes() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            // Document digest: very long prompts, tiny outputs — wants P.
+            name: "doc-digest", service: "svcA",
+            prompt_mean: 4000.0, prompt_cv: 0.3,
+            n_prefixes: 8, prefix_frac: 0.25,
+            gen_mean: 24.0, gen_cv: 0.4, weight: 1.0,
+        },
+        Scenario {
+            // Long-form chat: short prompts, long outputs — wants D.
+            name: "long-chat", service: "svcB",
+            prompt_mean: 600.0, prompt_cv: 0.4,
+            n_prefixes: 8, prefix_frac: 0.5,
+            gen_mean: 220.0, gen_cv: 0.5, weight: 1.0,
+        },
+    ]
+}
+
+fn base_cfg(scale: Scale) -> FleetConfig {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    FleetConfig {
+        scenarios: opposed_scenes(),
+        scenes: vec![0, 1],
+        // Saturating at the peaks: throughput is capacity-bound there, so
+        // the achieved rate reflects each variant's P/D split.
+        peak_total_rps: 24.0,
+        hours: 24.0,
+        ms_per_hour: if fast { 1_500.0 } else { 4_000.0 },
+        control_period_ms: if fast { 1_500.0 } else { 2_000.0 },
+        group_total: 6,
+        // One group per scene and no scaling: every variant spends the
+        // identical 12-instance budget, isolating the ratio policy.
+        min_groups_per_scene: 1,
+        max_groups_per_scene: 1,
+        scale_groups: false,
+        seed: 0xF13A,
+        ..Default::default()
+    }
+}
+
+fn run_variant(scale: Scale, static_ratio: Option<(usize, usize)>) -> FleetRow {
+    let mut cfg = base_cfg(scale);
+    match static_ratio {
+        Some(r) => {
+            cfg.init_ratio = r;
+            cfg.adjust_ratio = false;
+        }
+        None => {
+            cfg.init_ratio = (3, 3);
+            cfg.adjust_ratio = true;
+        }
+    }
+    let label = match static_ratio {
+        Some((p, d)) => format!("static {p}:{d}"),
+        None => "dynamic (closed loop)".to_string(),
+    };
+    let out = FleetSim::new(cfg).run();
+    FleetRow {
+        label,
+        rps: out.rps,
+        slo_attainment: out.slo_attainment,
+        completed: out.completed,
+        adjustments: out.adjustments,
+    }
+}
+
+pub fn fleet_dynamic_vs_static(scale: Scale) -> FleetCompare {
+    let mut rows = vec![run_variant(scale, None)];
+    for p in 1..6 {
+        rows.push(run_variant(scale, Some((p, 6 - p))));
+    }
+    let dynamic_rps = rows[0].rps;
+    let dynamic_adjustments = rows[0].adjustments;
+    let best_static_rps = rows[1..].iter().map(|r| r.rps).fold(0.0, f64::max);
+    FleetCompare { rows, dynamic_rps, best_static_rps, dynamic_adjustments }
+}
+
+pub fn run(scale: Scale) {
+    let f = fleet_dynamic_vs_static(scale);
+    let rows: Vec<(String, String)> = f
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                r.label.clone(),
+                format!(
+                    "{:.2} rps  ({} completed, {:.0}% TTFT-SLO)",
+                    r.rps,
+                    r.completed,
+                    r.slo_attainment * 100.0
+                ),
+            )
+        })
+        .collect();
+    super::table(
+        "Fig 13a (fleet) — dynamic vs static P/D ratio, tidal day, paired arrivals",
+        ("ratio policy", "E2E throughput"),
+        &rows,
+    );
+    println!(
+        "dynamic over best static: {:+.0}% throughput ({} mid-run adjustments)",
+        (f.dynamic_rps / f.best_static_rps - 1.0) * 100.0,
+        f.dynamic_adjustments
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_ratio_beats_every_static_ratio() {
+        let f = fleet_dynamic_vs_static(Scale::fast());
+        assert!(
+            f.dynamic_adjustments >= 1,
+            "the closed loop never adjusted a ratio"
+        );
+        for r in &f.rows[1..] {
+            assert!(
+                f.dynamic_rps >= r.rps,
+                "dynamic {:.3} rps < {} at {:.3} rps",
+                f.dynamic_rps,
+                r.label,
+                r.rps
+            );
+        }
+        // The margin over the best static ratio is material, not a tie —
+        // the paper's Fig. 13a shows ≥ 60% over the *worst* ratio; under
+        // scenario diversity the uniform *best* still loses clearly.
+        assert!(
+            f.dynamic_rps > f.best_static_rps * 1.05,
+            "dynamic {:.3} vs best static {:.3}",
+            f.dynamic_rps,
+            f.best_static_rps
+        );
+    }
+
+    #[test]
+    fn opposed_scenes_have_opposed_optima() {
+        use crate::cluster::engine::EngineModel;
+        use crate::coordinator::ratio::{optimal_ratio, WorkloadProfile};
+        let e = EngineModel::default();
+        let mk = |sc: &crate::workload::Scenario| {
+            WorkloadProfile::from_means(
+                sc.prompt_mean as usize,
+                (sc.prompt_mean * sc.prefix_frac) as usize,
+                sc.gen_mean as usize,
+                2,
+                16,
+                10.0,
+            )
+        };
+        let scenes = opposed_scenes();
+        let (p0, d0) = optimal_ratio(&e, &mk(&scenes[0]), 6, 1);
+        let (p1, d1) = optimal_ratio(&e, &mk(&scenes[1]), 6, 1);
+        assert!(p0 > d0, "digest scene must want prefill: {p0}:{d0}");
+        assert!(d1 > p1, "chat scene must want decode: {p1}:{d1}");
+    }
+}

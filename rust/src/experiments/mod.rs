@@ -8,6 +8,7 @@
 
 pub mod ext;
 pub mod fig01;
+pub mod fleet;
 pub mod fig02;
 pub mod fig03;
 pub mod fig04;
@@ -68,6 +69,9 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         if want(&["14", "14a", "14b", "14c", "14d"]) {
             fig14::run(if all { "14" } else { &fig }, scale);
         }
+        if want(&["fleet", "13e"]) {
+            fleet::run(scale);
+        }
         if want(&["headline"]) {
             headline::run(scale);
         }
@@ -79,7 +83,7 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, headline, all)");
         return 2;
     }
     0

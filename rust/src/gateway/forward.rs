@@ -39,12 +39,20 @@ impl OnDemandForwarder {
         OnDemandForwarder { retry_candidates, retry_interval_ms }
     }
 
-    /// One probe round for a request that arrived at `arrival_ms` with
-    /// TTFT deadline `deadline_ms` (absolute). `accepts(e)` asks entrance
-    /// `e` whether it is idle (the prefill-side accept/reject).
+    /// One probe round for a request with TTFT deadline `deadline_ms`
+    /// (absolute). `accepts(e)` asks entrance `e` whether it is idle (the
+    /// prefill-side accept/reject).
+    ///
+    /// `salt` breaks ties in the least-SSE ordering pseudo-randomly. With
+    /// the unsalted ordering every gateway prefers the lowest entrance id
+    /// whenever counts tie, so a cluster of gateways herds its probes onto
+    /// entrance 0 — exactly the stampede `SseRegistry::by_least_loaded`
+    /// warns about. Callers pass a per-round random salt (simulator) or a
+    /// per-gateway seed (real server).
     pub fn probe(
         &self,
         sse: &SseRegistry,
+        salt: u64,
         now_ms: f64,
         deadline_ms: f64,
         mut accepts: impl FnMut(u32) -> bool,
@@ -52,7 +60,10 @@ impl OnDemandForwarder {
         if now_ms >= deadline_ms {
             return ForwardDecision::Timeout;
         }
-        for e in sse.by_least_loaded().into_iter().take(self.retry_candidates)
+        for e in sse
+            .by_least_loaded_salted(salt)
+            .into_iter()
+            .take(self.retry_candidates)
         {
             if accepts(e) {
                 return ForwardDecision::Accept(e);
@@ -81,7 +92,7 @@ mod tests {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 5), (1, 1), (2, 3)]);
         // Entrance 1 is least loaded and idle.
-        let d = f.probe(&r, 0.0, 1000.0, |e| e == 1 || e == 0);
+        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 1 || e == 0);
         assert_eq!(d, ForwardDecision::Accept(1));
     }
 
@@ -90,7 +101,7 @@ mod tests {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0), (1, 1), (2, 2)]);
         // 0 and 1 reject (occupied); 2 accepts.
-        let d = f.probe(&r, 0.0, 1000.0, |e| e == 2);
+        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 2);
         assert_eq!(d, ForwardDecision::Accept(2));
     }
 
@@ -100,7 +111,7 @@ mod tests {
         let r = sse(&[(0, 0), (1, 1), (2, 2)]);
         // Only entrances 0 and 1 probed; 2 would accept but is out of the
         // top-ranked subset this round.
-        let d = f.probe(&r, 0.0, 1000.0, |e| e == 2);
+        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 2);
         assert_eq!(d, ForwardDecision::RetryLater);
     }
 
@@ -108,8 +119,37 @@ mod tests {
     fn deadline_terminates() {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0)]);
-        let d = f.probe(&r, 1000.0, 1000.0, |_| true);
+        let d = f.probe(&r, 0, 1000.0, 1000.0, |_| true);
         assert_eq!(d, ForwardDecision::Timeout);
+    }
+
+    #[test]
+    fn salted_ties_do_not_herd_onto_entrance_zero() {
+        // Regression: with tied SSE counts, the unsalted ordering made
+        // every probe round start at entrance 0. Distinct salts must
+        // spread the first candidate across entrances.
+        let f = OnDemandForwarder::new(4, 5.0);
+        let r = sse(&[(0, 0), (1, 0), (2, 0), (3, 0)]);
+        let mut firsts = std::collections::BTreeSet::new();
+        for salt in 0..32u64 {
+            match f.probe(&r, salt, 0.0, 1000.0, |_| true) {
+                ForwardDecision::Accept(e) => {
+                    firsts.insert(e);
+                }
+                other => panic!("unexpected decision {other:?}"),
+            }
+        }
+        assert!(
+            firsts.len() > 1,
+            "32 salts all probed entrance {firsts:?} first — herd behavior"
+        );
+        // Load still dominates the salt: a strictly least-loaded entrance
+        // is probed first regardless of salt.
+        let loaded = sse(&[(0, 2), (1, 1), (2, 2)]);
+        for salt in 0..8u64 {
+            let d = f.probe(&loaded, salt, 0.0, 1000.0, |_| true);
+            assert_eq!(d, ForwardDecision::Accept(1));
+        }
     }
 
     #[test]
@@ -122,7 +162,7 @@ mod tests {
         let mut accepted = 0;
         let mut retries = 0;
         for _ in 0..4 {
-            let d = f.probe(&r, 0.0, 100.0, |e| {
+            let d = f.probe(&r, 0, 0.0, 100.0, |e| {
                 let i = e as usize;
                 if busy[i] {
                     false

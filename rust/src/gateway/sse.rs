@@ -34,10 +34,17 @@ impl SseRegistry {
     }
 
     pub fn close(&mut self, e: u32) {
-        let c = self.counts.entry(e).or_insert(0);
-        debug_assert!(*c > 0, "close without open on entrance {e}");
-        *c = c.saturating_sub(1);
-        self.closed += 1;
+        // A close for an entrance that has been removed (scale-in / fault)
+        // is a no-op: `remove_entrance` already accounted its live
+        // connections as closed, so counting here again would break the
+        // `opened - closed == live()` invariant.
+        if let Some(c) = self.counts.get_mut(&e) {
+            debug_assert!(*c > 0, "close without open on entrance {e}");
+            if *c > 0 {
+                *c -= 1;
+                self.closed += 1;
+            }
+        }
     }
 
     pub fn count(&self, e: u32) -> usize {
@@ -46,6 +53,27 @@ impl SseRegistry {
 
     pub fn live(&self) -> usize {
         self.counts.values().sum()
+    }
+
+    /// Lifetime connections opened (monotone).
+    pub fn opened(&self) -> u64 {
+        self.opened
+    }
+
+    /// Lifetime connections closed, including those force-closed when an
+    /// entrance is removed. Invariant: `opened - closed == live()`.
+    pub fn closed(&self) -> u64 {
+        self.closed
+    }
+
+    /// Number of registered entrances.
+    pub fn n_entrances(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Is `e` a registered entrance?
+    pub fn has_entrance(&self, e: u32) -> bool {
+        self.counts.contains_key(&e)
     }
 
     /// Entrances ordered by ascending live-connection count (ties by id) —
@@ -78,9 +106,12 @@ impl SseRegistry {
         self.counts.entry(e).or_insert(0);
     }
 
-    /// Remove an entrance (scale-in / fault). Its connections are dropped.
+    /// Remove an entrance (scale-in / fault). Its live connections are
+    /// force-closed and accounted, preserving `opened - closed == live()`.
     pub fn remove_entrance(&mut self, e: u32) -> usize {
-        self.counts.remove(&e).unwrap_or(0)
+        let dropped = self.counts.remove(&e).unwrap_or(0);
+        self.closed += dropped as u64;
+        dropped
     }
 }
 
@@ -125,5 +156,83 @@ mod tests {
     fn ties_broken_by_id() {
         let r = SseRegistry::new([3, 1, 2]);
         assert_eq!(r.by_least_loaded(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn remove_entrance_preserves_open_close_invariant() {
+        // Regression: scale-in/fault dropped an entrance's live
+        // connections without bumping `closed`, silently breaking
+        // `opened - closed == live()` for the rest of the run.
+        let mut r = SseRegistry::new([0, 1, 2]);
+        r.open(0);
+        r.open(1);
+        r.open(1);
+        r.open(2);
+        assert_eq!(r.opened() - r.closed(), r.live() as u64);
+        // Scale-in entrance 1 with two live connections.
+        assert_eq!(r.remove_entrance(1), 2);
+        assert_eq!(r.live(), 2);
+        assert_eq!(r.opened(), 4);
+        assert_eq!(r.closed(), 2);
+        assert_eq!(r.opened() - r.closed(), r.live() as u64);
+        // A late close for a connection that rode the removed entrance is
+        // a no-op (already accounted by remove_entrance), not a double
+        // count.
+        r.close(1);
+        assert_eq!(r.closed(), 2);
+        assert_eq!(r.opened() - r.closed(), r.live() as u64);
+        // Normal lifecycle continues to balance.
+        r.close(0);
+        r.close(2);
+        assert_eq!(r.live(), 0);
+        assert_eq!(r.opened(), r.closed());
+    }
+
+    #[test]
+    fn invariant_holds_across_random_lifecycle() {
+        // Property: opened - closed == live() through any interleaving of
+        // open/close/add_entrance/remove_entrance (the fleet loop's
+        // scale-out, scale-in and fault paths).
+        let cfg = crate::util::prop::Config { cases: 64, ..Default::default() };
+        crate::util::prop::check(
+            "sse-open-close-invariant",
+            &cfg,
+            |r| {
+                let ops: Vec<(u8, u32)> = (0..r.below(60) + 10)
+                    .map(|_| (r.below(4) as u8, r.below(6) as u32))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut reg = SseRegistry::new([0, 1, 2]);
+                for &(op, e) in ops {
+                    match op {
+                        0 => {
+                            if reg.has_entrance(e) {
+                                reg.open(e);
+                            }
+                        }
+                        1 => {
+                            if reg.count(e) > 0 {
+                                reg.close(e);
+                            }
+                        }
+                        2 => reg.add_entrance(e),
+                        _ => {
+                            reg.remove_entrance(e);
+                        }
+                    }
+                    if reg.opened() - reg.closed() != reg.live() as u64 {
+                        return Err(format!(
+                            "opened {} - closed {} != live {}",
+                            reg.opened(),
+                            reg.closed(),
+                            reg.live()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -122,6 +122,12 @@ pub fn scatter_into_blocks(
         blocks[i].clear();
         blocks[i].extend_from_slice(chunk);
     }
+    // Blocks beyond `needed` may be reused from a previous (larger)
+    // request; clear them so a later gather can never resurrect stale KV
+    // bytes past this payload's end.
+    for b in blocks.iter_mut().skip(needed) {
+        b.clear();
+    }
     Ok(needed)
 }
 
@@ -208,6 +214,29 @@ mod tests {
         assert_eq!(used, 11);
         let back = gather_from_blocks(&blocks, payload.len()).unwrap();
         assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn block_reuse_cannot_resurrect_previous_cache() {
+        // Regression: scatter only cleared blocks 0..needed, so reusing a
+        // block list for a smaller request left the old request's KV bytes
+        // in the tail; a gather sized for the old payload then returned a
+        // Frankenstein cache (new head, stale tail).
+        let block_bytes = 64;
+        let old: Vec<u8> = (0..640).map(|i| (i % 251) as u8).collect(); // 10 blocks
+        let new: Vec<u8> = (0..200).map(|i| (255 - i % 241) as u8).collect(); // 4 blocks
+        let mut blocks = vec![Vec::new(); 10];
+        assert_eq!(scatter_into_blocks(&old, &mut blocks, block_bytes).unwrap(), 10);
+        assert_eq!(scatter_into_blocks(&new, &mut blocks, block_bytes).unwrap(), 4);
+        // The new payload round-trips…
+        assert_eq!(gather_from_blocks(&blocks, new.len()).unwrap(), new);
+        // …and a gather sized for the *old* request must fail instead of
+        // resurrecting its bytes from the reused tail.
+        assert!(
+            gather_from_blocks(&blocks, old.len()).is_err(),
+            "stale tail bytes survived block reuse"
+        );
+        assert!(blocks[4..].iter().all(Vec::is_empty));
     }
 
     #[test]

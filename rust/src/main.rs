@@ -3,6 +3,8 @@
 //! Subcommands:
 //! - `serve`   run the real-model serving engine on the PJRT CPU client
 //! - `repro`   regenerate a paper figure/table (`--fig 14a`, `--fig all`)
+//! - `fleet`   one simulated day of multi-group tidal serving with the
+//!             closed MLOps loop (dynamic P/D ratio + group scaling)
 //! - `runtime` smoke-test artifact loading and one request
 //! - `info`    print artifact + config summary
 
@@ -15,13 +17,14 @@ fn main() {
         Some("serve") => pd_serve::serving::server::cmd_serve(&args),
         Some("repro") => pd_serve::experiments::cmd_repro(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("info") => cmd_info(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
             }
             eprintln!(
-                "usage: pdserve <serve|repro|simulate|runtime|info> \
+                "usage: pdserve <serve|repro|simulate|fleet|runtime|info> \
                  [--artifacts DIR] [--config FILE] [--fig ID] ..."
             );
             2
@@ -88,6 +91,78 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     for (i, busy) in out.prefill_busy_frac.iter().enumerate() {
         println!("prefill[{i}] busy {:.0}%", busy * 100.0);
     }
+    0
+}
+
+/// `pdserve fleet`: one simulated day of multi-group, tidal-traffic
+/// serving with the closed MLOps loop — per-group P/D ratio adjustment
+/// plus group-granular scale-in/out and the training switch.
+///
+/// Flags: `--peak-rps R --hours H --ms-per-hour MS --group-size N`
+/// `--ratio P:D --scenes 0,2,5 --control-ms MS --seed S`
+/// `--static` (freeze ratios) `--no-scale` (freeze group counts)
+/// `--quiet` (summary only, no timeline).
+fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
+    use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+    use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
+
+    let mut cfg = FleetConfig::default();
+    if let Some(path) = args.get("config") {
+        match Doc::load(path) {
+            Ok(doc) => {
+                cfg.engine = EngineConfig::from_doc(&doc);
+                cfg.serving = ServingConfig::from_doc(&doc);
+            }
+            Err(e) => {
+                eprintln!("config: {e}");
+                return 2;
+            }
+        }
+    }
+    cfg.peak_total_rps = args.get_f64("peak-rps", cfg.peak_total_rps);
+    cfg.hours = args.get_f64("hours", cfg.hours);
+    cfg.ms_per_hour = args.get_f64("ms-per-hour", cfg.ms_per_hour);
+    cfg.control_period_ms = args.get_f64("control-ms", cfg.control_period_ms);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.group_total = args.get_usize("group-size", cfg.group_total);
+    cfg.init_ratio = match args.get("ratio") {
+        Some(r) => {
+            let parts: Vec<usize> =
+                r.split(':').filter_map(|x| x.parse().ok()).collect();
+            if parts.len() != 2 || parts[0] == 0 || parts[1] == 0 {
+                eprintln!("--ratio must be P:D with both sides > 0, got '{r}'");
+                return 2;
+            }
+            cfg.group_total = parts[0] + parts[1];
+            (parts[0], parts[1])
+        }
+        // Near-even split of whatever --group-size asked for.
+        None => (cfg.group_total - cfg.group_total / 2, cfg.group_total / 2),
+    };
+    if let Some(s) = args.get("scenes") {
+        let scenes: Vec<usize> =
+            s.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+        if scenes.is_empty() || scenes.iter().any(|&i| i >= cfg.scenarios.len()) {
+            eprintln!(
+                "--scenes must list indices < {} (got '{s}')",
+                cfg.scenarios.len()
+            );
+            return 2;
+        }
+        cfg.scenes = scenes;
+    }
+    if args.has("static") {
+        cfg.adjust_ratio = false;
+    }
+    if args.has("no-scale") {
+        cfg.scale_groups = false;
+    }
+    if cfg.group_total < 2 {
+        eprintln!("--group-size must be >= 2");
+        return 2;
+    }
+    let out = FleetSim::new(cfg).run();
+    out.print_summary(!args.has("quiet"));
     0
 }
 

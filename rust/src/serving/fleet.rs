@@ -1,0 +1,964 @@
+//! Fleet-level closed-loop serving: the paper's headline contribution #1
+//! (§3.2–§3.4, Figs. 2 & 13) end to end.
+//!
+//! Multiple scenario-specific P/D groups (`coordinator::group::PdGroup`)
+//! run on one shared `sim::EventQueue`. Tidal, scene-phased traffic
+//! (`workload::traffic::scene_rate_rps`) drives per-group externally-fed
+//! serving simulations, and a periodic control loop closes the MLOps
+//! circuit the seed left dangling:
+//!
+//! 1. collect per-group TTFT/E2E windows (`Simulation::take_window`),
+//! 2. run the bottleneck detector (`ratio::detect_bottleneck`, with a
+//!    utilization-gap fallback for the regime where early intervention
+//!    sheds the latency signal into timeouts),
+//! 3. migrate instances between the P and D sides of a group — the
+//!    dynamic ratio adjustment, reflected in both the serving pools and
+//!    the group's role map,
+//! 4. plan per-scene capacity from the observed rate
+//!    (`mlops::groups_needed`) and scale groups in/out, registering and
+//!    removing gateway entrances through `SseRegistry::{add,remove}_entrance`,
+//! 5. release capacity to training at the tidal trough
+//!    (`TRAINING_SWITCH_FRACTION`) and reclaim it on the ramp.
+//!
+//! `pdserve fleet` runs one simulated day; `experiments::fleet` reproduces
+//! the Fig. 13a story — the dynamic ratio beats every static ratio on E2E
+//! throughput under the same tidal curve.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::device::RoceIp;
+use crate::cluster::engine::{EngineModel, PrefillItem};
+use crate::cluster::instance::{InstanceId, Role};
+use crate::coordinator::group::{GroupId, PdGroup};
+use crate::coordinator::mlops::{groups_needed, GroupTemplate};
+use crate::coordinator::ratio::{
+    detect_bottleneck, optimal_ratio, Adjustment, DetectorThresholds, WorkloadProfile,
+};
+use crate::serving::sim::{SimConfig, Simulation, WindowStats, WorkloadKind};
+use crate::sim::EventQueue;
+use crate::util::config::{EngineConfig, ServingConfig};
+use crate::util::prng::Rng;
+use crate::workload::traffic::{scene_rate_rps, TRAINING_SWITCH_FRACTION};
+use crate::workload::{Request, Scenario};
+
+/// Assumed D2D transfer time for capacity planning (ms) — the ξ term.
+const XFER_EST_MS: f64 = 10.0;
+
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub scenarios: Vec<Scenario>,
+    /// Scenes (indices into `scenarios`) that receive serving groups.
+    pub scenes: Vec<usize>,
+    pub engine: EngineConfig,
+    pub serving: ServingConfig,
+    /// Fleet-wide peak arrival rate; split across scenes by weight and
+    /// shaped by each scene's phased diurnal curve.
+    pub peak_total_rps: f64,
+    /// Simulated day length (hours) and virtual-time compression.
+    pub hours: f64,
+    pub ms_per_hour: f64,
+    /// Wall-clock hour the simulation starts at (7.0 = morning ramp).
+    pub start_hour: f64,
+    /// Instances per group; ratio adjustment conserves this total.
+    pub group_total: usize,
+    /// Initial per-group (n_p, n_d).
+    pub init_ratio: (usize, usize),
+    pub min_groups_per_scene: usize,
+    pub max_groups_per_scene: usize,
+    /// Control-loop period (virtual ms).
+    pub control_period_ms: f64,
+    /// Arrival-generation slice (virtual ms).
+    pub slice_ms: f64,
+    pub thresholds: DetectorThresholds,
+    /// Close the ratio loop (off = static ratios, the Fig. 13a baselines).
+    pub adjust_ratio: bool,
+    /// Close the capacity loop (group scale-in/out + training switch).
+    pub scale_groups: bool,
+    /// Scale-out headroom (scale-in relaxes to 1.0 — hysteresis).
+    pub headroom: f64,
+    /// Minimum window outcomes before the detector may act.
+    pub min_window_total: usize,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            scenarios: crate::workload::standard_scenarios(),
+            // Classification (prompt-heavy), chat (gen-heavy), intent
+            // (tiny): three shapes with phased peaks.
+            scenes: vec![0, 2, 5],
+            engine: EngineConfig::default(),
+            serving: ServingConfig::default(),
+            peak_total_rps: 40.0,
+            hours: 24.0,
+            ms_per_hour: 5_000.0,
+            start_hour: 7.0,
+            group_total: 6,
+            init_ratio: (3, 3),
+            min_groups_per_scene: 1,
+            max_groups_per_scene: 4,
+            control_period_ms: 2_500.0,
+            slice_ms: 500.0,
+            // share_delta tighter than the figure-level default: per-scene
+            // T_p shares can sit below 5% (gen-heavy scenes), where a 0.05
+            // absolute band would never trip.
+            thresholds: DetectorThresholds { e2e_growth: 0.2, share_delta: 0.02 },
+            adjust_ratio: true,
+            scale_groups: true,
+            headroom: 1.2,
+            min_window_total: 5,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+/// One logged control action.
+#[derive(Clone, Debug)]
+pub struct FleetLogEntry {
+    pub hour: f64,
+    pub scene: usize,
+    pub group: u32,
+    pub what: String,
+}
+
+/// Aggregate result of one fleet day.
+#[derive(Debug)]
+pub struct FleetOutput {
+    pub injected: usize,
+    pub completed: usize,
+    pub timed_out: usize,
+    /// Completed requests per virtual second over the whole day.
+    pub rps: f64,
+    /// TTFT-SLO attainment (timeouts count against).
+    pub slo_attainment: f64,
+    pub mean_ttft_ms: f64,
+    pub mean_e2e_ms: f64,
+    pub adjustments: usize,
+    pub scale_outs: usize,
+    pub scale_ins: usize,
+    pub training_switches: usize,
+    /// Peak concurrently-serving instances (groups × members).
+    pub peak_instances: usize,
+    /// Surviving groups' (scene, n_p, n_d).
+    pub final_ratios: Vec<(usize, usize, usize)>,
+    /// Per control window: (hour, offered rps, served rps).
+    pub served_curve: Vec<(f64, f64, f64)>,
+    pub timeline: Vec<FleetLogEntry>,
+}
+
+impl FleetOutput {
+    pub fn total(&self) -> usize {
+        self.completed + self.timed_out
+    }
+
+    pub fn print_summary(&self, with_timeline: bool) {
+        println!(
+            "fleet day: injected {} | completed {} ({:.1}% SLO) | timed out {} | {:.2} rps",
+            self.injected,
+            self.completed,
+            self.slo_attainment * 100.0,
+            self.timed_out,
+            self.rps
+        );
+        println!(
+            "mean TTFT {:.0} ms | mean E2E {:.0} ms | peak instances {}",
+            self.mean_ttft_ms, self.mean_e2e_ms, self.peak_instances
+        );
+        println!(
+            "control actions: {} ratio adjustments, {} scale-outs, {} scale-ins, {} training switches",
+            self.adjustments, self.scale_outs, self.scale_ins, self.training_switches
+        );
+        for (scene, n_p, n_d) in &self.final_ratios {
+            println!("  scene {scene}: final ratio {n_p}:{n_d}");
+        }
+        let offered: Vec<f64> = self.served_curve.iter().map(|c| c.1).collect();
+        let served: Vec<f64> = self.served_curve.iter().map(|c| c.2).collect();
+        if !served.is_empty() {
+            println!("offered {}", crate::experiments::spark(&offered));
+            println!("served  {}", crate::experiments::spark(&served));
+        }
+        if with_timeline {
+            println!("timeline:");
+            for e in &self.timeline {
+                let group = if e.group == u32::MAX {
+                    "  —".to_string()
+                } else {
+                    format!("{:>3}", e.group)
+                };
+                println!("  {:>5.2} h  scene {}  group {group}  {}", e.hour, e.scene, e.what);
+            }
+        }
+    }
+}
+
+/// Per-scene planning state derived once from the engine model.
+struct ScenePlan {
+    /// Capacity template at the scene's Eq.-1-optimal in-group ratio.
+    template: GroupTemplate,
+    /// Analytic healthy-profile reference for the detector:
+    /// (E2E ms, T_p share).
+    baseline: (f64, f64),
+    training: bool,
+}
+
+struct FleetGroup {
+    meta: PdGroup,
+    sim: Simulation,
+    scene: usize,
+    /// sim prefill entrance -> coordinator instance.
+    prefill_inst: BTreeMap<usize, InstanceId>,
+    /// sim decode slot -> coordinator instance.
+    decode_inst: BTreeMap<usize, InstanceId>,
+    /// Control ticks to wait before the detector may act again.
+    cooldown: u32,
+    /// A decode cordoned for a D→P role flip, waiting for its committed
+    /// work to drain: (sim decode slot, coordinator instance). The prefill
+    /// side grows only once the drain completes, so the group never
+    /// exceeds its instance budget mid-migration.
+    pending_flip: Option<(usize, InstanceId)>,
+    draining: bool,
+}
+
+impl FleetGroup {
+    fn id(&self) -> u32 {
+        self.meta.id.0
+    }
+}
+
+#[derive(Clone, Debug)]
+enum FleetEv {
+    /// Generate the next slice of arrivals for `scene`.
+    Slice { scene: usize },
+    Arrival { scene: usize, req: Request },
+    Control,
+}
+
+pub struct FleetSim {
+    cfg: FleetConfig,
+    q: EventQueue<FleetEv>,
+    groups: Vec<FleetGroup>,
+    plans: BTreeMap<usize, ScenePlan>,
+    total_weight: f64,
+    rng: Rng,
+    next_group_id: u32,
+    next_instance_id: u32,
+    next_req_id: u64,
+    // Accounting.
+    injected: usize,
+    win_injected: usize,
+    totals: WindowStats,
+    adjustments: usize,
+    scale_outs: usize,
+    scale_ins: usize,
+    training_switches: usize,
+    peak_instances: usize,
+    served_curve: Vec<(f64, f64, f64)>,
+    timeline: Vec<FleetLogEntry>,
+}
+
+/// The simulator's adaptive batch formation caps the prefill batch at the
+/// largest size whose predicted time still meets the TTFT threshold;
+/// planning must assume the same batch or it will misjudge prompt-heavy
+/// scenes (whole-batch T_p above the threshold never happens in serving).
+fn feasible_prefill_batch(
+    engine: &EngineModel,
+    serving: &ServingConfig,
+    prompt: usize,
+    cached: usize,
+) -> (usize, f64) {
+    let threshold = serving.ttft_threshold_ms(prompt);
+    let item = PrefillItem { prompt_len: prompt, cached_len: cached };
+    let mut best = (1, engine.prefill_batch_ms(&[item]));
+    for b in 2..=serving.prefill_batch.max(1) {
+        let t = engine.prefill_batch_ms(&vec![item; b]);
+        if t <= threshold * 0.95 {
+            best = (b, t);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+fn scene_plan(
+    engine: &EngineModel,
+    serving: &ServingConfig,
+    sc: &Scenario,
+    group_total: usize,
+) -> (ScenePlan, WorkloadProfile) {
+    let prompt = sc.prompt_mean.round() as usize;
+    let cached = (sc.prompt_mean * sc.prefix_frac).round() as usize;
+    let gen = (sc.gen_mean.round() as usize).max(1);
+    let (bp, ttft_ms) = feasible_prefill_batch(engine, serving, prompt, cached);
+    let bd = serving.decode_batch;
+    let profile = WorkloadProfile::from_means(prompt, cached, gen, bp, bd, XFER_EST_MS);
+    let (n_p, n_d) = optimal_ratio(engine, &profile, group_total, 1);
+    let template = GroupTemplate::from_profile(engine, &profile, n_p, n_d);
+    assert!(
+        template.group_rps.is_finite() && template.group_rps > 0.0,
+        "scene '{}' yields a degenerate group template",
+        sc.name
+    );
+    let e2e = ttft_ms + XFER_EST_MS + engine.tpot_ms(bd, profile.ctx_len) * gen as f64;
+    let plan = ScenePlan {
+        template,
+        baseline: (e2e, ttft_ms / e2e),
+        training: false,
+    };
+    (plan, profile)
+}
+
+impl FleetSim {
+    pub fn new(cfg: FleetConfig) -> Self {
+        assert!(!cfg.scenes.is_empty(), "fleet needs at least one scene");
+        assert!(cfg.group_total >= 2, "a group needs at least 1P + 1D");
+        assert!(
+            cfg.init_ratio.0 >= 1 && cfg.init_ratio.1 >= 1,
+            "both sides of the initial ratio need an instance"
+        );
+        assert_eq!(
+            cfg.init_ratio.0 + cfg.init_ratio.1,
+            cfg.group_total,
+            "init ratio must sum to group_total"
+        );
+        assert!(
+            cfg.max_groups_per_scene >= cfg.min_groups_per_scene.max(1),
+            "max_groups_per_scene below the per-scene floor"
+        );
+        assert!(cfg.ms_per_hour > 0.0 && cfg.hours > 0.0);
+        let engine = EngineModel::new(cfg.engine.clone());
+        let total_weight: f64 = cfg
+            .scenes
+            .iter()
+            .map(|&s| cfg.scenarios[s].weight)
+            .sum();
+        let mut plans = BTreeMap::new();
+        for &s in &cfg.scenes {
+            let (plan, _) = scene_plan(&engine, &cfg.serving, &cfg.scenarios[s], cfg.group_total);
+            plans.insert(s, plan);
+        }
+        let rng = Rng::new(cfg.seed ^ 0xF1EE_7000);
+        let mut fleet = FleetSim {
+            q: EventQueue::new(),
+            groups: Vec::new(),
+            plans,
+            total_weight,
+            rng,
+            next_group_id: 0,
+            next_instance_id: 0,
+            next_req_id: 0,
+            injected: 0,
+            win_injected: 0,
+            totals: WindowStats::default(),
+            adjustments: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            training_switches: 0,
+            peak_instances: 0,
+            served_curve: Vec::new(),
+            timeline: Vec::new(),
+            cfg,
+        };
+        let scenes = fleet.cfg.scenes.clone();
+        for scene in scenes {
+            for _ in 0..fleet.cfg.min_groups_per_scene.max(1) {
+                let ratio = fleet.cfg.init_ratio;
+                fleet.spawn_group(scene, ratio, 0.0);
+            }
+            fleet.q.push(0.0, FleetEv::Slice { scene });
+        }
+        fleet.q.push(fleet.cfg.control_period_ms, FleetEv::Control);
+        fleet
+    }
+
+    fn hour_at(&self, t_ms: f64) -> f64 {
+        self.cfg.start_hour + t_ms / self.cfg.ms_per_hour
+    }
+
+    fn end_ms(&self) -> f64 {
+        self.cfg.hours * self.cfg.ms_per_hour
+    }
+
+    fn roce_ips(inst: InstanceId) -> Vec<RoceIp> {
+        vec![RoceIp { region: 0, host: inst.0 as u16 }]
+    }
+
+    fn log(&mut self, t_ms: f64, scene: usize, group: u32, what: String) {
+        let hour = self.hour_at(t_ms);
+        self.timeline.push(FleetLogEntry { hour, scene, group, what });
+    }
+
+    fn spawn_group(&mut self, scene: usize, ratio: (usize, usize), t_ms: f64) -> usize {
+        let (n_p, n_d) = ratio;
+        let sc = &self.cfg.scenarios[scene];
+        let sim_cfg = SimConfig {
+            n_p,
+            n_d,
+            engine: self.cfg.engine.clone(),
+            serving: self.cfg.serving.clone(),
+            scenarios: self.cfg.scenarios.clone(),
+            only_scenario: Some(scene),
+            workload: WorkloadKind::External,
+            seed: self.rng.next_u64(),
+            n_gateways: 2,
+            ..Default::default()
+        };
+        let sim = Simulation::external(sim_cfg);
+        let gid = GroupId(self.next_group_id);
+        self.next_group_id += 1;
+        let mut meta = PdGroup::new(gid, sc.service, sc.name);
+        let mut prefill_inst = BTreeMap::new();
+        let mut decode_inst = BTreeMap::new();
+        for p in 0..n_p {
+            let inst = InstanceId(self.next_instance_id);
+            self.next_instance_id += 1;
+            meta.add_member(inst, Role::Prefill, Self::roce_ips(inst));
+            prefill_inst.insert(p, inst);
+        }
+        for d in 0..n_d {
+            let inst = InstanceId(self.next_instance_id);
+            self.next_instance_id += 1;
+            meta.add_member(inst, Role::Decode, Self::roce_ips(inst));
+            decode_inst.insert(d, inst);
+        }
+        // Dynamic RoCE construction: full P×D mesh before serving (§3.2).
+        for p in meta.prefills() {
+            for d in meta.decodes() {
+                meta.connect(p, d);
+            }
+        }
+        meta.serving = true;
+        let group = FleetGroup {
+            meta,
+            sim,
+            scene,
+            prefill_inst,
+            decode_inst,
+            cooldown: 0,
+            pending_flip: None,
+            draining: false,
+        };
+        self.groups.push(group);
+        self.log(t_ms, scene, gid.0, format!("group up ({n_p}:{n_d})"));
+        self.groups.len() - 1
+    }
+
+    /// Generate Poisson arrivals for one scene over the next slice, at the
+    /// tidal rate for the current hour.
+    fn gen_slice(&mut self, scene: usize, t_ms: f64) {
+        let end = self.end_ms();
+        let hour = self.hour_at(t_ms);
+        let sc = self.cfg.scenarios[scene].clone();
+        let rate = scene_rate_rps(&sc, scene, hour, self.cfg.peak_total_rps, self.total_weight);
+        let slice_end = (t_ms + self.cfg.slice_ms).min(end);
+        if rate > 1e-9 {
+            let mut at = t_ms + self.rng.exp(rate) * 1000.0;
+            while at < slice_end {
+                let id = self.next_req_id;
+                self.next_req_id += 1;
+                let req = sc.sample(scene, id, at, &mut self.rng);
+                self.q.push(at, FleetEv::Arrival { scene, req });
+                at += self.rng.exp(rate) * 1000.0;
+            }
+        }
+        if slice_end < end {
+            self.q.push(slice_end, FleetEv::Slice { scene });
+        }
+    }
+
+    /// Route an arrival to the least-loaded non-draining group of its
+    /// scene (scenario-affine forwarding, §3.2).
+    fn route(&mut self, scene: usize, req: Request, t_ms: f64) {
+        let gi = self
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.scene == scene && !g.draining)
+            .min_by_key(|(i, g)| (g.sim.in_flight(), *i))
+            .map(|(i, _)| i);
+        let Some(gi) = gi else {
+            // Unreachable by construction (min_groups never drains), but
+            // never drop a request silently: the busiest rule still
+            // applies to draining groups.
+            let fallback = self
+                .groups
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| g.scene == scene)
+                .min_by_key(|(i, g)| (g.sim.in_flight(), *i))
+                .map(|(i, _)| i)
+                .expect("a scene always has at least one group");
+            self.groups[fallback].sim.inject(req);
+            self.injected += 1;
+            self.win_injected += 1;
+            self.groups[fallback].sim.run_until(t_ms);
+            return;
+        };
+        self.groups[gi].sim.inject(req);
+        self.injected += 1;
+        self.win_injected += 1;
+        self.groups[gi].sim.run_until(t_ms);
+    }
+
+    /// Ratio adjustment for one group from its window: the Fig. 12c
+    /// detector first, falling back to the utilization gap when early
+    /// intervention has converted the latency signal into timeouts.
+    fn classify(&self, g: &FleetGroup, w: &WindowStats, period_ms: f64) -> Adjustment {
+        let plan = &self.plans[&g.scene];
+        let latency = detect_bottleneck(
+            plan.baseline.0,
+            plan.baseline.1,
+            w.mean_e2e_ms(),
+            w.tp_share(),
+            &self.cfg.thresholds,
+        );
+        if latency != Adjustment::Balanced {
+            return latency;
+        }
+        let timeout_frac = if w.total() == 0 {
+            0.0
+        } else {
+            w.timed_out as f64 / w.total() as f64
+        };
+        let pressured = timeout_frac > 0.15
+            || w.mean_e2e_ms() > plan.baseline.0 * (1.0 + self.cfg.thresholds.e2e_growth);
+        if !pressured {
+            return Adjustment::Balanced;
+        }
+        let (n_p, n_d) = g.sim.ratio();
+        let util_p = w.prefill_busy_ms / (period_ms * n_p.max(1) as f64);
+        let util_d = w.decode_occ_ms / (period_ms * n_d.max(1) as f64);
+        if util_p > util_d + 0.25 {
+            Adjustment::MorePrefill
+        } else if util_d > util_p + 0.25 {
+            Adjustment::MoreDecode
+        } else {
+            Adjustment::Balanced
+        }
+    }
+
+    /// Start one instance-role migration inside group `gi` (conserves the
+    /// group total). P→D completes immediately: the prefill's accepted
+    /// work bounces to the gateway and the instance flips. D→P cordons
+    /// the donor decode and defers the flip until its committed work
+    /// drains (`try_finalize_flip`), so the group never runs more than
+    /// its budget of instances. The gateway entrance set changes through
+    /// the SseRegistry hooks inside add/remove_prefill.
+    fn migrate(&mut self, gi: usize, adj: Adjustment, t_ms: f64) -> bool {
+        let g = &mut self.groups[gi];
+        match adj {
+            Adjustment::MoreDecode => {
+                let Some(p) = g.sim.removable_prefill() else { return false };
+                if !g.sim.remove_prefill(p) {
+                    return false;
+                }
+                let d = g.sim.add_decode();
+                let inst = g
+                    .prefill_inst
+                    .remove(&p)
+                    .expect("prefill entrance has a coordinator instance");
+                g.meta.remove_member(inst);
+                g.meta.add_member(inst, Role::Decode, Self::roce_ips(inst));
+                for (pp, dd) in g.meta.pending_connections_for(inst) {
+                    g.meta.connect(pp, dd);
+                }
+                g.decode_inst.insert(d, inst);
+                debug_assert!(g.meta.fully_connected(), "migration broke the RoCE mesh");
+                debug_assert!(g.sim.sse_accounting_balanced());
+                let (n_p, n_d) = g.sim.ratio();
+                let scene = g.scene;
+                let id = g.id();
+                g.cooldown = 2;
+                self.adjustments += 1;
+                self.log(t_ms, scene, id, format!("ratio -> {n_p}:{n_d} (MoreDecode)"));
+                true
+            }
+            Adjustment::MorePrefill => {
+                if g.pending_flip.is_some() {
+                    return false;
+                }
+                let Some(d) = g.sim.removable_decode() else { return false };
+                if !g.sim.remove_decode(d) {
+                    return false;
+                }
+                let inst = g
+                    .decode_inst
+                    .remove(&d)
+                    .expect("decode slot has a coordinator instance");
+                g.pending_flip = Some((d, inst));
+                g.cooldown = 2;
+                let scene = g.scene;
+                let id = g.id();
+                self.log(
+                    t_ms,
+                    scene,
+                    id,
+                    "cordon decode (drain, then flip to prefill)".into(),
+                );
+                true
+            }
+            Adjustment::Balanced => false,
+        }
+    }
+
+    /// Complete a pending D→P flip once the cordoned decode has drained.
+    fn try_finalize_flip(&mut self, gi: usize, t_ms: f64) {
+        let g = &mut self.groups[gi];
+        let Some((d, inst)) = g.pending_flip else { return };
+        if g.sim.decode_commit(d) > 0 {
+            return;
+        }
+        let p = g.sim.add_prefill();
+        g.meta.remove_member(inst);
+        g.meta.add_member(inst, Role::Prefill, Self::roce_ips(inst));
+        for (pp, dd) in g.meta.pending_connections_for(inst) {
+            g.meta.connect(pp, dd);
+        }
+        g.prefill_inst.insert(p, inst);
+        g.pending_flip = None;
+        debug_assert!(g.meta.fully_connected(), "flip broke the RoCE mesh");
+        let (n_p, n_d) = g.sim.ratio();
+        let scene = g.scene;
+        let id = g.id();
+        self.adjustments += 1;
+        self.log(t_ms, scene, id, format!("ratio -> {n_p}:{n_d} (MorePrefill)"));
+    }
+
+    fn control_tick(&mut self, t_ms: f64) {
+        let period = self.cfg.control_period_ms;
+        // 1) Windows: collect, aggregate, detect, adjust.
+        let mut served = 0usize;
+        for gi in 0..self.groups.len() {
+            let w = self.groups[gi].sim.take_window();
+            served += w.completed;
+            self.totals.merge(&w);
+            self.try_finalize_flip(gi, t_ms);
+            let g = &mut self.groups[gi];
+            if g.cooldown > 0 {
+                g.cooldown -= 1;
+                continue;
+            }
+            if g.pending_flip.is_some()
+                || g.draining
+                || !self.cfg.adjust_ratio
+                || w.total() < self.cfg.min_window_total
+            {
+                continue;
+            }
+            let adj = self.classify(&self.groups[gi], &w, period);
+            if adj != Adjustment::Balanced {
+                self.migrate(gi, adj, t_ms);
+            }
+        }
+        let hour = self.hour_at(t_ms);
+        let secs = period / 1000.0;
+        self.served_curve
+            .push((hour, self.win_injected as f64 / secs, served as f64 / secs));
+        self.win_injected = 0;
+
+        // 2) Capacity: per-scene group scale-in/out + training switch.
+        if self.cfg.scale_groups {
+            let scenes = self.cfg.scenes.clone();
+            for scene in scenes {
+                self.plan_scene(scene, hour, t_ms);
+            }
+        }
+
+        // 3) Retire drained groups.
+        let mut gi = 0;
+        while gi < self.groups.len() {
+            if self.groups[gi].draining && self.groups[gi].sim.in_flight() == 0 {
+                let mut g = self.groups.remove(gi);
+                let w = g.sim.take_window();
+                self.totals.merge(&w);
+                let scene = g.scene;
+                let id = g.id();
+                self.log(t_ms, scene, id, "group retired (drained)".into());
+            } else {
+                gi += 1;
+            }
+        }
+
+        let instances: usize = self
+            .groups
+            .iter()
+            .map(|g| {
+                let (n_p, n_d) = g.sim.ratio();
+                n_p + n_d
+            })
+            .sum();
+        self.peak_instances = self.peak_instances.max(instances);
+
+        if t_ms + period <= self.end_ms() {
+            self.q.push(t_ms + period, FleetEv::Control);
+        }
+    }
+
+    fn plan_scene(&mut self, scene: usize, hour: f64, t_ms: f64) {
+        let sc = self.cfg.scenarios[scene].clone();
+        let rate = scene_rate_rps(&sc, scene, hour, self.cfg.peak_total_rps, self.total_weight);
+        let scene_peak = self.cfg.peak_total_rps * sc.weight / self.total_weight;
+        let min_g = self.cfg.min_groups_per_scene.max(1);
+        let was_training = self.plans[&scene].training;
+        let tidal_trough = rate < scene_peak * TRAINING_SWITCH_FRACTION;
+        if tidal_trough != was_training {
+            self.plans.get_mut(&scene).unwrap().training = tidal_trough;
+            if tidal_trough {
+                self.training_switches += 1;
+                self.log(t_ms, scene, u32::MAX, "trough: capacity -> training".into());
+            } else {
+                self.log(t_ms, scene, u32::MAX, "ramp: capacity -> inference".into());
+            }
+        }
+        let tpl = self.plans[&scene].template;
+        let target = if tidal_trough {
+            min_g
+        } else {
+            groups_needed(rate, &tpl, self.cfg.headroom)
+                .expect("templates validated at construction")
+                .clamp(min_g, self.cfg.max_groups_per_scene)
+        };
+        let active: Vec<usize> = self
+            .groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.scene == scene && !g.draining)
+            .map(|(i, _)| i)
+            .collect();
+        if target > active.len() {
+            // Scale out, inheriting the scene's currently-adapted ratio so
+            // new groups don't restart the detector's work.
+            let ratio = active
+                .first()
+                .map(|&i| self.groups[i].sim.ratio())
+                .unwrap_or(self.cfg.init_ratio);
+            for _ in active.len()..target {
+                let gi = self.spawn_group(scene, ratio, t_ms);
+                self.scale_outs += 1;
+                let id = self.groups[gi].id();
+                self.log(t_ms, scene, id, format!("scale-out ({} groups)", target));
+            }
+        } else if target < active.len() {
+            // Hysteresis: shrink only to exact-fit capacity.
+            let relaxed = if tidal_trough {
+                min_g
+            } else {
+                groups_needed(rate, &tpl, 1.0)
+                    .expect("templates validated at construction")
+                    .clamp(min_g, self.cfg.max_groups_per_scene)
+            };
+            if relaxed < active.len() {
+                // Drain the least-loaded groups first.
+                let mut by_load: Vec<usize> = active.clone();
+                by_load.sort_by_key(|&i| {
+                    (self.groups[i].sim.in_flight(), usize::MAX - i)
+                });
+                for &gi in by_load.iter().take(active.len() - relaxed) {
+                    self.groups[gi].draining = true;
+                    self.scale_ins += 1;
+                    let id = self.groups[gi].id();
+                    self.log(
+                        t_ms,
+                        scene,
+                        id,
+                        format!("scale-in: draining ({} groups remain)", relaxed),
+                    );
+                }
+            }
+        }
+    }
+
+    pub fn run(mut self) -> FleetOutput {
+        while let Some((t, ev)) = self.q.pop() {
+            // All groups advance to the fleet clock before any cross-group
+            // action (shared-queue lockstep).
+            for g in &mut self.groups {
+                g.sim.run_until(t);
+            }
+            match ev {
+                FleetEv::Slice { scene } => self.gen_slice(scene, t),
+                FleetEv::Arrival { scene, req } => self.route(scene, req, t),
+                FleetEv::Control => self.control_tick(t),
+            }
+        }
+        // No more arrivals or control: drain in-flight work everywhere.
+        for g in &mut self.groups {
+            g.sim.drain();
+            let w = g.sim.take_window();
+            self.totals.merge(&w);
+            debug_assert!(g.sim.sse_accounting_balanced());
+        }
+        let duration_s = self.end_ms() / 1000.0;
+        let totals = self.totals;
+        let final_ratios = self
+            .groups
+            .iter()
+            .filter(|g| !g.draining)
+            .map(|g| {
+                let (n_p, n_d) = g.sim.ratio();
+                (g.scene, n_p, n_d)
+            })
+            .collect();
+        FleetOutput {
+            injected: self.injected,
+            completed: totals.completed,
+            timed_out: totals.timed_out,
+            rps: totals.completed as f64 / duration_s,
+            slo_attainment: if totals.total() == 0 {
+                1.0
+            } else {
+                totals.slo_ok as f64 / totals.total() as f64
+            },
+            mean_ttft_ms: totals.mean_ttft_ms(),
+            mean_e2e_ms: totals.mean_e2e_ms(),
+            adjustments: self.adjustments,
+            scale_outs: self.scale_outs,
+            scale_ins: self.scale_ins,
+            training_switches: self.training_switches,
+            peak_instances: self.peak_instances,
+            final_ratios,
+            served_curve: self.served_curve,
+            timeline: self.timeline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small, fast day: 3 compressed hours per scene pair.
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            scenes: vec![2, 5],
+            peak_total_rps: 24.0,
+            hours: 24.0,
+            ms_per_hour: 1_500.0,
+            control_period_ms: 1_500.0,
+            slice_ms: 500.0,
+            max_groups_per_scene: 3,
+            seed: 0xFA57,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_day_conserves_requests() {
+        let out = FleetSim::new(small_cfg()).run();
+        assert!(out.injected > 100, "tidal day injected only {}", out.injected);
+        assert_eq!(
+            out.total(),
+            out.injected,
+            "requests lost across the fleet loop"
+        );
+        assert!(out.completed > 0);
+    }
+
+    #[test]
+    fn fleet_day_is_deterministic() {
+        let a = FleetSim::new(small_cfg()).run();
+        let b = FleetSim::new(small_cfg()).run();
+        assert_eq!(a.injected, b.injected);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.adjustments, b.adjustments);
+        assert_eq!(a.scale_outs, b.scale_outs);
+    }
+
+    #[test]
+    fn closed_loop_adjusts_ratio_and_scales_mid_run() {
+        // The acceptance path for `pdserve fleet`: under tidal
+        // multi-scenario traffic, at least one automatic ratio adjustment
+        // and at least one group scale event must occur mid-run.
+        let out = FleetSim::new(FleetConfig::default()).run();
+        assert!(
+            out.adjustments >= 1,
+            "no ratio adjustment over a saturated tidal day: {:#?}",
+            out.timeline
+        );
+        assert!(
+            out.scale_outs >= 1,
+            "no scale-out across the morning ramp: {:#?}",
+            out.timeline
+        );
+        assert!(
+            out.scale_ins + out.training_switches >= 1,
+            "no scale-in or training switch across the trough"
+        );
+        assert_eq!(out.total(), out.injected);
+    }
+
+    #[test]
+    fn served_rate_tracks_the_tidal_curve() {
+        let mut cfg = small_cfg();
+        // Ample capacity: the served curve must follow the offered curve.
+        cfg.peak_total_rps = 10.0;
+        cfg.max_groups_per_scene = 4;
+        let out = FleetSim::new(cfg).run();
+        assert!(out.served_curve.len() >= 8);
+        let mut by_offer = out.served_curve.clone();
+        by_offer.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let q = by_offer.len() / 4;
+        let low_served: f64 = by_offer[..q].iter().map(|c| c.2).sum();
+        let high_served: f64 = by_offer[by_offer.len() - q..].iter().map(|c| c.2).sum();
+        assert!(
+            high_served > 2.0 * low_served.max(1.0),
+            "served rate does not track the tide: low {low_served}, high {high_served}"
+        );
+        // Under ample capacity almost everything completes.
+        assert!(
+            out.completed as f64 >= out.injected as f64 * 0.9,
+            "completed {} of {}",
+            out.completed,
+            out.injected
+        );
+    }
+
+    #[test]
+    fn prop_conservation_across_random_fleets() {
+        // No request is lost for random scene mixes, loads and seeds —
+        // including runs where ratio adjustments and scale events fire.
+        let cfg = crate::util::prop::Config { cases: 6, ..Default::default() };
+        crate::util::prop::check(
+            "fleet-conservation",
+            &cfg,
+            |r| {
+                let scene_pool = [0usize, 1, 2, 3, 4, 5];
+                let a = scene_pool[r.below(6)];
+                let mut b = scene_pool[r.below(6)];
+                if b == a {
+                    b = (b + 1) % 6;
+                }
+                let peak = 8.0 + r.f64() * 24.0;
+                let seed = r.next_u64();
+                let adjust = r.chance(0.8);
+                (a, b, peak, seed, adjust)
+            },
+            |&(a, b, peak, seed, adjust)| {
+                let cfg = FleetConfig {
+                    scenes: vec![a, b],
+                    peak_total_rps: peak,
+                    hours: 12.0,
+                    ms_per_hour: 1_000.0,
+                    control_period_ms: 1_000.0,
+                    slice_ms: 500.0,
+                    adjust_ratio: adjust,
+                    seed,
+                    ..Default::default()
+                };
+                let out = FleetSim::new(cfg).run();
+                if out.total() != out.injected {
+                    return Err(format!(
+                        "lost requests: injected {}, accounted {}",
+                        out.injected,
+                        out.total()
+                    ));
+                }
+                if out.injected > 0 && out.completed == 0 {
+                    return Err("nothing completed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

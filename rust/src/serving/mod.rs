@@ -3,12 +3,17 @@
 //! - `sim`: the discrete-event P/D serving simulator — gateway policy,
 //!   prefill batching, KVCache transfer, continuous-batching decode — used
 //!   by every evaluation figure.
+//! - `fleet`: the fleet-level closed loop — multiple scenario-specific P/D
+//!   groups under tidal traffic, with dynamic ratio adjustment and
+//!   group-granular scale-in/out (the MLOps circuit of §3.3/Fig. 13).
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
 
+pub mod fleet;
 pub mod server;
 pub mod speculative;
 pub mod sim;
 
-pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WorkloadKind};
+pub use fleet::{FleetConfig, FleetOutput, FleetSim};
+pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WindowStats, WorkloadKind};

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
 use crate::runtime::tokenizer;
 use crate::runtime::{DecodeHandle, ServingRuntime};
@@ -125,10 +126,14 @@ impl RealEngine {
         let wall0 = Instant::now();
         let mut report = RealReport::default();
         let mut pending: VecDeque<usize> = (0..requests.len()).collect();
-        // SSE registry over logical prefill entrances (round-robin among
-        // idle ones — with bs=1 prefill, least-SSE == round-robin here).
+        // SSE registry over logical prefill entrances, consulted through
+        // the same `OnDemandForwarder` the simulator uses — one
+        // accept/reject decision path for both worlds. Logical prefills
+        // execute bs=1 inline, so every probe accepts and the decision
+        // reduces to salted least-SSE selection.
         let mut sse = SseRegistry::new(0..self.n_prefill as u32);
-        let mut next_entrance = 0u32;
+        let forwarder = OnDemandForwarder::new(self.n_prefill.max(1), 0.0);
+        let mut salt_rng = crate::util::prng::Rng::new(0x5A17_5EED);
         let mut arrivals: Vec<Instant> = requests.iter().map(|_| wall0).collect();
 
         loop {
@@ -142,8 +147,19 @@ impl RealEngine {
                         break 'admit;
                     };
                     let req = &requests[req_idx];
-                    let entrance = next_entrance % self.n_prefill as u32;
-                    next_entrance += 1;
+                    let entrance = match forwarder.probe(
+                        &sse,
+                        salt_rng.next_u64(),
+                        0.0,
+                        f64::INFINITY,
+                        |_| true,
+                    ) {
+                        ForwardDecision::Accept(e) => e,
+                        // Unreachable: every entrance accepts and the
+                        // registry is non-empty, so a probe round cannot
+                        // exhaust its candidates.
+                        other => unreachable!("probe returned {other:?}"),
+                    };
                     sse.open(entrance);
                     arrivals[req_idx] = Instant::now();
 

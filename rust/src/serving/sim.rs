@@ -49,6 +49,10 @@ pub enum TransferDiscipline {
 pub enum WorkloadKind {
     Open { rps: f64, duration_ms: f64 },
     Closed { concurrency: usize, requests: usize },
+    /// Arrivals injected by an external driver (`Simulation::inject`), and
+    /// time advanced with `run_until` — the fleet simulator's per-group
+    /// mode. No internal priming, no internal termination condition.
+    External,
 }
 
 #[derive(Clone, Debug)]
@@ -175,7 +179,12 @@ struct ReqState {
 }
 
 /// Per-prefill-instance simulated state.
+///
+/// Pool slots are append-only: a removed instance leaves a tombstone
+/// (`alive = false`) so entrance ids and in-flight phase references stay
+/// valid across mid-run scale-in (`Simulation::remove_prefill`).
 struct PState {
+    alive: bool,
     busy: bool,
     /// Accepted, waiting for the batch window (on-demand path).
     accepted: Vec<u64>,
@@ -188,13 +197,87 @@ struct PState {
     prefix: SimPrefixCache,
 }
 
-/// Per-decode-instance simulated state.
+impl PState {
+    fn new(prefix_budget_bytes: usize) -> Self {
+        PState {
+            alive: true,
+            busy: false,
+            accepted: Vec::new(),
+            queue: VecDeque::new(),
+            awaiting: 0,
+            busy_ms: 0.0,
+            window_open: false,
+            prefix: SimPrefixCache::new(prefix_budget_bytes),
+        }
+    }
+}
+
+/// Per-decode-instance simulated state (same tombstone discipline).
 struct DState {
+    alive: bool,
     active: Vec<u64>,
     retrieval: VecDeque<u64>,
     /// Transfers in flight toward this instance.
     reserved: usize,
     iter_scheduled: bool,
+}
+
+impl DState {
+    fn new() -> Self {
+        DState {
+            alive: true,
+            active: Vec::new(),
+            retrieval: VecDeque::new(),
+            reserved: 0,
+            iter_scheduled: false,
+        }
+    }
+}
+
+/// Completed/timed-out accounting over a control window — the signal the
+/// fleet's ratio detector consumes (`take_window` resets it).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowStats {
+    pub completed: usize,
+    pub timed_out: usize,
+    pub ttft_sum_ms: f64,
+    pub e2e_sum_ms: f64,
+    /// Completed within their per-request TTFT threshold.
+    pub slo_ok: usize,
+    /// Summed prefill batch-execution time (ms) launched this window.
+    pub prefill_busy_ms: f64,
+    /// Occupancy-weighted decode iteration time (ms·rows/batch) this
+    /// window — ≈ how many instance-ms of decode capacity were used.
+    pub decode_occ_ms: f64,
+}
+
+impl WindowStats {
+    pub fn total(&self) -> usize {
+        self.completed + self.timed_out
+    }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        if self.completed == 0 { 0.0 } else { self.ttft_sum_ms / self.completed as f64 }
+    }
+
+    pub fn mean_e2e_ms(&self) -> f64 {
+        if self.completed == 0 { 0.0 } else { self.e2e_sum_ms / self.completed as f64 }
+    }
+
+    /// The T_p/E2E proportion (Fig. 12c's bottleneck hint).
+    pub fn tp_share(&self) -> f64 {
+        if self.e2e_sum_ms <= 0.0 { 0.0 } else { self.ttft_sum_ms / self.e2e_sum_ms }
+    }
+
+    pub fn merge(&mut self, o: &WindowStats) {
+        self.completed += o.completed;
+        self.timed_out += o.timed_out;
+        self.ttft_sum_ms += o.ttft_sum_ms;
+        self.e2e_sum_ms += o.e2e_sum_ms;
+        self.slo_ok += o.slo_ok;
+        self.prefill_busy_ms += o.prefill_busy_ms;
+        self.decode_occ_ms += o.decode_occ_ms;
+    }
 }
 
 /// Prefix-aware KVCache at simulation granularity: keyed by
@@ -277,6 +360,10 @@ pub struct Simulation {
     forwarder: OnDemandForwarder,
     baseline: StaleQueueScheduler,
     pending: VecDeque<u64>, // gateway-held (on-demand)
+    /// Requests in `AwaitTransfer` (all decodes were saturated) — retried
+    /// FIFO when decode capacity frees. Bounded by n_p × prefill_batch
+    /// (each holds a prefill send-buffer slot).
+    parked: VecDeque<u64>,
     batches: BTreeMap<usize, Vec<u64>>, // running prefill batches
     spine_load: Vec<usize>,
     /// Spine slots held by in-flight transfers, released on TransferDone.
@@ -294,30 +381,14 @@ pub struct Simulation {
     closed_gen: Option<crate::workload::ClosedLoopGen>,
     open_done_injecting: bool,
     retry_tick_scheduled: bool,
+    window: WindowStats,
 }
 
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Self {
         let engine = EngineModel::new(cfg.engine.clone());
-        let ps = (0..cfg.n_p)
-            .map(|_| PState {
-                busy: false,
-                accepted: Vec::new(),
-                queue: VecDeque::new(),
-                awaiting: 0,
-                busy_ms: 0.0,
-                window_open: false,
-                prefix: SimPrefixCache::new(cfg.prefix_budget_bytes),
-            })
-            .collect();
-        let ds = (0..cfg.n_d)
-            .map(|_| DState {
-                active: Vec::new(),
-                retrieval: VecDeque::new(),
-                reserved: 0,
-                iter_scheduled: false,
-            })
-            .collect();
+        let ps = (0..cfg.n_p).map(|_| PState::new(cfg.prefix_budget_bytes)).collect();
+        let ds = (0..cfg.n_d).map(|_| DState::new()).collect();
         let gw_sse: Vec<SseRegistry> = (0..cfg.n_gateways.max(1))
             .map(|_| SseRegistry::new(0..cfg.n_p as u32))
             .collect();
@@ -339,6 +410,7 @@ impl Simulation {
             forwarder,
             baseline,
             pending: VecDeque::new(),
+            parked: VecDeque::new(),
             batches: BTreeMap::new(),
             spine_load,
             inflight_assignments: Vec::new(),
@@ -355,8 +427,25 @@ impl Simulation {
             closed_gen: None,
             open_done_injecting: false,
             retry_tick_scheduled: false,
+            window: WindowStats::default(),
             cfg,
         }
+    }
+
+    /// An externally-driven simulation (the fleet's per-group mode): the
+    /// caller injects arrivals (`inject`) and advances time (`run_until`),
+    /// and the prefill/decode pools may grow and shrink mid-run
+    /// (`add_prefill` / `remove_prefill` / `add_decode` / `remove_decode`).
+    /// Only the on-demand policy supports dynamic pools — the baseline
+    /// queue scheduler indexes a fixed instance set.
+    pub fn external(mut cfg: SimConfig) -> Self {
+        assert_eq!(
+            cfg.policy,
+            Policy::OnDemand,
+            "external/fleet mode requires the on-demand policy"
+        );
+        cfg.workload = WorkloadKind::External;
+        Simulation::new(cfg)
     }
 
     pub fn run(cfg: SimConfig) -> SimOutput {
@@ -412,6 +501,7 @@ impl Simulation {
                 }
                 self.closed_gen = Some(g);
             }
+            WorkloadKind::External => {}
         }
         if self.cfg.policy == Policy::BaselineQueue {
             self.q.push(0.0, Ev::ReportTick);
@@ -439,21 +529,25 @@ impl Simulation {
 
     // -- event loop ---------------------------------------------------------
 
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrival(id) => self.on_arrival(id),
+            Ev::GatewayRetry => {
+                self.retry_tick_scheduled = false;
+                self.gateway_round();
+            }
+            Ev::ReportTick => self.on_report_tick(),
+            Ev::PrefillLaunch(p) => self.on_prefill_launch(p),
+            Ev::PrefillDone(p) => self.on_prefill_done(p),
+            Ev::TransferDone(id) => self.on_transfer_done(id),
+            Ev::DecodeIter(d) => self.on_decode_iter(d),
+        }
+    }
+
     fn event_loop(&mut self) {
         let hard_cap = 100_000_000u64;
         while let Some((_, ev)) = self.q.pop() {
-            match ev {
-                Ev::Arrival(id) => self.on_arrival(id),
-                Ev::GatewayRetry => {
-                    self.retry_tick_scheduled = false;
-                    self.gateway_round();
-                }
-                Ev::ReportTick => self.on_report_tick(),
-                Ev::PrefillLaunch(p) => self.on_prefill_launch(p),
-                Ev::PrefillDone(p) => self.on_prefill_done(p),
-                Ev::TransferDone(id) => self.on_transfer_done(id),
-                Ev::DecodeIter(d) => self.on_decode_iter(d),
-            }
+            self.dispatch(ev);
             if self.q.processed() > hard_cap {
                 panic!("simulation runaway: {} events", self.q.processed());
             }
@@ -470,7 +564,202 @@ impl Simulation {
                 self.open_done_injecting && self.finished == self.injected
             }
             WorkloadKind::Closed { requests, .. } => self.finished >= requests,
+            // The external driver owns termination.
+            WorkloadKind::External => false,
         }
+    }
+
+    // -- external drive (fleet mode) ----------------------------------------
+
+    /// Inject one externally-generated request; its `arrival_ms` must not
+    /// be in the simulation's past.
+    pub fn inject(&mut self, mut req: Request) {
+        debug_assert!(matches!(self.cfg.workload, WorkloadKind::External));
+        debug_assert!(req.scenario < self.cfg.scenarios.len());
+        req.arrival_ms = req.arrival_ms.max(self.q.now());
+        let at = req.arrival_ms;
+        let id = self.add_request(req);
+        self.q.push(at, Ev::Arrival(id));
+        self.injected += 1;
+    }
+
+    /// Process every event scheduled at or before `t_ms`. The clock stops
+    /// at the last processed event, never past `t_ms`.
+    pub fn run_until(&mut self, t_ms: f64) {
+        while let Some(next) = self.q.next_time() {
+            if next > t_ms {
+                break;
+            }
+            let (_, ev) = self.q.pop().expect("peeked event vanished");
+            self.dispatch(ev);
+        }
+    }
+
+    /// Drain all remaining events (no further arrivals expected).
+    pub fn drain(&mut self) {
+        self.run_until(f64::INFINITY);
+    }
+
+    /// Take and reset the control-window accounting.
+    pub fn take_window(&mut self) -> WindowStats {
+        std::mem::take(&mut self.window)
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.q.now()
+    }
+
+    pub fn injected(&self) -> usize {
+        self.injected
+    }
+
+    pub fn finished(&self) -> usize {
+        self.finished
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.injected - self.finished
+    }
+
+    /// Finalize an externally-driven run into the standard output.
+    pub fn into_output(mut self) -> SimOutput {
+        self.report.duration_ms = self.q.now();
+        self.finish()
+    }
+
+    // -- dynamic pools (mid-run scale / ratio adjustment) --------------------
+
+    pub fn n_prefill_alive(&self) -> usize {
+        self.ps.iter().filter(|p| p.alive).count()
+    }
+
+    pub fn n_decode_alive(&self) -> usize {
+        self.ds.iter().filter(|d| d.alive).count()
+    }
+
+    /// Current alive (n_p, n_d).
+    pub fn ratio(&self) -> (usize, usize) {
+        (self.n_prefill_alive(), self.n_decode_alive())
+    }
+
+    /// Register a new prefill instance; returns its entrance id. The new
+    /// entrance joins every gateway's SSE registry (`add_entrance` — the
+    /// scale-out hook).
+    pub fn add_prefill(&mut self) -> usize {
+        let p = self.ps.len();
+        self.ps.push(PState::new(self.cfg.prefix_budget_bytes));
+        for gw in &mut self.gw_sse {
+            gw.add_entrance(p as u32);
+        }
+        self.report.n_prefill += 1;
+        p
+    }
+
+    /// Remove prefill `p` (scale-in / role migration). Refused when `p` is
+    /// the last alive prefill (single-point guard) or mid-batch (`busy`) —
+    /// callers pick another candidate or retry next control tick. Accepted
+    /// requests bounce back to the gateway and re-probe immediately; their
+    /// SSE connections are force-closed by `remove_entrance`, preserving
+    /// the open/close invariant.
+    pub fn remove_prefill(&mut self, p: usize) -> bool {
+        assert_eq!(
+            self.cfg.policy,
+            Policy::OnDemand,
+            "dynamic pools require the on-demand policy"
+        );
+        if p >= self.ps.len() || !self.ps[p].alive || self.ps[p].busy {
+            return false;
+        }
+        if self.n_prefill_alive() <= 1 {
+            return false;
+        }
+        self.ps[p].alive = false;
+        self.ps[p].window_open = false;
+        let bounced = std::mem::take(&mut self.ps[p].accepted);
+        for id in bounced {
+            self.reqs[id as usize].phase = ReqPhase::AtGateway;
+            self.reqs[id as usize].entrance = usize::MAX;
+            self.pending.push_back(id);
+        }
+        for gw in &mut self.gw_sse {
+            gw.remove_entrance(p as u32);
+        }
+        self.report.n_prefill -= 1;
+        if !self.pending.is_empty() {
+            self.gateway_round();
+        }
+        true
+    }
+
+    /// A prefill the controller may remove right now: alive, not mid-batch,
+    /// preferring the one with the least accepted work to bounce.
+    pub fn removable_prefill(&self) -> Option<usize> {
+        if self.n_prefill_alive() <= 1 {
+            return None;
+        }
+        self.ps
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive && !s.busy)
+            .min_by_key(|(_, s)| s.accepted.len())
+            .map(|(i, _)| i)
+    }
+
+    /// Register a new decode instance; parked transfers retry immediately.
+    pub fn add_decode(&mut self) -> usize {
+        let d = self.ds.len();
+        self.ds.push(DState::new());
+        self.report.n_decode += 1;
+        self.retry_parked();
+        d
+    }
+
+    /// Remove decode `d` (cordon + graceful drain): no new transfers are
+    /// routed to it, but requests already committed — active rows, its
+    /// retrieval queue, in-flight transfers — run to completion, so no
+    /// request is lost. Refused for the last alive decode.
+    pub fn remove_decode(&mut self, d: usize) -> bool {
+        if d >= self.ds.len() || !self.ds[d].alive {
+            return false;
+        }
+        if self.n_decode_alive() <= 1 {
+            return false;
+        }
+        self.ds[d].alive = false;
+        self.report.n_decode -= 1;
+        true
+    }
+
+    /// Committed work on decode `d` (active rows + retrieval queue +
+    /// in-flight transfers). 0 ⇒ fully drained — a cordoned instance with
+    /// zero commit has truly left the serving set.
+    pub fn decode_commit(&self, d: usize) -> usize {
+        self.ds
+            .get(d)
+            .map(|s| s.active.len() + s.retrieval.len() + s.reserved)
+            .unwrap_or(0)
+    }
+
+    /// The decode the controller should remove next: alive with the least
+    /// committed work (least residual drain).
+    pub fn removable_decode(&self) -> Option<usize> {
+        if self.n_decode_alive() <= 1 {
+            return None;
+        }
+        self.ds
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.alive)
+            .min_by_key(|(i, s)| (s.active.len() + s.retrieval.len() + s.reserved, *i))
+            .map(|(i, _)| i)
+    }
+
+    /// `opened - closed == live` across every gateway's registry — the
+    /// invariant scale-in must preserve.
+    pub fn sse_accounting_balanced(&self) -> bool {
+        self.gw_sse
+            .iter()
+            .all(|g| g.opened() - g.closed() == g.live() as u64)
     }
 
     // -- gateway ------------------------------------------------------------
@@ -517,28 +806,21 @@ impl Simulation {
         while let Some(id) = self.pending.pop_front() {
             let deadline = self.reqs[id as usize].deadline_ms;
             let gw = self.reqs[id as usize].gw;
-            let decision = if now >= deadline {
-                ForwardDecision::Timeout
-            } else {
-                // Inline least-SSE probing with the prefill-side accept
-                // check: an instance accepts only when it is idle AND the
-                // batch it would form still meets everyone's TTFT
-                // threshold (the prefill knows its own cache + engine —
-                // exactly the knowledge a remote estimator lacks).
-                let salt = self.rng.next_u64();
-                let order = self.gw_sse[gw].by_least_loaded_salted(salt);
-                let mut got = None;
-                for e in order.into_iter().take(self.forwarder.retry_candidates) {
-                    if self.prefill_accepts(e as usize, id, now) {
-                        got = Some(e);
-                        break;
-                    }
-                }
-                match got {
-                    Some(e) => ForwardDecision::Accept(e),
-                    None => ForwardDecision::RetryLater,
-                }
-            };
+            // The forwarder is the single accept/reject decision path —
+            // the same probe the real threaded server runs. It orders this
+            // gateway's entrances by salted least-SSE and asks each the
+            // prefill-side accept check: idle AND the batch it would form
+            // still meets everyone's TTFT threshold (the prefill knows its
+            // own cache + engine — exactly the knowledge a remote
+            // estimator lacks).
+            let salt = self.rng.next_u64();
+            let decision = self.forwarder.probe(
+                &self.gw_sse[gw],
+                salt,
+                now,
+                deadline,
+                |e| self.prefill_accepts(e as usize, id, now),
+            );
             match decision {
                 ForwardDecision::Accept(e) => {
                     let p = e as usize;
@@ -572,7 +854,7 @@ impl Simulation {
     fn prefill_accepts(&self, p: usize, id: u64, now: f64) -> bool {
         let st = &self.ps[p];
         let bp = self.cfg.serving.prefill_batch;
-        if st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
+        if !st.alive || st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
             return false;
         }
         if st.accepted.is_empty() {
@@ -621,7 +903,7 @@ impl Simulation {
 
     fn try_open_window(&mut self, p: usize) {
         let st = &mut self.ps[p];
-        if st.busy || st.window_open {
+        if !st.alive || st.busy || st.window_open {
             return;
         }
         let has_work = !st.accepted.is_empty() || !st.queue.is_empty();
@@ -701,6 +983,7 @@ impl Simulation {
         let dur = self.engine.prefill_batch_ms(&items);
         self.ps[p].busy = true;
         self.ps[p].busy_ms += dur;
+        self.window.prefill_busy_ms += dur;
         self.batches.insert(p, batch);
         self.q.push_after(dur, Ev::PrefillDone(p));
     }
@@ -737,6 +1020,9 @@ impl Simulation {
             r.phase = ReqPhase::AwaitTransfer(p);
             self.ps[p].awaiting += 1;
             self.try_start_transfer(id);
+            if matches!(self.reqs[id as usize].phase, ReqPhase::AwaitTransfer(_)) {
+                self.parked.push_back(id);
+            }
         }
         // More work may be waiting.
         self.try_open_window(p);
@@ -756,6 +1042,9 @@ impl Simulation {
         let rq_cap = self.cfg.serving.retrieval_queue;
         let mut best: Option<(usize, usize)> = None; // (load, idx)
         for (i, d) in self.ds.iter().enumerate() {
+            if !d.alive {
+                continue;
+            }
             let commit = d.active.len() + d.reserved + d.retrieval.len();
             if commit < bd + rq_cap {
                 let load = commit;
@@ -852,6 +1141,8 @@ impl Simulation {
             })
             .collect();
         let dur = self.engine.decode_iter_ms(&ctx);
+        self.window.decode_occ_ms +=
+            dur * ctx.len() as f64 / self.cfg.serving.decode_batch.max(1) as f64;
         self.ds[d].iter_scheduled = true;
         self.q.push_after(dur, Ev::DecodeIter(d));
     }
@@ -874,12 +1165,20 @@ impl Simulation {
             let r = &mut self.reqs[id as usize];
             r.phase = ReqPhase::Finished;
             let entrance = r.entrance;
+            let e2e_ms = now - r.req.arrival_ms;
             let outcome = Outcome::Completed {
                 ttft_ms: r.ttft_ms,
-                e2e_ms: now - r.req.arrival_ms,
+                e2e_ms,
                 xfer_ms: r.xfer_ms,
                 gen_tokens: r.req.gen_len,
             };
+            let slo_ok = r.req.arrival_ms + r.ttft_ms <= r.deadline_ms;
+            self.window.completed += 1;
+            self.window.ttft_sum_ms += self.reqs[id as usize].ttft_ms;
+            self.window.e2e_sum_ms += e2e_ms;
+            if slo_ok {
+                self.window.slo_ok += 1;
+            }
             if entrance != usize::MAX {
                 let gw = self.reqs[id as usize].gw;
                 self.gw_sse[gw].close(entrance as u32);
@@ -898,17 +1197,20 @@ impl Simulation {
             }
         }
         // Saturated decodes freed slots: requests parked in prefill retry.
-        let parked: Vec<u64> = self
-            .reqs
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| matches!(r.phase, ReqPhase::AwaitTransfer(_)))
-            .map(|(i, _)| i as u64)
-            .collect();
+        self.retry_parked();
+        self.schedule_decode_iter(d);
+    }
+
+    /// Retry every parked request once (FIFO); those still blocked stay
+    /// parked.
+    fn retry_parked(&mut self) {
+        let parked = std::mem::take(&mut self.parked);
         for id in parked {
             self.try_start_transfer(id);
+            if matches!(self.reqs[id as usize].phase, ReqPhase::AwaitTransfer(_)) {
+                self.parked.push_back(id);
+            }
         }
-        self.schedule_decode_iter(d);
     }
 
     fn inject_replacement(&mut self, now: f64) {
@@ -933,6 +1235,7 @@ impl Simulation {
         self.report.record(&Outcome::TimedOut {
             waited_ms: now - r.req.arrival_ms,
         });
+        self.window.timed_out += 1;
         self.finished += 1;
         self.inject_replacement(now);
     }
@@ -1157,6 +1460,128 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn external_pools_grow_and_shrink_without_losing_requests() {
+        // The fleet loop's core invariant: a mid-run ratio adjustment
+        // (remove a prefill, add a decode) loses no request — bounced
+        // work re-probes through the gateway and the SSE registries stay
+        // balanced.
+        let cfg = SimConfig {
+            n_p: 3,
+            n_d: 3,
+            only_scenario: Some(0),
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            9,
+        )
+        .only_scenario(0);
+        let reqs = g.window(6.0, 20_000.0);
+        let n = reqs.len();
+        assert!(n > 50, "need a meaningful workload, got {n}");
+        let mut adjusted = false;
+        for r in reqs {
+            let at = r.arrival_ms;
+            sim.run_until(at);
+            sim.inject(r);
+            if !adjusted && at > 8_000.0 {
+                if let Some(p) = sim.removable_prefill() {
+                    assert!(sim.remove_prefill(p));
+                    sim.add_decode();
+                    assert_eq!(sim.ratio(), (2, 4));
+                    adjusted = true;
+                }
+            }
+        }
+        assert!(adjusted, "no adjustment opportunity in 20 s of traffic");
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        assert!(sim.sse_accounting_balanced());
+        let out = sim.into_output();
+        assert_eq!(
+            out.report.total(),
+            n,
+            "request lost across the ratio adjustment"
+        );
+        assert!(out.report.completed > 0);
+    }
+
+    #[test]
+    fn scale_out_registers_new_entrance_and_serves() {
+        let cfg = SimConfig {
+            n_p: 1,
+            n_d: 2,
+            only_scenario: Some(5), // tiny prompts
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        assert_eq!(sim.add_prefill(), 1);
+        assert_eq!(sim.ratio(), (2, 2));
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            3,
+        )
+        .only_scenario(5);
+        for r in g.window(20.0, 3_000.0) {
+            sim.run_until(r.arrival_ms);
+            sim.inject(r);
+        }
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        assert!(sim.sse_accounting_balanced());
+    }
+
+    #[test]
+    fn pool_guards_hold() {
+        let cfg = SimConfig { n_p: 1, n_d: 1, ..Default::default() };
+        let mut sim = Simulation::external(cfg);
+        // Single-point guards: the last prefill/decode cannot leave.
+        assert!(!sim.remove_prefill(0));
+        assert!(!sim.remove_decode(0));
+        assert_eq!(sim.removable_prefill(), None);
+        assert_eq!(sim.removable_decode(), None);
+        sim.add_prefill();
+        sim.add_decode();
+        assert!(sim.remove_prefill(0));
+        assert!(sim.remove_decode(0));
+        // Tombstones are not removable twice.
+        assert!(!sim.remove_prefill(0));
+        assert!(!sim.remove_decode(0));
+        assert_eq!(sim.ratio(), (1, 1));
+    }
+
+    #[test]
+    fn window_stats_accumulate_and_reset() {
+        let cfg = SimConfig {
+            n_p: 2,
+            n_d: 2,
+            only_scenario: Some(5),
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            4,
+        )
+        .only_scenario(5);
+        for r in g.window(10.0, 4_000.0) {
+            sim.run_until(r.arrival_ms);
+            sim.inject(r);
+        }
+        sim.drain();
+        let w = sim.take_window();
+        assert_eq!(w.total(), sim.finished());
+        assert!(w.completed > 0);
+        assert!(w.mean_e2e_ms() >= w.mean_ttft_ms());
+        assert!(w.tp_share() > 0.0 && w.tp_share() <= 1.0);
+        assert!(w.slo_ok <= w.completed);
+        // Reset-on-take.
+        let w2 = sim.take_window();
+        assert_eq!(w2.total(), 0);
     }
 
     #[test]
