@@ -1,14 +1,15 @@
 //! L3 hot-path benches: gateway forwarding decisions.
 //!
 //! The forwarding decision runs once per request per probe round — it must
-//! be microseconds. Covers: SSE registry updates, least-SSE (salted)
-//! ordering, the full probe, and the baseline scheduler pick for
-//! comparison. `cargo bench --bench gateway [-- --fast]`.
+//! be microseconds. Covers: SSE registry updates, route-policy candidate
+//! ordering (the unified routing layer), the full probe, and the baseline
+//! scheduler pick for comparison. `cargo bench --bench gateway [-- --fast]`.
 
 use pd_serve::bench::Bencher;
 use pd_serve::gateway::baseline::StaleQueueScheduler;
 use pd_serve::gateway::forward::OnDemandForwarder;
 use pd_serve::gateway::sse::SseRegistry;
+use pd_serve::serving::router::{RouteKind, RouteRequest};
 use pd_serve::util::prng::Rng;
 
 fn main() {
@@ -29,16 +30,24 @@ fn main() {
             sse.close(e);
         });
 
-        b.bench("least-SSE ordering (salted)", Some((1.0, "op")), || {
-            sse.by_least_loaded_salted(rng.next_u64()).len()
+        let mut ll = RouteKind::LeastLoaded.build();
+        b.bench("least-SSE ordering (salted policy)", Some((1.0, "op")), || {
+            ll.order(&sse.snapshot(), &RouteRequest::opaque(), rng.next_u64())
+                .len()
         });
 
         let forwarder = OnDemandForwarder::new(4, 5.0);
         let busy_mask: Vec<bool> = (0..n_p).map(|i| i % 3 != 0).collect();
         b.bench("on-demand probe (4 candidates)", Some((1.0, "req")), || {
-            forwarder.probe(&sse, rng.next_u64(), 0.0, 1e9, |e| {
-                !busy_mask[e as usize]
-            })
+            forwarder.probe(
+                ll.as_mut(),
+                &sse,
+                &RouteRequest::opaque(),
+                rng.next_u64(),
+                0.0,
+                1e9,
+                |e| !busy_mask[e as usize],
+            )
         });
 
         let mut sched = StaleQueueScheduler::new(n_p, 100.0);

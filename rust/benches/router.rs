@@ -1,0 +1,62 @@
+//! Routing-layer benches: per-decision policy cost and the bucketed
+//! prefix-cache lookup guard.
+//!
+//! Two regression anchors:
+//! - `order()` runs once per request per probe round for every policy —
+//!   prefix affinity must stay within the same order of magnitude as the
+//!   plain least-SSE sort.
+//! - `PrefixCache::lookup` runs per candidate per batch slot in the
+//!   simulator's admission loop; the first-token-bucket index must keep it
+//!   near-flat as the number of live prefixes grows (the pre-index linear
+//!   scan made the hot loop quadratic). `cargo bench --bench router -- --fast`.
+
+use pd_serve::bench::Bencher;
+use pd_serve::cluster::prefix::PrefixCache;
+use pd_serve::serving::router::{RouteKind, RouteRequest};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("route policy — order() over 64 entrances");
+    let snap: Vec<(u32, usize)> = (0..64u32).map(|e| (e, (e as usize * 7) % 5)).collect();
+    for kind in [
+        RouteKind::Random,
+        RouteKind::RoundRobin,
+        RouteKind::LeastLoaded,
+        RouteKind::PrefixAffinity,
+    ] {
+        let mut policy = kind.build();
+        let mut salt = 0u64;
+        b.bench(kind.name(), Some((1.0, "decision")), || {
+            salt = salt.wrapping_add(0x9E37_79B9);
+            let req = RouteRequest { prefix_hash: Some(salt & 0x3F) };
+            let order = policy.order(&snap, &req, salt);
+            policy.placed(order[0], &req);
+            order[0]
+        });
+    }
+
+    b.group("prefix cache — 64-token lookup vs live-prefix count");
+    for &n in &[64usize, 512, 4096] {
+        // Budget sized to hold everything: this isolates lookup cost.
+        let mut cache = PrefixCache::new(n * 64 * 2, 1);
+        let mut probes: Vec<Vec<i32>> = Vec::with_capacity(n);
+        for i in 0..n {
+            // 251 distinct first tokens: buckets stay shallow even at 4k
+            // entries, which is exactly the point of the index; the tail
+            // makes every prefix distinct.
+            let prefix: Vec<i32> = (0..64i32)
+                .map(|j| if j == 0 { (i % 251) as i32 } else { i as i32 * 64 + j })
+                .collect();
+            cache.insert(&prefix);
+            probes.push(prefix);
+        }
+        let mut i = 0;
+        b.bench(&format!("{n} live prefixes"), Some((1.0, "lookup")), || {
+            i = (i + 1) % probes.len();
+            cache.lookup(&probes[i])
+        });
+    }
+
+    println!("\n{}", b.finish());
+}

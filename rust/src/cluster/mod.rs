@@ -19,4 +19,4 @@ pub use device::{Device, DeviceId, FaultLevel, Health, RoceIp};
 pub use engine::EngineModel;
 pub use hbm::BlockAllocator;
 pub use instance::{Instance, InstanceId, Role};
-pub use prefix::PrefixCache;
+pub use prefix::{PrefixCache, SharedPrefixCache};

@@ -10,6 +10,21 @@
 //! that prefix-matches the prompt (the number of tokens whose KV need not
 //! be recomputed). Insertion evicts least-recently-used entries when the
 //! byte budget would be exceeded.
+//!
+//! Entries are indexed by their first token, so a lookup probes one small
+//! bucket instead of scanning every entry. The simulator keeps one cache
+//! per prefill instance and consults it on every accept probe and batch
+//! admission, so a linear scan would make that hot loop quadratic in the
+//! number of live prefixes (`benches/router.rs` guards the scaling).
+//!
+//! `SharedPrefixCache` is the shared-handle view: the owning instance and
+//! any observer (router experiments, per-instance readouts) clone the
+//! handle and see one cache. Single-threaded by design — the simulator
+//! and the real engine both run their logical instances on one thread.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
 
 /// One cached prefix.
 #[derive(Clone, Debug)]
@@ -24,7 +39,9 @@ pub struct PrefixCache {
     budget_bytes: usize,
     bytes_per_token: usize,
     used_bytes: usize,
-    entries: Vec<Entry>,
+    /// First token → entries starting with it.
+    buckets: BTreeMap<i32, Vec<Entry>>,
+    n_entries: usize,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -36,7 +53,8 @@ impl PrefixCache {
             budget_bytes,
             bytes_per_token,
             used_bytes: 0,
-            entries: Vec::new(),
+            buckets: BTreeMap::new(),
+            n_entries: 0,
             tick: 0,
             hits: 0,
             misses: 0,
@@ -50,50 +68,69 @@ impl PrefixCache {
         self.budget_bytes
     }
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.n_entries
     }
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.n_entries == 0
+    }
+
+    /// Longest cached prefix of `prompt` in tokens, without touching LRU
+    /// state or hit accounting — the prediction the prefill's admission
+    /// check runs (it knows its own cache; a remote estimator does not).
+    pub fn peek(&self, prompt: &[i32]) -> usize {
+        let Some(&head) = prompt.first() else { return 0 };
+        let Some(bucket) = self.buckets.get(&head) else { return 0 };
+        bucket
+            .iter()
+            .filter(|e| {
+                e.tokens.len() <= prompt.len()
+                    && prompt[..e.tokens.len()] == e.tokens[..]
+            })
+            .map(|e| e.tokens.len())
+            .max()
+            .unwrap_or(0)
     }
 
     /// Longest cached prefix of `prompt`, in tokens. Marks the entry used.
     pub fn lookup(&mut self, prompt: &[i32]) -> usize {
         self.tick += 1;
+        let tick = self.tick;
+        let Some(&head) = prompt.first() else {
+            self.misses += 1;
+            return 0;
+        };
         let mut best: Option<(usize, usize)> = None; // (len, idx)
-        for (i, e) in self.entries.iter().enumerate() {
-            if e.tokens.len() <= prompt.len()
-                && prompt[..e.tokens.len()] == e.tokens[..]
-            {
-                let len = e.tokens.len();
-                if best.map(|(l, _)| len > l).unwrap_or(true) {
-                    best = Some((len, i));
+        if let Some(bucket) = self.buckets.get_mut(&head) {
+            for (i, e) in bucket.iter().enumerate() {
+                if e.tokens.len() <= prompt.len()
+                    && prompt[..e.tokens.len()] == e.tokens[..]
+                {
+                    let len = e.tokens.len();
+                    if best.map(|(l, _)| len > l).unwrap_or(true) {
+                        best = Some((len, i));
+                    }
                 }
             }
-        }
-        match best {
-            Some((len, i)) => {
-                self.entries[i].last_used = self.tick;
+            if let Some((len, i)) = best {
+                bucket[i].last_used = tick;
                 self.hits += 1;
-                len
-            }
-            None => {
-                self.misses += 1;
-                0
+                return len;
             }
         }
+        self.misses += 1;
+        0
     }
 
     /// Insert a prefix (e.g. after a prefill computed it). Returns false if
     /// the prefix alone exceeds the whole budget.
     pub fn insert(&mut self, prefix: &[i32]) -> bool {
-        if prefix.is_empty() {
-            return true;
-        }
+        let Some(&head) = prefix.first() else { return true };
         // Already present (exact)?
         if self
-            .entries
-            .iter()
-            .any(|e| e.tokens.len() == prefix.len() && e.tokens[..] == *prefix)
+            .buckets
+            .get(&head)
+            .map(|b| b.iter().any(|e| e.tokens[..] == *prefix))
+            .unwrap_or(false)
         {
             return true;
         }
@@ -105,24 +142,34 @@ impl PrefixCache {
             self.evict_lru();
         }
         self.tick += 1;
-        self.entries.push(Entry {
+        let entry = Entry {
             tokens: prefix.to_vec(),
             bytes,
             last_used: self.tick,
-        });
+        };
+        self.buckets.entry(head).or_default().push(entry);
+        self.n_entries += 1;
         self.used_bytes += bytes;
         true
     }
 
     fn evict_lru(&mut self) {
-        if let Some((idx, _)) = self
-            .entries
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, e)| e.last_used)
-        {
-            let e = self.entries.swap_remove(idx);
+        let mut victim: Option<(i32, usize, u64)> = None; // (head, idx, last_used)
+        for (&head, bucket) in &self.buckets {
+            for (i, e) in bucket.iter().enumerate() {
+                if victim.map(|(_, _, lu)| e.last_used < lu).unwrap_or(true) {
+                    victim = Some((head, i, e.last_used));
+                }
+            }
+        }
+        if let Some((head, i, _)) = victim {
+            let bucket = self.buckets.get_mut(&head).expect("victim bucket exists");
+            let e = bucket.swap_remove(i);
+            if bucket.is_empty() {
+                self.buckets.remove(&head);
+            }
             self.used_bytes -= e.bytes;
+            self.n_entries -= 1;
         }
     }
 
@@ -135,9 +182,76 @@ impl PrefixCache {
         self.hits as f64 / total as f64
     }
 
+    /// Lifetime lookups that matched any cached prefix.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lifetime lookups (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
     pub fn clear(&mut self) {
-        self.entries.clear();
+        self.buckets.clear();
+        self.n_entries = 0;
         self.used_bytes = 0;
+    }
+}
+
+/// Clone-able shared handle onto one `PrefixCache`. The simulator's
+/// per-prefill-instance caches are held through this so the instance
+/// (admission + batch launch) and any observer (experiments, tests) read
+/// and warm the same state.
+#[derive(Clone, Debug)]
+pub struct SharedPrefixCache(Rc<RefCell<PrefixCache>>);
+
+impl SharedPrefixCache {
+    pub fn new(budget_bytes: usize, bytes_per_token: usize) -> Self {
+        SharedPrefixCache(Rc::new(RefCell::new(PrefixCache::new(
+            budget_bytes,
+            bytes_per_token,
+        ))))
+    }
+
+    pub fn peek(&self, prompt: &[i32]) -> usize {
+        self.0.borrow().peek(prompt)
+    }
+
+    pub fn lookup(&self, prompt: &[i32]) -> usize {
+        self.0.borrow_mut().lookup(prompt)
+    }
+
+    pub fn insert(&self, prefix: &[i32]) -> bool {
+        self.0.borrow_mut().insert(prefix)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.0.borrow().hit_rate()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.0.borrow().hits()
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.0.borrow().lookups()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.0.borrow().used_bytes()
+    }
+
+    pub fn clear(&self) {
+        self.0.borrow_mut().clear()
     }
 }
 
@@ -166,6 +280,19 @@ mod tests {
         let mut c = PrefixCache::new(10_000, 10);
         c.insert(&toks(&[1, 2, 3, 4]));
         assert_eq!(c.lookup(&[1, 2]), 0);
+    }
+
+    #[test]
+    fn peek_matches_lookup_without_mutation() {
+        let mut c = PrefixCache::new(10_000, 10);
+        c.insert(&toks(&[1, 2, 3]));
+        assert_eq!(c.peek(&[1, 2, 3, 4]), 3);
+        assert_eq!(c.peek(&[2, 2]), 0);
+        // peek counted nothing.
+        assert_eq!(c.lookups(), 0);
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), 3);
+        assert_eq!(c.lookups(), 1);
+        assert_eq!(c.hits(), 1);
     }
 
     #[test]
@@ -209,6 +336,18 @@ mod tests {
     }
 
     #[test]
+    fn shared_handles_see_one_cache() {
+        let a = SharedPrefixCache::new(1000, 10);
+        let b = a.clone();
+        a.insert(&[4, 5, 6]);
+        assert_eq!(b.lookup(&[4, 5, 6, 7]), 3);
+        assert_eq!(a.hits(), 1);
+        assert_eq!(b.len(), 1);
+        b.clear();
+        assert!(a.is_empty());
+    }
+
+    #[test]
     fn prop_used_bytes_never_exceeds_budget() {
         let cfg = prop::Config { cases: 48, ..Default::default() };
         prop::check(
@@ -234,6 +373,123 @@ mod tests {
                             "budget {} exceeded: {}",
                             budget,
                             c.used_bytes()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Reference implementation: the pre-index linear scan, kept verbatim
+    /// for the equivalence property below.
+    struct LinearRef {
+        budget: usize,
+        bpt: usize,
+        used: usize,
+        entries: Vec<(Vec<i32>, usize, u64)>, // (tokens, bytes, last_used)
+        tick: u64,
+    }
+
+    impl LinearRef {
+        fn new(budget: usize, bpt: usize) -> Self {
+            LinearRef { budget, bpt, used: 0, entries: Vec::new(), tick: 0 }
+        }
+
+        fn lookup(&mut self, prompt: &[i32]) -> usize {
+            self.tick += 1;
+            let mut best: Option<(usize, usize)> = None;
+            for (i, (t, _, _)) in self.entries.iter().enumerate() {
+                if t.len() <= prompt.len()
+                    && prompt[..t.len()] == t[..]
+                    && best.map(|(l, _)| t.len() > l).unwrap_or(true)
+                {
+                    best = Some((t.len(), i));
+                }
+            }
+            match best {
+                Some((len, i)) => {
+                    self.entries[i].2 = self.tick;
+                    len
+                }
+                None => 0,
+            }
+        }
+
+        fn insert(&mut self, prefix: &[i32]) -> bool {
+            if prefix.is_empty() {
+                return true;
+            }
+            if self.entries.iter().any(|(t, _, _)| t[..] == *prefix) {
+                return true;
+            }
+            let bytes = prefix.len() * self.bpt;
+            if bytes > self.budget {
+                return false;
+            }
+            while self.used + bytes > self.budget {
+                if let Some((i, _)) = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (_, _, lu))| *lu)
+                {
+                    let (_, b, _) = self.entries.swap_remove(i);
+                    self.used -= b;
+                }
+            }
+            self.tick += 1;
+            self.entries.push((prefix.to_vec(), bytes, self.tick));
+            self.used += bytes;
+            true
+        }
+    }
+
+    /// Satellite: the first-token-bucket index is an observably pure
+    /// optimization — lookup results, sizes and byte accounting match the
+    /// linear-scan reference on any op sequence.
+    #[test]
+    fn prop_bucketed_index_equivalent_to_linear_scan() {
+        let cfg = prop::Config { cases: 64, ..Default::default() };
+        prop::check(
+            "prefix-bucket-equivalence",
+            &cfg,
+            |r| (300 + r.below(1500), r.next_u64()),
+            |&(budget, seed)| {
+                let mut fast = PrefixCache::new(budget, 7);
+                let mut slow = LinearRef::new(budget, 7);
+                let mut rng = Rng::new(seed);
+                for step in 0..250 {
+                    // Small alphabet of heads + shared tails: plenty of
+                    // bucket collisions and partial prefix overlaps.
+                    let head = rng.below(4) as i32;
+                    let len = 1 + rng.below(20);
+                    let stream = rng.below(3) as i32;
+                    let seq: Vec<i32> = std::iter::once(head)
+                        .chain((1..len).map(|i| stream * 100 + i as i32))
+                        .collect();
+                    if rng.chance(0.6) {
+                        let a = fast.insert(&seq);
+                        let b = slow.insert(&seq);
+                        if a != b {
+                            return Err(format!("step {step}: insert {a} != {b}"));
+                        }
+                    } else {
+                        let a = fast.lookup(&seq);
+                        let b = slow.lookup(&seq);
+                        if a != b {
+                            return Err(format!("step {step}: lookup {a} != {b}"));
+                        }
+                    }
+                    if fast.used_bytes() != slow.used
+                        || fast.len() != slow.entries.len()
+                    {
+                        return Err(format!(
+                            "step {step}: {}B/{} entries vs {}B/{}",
+                            fast.used_bytes(),
+                            fast.len(),
+                            slow.used,
+                            slow.entries.len()
                         ));
                     }
                 }

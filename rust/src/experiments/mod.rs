@@ -16,6 +16,7 @@ pub mod fig12;
 pub mod fig13;
 pub mod fig14;
 pub mod headline;
+pub mod routing;
 
 use crate::util::cli::ParsedArgs;
 
@@ -72,6 +73,9 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         if want(&["fleet", "13e"]) {
             fleet::run(scale);
         }
+        if want(&["routing"]) {
+            routing::run(scale);
+        }
         if want(&["headline"]) {
             headline::run(scale);
         }
@@ -83,7 +87,7 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, routing, headline, all)");
         return 2;
     }
     0

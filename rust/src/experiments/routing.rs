@@ -1,0 +1,217 @@
+//! `repro --fig routing` — the unified routing layer A/B (paper §2.2.1).
+//!
+//! Two paired streams drive the same 4P/4D group under every route
+//! policy:
+//!
+//! - **homologous tidal**: one scenario whose prefix pool (24 streams ×
+//!   ~1200 tokens) is larger than any single instance's HBM budget, under
+//!   a trough–peak–shoulder–trough arrival envelope. Least-SSE scatter
+//!   makes every instance churn the whole pool through LRU; prefix
+//!   affinity partitions the streams so each instance's working set fits
+//!   — hit rate rises and the saved prefill compute lands directly in
+//!   TTFT (cached tokens are not recomputed).
+//! - **prefix-free**: the same prompt/generation shape with the prefix
+//!   pool removed. Requests carry no route hash, so `PrefixAffinity`
+//!   degrades to `LeastLoaded` decision-for-decision — the no-regression
+//!   guard.
+//!
+//! Acceptance: PrefixAffinity ≥ 1.5× LeastLoaded's hit rate and strictly
+//! better mean TTFT on the homologous stream; TTFT within ±2% on the
+//! prefix-free stream.
+
+use crate::serving::router::RouteKind;
+use crate::serving::sim::{SimConfig, Simulation, WorkloadKind};
+use crate::workload::{OpenLoopGen, Scenario};
+
+use super::Scale;
+
+pub struct RoutingRow {
+    pub policy: RouteKind,
+    pub hit_rate: f64,
+    pub mean_ttft_ms: f64,
+    pub mean_e2e_ms: f64,
+    pub completed: usize,
+    pub timed_out: usize,
+}
+
+pub struct RoutingResult {
+    /// Random, RoundRobin, LeastLoaded, PrefixAffinity on the homologous
+    /// tidal stream.
+    pub homologous: Vec<RoutingRow>,
+    /// LeastLoaded and PrefixAffinity on the prefix-free stream.
+    pub prefix_free: Vec<RoutingRow>,
+}
+
+impl RoutingResult {
+    fn find(rows: &[RoutingRow], policy: RouteKind) -> &RoutingRow {
+        rows.iter()
+            .find(|r| r.policy == policy)
+            .expect("policy row present")
+    }
+
+    pub fn homologous_row(&self, policy: RouteKind) -> &RoutingRow {
+        Self::find(&self.homologous, policy)
+    }
+
+    pub fn prefix_free_row(&self, policy: RouteKind) -> &RoutingRow {
+        Self::find(&self.prefix_free, policy)
+    }
+}
+
+/// A homologous scenario: tight prompt shape, a prefix pool (24 streams ×
+/// 75% of the prompt) that overflows one instance's budget but partitions
+/// cleanly across four.
+fn homologous_scene() -> Scenario {
+    Scenario {
+        name: "homologous-tidal",
+        service: "svcA",
+        prompt_mean: 1600.0,
+        prompt_cv: 0.15,
+        n_prefixes: 24,
+        prefix_frac: 0.75,
+        gen_mean: 48.0,
+        gen_cv: 0.4,
+        weight: 1.0,
+    }
+}
+
+fn run_stream(route: RouteKind, sc: Scenario, scale: Scale) -> RoutingRow {
+    let cfg = SimConfig {
+        n_p: 4,
+        n_d: 4,
+        route,
+        scenarios: vec![sc.clone()],
+        only_scenario: Some(0),
+        // ~8 prefix streams (≈ 1 GB each) fit per instance: 24 scattered
+        // streams churn through LRU, 6 affine streams fit with headroom
+        // for imperfect home balance.
+        prefix_budget_bytes: 8 << 30,
+        workload: WorkloadKind::External,
+        seed: 0x0707,
+        ..Default::default()
+    };
+    let mut sim = Simulation::external(cfg);
+    // Identical arrival stream for every policy (generator seed is fixed
+    // and independent of the simulation): the comparison is paired.
+    let mut g = OpenLoopGen::new(vec![sc], 0xA11).only_scenario(0);
+    let phase_ms = scale.sim_duration_ms;
+    for &mult in &[0.35, 1.0, 0.7, 0.35] {
+        for r in g.window(3.2 * mult, phase_ms) {
+            sim.run_until(r.arrival_ms);
+            sim.inject(r);
+        }
+    }
+    sim.drain();
+    let out = sim.into_output();
+    RoutingRow {
+        policy: route,
+        hit_rate: out.prefix_hit_rate,
+        mean_ttft_ms: out.report.ttft.mean(),
+        mean_e2e_ms: out.report.e2e.mean(),
+        completed: out.report.completed,
+        timed_out: out.report.timed_out,
+    }
+}
+
+pub fn routing_compare(scale: Scale) -> RoutingResult {
+    let all = [
+        RouteKind::Random,
+        RouteKind::RoundRobin,
+        RouteKind::LeastLoaded,
+        RouteKind::PrefixAffinity,
+    ];
+    let homologous = all
+        .iter()
+        .map(|&k| run_stream(k, homologous_scene(), scale))
+        .collect();
+    let free_scene = homologous_scene().with_prefix_pool(1, 0.0);
+    let prefix_free = [RouteKind::LeastLoaded, RouteKind::PrefixAffinity]
+        .iter()
+        .map(|&k| run_stream(k, free_scene.clone(), scale))
+        .collect();
+    RoutingResult { homologous, prefix_free }
+}
+
+pub fn run(scale: Scale) {
+    let r = routing_compare(scale);
+    let fmt = |row: &RoutingRow| {
+        format!(
+            "hit {:>5.1}%  TTFT {:>7.1} ms  E2E {:>8.1} ms  ({} done, {} timeout)",
+            row.hit_rate * 100.0,
+            row.mean_ttft_ms,
+            row.mean_e2e_ms,
+            row.completed,
+            row.timed_out
+        )
+    };
+    let rows: Vec<(String, String)> = r
+        .homologous
+        .iter()
+        .map(|row| (row.policy.name().to_string(), fmt(row)))
+        .collect();
+    super::table(
+        "Routing — homologous tidal stream (24 shared-prefix streams, 4P/4D)",
+        ("route policy", "prefix hit rate / latency"),
+        &rows,
+    );
+    let rows: Vec<(String, String)> = r
+        .prefix_free
+        .iter()
+        .map(|row| (row.policy.name().to_string(), fmt(row)))
+        .collect();
+    super::table(
+        "Routing — prefix-free stream (no-regression guard)",
+        ("route policy", "prefix hit rate / latency"),
+        &rows,
+    );
+    let ll = r.homologous_row(RouteKind::LeastLoaded);
+    let aff = r.homologous_row(RouteKind::PrefixAffinity);
+    let llf = r.prefix_free_row(RouteKind::LeastLoaded);
+    let afff = r.prefix_free_row(RouteKind::PrefixAffinity);
+    println!(
+        "prefix-affinity over least-loaded: {:.2}x hit rate, {:+.1}% TTFT (homologous), {:+.2}% TTFT (prefix-free)",
+        if ll.hit_rate > 0.0 { aff.hit_rate / ll.hit_rate } else { f64::INFINITY },
+        (aff.mean_ttft_ms / ll.mean_ttft_ms - 1.0) * 100.0,
+        (afff.mean_ttft_ms / llf.mean_ttft_ms - 1.0) * 100.0,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_wins_homologous_and_never_regresses_prefix_free() {
+        // The PR's acceptance criteria, enforced at tier-1.
+        let r = routing_compare(Scale::fast());
+        let ll = r.homologous_row(RouteKind::LeastLoaded);
+        let aff = r.homologous_row(RouteKind::PrefixAffinity);
+        assert!(
+            aff.hit_rate >= 1.5 * ll.hit_rate,
+            "hit rate: affinity {:.3} < 1.5x least-loaded {:.3}",
+            aff.hit_rate,
+            ll.hit_rate
+        );
+        assert!(
+            aff.mean_ttft_ms < ll.mean_ttft_ms,
+            "TTFT: affinity {:.1} !< least-loaded {:.1}",
+            aff.mean_ttft_ms,
+            ll.mean_ttft_ms
+        );
+        // Prefix-free: PrefixAffinity degrades to LeastLoaded exactly, so
+        // the paired runs are identical well inside the ±2% band.
+        let llf = r.prefix_free_row(RouteKind::LeastLoaded);
+        let afff = r.prefix_free_row(RouteKind::PrefixAffinity);
+        assert!(
+            (afff.mean_ttft_ms - llf.mean_ttft_ms).abs()
+                <= 0.02 * llf.mean_ttft_ms.max(1e-9),
+            "prefix-free TTFT regressed: {:.2} vs {:.2}",
+            afff.mean_ttft_ms,
+            llf.mean_ttft_ms
+        );
+        assert_eq!(
+            afff.completed, llf.completed,
+            "prefix-free decisions diverged between affinity and least-loaded"
+        );
+    }
+}

@@ -2,18 +2,21 @@
 //!
 //! The prefill local queue is removed; pending prompts wait *at the
 //! gateway*. For each pending request the gateway probes prefill
-//! candidates in least-SSE order; an occupied prefill rejects, an idle one
-//! accepts ("the acceptance implies the request must be assigned to an
-//! idle prefill"). Probing repeats every retry interval until the TTFT
-//! threshold expires, at which point the request terminates (early
-//! intervention). The achieved equilibrium is Eq. 2:
-//! `I_t ≈ n_p b_p / T_p`.
+//! candidates in the order a `serving::router::RoutePolicy` ranks them
+//! (least-SSE by default, prefix-affinity when configured); an occupied
+//! prefill rejects, an idle one accepts ("the acceptance implies the
+//! request must be assigned to an idle prefill"). Probing repeats every
+//! retry interval until the TTFT threshold expires, at which point the
+//! request terminates (early intervention). The achieved equilibrium is
+//! Eq. 2: `I_t ≈ n_p b_p / T_p`.
 //!
-//! The forwarder is policy-only: the caller supplies an accept probe, so
-//! both the discrete-event simulator and the real threaded server reuse
-//! the identical decision logic.
+//! The forwarder is policy-only: the caller supplies the route policy and
+//! an accept probe, so the discrete-event simulator and the real threaded
+//! server reuse the identical decision logic — candidate ordering *and*
+//! affinity feedback happen here, on the one compiled path.
 
 use super::sse::SseRegistry;
+use crate::serving::router::{RoutePolicy, RouteRequest};
 
 /// Decision for one pending request at one probe round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,18 +43,23 @@ impl OnDemandForwarder {
     }
 
     /// One probe round for a request with TTFT deadline `deadline_ms`
-    /// (absolute). `accepts(e)` asks entrance `e` whether it is idle (the
-    /// prefill-side accept/reject).
+    /// (absolute). `policy` ranks this gateway's entrances from the SSE
+    /// snapshot; `accepts(e)` asks entrance `e` whether it is idle (the
+    /// prefill-side accept/reject). On acceptance the placement is fed
+    /// back to the policy (`placed`) so affinity state tracks where
+    /// requests actually ran.
     ///
-    /// `salt` breaks ties in the least-SSE ordering pseudo-randomly. With
-    /// the unsalted ordering every gateway prefers the lowest entrance id
-    /// whenever counts tie, so a cluster of gateways herds its probes onto
-    /// entrance 0 — exactly the stampede `SseRegistry::by_least_loaded`
-    /// warns about. Callers pass a per-round random salt (simulator) or a
-    /// per-gateway seed (real server).
+    /// `salt` breaks ordering ties pseudo-randomly. With unsalted ties
+    /// every gateway prefers the lowest entrance id whenever counts tie,
+    /// so a cluster of gateways herds its probes onto entrance 0. Callers
+    /// pass a per-round random salt (simulator) or a per-gateway seed
+    /// (real server).
+    #[allow(clippy::too_many_arguments)] // one probe = one decision's full context
     pub fn probe(
         &self,
+        policy: &mut dyn RoutePolicy,
         sse: &SseRegistry,
+        req: &RouteRequest,
         salt: u64,
         now_ms: f64,
         deadline_ms: f64,
@@ -60,12 +68,14 @@ impl OnDemandForwarder {
         if now_ms >= deadline_ms {
             return ForwardDecision::Timeout;
         }
-        for e in sse
-            .by_least_loaded_salted(salt)
+        let snap = sse.snapshot();
+        for e in policy
+            .order(&snap, req, salt)
             .into_iter()
             .take(self.retry_candidates)
         {
             if accepts(e) {
+                policy.placed(e, req);
                 return ForwardDecision::Accept(e);
             }
         }
@@ -76,6 +86,7 @@ impl OnDemandForwarder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::router::RouteKind;
 
     fn sse(counts: &[(u32, usize)]) -> SseRegistry {
         let mut r = SseRegistry::new(counts.iter().map(|(e, _)| *e));
@@ -87,12 +98,24 @@ mod tests {
         r
     }
 
+    fn ll() -> Box<dyn RoutePolicy> {
+        RouteKind::LeastLoaded.build()
+    }
+
     #[test]
     fn accepts_least_loaded_idle() {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 5), (1, 1), (2, 3)]);
         // Entrance 1 is least loaded and idle.
-        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 1 || e == 0);
+        let d = f.probe(
+            ll().as_mut(),
+            &r,
+            &RouteRequest::opaque(),
+            0,
+            0.0,
+            1000.0,
+            |e| e == 1 || e == 0,
+        );
         assert_eq!(d, ForwardDecision::Accept(1));
     }
 
@@ -101,7 +124,7 @@ mod tests {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0), (1, 1), (2, 2)]);
         // 0 and 1 reject (occupied); 2 accepts.
-        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 2);
+        let d = f.probe(ll().as_mut(), &r, &RouteRequest::opaque(), 0, 0.0, 1000.0, |e| e == 2);
         assert_eq!(d, ForwardDecision::Accept(2));
     }
 
@@ -111,7 +134,7 @@ mod tests {
         let r = sse(&[(0, 0), (1, 1), (2, 2)]);
         // Only entrances 0 and 1 probed; 2 would accept but is out of the
         // top-ranked subset this round.
-        let d = f.probe(&r, 0, 0.0, 1000.0, |e| e == 2);
+        let d = f.probe(ll().as_mut(), &r, &RouteRequest::opaque(), 0, 0.0, 1000.0, |e| e == 2);
         assert_eq!(d, ForwardDecision::RetryLater);
     }
 
@@ -119,20 +142,22 @@ mod tests {
     fn deadline_terminates() {
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0)]);
-        let d = f.probe(&r, 0, 1000.0, 1000.0, |_| true);
+        let d = f.probe(ll().as_mut(), &r, &RouteRequest::opaque(), 0, 1000.0, 1000.0, |_| true);
         assert_eq!(d, ForwardDecision::Timeout);
     }
 
     #[test]
     fn salted_ties_do_not_herd_onto_entrance_zero() {
-        // Regression: with tied SSE counts, the unsalted ordering made
+        // Regression: with tied SSE counts, an unsalted ordering makes
         // every probe round start at entrance 0. Distinct salts must
         // spread the first candidate across entrances.
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0), (1, 0), (2, 0), (3, 0)]);
+        let mut policy = ll();
         let mut firsts = std::collections::BTreeSet::new();
         for salt in 0..32u64 {
-            match f.probe(&r, salt, 0.0, 1000.0, |_| true) {
+            match f.probe(policy.as_mut(), &r, &RouteRequest::opaque(), salt, 0.0, 1000.0, |_| true)
+            {
                 ForwardDecision::Accept(e) => {
                     firsts.insert(e);
                 }
@@ -147,7 +172,15 @@ mod tests {
         // is probed first regardless of salt.
         let loaded = sse(&[(0, 2), (1, 1), (2, 2)]);
         for salt in 0..8u64 {
-            let d = f.probe(&loaded, salt, 0.0, 1000.0, |_| true);
+            let d = f.probe(
+                policy.as_mut(),
+                &loaded,
+                &RouteRequest::opaque(),
+                salt,
+                0.0,
+                1000.0,
+                |_| true,
+            );
             assert_eq!(d, ForwardDecision::Accept(1));
         }
     }
@@ -158,11 +191,12 @@ mod tests {
         // 4 requests probe; exactly 2 accepted, 2 retry.
         let f = OnDemandForwarder::new(4, 5.0);
         let r = sse(&[(0, 0), (1, 0)]);
+        let mut policy = ll();
         let mut busy = [false, false];
         let mut accepted = 0;
         let mut retries = 0;
         for _ in 0..4 {
-            let d = f.probe(&r, 0, 0.0, 100.0, |e| {
+            let d = f.probe(policy.as_mut(), &r, &RouteRequest::opaque(), 0, 0.0, 100.0, |e| {
                 let i = e as usize;
                 if busy[i] {
                     false
@@ -179,5 +213,31 @@ mod tests {
         }
         assert_eq!(accepted, 2);
         assert_eq!(retries, 2);
+    }
+
+    #[test]
+    fn affinity_probes_home_first_and_spills_when_home_rejects() {
+        let f = OnDemandForwarder::new(4, 5.0);
+        let r = sse(&[(0, 0), (1, 0), (2, 0)]);
+        let mut policy = RouteKind::PrefixAffinity.build();
+        let req = RouteRequest { prefix_hash: Some(99) };
+        let home = match f.probe(policy.as_mut(), &r, &req, 3, 0.0, 1000.0, |_| true) {
+            ForwardDecision::Accept(e) => e,
+            other => panic!("unexpected {other:?}"),
+        };
+        // Home idle: always re-chosen, any salt.
+        for salt in 0..8u64 {
+            let d = f.probe(policy.as_mut(), &r, &req, salt, 0.0, 1000.0, |_| true);
+            assert_eq!(d, ForwardDecision::Accept(home));
+        }
+        // Home busy: the request spills to another entrance this round…
+        let d = f.probe(policy.as_mut(), &r, &req, 5, 0.0, 1000.0, |e| e != home);
+        match d {
+            ForwardDecision::Accept(e) => assert_ne!(e, home),
+            other => panic!("unexpected {other:?}"),
+        }
+        // …without re-homing the stream.
+        let d = f.probe(policy.as_mut(), &r, &req, 6, 0.0, 1000.0, |_| true);
+        assert_eq!(d, ForwardDecision::Accept(home));
     }
 }

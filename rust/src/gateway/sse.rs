@@ -76,29 +76,13 @@ impl SseRegistry {
         self.counts.contains_key(&e)
     }
 
-    /// Entrances ordered by ascending live-connection count (ties by id) —
-    /// the paper's candidate ordering ("chooses the one with the least
-    /// number of SSE connections").
-    pub fn by_least_loaded(&self) -> Vec<u32> {
-        let mut v: Vec<(usize, u32)> =
-            self.counts.iter().map(|(e, c)| (*c, *e)).collect();
-        v.sort();
-        v.into_iter().map(|(_, e)| e).collect()
-    }
-
-    /// Like `by_least_loaded`, but ties are broken pseudo-randomly by
-    /// `salt` — real gateways don't all prefer entrance 0 when counts tie.
-    pub fn by_least_loaded_salted(&self, salt: u64) -> Vec<u32> {
-        let mut v: Vec<(usize, u64, u32)> = self
-            .counts
-            .iter()
-            .map(|(e, c)| {
-                let mut h = salt ^ (*e as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-                (*c, crate::util::prng::splitmix64(&mut h), *e)
-            })
-            .collect();
-        v.sort();
-        v.into_iter().map(|(_, _, e)| e).collect()
+    /// Entrance metadata snapshot — `(entrance, live connections)` in id
+    /// order — the load view `serving::router` policies rank. The
+    /// least-SSE candidate *orderings* (salted and unsalted) that used to
+    /// live here are now `router::LeastLoaded`, the one candidate-ordering
+    /// path shared by the server, the forwarder and the sims.
+    pub fn snapshot(&self) -> Vec<(u32, usize)> {
+        self.counts.iter().map(|(e, c)| (*e, *c)).collect()
     }
 
     /// Register a new entrance (scale-out / recovery substitute).
@@ -133,12 +117,12 @@ mod tests {
     }
 
     #[test]
-    fn least_loaded_ordering() {
+    fn snapshot_reflects_load_changes() {
         let mut r = SseRegistry::new([0, 1, 2]);
         r.open(0);
         r.open(0);
         r.open(2);
-        assert_eq!(r.by_least_loaded(), vec![1, 2, 0]);
+        assert_eq!(r.snapshot(), vec![(0, 2), (1, 0), (2, 1)]);
     }
 
     #[test]
@@ -146,16 +130,19 @@ mod tests {
         let mut r = SseRegistry::new([0]);
         r.add_entrance(7);
         r.open(7);
-        assert_eq!(r.by_least_loaded(), vec![0, 7]);
+        assert_eq!(r.snapshot(), vec![(0, 0), (7, 1)]);
         assert_eq!(r.remove_entrance(7), 1);
         assert_eq!(r.count(7), 0);
+        assert!(!r.has_entrance(7));
         assert_eq!(r.live(), 0);
     }
 
     #[test]
-    fn ties_broken_by_id() {
-        let r = SseRegistry::new([3, 1, 2]);
-        assert_eq!(r.by_least_loaded(), vec![1, 2, 3]);
+    fn snapshot_lists_all_entrances_with_counts() {
+        let mut r = SseRegistry::new([2, 0]);
+        r.open(2);
+        r.open(2);
+        assert_eq!(r.snapshot(), vec![(0, 0), (2, 2)]);
     }
 
     #[test]

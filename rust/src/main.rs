@@ -63,6 +63,15 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
         "blocked" => TransferDiscipline::Blocked,
         _ => TransferDiscipline::Contiguous,
     };
+    cfg.route = match pd_serve::serving::router::RouteKind::parse(
+        args.get_or("route", "least-loaded"),
+    ) {
+        Some(r) => r,
+        None => {
+            eprintln!("--route must be random|round-robin|least-loaded|prefix-affinity");
+            return 2;
+        }
+    };
     if let Some(s) = args.get("scenario") {
         cfg.only_scenario = s.parse().ok();
     }
@@ -100,6 +109,9 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 ///
 /// Flags: `--peak-rps R --hours H --ms-per-hour MS --group-size N`
 /// `--ratio P:D --scenes 0,2,5 --control-ms MS --seed S`
+/// `--route random|round-robin|least-loaded|prefix-affinity`
+/// `--upgrade-at MIN` (rolling upgrade, minutes into the simulated day)
+/// `--upgrade-wave N` (groups per wave, default 1)
 /// `--static` (freeze ratios) `--no-scale` (freeze group counts)
 /// `--quiet` (summary only, no timeline).
 fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
@@ -156,6 +168,23 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     }
     if args.has("no-scale") {
         cfg.scale_groups = false;
+    }
+    cfg.route = match pd_serve::serving::router::RouteKind::parse(
+        args.get_or("route", "least-loaded"),
+    ) {
+        Some(r) => r,
+        None => {
+            eprintln!("--route must be random|round-robin|least-loaded|prefix-affinity");
+            return 2;
+        }
+    };
+    if let Some(m) = args.get("upgrade-at") {
+        let Ok(minutes) = m.parse::<f64>() else {
+            eprintln!("--upgrade-at must be minutes into the simulated day, got '{m}'");
+            return 2;
+        };
+        cfg.upgrade_at_ms = Some(minutes / 60.0 * cfg.ms_per_hour);
+        cfg.upgrade_wave = args.get_usize("upgrade-wave", cfg.upgrade_wave);
     }
     if cfg.group_total < 2 {
         eprintln!("--group-size must be >= 2");

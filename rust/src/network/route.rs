@@ -30,13 +30,16 @@ pub fn sprayed_spine(base_flow: u64, sub_index: usize, n_spines: usize) -> usize
 }
 
 /// Count, for each spine, how many of the given assignments land on it and
-/// return the worst-case sharer count (1 = conflict-free).
+/// return the worst-case sharer count (>= 1; 1 = conflict-free). An empty
+/// assignment set has no conflicts, so it reports the documented floor of
+/// 1 — matching `ConflictStats::max_sharers` — rather than 0, which
+/// callers would feed into bandwidth division as "zero sharers".
 pub fn max_sharers(assignments: &[usize], n_spines: usize) -> usize {
     let mut counts = vec![0usize; n_spines];
     for &a in assignments {
         counts[a] += 1;
     }
-    counts.into_iter().max().unwrap_or(0)
+    counts.into_iter().max().unwrap_or(0).max(1)
 }
 
 /// Conflict statistics for one KVCache move with `n_sub` sub-transfers.
@@ -139,7 +142,16 @@ mod tests {
     fn max_sharers_counts() {
         assert_eq!(max_sharers(&[0, 0, 1], 2), 2);
         assert_eq!(max_sharers(&[0, 1, 2, 3], 4), 1);
-        assert_eq!(max_sharers(&[], 4), 0);
+    }
+
+    #[test]
+    fn max_sharers_empty_respects_floor_contract() {
+        // Regression: an empty slice returned 0 despite the documented
+        // `>= 1` contract (shared with `ConflictStats::max_sharers`) —
+        // a conflict-free answer, not a zero-sharers one.
+        assert_eq!(max_sharers(&[], 4), 1);
+        assert_eq!(max_sharers(&[], 1), 1);
+        assert_eq!(conflicts(&[], 4).max_sharers, max_sharers(&[], 4));
     }
 
     #[test]

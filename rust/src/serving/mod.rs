@@ -1,19 +1,25 @@
 //! Serving: the request path.
 //!
+//! - `router`: the unified routing layer — one `RoutePolicy` (Random /
+//!   RoundRobin / LeastLoaded / PrefixAffinity) shared by the real
+//!   server, the on-demand forwarder and both simulators.
 //! - `sim`: the discrete-event P/D serving simulator — gateway policy,
 //!   prefill batching, KVCache transfer, continuous-batching decode — used
 //!   by every evaluation figure.
 //! - `fleet`: the fleet-level closed loop — multiple scenario-specific P/D
-//!   groups under tidal traffic, with dynamic ratio adjustment and
-//!   group-granular scale-in/out (the MLOps circuit of §3.3/Fig. 13).
+//!   groups under tidal traffic, with dynamic ratio adjustment,
+//!   group-granular scale-in/out (the MLOps circuit of §3.3/Fig. 13) and
+//!   rolling upgrades.
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
 
 pub mod fleet;
+pub mod router;
 pub mod server;
 pub mod speculative;
 pub mod sim;
 
 pub use fleet::{FleetConfig, FleetOutput, FleetSim};
+pub use router::{RouteKind, RoutePolicy, RouteRequest};
 pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WindowStats, WorkloadKind};

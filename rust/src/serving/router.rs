@@ -1,0 +1,620 @@
+//! The unified prefix-affinity routing layer (paper §2.2.1, §3.2).
+//!
+//! Every place a request picks an executor used to carry its own ad-hoc
+//! selection code: the simulator's gateway round and baseline arrival path
+//! ordered entrances with `SseRegistry::by_least_loaded_salted`, the real
+//! server duplicated the same call inside `RealEngine::serve`, and the
+//! fleet picked the least-loaded group of a scene with an inline `min_by`.
+//! This module replaces all of them with one `RoutePolicy` trait consulted
+//! through `OnDemandForwarder::probe` (gateway/entrance granularity) and
+//! `FleetSim::route` (scene/group granularity), so routing behaviour is a
+//! swappable, testable policy rather than a property of each call site.
+//!
+//! Policies:
+//! - `Random` — salted shuffle; the no-information baseline.
+//! - `RoundRobin` — rotate over entrance ids; ignores load.
+//! - `LeastLoaded` — ascending live-connection count, ties broken
+//!   pseudo-randomly by salt (the paper's least-SSE ordering; previously
+//!   `by_least_loaded_salted`).
+//! - `PrefixAffinity` — the paper's fine-grained organization at routing
+//!   granularity: homologous prompts (same rolling hash of the leading
+//!   tokens) are steered to the instance that already computed that
+//!   prefix's KVCache, so per-instance prefix caches stay hot without
+//!   host-memory spill. Non-home candidates fall back to least-loaded
+//!   order, and the accept/reject probe still guards against overload: a
+//!   busy home rejects and the request spills for one round instead of
+//!   queueing behind its affinity.
+//!
+//! Decisions are deterministic in (policy state, snapshot, salt), which is
+//! what makes the single-decision-path invariant testable: the simulator
+//! and the real threaded server run the *same compiled path* and must
+//! produce identical placements from identical snapshots.
+
+use std::collections::BTreeMap;
+
+use crate::util::prng::splitmix64;
+
+/// Leading tokens hashed into a request's route key. Deep enough to tell
+/// scenario prefixes apart, shallow enough that hashing is free compared
+/// to one probe round.
+pub const DEFAULT_HASH_DEPTH: usize = 64;
+
+/// Bound on the affinity map: beyond this many live prefix streams the
+/// oldest mapping is dropped (its traffic degrades to least-loaded).
+const AFFINITY_MAP_CAP: usize = 4096;
+
+/// Overload spill for `PrefixAffinity`: the home keeps first position
+/// only while its load stays within `2 × min + SPILL_SLACK` of the
+/// least-loaded candidate. At gateway granularity the accept/reject probe
+/// already sheds a busy home per round; this guard matters where there is
+/// no probe — the fleet's scene-level group selection — so a hot stream
+/// cannot stay pinned to a drowning group while siblings idle. Spilling
+/// never re-homes (placement stickiness lives in `placed`), so traffic
+/// returns home once its load subsides.
+const SPILL_SLACK: usize = 4;
+
+/// Rolling polynomial (FNV-1a style) hash of the first `depth` tokens.
+/// `None` for an empty stream — prefix-free requests carry no affinity.
+pub fn rolling_hash(tokens: &[i32], depth: usize) -> Option<u64> {
+    if tokens.is_empty() {
+        return None;
+    }
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &t in tokens.iter().take(depth.max(1)) {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    Some(h)
+}
+
+/// What the router is told about one request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouteRequest {
+    /// Rolling hash of the prompt's leading tokens; `None` when the
+    /// request has no shared prefix (or the caller has no token view).
+    pub prefix_hash: Option<u64>,
+}
+
+impl RouteRequest {
+    /// A request the router knows nothing about (falls back to load).
+    pub fn opaque() -> Self {
+        RouteRequest { prefix_hash: None }
+    }
+
+    pub fn from_tokens(tokens: &[i32]) -> Self {
+        RouteRequest { prefix_hash: rolling_hash(tokens, DEFAULT_HASH_DEPTH) }
+    }
+}
+
+/// Candidate load view: `(entrance id, live connections / in-flight)` in
+/// any order. Built by `SseRegistry::snapshot` at the gateway and by the
+/// fleet from per-group in-flight counts.
+pub type RouteSnapshot = [(u32, usize)];
+
+/// One routing decision path for the server, the forwarder and the sims.
+///
+/// `order` ranks candidates best-first; the caller probes them in order
+/// (accept/reject) and reports the final placement back through `placed`,
+/// so affinity state reflects where requests actually ran, not where the
+/// policy wished they ran.
+pub trait RoutePolicy {
+    /// Candidate order, best first. Must be deterministic in
+    /// (policy state, snapshot, salt).
+    fn order(&mut self, snap: &RouteSnapshot, req: &RouteRequest, salt: u64) -> Vec<u32>;
+
+    /// The request was accepted by `e` (affinity feedback).
+    fn placed(&mut self, _e: u32, _req: &RouteRequest) {}
+
+    /// Entrance `e` left the serving set (scale-in / role flip / fault).
+    /// Its affinity traffic is handed to `sibling` wholesale — not
+    /// scattered — so the sibling warms once per stream.
+    fn entrance_removed(&mut self, _e: u32, _sibling: Option<u32>) {}
+
+    fn kind(&self) -> RouteKind;
+}
+
+/// Policy selector (CLI flag / config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteKind {
+    Random,
+    RoundRobin,
+    LeastLoaded,
+    PrefixAffinity,
+}
+
+impl RouteKind {
+    pub fn parse(s: &str) -> Option<RouteKind> {
+        match s {
+            "random" => Some(RouteKind::Random),
+            "round-robin" | "rr" => Some(RouteKind::RoundRobin),
+            "least-loaded" | "ll" => Some(RouteKind::LeastLoaded),
+            "prefix-affinity" | "affinity" => Some(RouteKind::PrefixAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteKind::Random => "random",
+            RouteKind::RoundRobin => "round-robin",
+            RouteKind::LeastLoaded => "least-loaded",
+            RouteKind::PrefixAffinity => "prefix-affinity",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn RoutePolicy> {
+        match self {
+            RouteKind::Random => Box::new(Random),
+            RouteKind::RoundRobin => Box::new(RoundRobin::default()),
+            RouteKind::LeastLoaded => Box::new(LeastLoaded),
+            RouteKind::PrefixAffinity => Box::new(PrefixAffinity::default()),
+        }
+    }
+}
+
+/// Ascending live-count order with salted tie-breaks — the least-SSE
+/// ordering every load-aware policy shares. With unsalted ties every
+/// gateway would prefer the lowest entrance id and herd its probes onto
+/// entrance 0 (the stampede `SseRegistry` documents).
+fn least_loaded_order(snap: &RouteSnapshot, salt: u64) -> Vec<u32> {
+    let mut v: Vec<(usize, u64, u32)> = snap
+        .iter()
+        .map(|&(e, c)| {
+            let mut h = salt ^ (e as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            (c, splitmix64(&mut h), e)
+        })
+        .collect();
+    v.sort_unstable();
+    v.into_iter().map(|(_, _, e)| e).collect()
+}
+
+/// Salted shuffle, blind to load.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Random;
+
+impl RoutePolicy for Random {
+    fn order(&mut self, snap: &RouteSnapshot, _req: &RouteRequest, salt: u64) -> Vec<u32> {
+        let mut v: Vec<(u64, u32)> = snap
+            .iter()
+            .map(|&(e, _)| {
+                let mut h = salt ^ (e as u64).wrapping_mul(0xD134_2543_DE82_EF95);
+                (splitmix64(&mut h), e)
+            })
+            .collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, e)| e).collect()
+    }
+
+    fn kind(&self) -> RouteKind {
+        RouteKind::Random
+    }
+}
+
+/// Rotate over entrance ids; ignores both load and content.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRobin {
+    next: u64,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn order(&mut self, snap: &RouteSnapshot, _req: &RouteRequest, _salt: u64) -> Vec<u32> {
+        let mut ids: Vec<u32> = snap.iter().map(|&(e, _)| e).collect();
+        ids.sort_unstable();
+        if !ids.is_empty() {
+            let k = (self.next % ids.len() as u64) as usize;
+            self.next = self.next.wrapping_add(1);
+            ids.rotate_left(k);
+        }
+        ids
+    }
+
+    fn kind(&self) -> RouteKind {
+        RouteKind::RoundRobin
+    }
+}
+
+/// The paper's least-SSE candidate ordering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn order(&mut self, snap: &RouteSnapshot, _req: &RouteRequest, salt: u64) -> Vec<u32> {
+        least_loaded_order(snap, salt)
+    }
+
+    fn kind(&self) -> RouteKind {
+        RouteKind::LeastLoaded
+    }
+}
+
+/// Sticky prefix→home mapping over the least-loaded order.
+///
+/// The first placement of a prefix stream homes it on the accepting
+/// entrance; later requests of the stream probe that home first, so its
+/// KVCache is computed once per instance instead of once per instance per
+/// scatter. Requests with no prefix hash take the plain least-loaded
+/// order — on prefix-free traffic this policy is decision-for-decision
+/// identical to `LeastLoaded`.
+#[derive(Debug)]
+pub struct PrefixAffinity {
+    /// prefix hash → (home entrance, last-touch tick).
+    home: BTreeMap<u64, (u32, u64)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl PrefixAffinity {
+    pub fn with_capacity(cap: usize) -> Self {
+        PrefixAffinity { home: BTreeMap::new(), tick: 0, cap: cap.max(1) }
+    }
+
+    /// Live prefix streams currently mapped.
+    pub fn tracked(&self) -> usize {
+        self.home.len()
+    }
+
+    /// Current home of a stream, if mapped.
+    pub fn home_of(&self, hash: u64) -> Option<u32> {
+        self.home.get(&hash).map(|&(e, _)| e)
+    }
+}
+
+impl Default for PrefixAffinity {
+    fn default() -> Self {
+        PrefixAffinity::with_capacity(AFFINITY_MAP_CAP)
+    }
+}
+
+impl RoutePolicy for PrefixAffinity {
+    fn order(&mut self, snap: &RouteSnapshot, req: &RouteRequest, salt: u64) -> Vec<u32> {
+        let mut order = least_loaded_order(snap, salt);
+        if let Some(h) = req.prefix_hash {
+            self.tick += 1;
+            let tick = self.tick;
+            if let Some(&(home, _)) = self.home.get(&h) {
+                if let Some(pos) = order.iter().position(|&e| e == home) {
+                    self.home.insert(h, (home, tick));
+                    let home_load = snap
+                        .iter()
+                        .find(|&&(e, _)| e == home)
+                        .map(|&(_, c)| c)
+                        .unwrap_or(0);
+                    let min_load =
+                        snap.iter().map(|&(_, c)| c).min().unwrap_or(0);
+                    // Overloaded home: leave the least-loaded order as is
+                    // for this request (temporary spill, mapping intact).
+                    if home_load <= min_load.saturating_mul(2) + SPILL_SLACK {
+                        order[..=pos].rotate_right(1);
+                    }
+                } else if let Some(&first) = order.first() {
+                    // Home not in this snapshot: cordoned for a drain or
+                    // an upgrade, or lost to a fault before any handoff.
+                    // Migrate the stream to the current least-loaded
+                    // candidate — one new home it will stick to, not a
+                    // per-request scatter — so affinity survives the
+                    // multi-tick window between a cordon and the eventual
+                    // `entrance_removed` sweep (which then finds nothing
+                    // left to move for streams that stayed active).
+                    self.home.insert(h, (first, tick));
+                }
+            }
+        }
+        order
+    }
+
+    fn placed(&mut self, e: u32, req: &RouteRequest) {
+        let Some(h) = req.prefix_hash else { return };
+        self.tick += 1;
+        // Sticky: only the *first* placement homes a stream. A spill
+        // (home busy, accepted elsewhere) must not re-home, or a loaded
+        // instance would scatter its hot prefixes across the pool.
+        let tick = self.tick;
+        self.home.entry(h).or_insert((e, tick));
+        if self.home.len() > self.cap {
+            let lru = self
+                .home
+                .iter()
+                .min_by_key(|(_, v)| v.1)
+                .map(|(k, _)| *k);
+            if let Some(k) = lru {
+                self.home.remove(&k);
+            }
+        }
+    }
+
+    fn entrance_removed(&mut self, e: u32, sibling: Option<u32>) {
+        match sibling {
+            Some(s) => {
+                for v in self.home.values_mut() {
+                    if v.0 == e {
+                        v.0 = s;
+                    }
+                }
+            }
+            None => self.home.retain(|_, v| v.0 != e),
+        }
+    }
+
+    fn kind(&self) -> RouteKind {
+        RouteKind::PrefixAffinity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
+    use crate::gateway::sse::SseRegistry;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn snap(loads: &[usize]) -> Vec<(u32, usize)> {
+        loads.iter().enumerate().map(|(e, &c)| (e as u32, c)).collect()
+    }
+
+    #[test]
+    fn rolling_hash_depth_and_emptiness() {
+        assert_eq!(rolling_hash(&[], 64), None);
+        let a = rolling_hash(&[1, 2, 3], 64);
+        let b = rolling_hash(&[1, 2, 3, 9, 9], 3);
+        assert_eq!(a, b, "hash covers only the leading `depth` tokens");
+        assert_ne!(a, rolling_hash(&[1, 2, 4], 64));
+    }
+
+    #[test]
+    fn least_loaded_orders_by_count() {
+        let mut p = LeastLoaded;
+        let s = snap(&[5, 0, 3]);
+        let o = p.order(&s, &RouteRequest::opaque(), 7);
+        assert_eq!(o[0], 1);
+        assert_eq!(o[2], 0);
+    }
+
+    #[test]
+    fn round_robin_cycles_all() {
+        let mut p = RoundRobin::default();
+        let s = snap(&[0, 0, 0]);
+        let firsts: Vec<u32> = (0..6)
+            .map(|_| p.order(&s, &RouteRequest::opaque(), 0)[0])
+            .collect();
+        assert_eq!(firsts, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_spreads_and_is_salt_deterministic() {
+        let mut p = Random;
+        let s = snap(&[0, 0, 0, 0]);
+        let mut firsts = std::collections::BTreeSet::new();
+        for salt in 0..32u64 {
+            firsts.insert(p.order(&s, &RouteRequest::opaque(), salt)[0]);
+        }
+        assert!(firsts.len() > 1, "random never varied: {firsts:?}");
+        assert_eq!(
+            p.order(&s, &RouteRequest::opaque(), 9),
+            p.order(&s, &RouteRequest::opaque(), 9)
+        );
+    }
+
+    #[test]
+    fn affinity_homes_then_prefers_home() {
+        let mut p = PrefixAffinity::default();
+        let req = RouteRequest { prefix_hash: Some(42) };
+        let s = snap(&[0, 0, 0]);
+        let first = p.order(&s, &req, 1)[0];
+        p.placed(first, &req);
+        // Home wins even when another entrance is less loaded.
+        let mut loaded: Vec<(u32, usize)> = snap(&[2, 2, 2]);
+        for l in loaded.iter_mut() {
+            if l.0 != first {
+                l.1 = 0;
+            }
+        }
+        for salt in 0..16u64 {
+            assert_eq!(p.order(&loaded, &req, salt)[0], first);
+        }
+        assert_eq!(p.home_of(42), Some(first));
+    }
+
+    #[test]
+    fn affinity_spills_off_an_overloaded_home_without_rehoming() {
+        // The scene-level case: no accept/reject probe exists at group
+        // granularity, so the policy itself must shed a drowning home.
+        let mut p = PrefixAffinity::default();
+        let req = RouteRequest { prefix_hash: Some(11) };
+        p.placed(1, &req);
+        // Moderate imbalance: affinity holds.
+        let s = snap(&[3, 8, 3]);
+        assert_eq!(p.order(&s, &req, 0)[0], 1);
+        // Past 2×min + slack: spill to the least-loaded candidate…
+        let s = snap(&[3, 30, 3]);
+        assert_ne!(p.order(&s, &req, 0)[0], 1);
+        // …while the mapping survives for when the load subsides.
+        assert_eq!(p.home_of(11), Some(1));
+        let s = snap(&[3, 4, 3]);
+        assert_eq!(p.order(&s, &req, 0)[0], 1);
+    }
+
+    #[test]
+    fn affinity_spill_does_not_rehome() {
+        let mut p = PrefixAffinity::default();
+        let req = RouteRequest { prefix_hash: Some(7) };
+        p.placed(2, &req);
+        // Accepted elsewhere (home was busy): mapping must stay on 2.
+        p.placed(0, &req);
+        assert_eq!(p.home_of(7), Some(2));
+    }
+
+    #[test]
+    fn affinity_migrates_stream_when_home_leaves_the_snapshot() {
+        // A cordoned group disappears from route() snapshots ticks before
+        // its retirement sweep runs; the stream must re-stick to one new
+        // home instead of losing its mapping (and thus its concentration).
+        let mut p = PrefixAffinity::default();
+        let req = RouteRequest { prefix_hash: Some(5) };
+        p.placed(9, &req);
+        let s = snap(&[1, 0, 2]); // entrance 9 gone; 1 is least loaded
+        let first = p.order(&s, &req, 0)[0];
+        assert_eq!(first, 1);
+        assert_eq!(p.home_of(5), Some(1), "stream did not re-home");
+        // And it sticks there even when another entrance empties out.
+        let s2 = snap(&[0, 2, 2]);
+        assert_eq!(p.order(&s2, &req, 0)[0], 1);
+    }
+
+    #[test]
+    fn affinity_handoff_moves_streams_wholesale() {
+        let mut p = PrefixAffinity::default();
+        for h in 0..10u64 {
+            p.placed(
+                if h % 2 == 0 { 3 } else { 1 },
+                &RouteRequest { prefix_hash: Some(h) },
+            );
+        }
+        p.entrance_removed(3, Some(1));
+        for h in 0..10u64 {
+            assert_eq!(p.home_of(h), Some(1), "stream {h} scattered");
+        }
+        // Removal without a sibling drops the mappings instead.
+        p.entrance_removed(1, None);
+        assert_eq!(p.tracked(), 0);
+    }
+
+    #[test]
+    fn affinity_without_hash_matches_least_loaded_exactly() {
+        let mut aff = PrefixAffinity::default();
+        let mut ll = LeastLoaded;
+        let mut rng = Rng::new(0xAB);
+        for _ in 0..200 {
+            let loads: Vec<usize> = (0..6).map(|_| rng.below(5)).collect();
+            let s = snap(&loads);
+            let salt = rng.next_u64();
+            assert_eq!(
+                aff.order(&s, &RouteRequest::opaque(), salt),
+                ll.order(&s, &RouteRequest::opaque(), salt)
+            );
+        }
+    }
+
+    #[test]
+    fn affinity_map_is_bounded() {
+        let mut p = PrefixAffinity::with_capacity(8);
+        for h in 0..100u64 {
+            p.placed((h % 4) as u32, &RouteRequest { prefix_hash: Some(h) });
+        }
+        assert!(p.tracked() <= 8, "map grew to {}", p.tracked());
+    }
+
+    /// Satellite: on any homologous stream, PrefixAffinity's hit rate is
+    /// at least Random's. Warmth model: an entrance is warm for a stream
+    /// once it served it; affinity pays one cold miss per stream while
+    /// random pays one per (stream, entrance) it happens to scatter onto.
+    #[test]
+    fn prop_affinity_hit_rate_at_least_random() {
+        let cfg = prop::Config { cases: 48, ..Default::default() };
+        prop::check(
+            "affinity-beats-random",
+            &cfg,
+            |r| {
+                let n_e = 2 + r.below(6);
+                let n_streams = 1 + r.below(12);
+                let n_reqs = 20 + r.below(200);
+                (n_e, n_streams, n_reqs, r.next_u64())
+            },
+            |&(n_e, n_streams, n_reqs, seed)| {
+                let f = OnDemandForwarder::new(n_e, 1.0);
+                let run = |mut policy: Box<dyn RoutePolicy>| -> usize {
+                    let sse = SseRegistry::new(0..n_e as u32);
+                    let mut warm: Vec<std::collections::BTreeSet<u64>> =
+                        vec![Default::default(); n_e];
+                    let mut rng = Rng::new(seed);
+                    let mut hits = 0;
+                    for _ in 0..n_reqs {
+                        let h = rng.below(n_streams) as u64;
+                        let req = RouteRequest { prefix_hash: Some(h) };
+                        let salt = rng.next_u64();
+                        match f.probe(
+                            policy.as_mut(),
+                            &sse,
+                            &req,
+                            salt,
+                            0.0,
+                            1.0,
+                            |_| true,
+                        ) {
+                            ForwardDecision::Accept(e) => {
+                                if !warm[e as usize].insert(h) {
+                                    hits += 1;
+                                }
+                            }
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                    hits
+                };
+                let aff = run(RouteKind::PrefixAffinity.build());
+                let rnd = run(RouteKind::Random.build());
+                if aff < rnd {
+                    return Err(format!("affinity {aff} hits < random {rnd}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: the single-decision-path invariant. The real server
+    /// drives placements through `OnDemandForwarder::probe`; the simulator
+    /// does too. Given the same snapshots, requests and salts, two fresh
+    /// policies must make identical decisions — there is no second path to
+    /// diverge down.
+    #[test]
+    fn prop_decisions_identical_across_server_and_sim_drivers() {
+        let cfg = prop::Config { cases: 32, ..Default::default() };
+        prop::check(
+            "single-decision-path",
+            &cfg,
+            |r| {
+                let kind = match r.below(4) {
+                    0 => RouteKind::Random,
+                    1 => RouteKind::RoundRobin,
+                    2 => RouteKind::LeastLoaded,
+                    _ => RouteKind::PrefixAffinity,
+                };
+                (kind, 2 + r.below(5), 30 + r.below(100), r.next_u64())
+            },
+            |&(kind, n_e, n_reqs, seed)| {
+                let f = OnDemandForwarder::new(n_e, 1.0);
+                let mut server = kind.build();
+                let mut sim = kind.build();
+                let mut sse_a = SseRegistry::new(0..n_e as u32);
+                let mut sse_b = SseRegistry::new(0..n_e as u32);
+                let mut rng = Rng::new(seed);
+                for i in 0..n_reqs {
+                    let req = RouteRequest {
+                        prefix_hash: if rng.chance(0.7) {
+                            Some(rng.below(8) as u64)
+                        } else {
+                            None
+                        },
+                    };
+                    let salt = rng.next_u64();
+                    let da = f.probe(server.as_mut(), &sse_a, &req, salt, 0.0, 1.0, |_| true);
+                    let db = f.probe(sim.as_mut(), &sse_b, &req, salt, 0.0, 1.0, |_| true);
+                    if da != db {
+                        return Err(format!("request {i}: {da:?} != {db:?}"));
+                    }
+                    if let ForwardDecision::Accept(e) = da {
+                        // Both worlds open the SSE connection; close a few
+                        // to keep loads moving.
+                        sse_a.open(e);
+                        sse_b.open(e);
+                        if rng.chance(0.4) {
+                            sse_a.close(e);
+                            sse_b.close(e);
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -19,6 +19,7 @@ use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
 use crate::runtime::tokenizer;
 use crate::runtime::{DecodeHandle, ServingRuntime};
+use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
 use crate::util::cli::ParsedArgs;
 use crate::util::stats::Summary;
 
@@ -99,6 +100,7 @@ pub struct RealEngine {
     rt: ServingRuntime,
     decodes: Vec<RealDecode>,
     n_prefill: usize,
+    route: RouteKind,
     pub gen_budget: usize,
 }
 
@@ -113,7 +115,20 @@ impl RealEngine {
         }
         // max_len bounds prompt + generation; default budget below.
         let gen_budget = rt.meta.max_len.saturating_sub(rt.meta.prefill_buckets[rt.meta.prefill_buckets.len() - 1]);
-        Ok(RealEngine { rt, decodes, n_prefill: n_prefill.max(1), gen_budget })
+        Ok(RealEngine {
+            rt,
+            decodes,
+            n_prefill: n_prefill.max(1),
+            route: RouteKind::LeastLoaded,
+            gen_budget,
+        })
+    }
+
+    /// Select the gateway route policy (the same `serving::router` code
+    /// the simulator runs — one compiled decision path).
+    pub fn with_route(mut self, route: RouteKind) -> Self {
+        self.route = route;
+        self
     }
 
     pub fn meta(&self) -> &crate::runtime::ModelMeta {
@@ -127,12 +142,14 @@ impl RealEngine {
         let mut report = RealReport::default();
         let mut pending: VecDeque<usize> = (0..requests.len()).collect();
         // SSE registry over logical prefill entrances, consulted through
-        // the same `OnDemandForwarder` the simulator uses — one
-        // accept/reject decision path for both worlds. Logical prefills
-        // execute bs=1 inline, so every probe accepts and the decision
-        // reduces to salted least-SSE selection.
+        // the same `OnDemandForwarder` + `RoutePolicy` the simulator uses
+        // — one accept/reject decision path for both worlds. Logical
+        // prefills execute bs=1 inline, so every probe accepts and the
+        // decision reduces to the policy's candidate ordering (salted
+        // least-SSE by default, prefix-affine with `with_route`).
         let mut sse = SseRegistry::new(0..self.n_prefill as u32);
         let forwarder = OnDemandForwarder::new(self.n_prefill.max(1), 0.0);
+        let mut policy: Box<dyn RoutePolicy> = self.route.build();
         let mut salt_rng = crate::util::prng::Rng::new(0x5A17_5EED);
         let mut arrivals: Vec<Instant> = requests.iter().map(|_| wall0).collect();
 
@@ -147,8 +164,16 @@ impl RealEngine {
                         break 'admit;
                     };
                     let req = &requests[req_idx];
+                    // Tokenize first: the route key is a rolling hash of
+                    // the prompt's leading tokens (prefix affinity).
+                    let max_prompt = *self.rt.meta.prefill_buckets.last().unwrap();
+                    let mut toks = tokenizer::encode(&req.prompt);
+                    toks.truncate(max_prompt);
+                    let rr = RouteRequest::from_tokens(&toks);
                     let entrance = match forwarder.probe(
+                        policy.as_mut(),
                         &sse,
+                        &rr,
                         salt_rng.next_u64(),
                         0.0,
                         f64::INFINITY,
@@ -162,11 +187,6 @@ impl RealEngine {
                     };
                     sse.open(entrance);
                     arrivals[req_idx] = Instant::now();
-
-                    // Prefill (bs=1, pipelined one after another).
-                    let max_prompt = *self.rt.meta.prefill_buckets.last().unwrap();
-                    let mut toks = tokenizer::encode(&req.prompt);
-                    toks.truncate(max_prompt);
                     let t_arrival = arrivals[req_idx];
                     let out = self.rt.prefill(&toks, 0, None)?;
                     report.prefill_execs += 1;
@@ -273,7 +293,16 @@ pub fn cmd_serve(args: &ParsedArgs) -> i32 {
     let n_p = args.get_usize("prefill", 2);
     let n_d = args.get_usize("decode", 2);
     let gen = args.get_usize("max-new-tokens", 24);
-    match run_serve(dir, n, n_p, n_d, gen) {
+    let route = match RouteKind::parse(args.get_or("route", "least-loaded")) {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "--route must be random|round-robin|least-loaded|prefix-affinity"
+            );
+            return 2;
+        }
+    };
+    match run_serve(dir, n, n_p, n_d, gen, route) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("serve failed: {e:#}");
@@ -282,8 +311,15 @@ pub fn cmd_serve(args: &ParsedArgs) -> i32 {
     }
 }
 
-fn run_serve(dir: &str, n: usize, n_p: usize, n_d: usize, gen: usize) -> Result<()> {
-    let mut engine = RealEngine::new(dir, n_p, n_d)?;
+fn run_serve(
+    dir: &str,
+    n: usize,
+    n_p: usize,
+    n_d: usize,
+    gen: usize,
+    route: RouteKind,
+) -> Result<()> {
+    let mut engine = RealEngine::new(dir, n_p, n_d)?.with_route(route);
     println!(
         "loaded model {} ({} prefill buckets, decode batch {})",
         engine.meta().name,

@@ -14,14 +14,17 @@
 //! Time unit: milliseconds (virtual).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
 
 use crate::cluster::engine::{EngineModel, PrefillItem};
+use crate::cluster::prefix::SharedPrefixCache;
 use crate::gateway::baseline::StaleQueueScheduler;
 use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
 use crate::metrics::{Outcome, ServingReport};
 use crate::network::rdma::RdmaModel;
 use crate::network::route;
+use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
 use crate::sim::EventQueue;
 use crate::util::config::{EngineConfig, ServingConfig};
 use crate::util::prng::Rng;
@@ -63,6 +66,9 @@ pub struct SimConfig {
     pub rdma: RdmaModel,
     pub serving: ServingConfig,
     pub policy: Policy,
+    /// Candidate-ordering policy for the gateway (the unified routing
+    /// layer — the same `RoutePolicy` code the real server runs).
+    pub route: RouteKind,
     pub transfer: TransferDiscipline,
     /// Path-diversity spraying for sub-transfers (vs plain ECMP).
     pub spray: bool,
@@ -109,6 +115,7 @@ impl Default for SimConfig {
             rdma: RdmaModel::default(),
             serving: ServingConfig::default(),
             policy: Policy::OnDemand,
+            route: RouteKind::LeastLoaded,
             transfer: TransferDiscipline::Contiguous,
             spray: true,
             scenarios: crate::workload::standard_scenarios(),
@@ -176,6 +183,21 @@ struct ReqState {
     gw: usize,
     /// Tokens still to generate once decoding.
     remaining: usize,
+    /// The stream's canonical prefix tokens (shared via `Rc` across every
+    /// request of one (scenario, prefix_id) stream; empty when
+    /// prefix-free). This request's own prefix is the leading
+    /// `req.prefix_len` tokens — what per-instance `PrefixCache`s are
+    /// probed and warmed with.
+    prefix_toks: Rc<Vec<i32>>,
+    /// Routing view of this request (rolling prefix hash).
+    route_req: RouteRequest,
+}
+
+impl ReqState {
+    /// This request's shared-prefix tokens.
+    fn prefix(&self) -> &[i32] {
+        &self.prefix_toks[..self.req.prefix_len.min(self.prefix_toks.len())]
+    }
 }
 
 /// Per-prefill-instance simulated state.
@@ -194,11 +216,15 @@ struct PState {
     awaiting: usize,
     busy_ms: f64,
     window_open: bool,
-    prefix: SimPrefixCache,
+    /// This instance's prefix-aware KVCache — real `cluster::prefix`
+    /// state behind a shared handle, probed on accept (`peek`), warmed on
+    /// batch admission, and the source of the hit length credited back
+    /// into prefill service time (cached tokens are not recomputed).
+    prefix: SharedPrefixCache,
 }
 
 impl PState {
-    fn new(prefix_budget_bytes: usize) -> Self {
+    fn new(prefix_budget_bytes: usize, bytes_per_token: usize) -> Self {
         PState {
             alive: true,
             busy: false,
@@ -207,7 +233,7 @@ impl PState {
             awaiting: 0,
             busy_ms: 0.0,
             window_open: false,
-            prefix: SimPrefixCache::new(prefix_budget_bytes),
+            prefix: SharedPrefixCache::new(prefix_budget_bytes, bytes_per_token),
         }
     }
 }
@@ -280,61 +306,39 @@ impl WindowStats {
     }
 }
 
-/// Prefix-aware KVCache at simulation granularity: keyed by
-/// (scenario, prefix_id) with byte accounting + LRU.
-struct SimPrefixCache {
-    entries: BTreeMap<(usize, usize), (u64, usize)>, // key -> (last_used, bytes)
-    used: usize,
-    budget: usize,
-    tick: u64,
-    hits: u64,
-    lookups: u64,
-}
-
-impl SimPrefixCache {
-    fn new(budget: usize) -> Self {
-        SimPrefixCache { entries: BTreeMap::new(), used: 0, budget, tick: 0, hits: 0, lookups: 0 }
+/// The prefill-side accept/reject: idle, has capacity, and adding this
+/// request keeps the predicted batch TTFT within every member's
+/// threshold. A free function over the split-borrowed state so the
+/// gateway round can run it as the forwarder's accept probe while the
+/// route policy (a sibling field) is mutably borrowed.
+fn prefill_accepts(
+    ps: &[PState],
+    reqs: &[ReqState],
+    engine: &EngineModel,
+    prefill_batch: usize,
+    p: usize,
+    id: u64,
+    now: f64,
+) -> bool {
+    let st = &ps[p];
+    let bp = prefill_batch;
+    if !st.alive || st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
+        return false;
     }
-
-    /// Non-mutating hit probe (the prefill knows its own cache contents —
-    /// this is exactly the knowledge the remote scheduler *lacks*).
-    fn peek(&self, key: (usize, usize)) -> bool {
-        self.entries.contains_key(&key)
+    if st.accepted.is_empty() {
+        return true; // gets its own batch; pre/post checks still apply
     }
-
-    /// Returns true on hit; on miss inserts (computing the prefix warms it).
-    fn lookup_or_insert(&mut self, key: (usize, usize), bytes: usize) -> bool {
-        self.tick += 1;
-        self.lookups += 1;
-        if let Some((last, _)) = self.entries.get_mut(&key) {
-            *last = self.tick;
-            self.hits += 1;
-            return true;
-        }
-        if bytes <= self.budget {
-            while self.used + bytes > self.budget {
-                let lru = self
-                    .entries
-                    .iter()
-                    .min_by_key(|(_, (last, _))| *last)
-                    .map(|(k, _)| *k)
-                    .expect("over budget with empty cache");
-                let (_, b) = self.entries.remove(&lru).unwrap();
-                self.used -= b;
-            }
-            self.entries.insert(key, (self.tick, bytes));
-            self.used += bytes;
-        }
-        false
+    let mut items = Vec::with_capacity(st.accepted.len() + 1);
+    let mut min_slack = f64::INFINITY;
+    for &aid in st.accepted.iter().chain(std::iter::once(&id)) {
+        let r = &reqs[aid as usize];
+        items.push(PrefillItem {
+            prompt_len: r.req.prompt_len,
+            cached_len: st.prefix.peek(r.prefix()),
+        });
+        min_slack = min_slack.min((r.deadline_ms - now).max(0.0));
     }
-
-    fn hit_rate(&self) -> f64 {
-        if self.lookups == 0 {
-            0.0
-        } else {
-            self.hits as f64 / self.lookups as f64
-        }
-    }
+    engine.prefill_batch_ms(&items) <= min_slack * 0.95
 }
 
 #[derive(Clone, Debug)]
@@ -358,6 +362,13 @@ pub struct Simulation {
     /// One SSE registry per gateway — each sees only its own connections.
     gw_sse: Vec<SseRegistry>,
     forwarder: OnDemandForwarder,
+    /// The one candidate-ordering path (shared with the real server).
+    /// Affinity state is fleet-level; each gateway contributes its own
+    /// SSE snapshot.
+    policy: Box<dyn RoutePolicy>,
+    /// Canonical prefix tokens per (scenario, prefix_id) stream, shared
+    /// into every `ReqState` of that stream.
+    prefix_memo: BTreeMap<(usize, usize), Rc<Vec<i32>>>,
     baseline: StaleQueueScheduler,
     pending: VecDeque<u64>, // gateway-held (on-demand)
     /// Requests in `AwaitTransfer` (all decodes were saturated) — retried
@@ -387,7 +398,9 @@ pub struct Simulation {
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Self {
         let engine = EngineModel::new(cfg.engine.clone());
-        let ps = (0..cfg.n_p).map(|_| PState::new(cfg.prefix_budget_bytes)).collect();
+        let ps = (0..cfg.n_p)
+            .map(|_| PState::new(cfg.prefix_budget_bytes, cfg.kv_bytes_per_token))
+            .collect();
         let ds = (0..cfg.n_d).map(|_| DState::new()).collect();
         let gw_sse: Vec<SseRegistry> = (0..cfg.n_gateways.max(1))
             .map(|_| SseRegistry::new(0..cfg.n_p as u32))
@@ -408,6 +421,8 @@ impl Simulation {
             ds,
             gw_sse,
             forwarder,
+            policy: cfg.route.build(),
+            prefix_memo: BTreeMap::new(),
             baseline,
             pending: VecDeque::new(),
             parked: VecDeque::new(),
@@ -513,6 +528,27 @@ impl Simulation {
             + self.cfg.serving.ttft_threshold_ms(req.prompt_len);
         let id = self.reqs.len() as u64;
         let remaining = req.gen_len;
+        let (prefix_toks, route_req) = if req.prefix_len == 0 {
+            (Rc::new(Vec::new()), RouteRequest { prefix_hash: None })
+        } else {
+            // One token vector per (scenario, prefix_id) stream, shared by
+            // every request of that stream — regenerating ~1k tokens per
+            // arrival (and keeping a copy per ReqState) would make inject
+            // itself the hot path.
+            let sc = &self.cfg.scenarios[req.scenario];
+            let canon = sc.canonical_prefix_len().max(req.prefix_len);
+            let toks = self
+                .prefix_memo
+                .entry((req.scenario, req.prefix_id))
+                .or_insert_with(|| {
+                    Rc::new(sc.prefix_tokens(req.scenario, req.prefix_id, canon))
+                })
+                .clone();
+            // Clamp like `ReqState::prefix`: an externally injected request
+            // may claim a longer prefix than the stream's memoized canon.
+            let rr = RouteRequest::from_tokens(&toks[..req.prefix_len.min(toks.len())]);
+            (toks, rr)
+        };
         self.reqs.push(ReqState {
             req,
             deadline_ms: deadline,
@@ -523,6 +559,8 @@ impl Simulation {
             entrance: usize::MAX,
             gw: id as usize % self.gw_sse.len(),
             remaining,
+            prefix_toks,
+            route_req,
         });
         id
     }
@@ -647,7 +685,8 @@ impl Simulation {
     /// scale-out hook).
     pub fn add_prefill(&mut self) -> usize {
         let p = self.ps.len();
-        self.ps.push(PState::new(self.cfg.prefix_budget_bytes));
+        self.ps
+            .push(PState::new(self.cfg.prefix_budget_bytes, self.cfg.kv_bytes_per_token));
         for gw in &mut self.gw_sse {
             gw.add_entrance(p as u32);
         }
@@ -684,6 +723,17 @@ impl Simulation {
         for gw in &mut self.gw_sse {
             gw.remove_entrance(p as u32);
         }
+        // Hand the departing instance's hot prefix streams to one sibling
+        // (the least-committed alive prefill) instead of scattering them:
+        // the sibling pays each stream's cold miss once and keeps it.
+        let sibling = self
+            .ps
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != p && s.alive)
+            .min_by_key(|(i, s)| (s.accepted.len() + s.awaiting, *i))
+            .map(|(i, _)| i as u32);
+        self.policy.entrance_removed(p as u32, sibling);
         self.report.n_prefill -= 1;
         if !self.pending.is_empty() {
             self.gateway_round();
@@ -754,6 +804,24 @@ impl Simulation {
             .map(|(i, _)| i)
     }
 
+    /// Shared handle onto prefill `p`'s prefix cache (alive or tombstoned)
+    /// — per-instance observability for experiments and tests.
+    pub fn prefix_handle(&self, p: usize) -> Option<SharedPrefixCache> {
+        self.ps.get(p).map(|s| s.prefix.clone())
+    }
+
+    /// Aggregate prefix hit rate over all prefill instances so far.
+    pub fn prefix_hit_rate_so_far(&self) -> f64 {
+        let (h, l) = self.ps.iter().fold((0u64, 0u64), |(h, l), p| {
+            (h + p.prefix.hits(), l + p.prefix.lookups())
+        });
+        if l == 0 {
+            0.0
+        } else {
+            h as f64 / l as f64
+        }
+    }
+
     /// `opened - closed == live` across every gateway's registry — the
     /// invariant scale-in must preserve.
     pub fn sse_accounting_balanced(&self) -> bool {
@@ -777,10 +845,18 @@ impl Simulation {
                     // and the gateway chooses the one with minimum SSE
                     // connections" — live signal, but it counts the entire
                     // LLM lifecycle (decode included), so it cannot tell an
-                    // idle prefill from a busy one.
+                    // idle prefill from a busy one. Ordering comes from the
+                    // unified route policy (least-SSE by default).
                     let gw = self.reqs[id as usize].gw;
                     let salt = self.rng.next_u64();
-                    self.gw_sse[gw].by_least_loaded_salted(salt)[0] as usize
+                    let rr = self.reqs[id as usize].route_req;
+                    let snap = self.gw_sse[gw].snapshot();
+                    let e = self.policy.order(&snap, &rr, salt)[0];
+                    // The baseline assigns unconditionally (no probe), so
+                    // the placement feedback happens here — affinity
+                    // works identically under either serving policy.
+                    self.policy.placed(e, &rr);
+                    e as usize
                 } else {
                     self.baseline.pick_shortest(tokens, self.cfg.baseline_books)
                 };
@@ -806,21 +882,29 @@ impl Simulation {
         while let Some(id) = self.pending.pop_front() {
             let deadline = self.reqs[id as usize].deadline_ms;
             let gw = self.reqs[id as usize].gw;
+            let rr = self.reqs[id as usize].route_req;
             // The forwarder is the single accept/reject decision path —
-            // the same probe the real threaded server runs. It orders this
-            // gateway's entrances by salted least-SSE and asks each the
-            // prefill-side accept check: idle AND the batch it would form
-            // still meets everyone's TTFT threshold (the prefill knows its
-            // own cache + engine — exactly the knowledge a remote
-            // estimator lacks).
+            // the same probe the real threaded server runs. The route
+            // policy orders this gateway's entrances (least-SSE or
+            // prefix-affinity) and each is asked the prefill-side accept
+            // check: idle AND the batch it would form still meets
+            // everyone's TTFT threshold (the prefill knows its own cache +
+            // engine — exactly the knowledge a remote estimator lacks).
             let salt = self.rng.next_u64();
-            let decision = self.forwarder.probe(
-                &self.gw_sse[gw],
-                salt,
-                now,
-                deadline,
-                |e| self.prefill_accepts(e as usize, id, now),
-            );
+            let decision = {
+                let Simulation { policy, forwarder, gw_sse, ps, reqs, engine, cfg, .. } =
+                    &mut *self;
+                let bp = cfg.serving.prefill_batch;
+                forwarder.probe(
+                    policy.as_mut(),
+                    &gw_sse[gw],
+                    &rr,
+                    salt,
+                    now,
+                    deadline,
+                    |e| prefill_accepts(ps, reqs, engine, bp, e as usize, id, now),
+                )
+            };
             match decision {
                 ForwardDecision::Accept(e) => {
                     let p = e as usize;
@@ -846,32 +930,6 @@ impl Simulation {
             self.q
                 .push_after(self.cfg.serving.retry_interval_ms, Ev::GatewayRetry);
         }
-    }
-
-    /// The prefill-side accept/reject: idle, has capacity, and adding this
-    /// request keeps the predicted batch TTFT within every member's
-    /// threshold.
-    fn prefill_accepts(&self, p: usize, id: u64, now: f64) -> bool {
-        let st = &self.ps[p];
-        let bp = self.cfg.serving.prefill_batch;
-        if !st.alive || st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
-            return false;
-        }
-        if st.accepted.is_empty() {
-            return true; // gets its own batch; pre/post checks still apply
-        }
-        let mut items = Vec::with_capacity(st.accepted.len() + 1);
-        let mut min_slack = f64::INFINITY;
-        for &aid in st.accepted.iter().chain(std::iter::once(&id)) {
-            let r = &self.reqs[aid as usize];
-            let hit = st.prefix.peek((r.req.scenario, r.req.prefix_id));
-            items.push(PrefillItem {
-                prompt_len: r.req.prompt_len,
-                cached_len: if hit { r.req.prefix_len } else { 0 },
-            });
-            min_slack = min_slack.min((r.deadline_ms - now).max(0.0));
-        }
-        self.engine.prefill_batch_ms(&items) <= min_slack * 0.95
     }
 
     fn on_report_tick(&mut self) {
@@ -946,12 +1004,11 @@ impl Simulation {
                 self.finish_timeout(id);
                 continue;
             }
-            let (scenario, prefix_id, prefix_len, prompt_len) = {
-                let r = &self.reqs[id as usize].req;
-                (r.scenario, r.prefix_id, r.prefix_len, r.prompt_len)
-            };
-            let hit = self.ps[p].prefix.peek((scenario, prefix_id));
-            let cached = if hit { prefix_len } else { 0 };
+            let prompt_len = self.reqs[id as usize].req.prompt_len;
+            // Hit length: the longest cached prefix of this prompt on
+            // *this* instance — those tokens are not recomputed, which is
+            // exactly the service-time credit routing quality buys.
+            let cached = self.ps[p].prefix.peek(self.reqs[id as usize].prefix());
             let cand_item = PrefillItem { prompt_len, cached_len: cached };
             let mut trial = items.clone();
             trial.push(cand_item);
@@ -963,13 +1020,23 @@ impl Simulation {
                 // threshold; launch what we have, candidate stays.
                 break;
             }
-            // Accept into the batch (warms the prefix cache).
+            // Accept into the batch; computing the uncovered tail warms
+            // this instance's cache for the rest of the stream.
             self.pop_candidate(p, id);
-            let bytes = prefix_len * self.cfg.kv_bytes_per_token;
-            let hit2 = self.ps[p]
-                .prefix
-                .lookup_or_insert((scenario, prefix_id), bytes);
-            debug_assert_eq!(hit, hit2);
+            if self.reqs[id as usize].req.prefix_len > 0 {
+                let hit = self.ps[p].prefix.lookup(self.reqs[id as usize].prefix());
+                debug_assert_eq!(hit, cached);
+                // Only a full canonical-length prefill warms the cache: a
+                // truncated prompt (rare: prompt shorter than the stream's
+                // canonical prefix) computes only part of the stream's KV,
+                // and inserting nested variants would charge the byte
+                // budget once per distinct length instead of once per
+                // stream.
+                let r = &self.reqs[id as usize];
+                if hit < r.req.prefix_len && r.req.prefix_len == r.prefix_toks.len() {
+                    self.ps[p].prefix.insert(self.reqs[id as usize].prefix());
+                }
+            }
             self.reqs[id as usize].cached_len = cached;
             self.reqs[id as usize].phase = ReqPhase::InBatch(p);
             items = trial;
@@ -1253,14 +1320,11 @@ impl Simulation {
             })
             .collect();
         let hits: f64 = {
-            let (h, l) = self.ps.iter().fold((0u64, 0u64), |(h, l), p| {
-                (h + p.prefix.hits, l + p.prefix.lookups)
-            });
             debug_assert!(self
                 .ps
                 .iter()
                 .all(|p| (0.0..=1.0).contains(&p.prefix.hit_rate())));
-            if l == 0 { 0.0 } else { h as f64 / l as f64 }
+            self.prefix_hit_rate_so_far()
         };
         SimOutput {
             xfer_utilization: self.util.mean(),
@@ -1582,6 +1646,84 @@ mod tests {
         // Reset-on-take.
         let w2 = sim.take_window();
         assert_eq!(w2.total(), 0);
+    }
+
+    #[test]
+    fn affinity_routing_raises_hit_rate_over_least_loaded() {
+        // A prefix pool too wide for any one instance's HBM budget: under
+        // least-SSE scatter every instance churns the whole pool through
+        // LRU; prefix-affinity partitions the streams across instances so
+        // each instance's working set fits.
+        let mk = |route| SimConfig {
+            n_p: 4,
+            n_d: 4,
+            route,
+            scenarios: vec![crate::workload::standard_scenarios()[0]
+                .clone()
+                .with_prefix_pool(24, 0.75)],
+            only_scenario: Some(0),
+            prefix_budget_bytes: 8 << 30,
+            workload: WorkloadKind::Closed { concurrency: 16, requests: 320 },
+            ..Default::default()
+        };
+        let ll = Simulation::run(mk(RouteKind::LeastLoaded));
+        let aff = Simulation::run(mk(RouteKind::PrefixAffinity));
+        assert!(
+            aff.prefix_hit_rate > ll.prefix_hit_rate + 0.1,
+            "affinity {:.3} !>> least-loaded {:.3}",
+            aff.prefix_hit_rate,
+            ll.prefix_hit_rate
+        );
+        // Affinity runs are as reproducible as everything else.
+        let aff2 = Simulation::run(mk(RouteKind::PrefixAffinity));
+        assert_eq!(aff.report.completed, aff2.report.completed);
+        assert!((aff.prefix_hit_rate - aff2.prefix_hit_rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_in_hands_prefix_traffic_to_a_sibling() {
+        // The routing layer must interact correctly with mid-run pool
+        // changes: removing a prefill re-homes its streams onto one
+        // sibling (policy handoff), no request is lost, and the hit rate
+        // stays healthy after the removal.
+        let cfg = SimConfig {
+            n_p: 3,
+            n_d: 3,
+            route: RouteKind::PrefixAffinity,
+            only_scenario: Some(0),
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            21,
+        )
+        .only_scenario(0);
+        let reqs = g.window(6.0, 20_000.0);
+        let n = reqs.len();
+        let mut removed = false;
+        for r in reqs {
+            let at = r.arrival_ms;
+            sim.run_until(at);
+            sim.inject(r);
+            if !removed && at > 8_000.0 {
+                if let Some(p) = sim.removable_prefill() {
+                    assert!(sim.remove_prefill(p));
+                    removed = true;
+                }
+            }
+        }
+        assert!(removed, "no removal opportunity in 20 s of traffic");
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        assert!(sim.sse_accounting_balanced());
+        assert!(
+            sim.prefix_hit_rate_so_far() > 0.5,
+            "hit rate collapsed across scale-in: {}",
+            sim.prefix_hit_rate_so_far()
+        );
+        let out = sim.into_output();
+        assert_eq!(out.report.total(), n, "request lost across scale-in");
     }
 
     #[test]

@@ -100,12 +100,29 @@ pub struct Request {
 }
 
 impl Scenario {
+    /// Configure the shared-prefix pool: `fan_out` distinct prefixes, each
+    /// covering `frac` of the prompt (`frac = 0` ⇒ a prefix-free stream).
+    /// The knob behind homologous-vs-prefix-free routing studies.
+    pub fn with_prefix_pool(mut self, fan_out: usize, frac: f64) -> Self {
+        self.n_prefixes = fan_out.max(1);
+        self.prefix_frac = frac.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Canonical shared-prefix depth (tokens): scenario-level, so every
+    /// request of one prefix stream carries an *identical* leading token
+    /// sequence (prompt engineering fixes the system/context part; only
+    /// the user tail varies). Requests whose prompt is shorter than this
+    /// are covered entirely by the prefix.
+    pub fn canonical_prefix_len(&self) -> usize {
+        (self.prompt_mean * self.prefix_frac).round() as usize
+    }
+
     /// Draw one request at `arrival_ms`.
     pub fn sample(&self, scenario_idx: usize, id: u64, arrival_ms: f64, rng: &mut Rng) -> Request {
         let prompt_len = lognormal_len(rng, self.prompt_mean, self.prompt_cv, 16);
         let prefix_id = rng.below(self.n_prefixes);
-        let prefix_len =
-            ((prompt_len as f64 * self.prefix_frac) as usize).min(prompt_len);
+        let prefix_len = self.canonical_prefix_len().min(prompt_len);
         let gen_len = lognormal_len(rng, self.gen_mean, self.gen_cv, 1);
         Request {
             id,
@@ -126,6 +143,19 @@ impl Scenario {
         );
         (0..len).map(|_| rng.below(256) as i32).collect()
     }
+}
+
+/// Rolling-hash route key for a request's shared prefix (`None` when
+/// prefix-free) — the `router::PrefixAffinity` input. Computed identically
+/// at the fleet's scene level and inside the per-group simulator, so both
+/// layers agree on which requests are homologous.
+pub fn route_hash(sc: &Scenario, req: &Request) -> Option<u64> {
+    if req.prefix_len == 0 {
+        return None;
+    }
+    let depth = crate::serving::router::DEFAULT_HASH_DEPTH.min(req.prefix_len);
+    let toks = sc.prefix_tokens(req.scenario, req.prefix_id, depth);
+    crate::serving::router::rolling_hash(&toks, depth)
 }
 
 /// Log-normal with given mean and coefficient of variation, floored.
@@ -190,6 +220,42 @@ mod tests {
         let max = means.iter().cloned().fold(0.0, f64::max);
         let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(max / min > 5.0);
+    }
+
+    #[test]
+    fn prefix_pool_is_configurable() {
+        let base = standard_scenarios()[0].clone();
+        let wide = base.clone().with_prefix_pool(64, 0.5);
+        assert_eq!(wide.n_prefixes, 64);
+        assert!((wide.prefix_frac - 0.5).abs() < 1e-12);
+        let free = base.with_prefix_pool(1, 0.0);
+        assert_eq!(free.canonical_prefix_len(), 0);
+        let mut rng = Rng::new(5);
+        for i in 0..50 {
+            let r = free.sample(0, i, 0.0, &mut rng);
+            assert_eq!(r.prefix_len, 0, "prefix-free stream leaked a prefix");
+            assert_eq!(route_hash(&free, &r), None);
+        }
+    }
+
+    #[test]
+    fn route_hash_shared_within_stream_distinct_across() {
+        let sc = standard_scenarios()[0].clone();
+        let mut rng = Rng::new(6);
+        let mut by_prefix: std::collections::BTreeMap<usize, u64> =
+            Default::default();
+        for i in 0..200 {
+            let r = sc.sample(0, i, 0.0, &mut rng);
+            let h = route_hash(&sc, &r).expect("scene1 prompts share prefixes");
+            if let Some(&prev) = by_prefix.get(&r.prefix_id) {
+                assert_eq!(prev, h, "one stream hashed two ways");
+            } else {
+                by_prefix.insert(r.prefix_id, h);
+            }
+        }
+        let distinct: std::collections::BTreeSet<u64> =
+            by_prefix.values().copied().collect();
+        assert_eq!(distinct.len(), by_prefix.len(), "hash collision across streams");
     }
 
     #[test]
