@@ -97,6 +97,15 @@ impl NodeDetector {
     }
 }
 
+/// Detection latency for a fault at `fault_ms` under a periodic detector
+/// with period `period_ms`: time until the *next* scan completes. The
+/// standalone form of [`NodeDetector::detection_time`] for callers (the
+/// fleet loop) that model the detector's cadence without a `Topology`.
+pub fn detection_delay_ms(fault_ms: f64, period_ms: f64) -> f64 {
+    debug_assert!(period_ms > 0.0 && fault_ms >= 0.0);
+    ((fault_ms / period_ms).floor() + 1.0) * period_ms - fault_ms
+}
+
 /// ③: the MLOps poll — collapse status files into the set of devices
 /// needing substitution (recoverable ones are left to self-heal).
 pub fn faulty_devices_needing_substitution(records: &[StatusRecord]) -> Vec<DeviceId> {
@@ -187,5 +196,20 @@ mod tests {
         assert_eq!(det.detection_time(99.9), 100.0);
         assert_eq!(det.detection_time(100.0), 200.0);
         assert_eq!(det.detection_time(250.0), 300.0);
+    }
+
+    #[test]
+    fn detection_delay_matches_detector_and_is_bounded_by_period() {
+        let cfg = ClusterConfig::default();
+        let topo = Topology::build(&cfg);
+        let det = NodeDetector::new(&topo, 0, 100.0);
+        for fault_ms in [0.0, 0.1, 99.9, 100.0, 250.0, 1234.5] {
+            let delay = detection_delay_ms(fault_ms, 100.0);
+            assert!(
+                (fault_ms + delay - det.detection_time(fault_ms)).abs() < 1e-9,
+                "delay diverges from NodeDetector at {fault_ms}"
+            );
+            assert!(delay > 0.0 && delay <= 100.0 + 1e-9);
+        }
     }
 }

@@ -85,6 +85,23 @@ impl MetaStore {
         self.children(prefix).len()
     }
 
+    /// Delete every key under a prefix (recursive Zookeeper delete) —
+    /// the "all data … erased" step when a retired group's meta subtree
+    /// is reclaimed. Each deletion lands in the change log so watchers
+    /// observe the teardown in order. Returns the number of keys removed.
+    pub fn prune_prefix(&mut self, prefix: &str) -> usize {
+        let keys: Vec<String> = self
+            .data
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &keys {
+            self.delete(k);
+        }
+        keys.len()
+    }
+
     /// Watch semantics: all changes with seq > cursor, plus the new cursor.
     pub fn changes_since(&self, cursor: u64) -> (Vec<Change>, u64) {
         let start = self.log.partition_point(|c| c.seq <= cursor);
@@ -152,5 +169,29 @@ mod tests {
         let mut m = MetaStore::new();
         assert!(!m.delete("nope"));
         assert_eq!(m.cursor(), 0);
+    }
+
+    #[test]
+    fn prune_prefix_removes_subtree_and_logs() {
+        let mut m = MetaStore::new();
+        m.put("/svc/a/g0/entrance", "0");
+        m.put("/svc/a/g0/roce_map", "<P, {}>");
+        m.put("/svc/a/g0/health/0", "ok");
+        m.put("/svc/a/g1/entrance", "3");
+        let cursor = m.cursor();
+        assert_eq!(m.prune_prefix("/svc/a/g0"), 3);
+        assert_eq!(m.count_children("/svc/a/g0"), 0);
+        assert_eq!(m.get("/svc/a/g1/entrance"), Some("3"), "sibling subtree intact");
+        let (changes, _) = m.changes_since(cursor);
+        assert_eq!(changes.len(), 3);
+        assert!(changes.iter().all(|c| c.value.is_none()));
+        // Pruning nothing is a no-op.
+        assert_eq!(m.prune_prefix("/svc/a/g0"), 0);
+        // Prefix boundaries are the caller's job: a delimited prune of
+        // g1's subtree must not swallow g10's (plain prefix match).
+        m.put("/svc/a/g10/entrance", "7");
+        assert_eq!(m.prune_prefix("/svc/a/g1/"), 1);
+        assert_eq!(m.get("/svc/a/g10/entrance"), Some("7"));
+        assert_eq!(m.get("/svc/a/g1/entrance"), None);
     }
 }

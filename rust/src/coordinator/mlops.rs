@@ -1,11 +1,31 @@
 //! MLOps controller: group-granular scaling, the inference/training tidal
-//! switch, and rolling upgrades (paper §3.3, Fig. 13b).
+//! switch, rolling upgrades (paper §3.3, Fig. 13b), and the cross-scene
+//! instance-lending ledger.
 //!
 //! The controller plans capacity per scenario from the tidal traffic curve
 //! and executes scale-in/out at *group* granularity (manual or
 //! time-triggered); rolling upgrades walk group by group so the service is
 //! never interrupted ("each group receives a proportion of traffic for
 //! inference (at most group-level failure)").
+//!
+//! [`InstanceLedger`] is the single budget every elasticity decision
+//! draws from: scale-out, fault-recovery substitution and lease repayment
+//! all move *counts* between five buckets — in service, per-scene banks
+//! (cordon-drained instances), the fleet-wide spare pool, scrapped (fault
+//! casualties) and minted (emergency containers) — so capacity is never
+//! double-counted between a scene's trough and another scene's peak. The
+//! conservation invariant ([`InstanceLedger::audit`]):
+//!
+//! ```text
+//! in_service + banked + pool + scrapped == seed_total + minted
+//! ```
+//!
+//! A scene in trough lends banked instances to a scene in peak (or to
+//! recovery) through a [`Lease`] that is due back *before the lender's own
+//! predicted demand* — `repro --fig fault` asserts every lease is repaid
+//! before its due hour.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -147,6 +167,322 @@ pub fn plan_day(
     Ok(actions)
 }
 
+// ---------------------------------------------------------------------------
+// Cross-scene instance lending
+// ---------------------------------------------------------------------------
+
+/// Who borrowed the instances of a [`Lease`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseUse {
+    /// Borrowed by a scene (index) to fund a scale-out at its peak.
+    Scene(usize),
+    /// Consumed as a fault-recovery substitute (repaid from the pool or
+    /// from the next capacity release, since the fault one is scrapped).
+    Recovery,
+}
+
+/// One cross-scene loan of cordon-drained instances.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    /// Ledger-assigned id.
+    pub id: u64,
+    /// Scene whose bank the instances came from.
+    pub lender: usize,
+    /// Where the instances went.
+    pub borrower: LeaseUse,
+    /// Instance count moved.
+    pub instances: usize,
+    /// Wall-clock hour the lease was granted.
+    pub granted_hour: f64,
+    /// Hour by which the instances must be back in the lender's bank —
+    /// strictly before the lender's own predicted demand.
+    pub due_hour: f64,
+    /// Hour the lease was repaid (`None` while outstanding).
+    pub repaid_hour: Option<f64>,
+}
+
+impl Lease {
+    /// Still unpaid?
+    pub fn outstanding(&self) -> bool {
+        self.repaid_hour.is_none()
+    }
+}
+
+/// End-of-day ledger snapshot (what `serving::fleet` reports and the
+/// conservation property test audits).
+#[derive(Clone, Debug)]
+pub struct LedgerReport {
+    /// Instances the fleet started the day with (serving + spare pool).
+    pub seed_total: usize,
+    /// Emergency containers created when no spare/bank could fund a
+    /// recovery (0 on a well-provisioned day).
+    pub minted: usize,
+    /// Unassigned spare containers remaining in the fleet pool.
+    pub pool: usize,
+    /// Cordon-drained instances banked across all scenes.
+    pub banked: usize,
+    /// Fault casualties removed from the fleet.
+    pub scrapped: usize,
+    /// Instances currently assigned to serving groups.
+    pub in_service: usize,
+    /// Every lease granted over the day (repaid or not).
+    pub leases: Vec<Lease>,
+    /// Whether the conservation equation held at snapshot time.
+    pub balanced: bool,
+}
+
+/// The instance budget behind every elasticity decision (see module docs
+/// for the conservation invariant). All movements are counts — instances
+/// are fungible containers; identity lives in the groups, not here.
+#[derive(Clone, Debug)]
+pub struct InstanceLedger {
+    seed_total: usize,
+    pool: usize,
+    minted: usize,
+    scrapped: usize,
+    banks: BTreeMap<usize, usize>,
+    leases: Vec<Lease>,
+    next_id: u64,
+}
+
+impl InstanceLedger {
+    /// A fleet that starts with `seed_total` instances, `pool` of which
+    /// are unassigned spares (the rest are in service).
+    pub fn new(seed_total: usize, pool: usize) -> Self {
+        assert!(pool <= seed_total, "spare pool exceeds the seed fleet");
+        InstanceLedger {
+            seed_total,
+            pool,
+            minted: 0,
+            scrapped: 0,
+            banks: BTreeMap::new(),
+            leases: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Unassigned spares in the fleet-wide pool.
+    pub fn pool(&self) -> usize {
+        self.pool
+    }
+
+    /// Instances banked by `scene` (cordon-drained, lendable).
+    pub fn bank(&self, scene: usize) -> usize {
+        self.banks.get(&scene).copied().unwrap_or(0)
+    }
+
+    /// Total banked across scenes.
+    pub fn banked_total(&self) -> usize {
+        self.banks.values().sum()
+    }
+
+    /// Fault casualties removed from the fleet so far.
+    pub fn scrapped(&self) -> usize {
+        self.scrapped
+    }
+
+    /// Emergency containers created so far.
+    pub fn minted(&self) -> usize {
+        self.minted
+    }
+
+    /// Every lease granted so far.
+    pub fn leases(&self) -> &[Lease] {
+        &self.leases
+    }
+
+    /// A scale-in/trough drain returned `n` instances that no lease is
+    /// waiting on; bank them with their scene.
+    pub fn deposit(&mut self, scene: usize, n: usize) {
+        *self.banks.entry(scene).or_insert(0) += n;
+    }
+
+    /// Draw `n` from `scene`'s own bank. `false` (and no movement) if the
+    /// bank is short.
+    pub fn take_bank(&mut self, scene: usize, n: usize) -> bool {
+        let Some(b) = self.banks.get_mut(&scene) else {
+            return n == 0;
+        };
+        if *b < n {
+            return false;
+        }
+        *b -= n;
+        true
+    }
+
+    /// Draw `n` from the fleet-wide spare pool.
+    pub fn take_pool(&mut self, n: usize) -> bool {
+        if self.pool < n {
+            return false;
+        }
+        self.pool -= n;
+        true
+    }
+
+    /// Create `n` emergency containers (recovery with an empty pool and
+    /// empty banks). Tracked so the audit still balances.
+    pub fn mint(&mut self, n: usize) {
+        self.minted += n;
+    }
+
+    /// Return `n` instances to the fleet-wide pool (an orphaned
+    /// substitute, or an operator topping the pool up mid-day).
+    pub fn return_pool(&mut self, n: usize) {
+        self.pool += n;
+    }
+
+    /// Remove `n` fault casualties from the fleet.
+    pub fn scrap(&mut self, n: usize) {
+        self.scrapped += n;
+    }
+
+    /// Move `n` instances out of `lender`'s bank under a lease due back
+    /// by `due_hour`. Returns the lease id, or `None` if the bank is
+    /// short or the due hour is not after `now_hour`.
+    pub fn borrow(
+        &mut self,
+        lender: usize,
+        borrower: LeaseUse,
+        n: usize,
+        now_hour: f64,
+        due_hour: f64,
+    ) -> Option<u64> {
+        if n == 0 || due_hour <= now_hour || !self.take_bank(lender, n) {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.leases.push(Lease {
+            id,
+            lender,
+            borrower,
+            instances: n,
+            granted_hour: now_hour,
+            due_hour,
+            repaid_hour: None,
+        });
+        Some(id)
+    }
+
+    /// Repay lease `id` out of the spare pool (cheapest repayment: no
+    /// group needs draining). `false` if the pool is short or the lease
+    /// is unknown/already repaid.
+    pub fn repay_from_pool(&mut self, id: u64, now_hour: f64) -> bool {
+        let Some(l) = self
+            .leases
+            .iter_mut()
+            .find(|l| l.id == id && l.outstanding())
+        else {
+            return false;
+        };
+        if self.pool < l.instances {
+            return false;
+        }
+        self.pool -= l.instances;
+        *self.banks.entry(l.lender).or_insert(0) += l.instances;
+        l.repaid_hour = Some(now_hour);
+        true
+    }
+
+    /// A drained group of `scene` released `n` instances. They first
+    /// repay this scene's outstanding leases (earliest due first), then
+    /// any outstanding recovery leases, and the remainder is banked with
+    /// `scene`. Returns the ids of the leases repaid.
+    pub fn release(&mut self, scene: usize, n: usize, now_hour: f64) -> Vec<u64> {
+        let mut remaining = n;
+        let mut repaid = Vec::new();
+        // Two passes: the scene's own debts, then fleet-wide recovery
+        // debts (spares are fungible containers).
+        for pass in 0..2 {
+            let mut order: Vec<usize> = self
+                .leases
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| {
+                    l.outstanding()
+                        && match pass {
+                            0 => l.borrower == LeaseUse::Scene(scene),
+                            _ => l.borrower == LeaseUse::Recovery,
+                        }
+                })
+                .map(|(i, _)| i)
+                .collect();
+            order.sort_by(|&a, &b| {
+                self.leases[a]
+                    .due_hour
+                    .partial_cmp(&self.leases[b].due_hour)
+                    .unwrap()
+                    .then(self.leases[a].id.cmp(&self.leases[b].id))
+            });
+            for i in order {
+                let need = self.leases[i].instances;
+                if need > remaining {
+                    continue;
+                }
+                remaining -= need;
+                let lender = self.leases[i].lender;
+                *self.banks.entry(lender).or_insert(0) += need;
+                self.leases[i].repaid_hour = Some(now_hour);
+                repaid.push(self.leases[i].id);
+            }
+        }
+        self.deposit(scene, remaining);
+        repaid
+    }
+
+    /// Outstanding leases due at or before `horizon_hour` — the control
+    /// loop's call list: `(id, borrower, lender, instances)`.
+    pub fn due_before(&self, horizon_hour: f64) -> Vec<(u64, LeaseUse, usize, usize)> {
+        self.leases
+            .iter()
+            .filter(|l| l.outstanding() && l.due_hour <= horizon_hour)
+            .map(|l| (l.id, l.borrower, l.lender, l.instances))
+            .collect()
+    }
+
+    /// Any lease still unpaid?
+    pub fn has_outstanding(&self) -> bool {
+        self.leases.iter().any(|l| l.outstanding())
+    }
+
+    /// The conservation check: given the instances currently assigned to
+    /// serving groups, verify
+    /// `in_service + banked + pool + scrapped == seed_total + minted`.
+    pub fn audit(&self, in_service: usize) -> Result<()> {
+        let lhs = in_service + self.banked_total() + self.pool + self.scrapped;
+        let rhs = self.seed_total + self.minted;
+        if lhs != rhs {
+            bail!(
+                "instance ledger unbalanced: in_service {} + banked {} + pool {} \
+                 + scrapped {} = {} != seed {} + minted {} = {}",
+                in_service,
+                self.banked_total(),
+                self.pool,
+                self.scrapped,
+                lhs,
+                self.seed_total,
+                self.minted,
+                rhs
+            );
+        }
+        Ok(())
+    }
+
+    /// Snapshot for reporting/tests.
+    pub fn report(&self, in_service: usize) -> LedgerReport {
+        LedgerReport {
+            seed_total: self.seed_total,
+            minted: self.minted,
+            pool: self.pool,
+            banked: self.banked_total(),
+            scrapped: self.scrapped,
+            in_service,
+            leases: self.leases.clone(),
+            balanced: self.audit(in_service).is_ok(),
+        }
+    }
+}
+
 /// Rolling upgrade order: one group after another, never emptying the
 /// serving set. Returns the upgrade waves (each wave = groups upgraded
 /// concurrently; wave size 1 == strict rolling).
@@ -234,6 +570,97 @@ mod tests {
                 a.at_hour
             );
         }
+    }
+
+    #[test]
+    fn ledger_conserves_instances_across_lend_and_repay() {
+        // Seed fleet: 12 in service + 6 spares = 18.
+        let mut l = InstanceLedger::new(18, 6);
+        let mut in_service = 12;
+        l.audit(in_service).unwrap();
+        // Scene 0 troughs: drains a 6-instance group into its bank.
+        in_service -= 6;
+        assert!(l.release(0, 6, 2.0).is_empty());
+        assert_eq!(l.bank(0), 6);
+        l.audit(in_service).unwrap();
+        // Scene 1 peaks: borrows scene 0's bank, due before scene 0's ramp.
+        let lease = l.borrow(0, LeaseUse::Scene(1), 6, 3.0, 9.5).unwrap();
+        in_service += 6;
+        assert_eq!(l.bank(0), 0);
+        l.audit(in_service).unwrap();
+        // Scene 1's peak passes: the drained group repays the lease —
+        // instances land in the *lender's* bank, not the borrower's.
+        in_service -= 6;
+        assert_eq!(l.release(1, 6, 8.0), vec![lease]);
+        assert_eq!(l.bank(0), 6);
+        assert_eq!(l.bank(1), 0);
+        assert!(!l.has_outstanding());
+        let lease = l.leases().iter().find(|x| x.id == lease).unwrap();
+        assert_eq!(lease.repaid_hour, Some(8.0));
+        assert!(lease.repaid_hour.unwrap() < lease.due_hour);
+        l.audit(in_service).unwrap();
+        let rep = l.report(in_service);
+        assert!(rep.balanced);
+        assert_eq!(rep.seed_total, 18);
+    }
+
+    #[test]
+    fn ledger_recovery_draws_scrap_and_mint_balance() {
+        let mut l = InstanceLedger::new(13, 1);
+        let mut in_service = 12;
+        // Fault: substitute from the pool, casualty scrapped. The serving
+        // count is unchanged (failed out, substitute in).
+        assert!(l.take_pool(1));
+        l.scrap(1);
+        l.audit(in_service).unwrap();
+        // Second fault with an empty pool and empty banks: emergency mint.
+        assert!(!l.take_pool(1));
+        l.mint(1);
+        l.scrap(1);
+        l.audit(in_service).unwrap();
+        assert_eq!(l.minted(), 1);
+        assert_eq!(l.scrapped(), 2);
+        // Scene 2 troughs: drains 3 instances into its bank.
+        in_service -= 3;
+        assert!(l.release(2, 3, 4.0).is_empty());
+        l.audit(in_service).unwrap();
+        // Third fault: recovery borrows a banked instance from scene 2
+        // (failed out, borrowed substitute in — serving count unchanged).
+        let id = l.borrow(2, LeaseUse::Recovery, 1, 5.0, 11.0).unwrap();
+        l.scrap(1);
+        l.audit(in_service).unwrap();
+        assert!(!l.repay_from_pool(id, 6.0), "pool is empty");
+        // A later trough release (any scene) repays the recovery lease.
+        in_service -= 7;
+        let repaid = l.release(4, 7, 7.0);
+        assert_eq!(repaid, vec![id]);
+        assert_eq!(l.bank(2), 2 + 1, "lender bank restored");
+        assert_eq!(l.bank(4), 6, "remainder banked with the releasing scene");
+        l.audit(in_service).unwrap();
+    }
+
+    #[test]
+    fn ledger_guards_refuse_bad_movements() {
+        let mut l = InstanceLedger::new(6, 2);
+        assert!(!l.take_bank(0, 1), "empty bank refuses");
+        assert!(l.take_bank(0, 0), "zero draw from empty bank is fine");
+        assert!(!l.take_pool(3));
+        assert_eq!(l.pool(), 2, "failed draw moved nothing");
+        l.deposit(0, 2);
+        // Due hour must be in the future; bank must cover the loan.
+        assert!(l.borrow(0, LeaseUse::Scene(1), 2, 5.0, 5.0).is_none());
+        assert!(l.borrow(0, LeaseUse::Scene(1), 3, 5.0, 9.0).is_none());
+        assert_eq!(l.bank(0), 2, "refused loans move nothing");
+        let id = l.borrow(0, LeaseUse::Scene(1), 2, 5.0, 9.0).unwrap();
+        assert_eq!(l.due_before(9.0), vec![(id, LeaseUse::Scene(1), 0, 2)]);
+        assert!(l.due_before(8.9).is_empty());
+        // Pool repayment restores the lender's bank exactly once.
+        assert!(l.repay_from_pool(id, 6.0));
+        assert!(!l.repay_from_pool(id, 6.5), "double repayment refused");
+        assert_eq!(l.bank(0), 2);
+        assert_eq!(l.pool(), 0);
+        // 4 seed in service − 2 drained to the bank + 2 borrowed back = 4.
+        l.audit(4).unwrap();
     }
 
     #[test]

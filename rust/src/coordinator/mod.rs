@@ -14,7 +14,10 @@
 //!   file, MLOps polling) plus seeded fault injection.
 //! - `recovery`: minimum-cost substitution of a faulty instance.
 //! - `mlops`: group-granular scaling, rolling upgrade, tidal
-//!   inference/training switching (Fig. 13b).
+//!   inference/training switching (Fig. 13b), and the cross-scene
+//!   instance-lending ledger (`InstanceLedger`) that makes recovery,
+//!   tidal scaling, ratio migration and upgrades draw on one conserved
+//!   instance budget.
 //! - `modelstore`: pre-compiled model store (SFS vs SSD) with the 4-phase
 //!   load-time model behind Fig. 13d.
 

@@ -7,6 +7,24 @@
 //! running service". Running requests on the faulty instance are covered
 //! by protection: connections stopped, users answered with default texts,
 //! decode meta pruned at prefills.
+//!
+//! # Invariants
+//!
+//! - **Minimum cost**: exactly one stateless container substitutes the
+//!   fault one; the rest of the group keeps serving throughout (the
+//!   group's meta count is constant across [`recover`] — failed out,
+//!   substitute in, atomically from the meta store's point of view).
+//! - **Logical-removal-first ordering**: meta is updated before any
+//!   teardown, so no component forwards new work to the fault instance
+//!   while its state is being erased. [`phases_ordered`] checks a
+//!   recovery trace against the Fig. 13c phase sequence and is asserted
+//!   by `repro --fig fault`.
+//! - **Protection over silence**: requests in flight on the fault
+//!   instance are terminated and answered (default texts), never dropped
+//!   without accounting — the serving simulator counts them against the
+//!   timeout/SLO tallies (`WindowStats::protected`).
+
+#![deny(missing_docs)]
 
 use crate::cluster::device::DeviceId;
 use crate::cluster::instance::{Instance, Role};
@@ -19,13 +37,65 @@ use super::setup::{SetupConfig, WorkflowTrace};
 /// Outcome of one recovery.
 #[derive(Debug)]
 pub struct RecoveryReport {
+    /// Instance id of the fault instance (logically removed).
     pub failed_instance: u32,
+    /// Instance id of the substitute container that replaced it.
     pub substitute_instance: u32,
+    /// Role the substitute assumed (inherited from the fault instance).
     pub role: Role,
     /// Timeline from fault occurrence to serving substitute.
     pub trace: WorkflowTrace,
     /// Requests in flight on the failed instance (terminated by protection).
     pub protected_requests: usize,
+}
+
+impl RecoveryReport {
+    /// Outage window: fault occurrence → substitute serving (ms, the
+    /// trace's wall clock — real milliseconds, which a compressed-time
+    /// simulation scales into its own clock before charging).
+    pub fn outage_ms(&self) -> f64 {
+        self.trace.total_ms()
+    }
+}
+
+/// The Fig. 13c phase labels, in the order the paper's workflow runs
+/// them. [`phases_ordered`] requires each to appear in a recovery trace
+/// after its predecessor.
+const PHASE_ORDER: [&str; 7] = [
+    "detector",
+    "logical removal",
+    "protection",
+    "RoCE construction",
+    "load pre-compiled model",
+    "health report",
+    "erased",
+];
+
+/// Check that a recovery trace contains every Fig. 13c phase in paper
+/// order (detection → logical removal → protection → RoCE join → model
+/// load → health → erase) with non-decreasing start times. Returns the
+/// first violation as `Err`.
+pub fn phases_ordered(trace: &WorkflowTrace) -> Result<(), String> {
+    let mut last_idx = 0usize;
+    let mut last_start = f64::NEG_INFINITY;
+    for phase in PHASE_ORDER {
+        let Some(pos) = trace.steps[last_idx..]
+            .iter()
+            .position(|s| s.label.contains(phase))
+        else {
+            return Err(format!("phase '{phase}' missing or out of order"));
+        };
+        let step = &trace.steps[last_idx + pos];
+        if step.start_ms < last_start {
+            return Err(format!(
+                "phase '{phase}' starts at {} ms, before its predecessor at {} ms",
+                step.start_ms, last_start
+            ));
+        }
+        last_start = step.start_ms;
+        last_idx += pos + 1;
+    }
+    Ok(())
 }
 
 /// Find which instance (if any) owns the faulty device.
@@ -173,6 +243,27 @@ mod tests {
         let load = t.steps.iter().find(|s| s.label.contains("load")).unwrap();
         assert!(load.end_ms - load.start_ms > 1_000.0, "load is the long pole");
         assert!(t.total_ms() >= load.end_ms);
+    }
+
+    #[test]
+    fn recovery_trace_phases_follow_fig13c_order() {
+        let (mut meta, mut group, mut members) = serving();
+        let cfg = SetupConfig::default();
+        let report = recover(
+            &mut meta, &mut group, &mut members, inst(9), 1, &cfg, 100.0, 2,
+        )
+        .unwrap();
+        phases_ordered(&report.trace).expect("Fig. 13c phase order");
+        assert!(report.outage_ms() >= report.trace.steps.last().unwrap().start_ms);
+        // A trace missing a phase (or with phases swapped) is rejected.
+        let mut broken = report.trace.clone();
+        broken.steps.retain(|s| !s.label.contains("protection"));
+        assert!(phases_ordered(&broken).is_err());
+        let mut swapped = WorkflowTrace::default();
+        for s in report.trace.steps.iter().rev() {
+            swapped.steps.push(s.clone());
+        }
+        assert!(phases_ordered(&swapped).is_err());
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! `repro --fig fault` — the fault-tolerant fleet day: §3.4 recovery
+//! driven by the *live* fleet loop (Fig. 13c against serving traffic)
+//! plus the cross-scene instance-lending ledger.
+//!
+//! Three claims, asserted at tier-1:
+//!
+//! 1. **Recovery shape**: every recovery the day produces follows the
+//!    Fig. 13c phase order — detection → logical removal → protection →
+//!    RoCE join → model load → health → erase — and its outage is
+//!    dominated by the model load.
+//! 2. **Bounded degradation**: under an accelerated fault rate (the
+//!    paper's 1.5/week/400-devices knob scaled so a small simulated
+//!    fleet sees the fault pressure of tens of thousands of NPUs), E2E
+//!    completions over a *paired* day (identical arrivals) stay within
+//!    [`FAULT_TPUT_BOUND`] of the fault-free day.
+//! 3. **Lending discipline**: on a phased two-scene day with lending on,
+//!    at least one cross-scene lease is granted, the instance books
+//!    balance, and every lease is repaid before the lender's own peak
+//!    (leases maturing past the end of the day may remain outstanding).
+
+use crate::coordinator::mlops::LeaseUse;
+use crate::coordinator::recovery::phases_ordered;
+use crate::serving::fleet::{FleetConfig, FleetOutput, FleetSim};
+use crate::workload::traffic::{diurnal_factor, scene_phase};
+
+use super::Scale;
+
+/// Stated bound: completions under faults ≥ this fraction of fault-free.
+pub const FAULT_TPUT_BOUND: f64 = 0.75;
+
+/// Due-hours this close to the end of the day cannot be enforced inside
+/// it (the lease call + drain needs lead time); later dues are exempt
+/// from the repaid-in-day assertion.
+pub const LEASE_ENFORCE_MARGIN_H: f64 = 2.0;
+
+/// The paired fault/fault-free comparison plus the lending day.
+pub struct FaultRepro {
+    /// Fault-free day (paired arrivals with `faulty`).
+    pub clean: FleetOutput,
+    /// Same day under the accelerated fault rate.
+    pub faulty: FleetOutput,
+    /// Phased two-scene lending day (`--lend`).
+    pub lend: FleetOutput,
+}
+
+impl FaultRepro {
+    /// Completions under faults as a fraction of the fault-free day.
+    pub fn completion_ratio(&self) -> f64 {
+        if self.clean.completed == 0 {
+            1.0
+        } else {
+            self.faulty.completed as f64 / self.clean.completed as f64
+        }
+    }
+}
+
+/// The paired day: two scenes, two static groups each (capacity loop off
+/// so the comparison isolates the fault path), identical arrival streams.
+fn paired_cfg(scale: Scale, faults: bool) -> FleetConfig {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    FleetConfig {
+        scenes: vec![2, 5],
+        min_groups_per_scene: 2,
+        max_groups_per_scene: 3,
+        scale_groups: false,
+        peak_total_rps: 24.0,
+        hours: 24.0,
+        ms_per_hour: if fast { 1_500.0 } else { 3_000.0 },
+        control_period_ms: 1_500.0,
+        slice_ms: 500.0,
+        // ~4 groups × 6 instances × 8 devices = 192 devices; 300/week/400
+        // ⇒ ~20 faults over the day, ~8 fatal — the fault pressure a
+        // 40 000-NPU fleet sees at the paper's observed 1.5 rate.
+        faults_per_week: if faults { 300.0 } else { 0.0 },
+        seed: 0xFA17,
+        ..Default::default()
+    }
+}
+
+/// The lending day: two scenes with opposed diurnal phases (scene 0
+/// peaks in the lender's work day, scene 2 six hours later), lending on,
+/// one group's worth of spares. The early scene scales out of the pool,
+/// banks its groups across its decline, and the late scene's ramp can
+/// only be funded by borrowing against that bank. 30 hours so the last
+/// borrower trough (and with it the repayment) falls inside the run.
+fn lending_cfg(scale: Scale) -> FleetConfig {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    FleetConfig {
+        scenes: vec![0, 2],
+        min_groups_per_scene: 1,
+        max_groups_per_scene: 3,
+        scale_groups: true,
+        lend: true,
+        spare_instances: 6,
+        peak_total_rps: 60.0,
+        hours: 30.0,
+        ms_per_hour: if fast { 1_500.0 } else { 3_000.0 },
+        control_period_ms: 1_500.0,
+        slice_ms: 500.0,
+        faults_per_week: 0.0,
+        seed: 0x1E4D,
+        ..Default::default()
+    }
+}
+
+/// The lender's first diurnal peak after a lease is granted.
+pub fn lender_peak_hour(lender: usize, granted_hour: f64) -> f64 {
+    let phase = scene_phase(lender);
+    let mut best = (granted_hour, f64::MIN);
+    let mut h = granted_hour + 0.25;
+    while h <= granted_hour + 24.0 {
+        let f = diurnal_factor(h, phase);
+        if f > best.1 {
+            best = (h, f);
+        }
+        h += 0.25;
+    }
+    best.0
+}
+
+/// The paired comparison alone: (fault-free day, faulted day).
+pub fn paired_days(scale: Scale) -> (FleetOutput, FleetOutput) {
+    let clean = FleetSim::new(paired_cfg(scale, false)).run();
+    let faulty = FleetSim::new(paired_cfg(scale, true)).run();
+    (clean, faulty)
+}
+
+/// The lending day alone.
+pub fn lending_day(scale: Scale) -> FleetOutput {
+    FleetSim::new(lending_cfg(scale)).run()
+}
+
+/// Run all three days.
+pub fn fault_repro(scale: Scale) -> FaultRepro {
+    let (clean, faulty) = paired_days(scale);
+    FaultRepro { clean, faulty, lend: lending_day(scale) }
+}
+
+pub fn run(scale: Scale) {
+    let r = fault_repro(scale);
+    let rows = vec![
+        (
+            "fault-free day".to_string(),
+            format!(
+                "{} completed, {:.2} rps, {:.0}% SLO",
+                r.clean.completed,
+                r.clean.rps,
+                r.clean.slo_attainment * 100.0
+            ),
+        ),
+        (
+            format!("{} fatal faults", r.faulty.faults_fatal),
+            format!(
+                "{} completed, {:.2} rps, {:.0}% SLO, {} protected",
+                r.faulty.completed,
+                r.faulty.rps,
+                r.faulty.slo_attainment * 100.0,
+                r.faulty.protected
+            ),
+        ),
+    ];
+    super::table(
+        "Fig fault — paired fleet day under the paper's fault regime (§3.4)",
+        ("day", "E2E outcome"),
+        &rows,
+    );
+    println!(
+        "completions under faults: {:.1}% of fault-free (stated bound {:.0}%); \
+         {} faults drawn, {} fatal, {} recoveries",
+        r.completion_ratio() * 100.0,
+        FAULT_TPUT_BOUND * 100.0,
+        r.faulty.faults_seen,
+        r.faulty.faults_fatal,
+        r.faulty.recoveries
+    );
+    if let Some((hour, rep)) = r.faulty.recovery_reports.first() {
+        println!(
+            "\nfirst recovery ({:.2} h, instance {} -> container {}, {} protected):",
+            hour, rep.failed_instance, rep.substitute_instance, rep.protected_requests
+        );
+        print!("{}", rep.trace.render());
+    }
+    println!("\nlending day (phased scenes 0/2, {} leases):", r.lend.ledger.leases.len());
+    r.lend.print_summary(false);
+    for lease in &r.lend.ledger.leases {
+        if let LeaseUse::Scene(_) = lease.borrower {
+            let peak = lender_peak_hour(lease.lender, lease.granted_hour);
+            println!(
+                "  lease #{}: lender scene {} peaks at {:.2} h, repaid {}",
+                lease.id,
+                lease.lender,
+                peak,
+                lease
+                    .repaid_hour
+                    .map(|h| format!("{h:.2} h"))
+                    .unwrap_or_else(|| "never (matures past day end)".into())
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_day_degradation_bounded_and_recoveries_ordered() {
+        // This test asserts nothing about lending, so it runs only the
+        // paired days (the lending test pays for its own day).
+        let (clean, faulty) = paired_days(Scale::fast());
+        let completion_ratio = if clean.completed == 0 {
+            1.0
+        } else {
+            faulty.completed as f64 / clean.completed as f64
+        };
+        // Paired comparison: identical arrival streams.
+        assert_eq!(
+            clean.injected, faulty.injected,
+            "arrival streams diverged — the comparison is not paired"
+        );
+        assert_eq!(clean.faults_seen, 0);
+        assert!(
+            faulty.faults_fatal >= 1,
+            "the accelerated schedule produced no fatal fault"
+        );
+        assert_eq!(
+            faulty.recoveries, faulty.faults_fatal,
+            "a recovery never completed"
+        );
+        // 1) Recovery shape: Fig. 13c phase order, load-dominated outage.
+        for (_hour, rep) in &faulty.recovery_reports {
+            phases_ordered(&rep.trace).expect("Fig. 13c phase order");
+            let load = rep
+                .trace
+                .steps
+                .iter()
+                .find(|s| s.label.contains("load"))
+                .expect("load phase present");
+            assert!(
+                (load.end_ms - load.start_ms) / rep.outage_ms() > 0.3,
+                "model load is not the long pole of the outage"
+            );
+        }
+        // 2) Bounded degradation under the stated bound.
+        assert!(
+            completion_ratio >= FAULT_TPUT_BOUND,
+            "completions under faults fell to {:.1}% of fault-free (bound {:.0}%)",
+            completion_ratio * 100.0,
+            FAULT_TPUT_BOUND * 100.0
+        );
+        // Protection is a subset of the timeout tally and the books
+        // balance (capacity never double-counted).
+        assert!(faulty.protected <= faulty.timed_out);
+        assert!(faulty.ledger.balanced, "{:?}", faulty.ledger);
+        assert_eq!(faulty.ledger.scrapped, faulty.faults_fatal);
+        assert_eq!(faulty.total(), faulty.injected);
+        assert_eq!(clean.total(), clean.injected);
+    }
+
+    #[test]
+    fn lending_day_grants_and_repays_before_the_lenders_peak() {
+        // Only the lending day — the paired days have their own test.
+        let out = &lending_day(Scale::fast());
+        assert_eq!(out.total(), out.injected);
+        assert!(out.ledger.balanced, "{:?}", out.ledger);
+        assert_eq!(out.ledger.minted, 0, "lending day minted capacity");
+        let scene_leases: Vec<_> = out
+            .ledger
+            .leases
+            .iter()
+            .filter(|l| matches!(l.borrower, LeaseUse::Scene(_)))
+            .collect();
+        assert!(
+            !scene_leases.is_empty(),
+            "phased day produced no cross-scene lease: {:#?}",
+            out.timeline
+        );
+        for lease in &out.ledger.leases {
+            match lease.repaid_hour {
+                Some(repaid) => {
+                    // The call path is tick-granular: the lease is called
+                    // one lead-hour early and the drain may take a tick,
+                    // so repayment lands within ~2 h of the due hour (the
+                    // natural-drain path repays far earlier).
+                    assert!(
+                        repaid <= lease.due_hour + 2.0,
+                        "lease #{} repaid at {:.2} h, well after its due {:.2} h",
+                        lease.id,
+                        repaid,
+                        lease.due_hour
+                    );
+                    let peak = lender_peak_hour(lease.lender, lease.granted_hour);
+                    assert!(
+                        repaid < peak,
+                        "lease #{} repaid at {:.2} h, after the lender's peak {:.2} h",
+                        lease.id,
+                        repaid,
+                        peak
+                    );
+                }
+                None => {
+                    // Only leases maturing too close to (or past) the end
+                    // of the day may remain outstanding.
+                    assert!(
+                        lease.due_hour > out.end_hour - LEASE_ENFORCE_MARGIN_H,
+                        "lease #{} (due {:.2} h) unpaid inside the day (end {:.2} h): {:#?}",
+                        lease.id,
+                        lease.due_hour,
+                        out.end_hour,
+                        out.timeline
+                    );
+                }
+            }
+        }
+    }
+}

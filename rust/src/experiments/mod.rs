@@ -7,6 +7,7 @@
 //! add `--fast` to shrink workloads for CI.
 
 pub mod ext;
+pub mod fault;
 pub mod fig01;
 pub mod fleet;
 pub mod fig02;
@@ -73,6 +74,9 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         if want(&["fleet", "13e"]) {
             fleet::run(scale);
         }
+        if want(&["fault", "13f"]) {
+            fault::run(scale);
+        }
         if want(&["routing"]) {
             routing::run(scale);
         }
@@ -87,7 +91,7 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, routing, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, routing, headline, all)");
         return 2;
     }
     0

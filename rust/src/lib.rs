@@ -13,6 +13,9 @@
 //!   kernels, lowered once to `artifacts/*.hlo.txt`.
 //! - `runtime`: loads the artifacts on a PJRT CPU client and executes them
 //!   on the request path; python is never invoked at serving time.
+//!
+//! `ARCHITECTURE.md` (crate root) maps every paper section to its module
+//! and walks the fleet loop; its code blocks run as doctests here.
 
 pub mod bench;
 pub mod cluster;
@@ -27,3 +30,10 @@ pub mod serving;
 pub mod sim;
 pub mod util;
 pub mod workload;
+
+/// The architecture guide, compiled as doctests: every code block in
+/// `ARCHITECTURE.md` must keep building against the real APIs, so the
+/// paper-to-module map cannot silently rot.
+#[doc = include_str!("../ARCHITECTURE.md")]
+#[cfg(doctest)]
+pub struct ArchitectureGuide;

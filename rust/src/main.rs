@@ -34,7 +34,7 @@ fn main() {
 }
 
 /// `pdserve simulate`: one serving simulation from CLI flags + optional
-/// config file ([engine]/[serving] sections of configs/*.toml).
+/// config file (`[engine]`/`[serving]` sections of configs/*.toml).
 fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     use pd_serve::serving::sim::{Policy, SimConfig, Simulation, TransferDiscipline, WorkloadKind};
     use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
@@ -112,6 +112,9 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// `--route random|round-robin|least-loaded|prefix-affinity`
 /// `--upgrade-at MIN` (rolling upgrade, minutes into the simulated day)
 /// `--upgrade-wave N` (groups per wave, default 1)
+/// `--faults-per-week R` (fault injection, per 400 devices — paper: 1.5)
+/// `--lend` (cross-scene instance lending) `--spares N` (spare pool)
+/// `--detect-ms MS` (fault-detector period, real ms)
 /// `--static` (freeze ratios) `--no-scale` (freeze group counts)
 /// `--quiet` (summary only, no timeline).
 fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
@@ -185,6 +188,20 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
         };
         cfg.upgrade_at_ms = Some(minutes / 60.0 * cfg.ms_per_hour);
         cfg.upgrade_wave = args.get_usize("upgrade-wave", cfg.upgrade_wave);
+    }
+    cfg.faults_per_week = args.get_f64("faults-per-week", cfg.faults_per_week);
+    if cfg.faults_per_week < 0.0 || !cfg.faults_per_week.is_finite() {
+        eprintln!("--faults-per-week must be a finite rate >= 0");
+        return 2;
+    }
+    if args.has("lend") {
+        cfg.lend = true;
+    }
+    cfg.spare_instances = args.get_usize("spares", cfg.spare_instances);
+    cfg.detect_period_ms = args.get_f64("detect-ms", cfg.detect_period_ms);
+    if !(cfg.detect_period_ms.is_finite() && cfg.detect_period_ms > 0.0) {
+        eprintln!("--detect-ms must be a finite period > 0 (real ms between detector scans)");
+        return 2;
     }
     if cfg.group_total < 2 {
         eprintln!("--group-size must be >= 2");

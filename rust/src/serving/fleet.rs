@@ -23,17 +23,66 @@
 //! `pdserve fleet` runs one simulated day; `experiments::fleet` reproduces
 //! the Fig. 13a story — the dynamic ratio beats every static ratio on E2E
 //! throughput under the same tidal curve.
+//!
+//! # Faults and recovery (§3.4)
+//!
+//! With `--faults-per-week` the day draws a seeded fault schedule
+//! (`coordinator::fault::FaultInjector`, the paper's ~1.5/week per 400
+//! devices knob) onto the shared event queue. A fatal fault kills one
+//! serving instance immediately: its in-flight work is terminated under
+//! protection (`Simulation::fail_prefill` / `fail_decode`), its affinity
+//! streams re-stick to one sibling, and `coordinator::recovery::recover`
+//! substitutes one stateless container — detection latency, logical
+//! removal, RoCE join and model load all charged to the simulated clock
+//! (real-time trace compressed by `ms_per_hour / 3 600 000`), so the
+//! substitute rejoins the serving pools only when the Fig. 13c workflow
+//! would actually finish.
+//!
+//! # The instance budget (cross-scene lending, `--lend`)
+//!
+//! Every elasticity decision draws on one conserved budget
+//! (`coordinator::mlops::InstanceLedger`): scale-out is funded from the
+//! scene's own bank of cordon-drained instances, the fleet spare pool, or
+//! a [`Lease`](crate::coordinator::mlops::Lease) against a trough scene's
+//! bank — due back before the lender's own predicted demand; recovery
+//! substitutes compete for the same spares. With lending on, a scale-out
+//! no budget can fund is *deferred*, never minted — the
+//! failure-blind-capacity mistake the ledger exists to prevent.
+//!
+//! # Invariants
+//!
+//! - **Instance budget**: a group never runs more than its configured
+//!   instance total — a D→P migration cordons the donor decode and adds
+//!   the prefill only after the drain (cordon-drain-then-flip,
+//!   `pending_flip`); fleet-wide,
+//!   `in_service + banked + pool + scrapped == seed_total + minted`
+//!   (audited at end of day, asserted by the conservation property test).
+//! - **Cordon-drain-then-flip**: scale-in, upgrades and lease calls all
+//!   reuse the same cordon path — no new traffic, committed work drains,
+//!   then the group retires/restarts; a scene's last routable group is
+//!   never cordoned.
+//! - **Request conservation**: every injected request ends exactly once
+//!   (completed, timed out, or terminated under fault protection), across
+//!   ratio migrations, scale events, upgrades, faults and lending days.
+
+#![deny(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::cluster::device::RoceIp;
+use crate::cluster::device::{DeviceId, FaultLevel, RoceIp};
 use crate::cluster::engine::{EngineModel, PrefillItem};
-use crate::cluster::instance::{InstanceId, Role};
+use crate::cluster::instance::{Instance, InstanceId, InstanceState, Role};
+use crate::coordinator::fault::{detection_delay_ms, FaultEvent, FaultInjector};
 use crate::coordinator::group::{GroupId, PdGroup};
-use crate::coordinator::mlops::{groups_needed, rolling_upgrade_waves, GroupTemplate};
+use crate::coordinator::meta::MetaStore;
+use crate::coordinator::mlops::{
+    groups_needed, rolling_upgrade_waves, GroupTemplate, InstanceLedger, LeaseUse, LedgerReport,
+};
 use crate::coordinator::ratio::{
     detect_bottleneck, optimal_ratio, Adjustment, DetectorThresholds, WorkloadProfile,
 };
+use crate::coordinator::recovery::{recover, RecoveryReport};
+use crate::coordinator::setup::SetupConfig;
 use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
 use crate::serving::sim::{SimConfig, Simulation, WindowStats, WorkloadKind};
 use crate::sim::EventQueue;
@@ -45,18 +94,38 @@ use crate::workload::{route_hash, Request, Scenario};
 /// Assumed D2D transfer time for capacity planning (ms) — the ξ term.
 const XFER_EST_MS: f64 = 10.0;
 
+/// Real-to-virtual clock factor: recovery traces and detector periods are
+/// real milliseconds; one simulated hour is `ms_per_hour` virtual ms.
+const REAL_MS_PER_HOUR: f64 = 3_600_000.0;
+
+/// How far ahead of a lease's due hour the control loop calls it in
+/// (drain lead time, hours).
+const LEASE_CALL_LEAD_H: f64 = 1.0;
+
+/// A lease matures this long before the lender's predicted demand hour.
+const LEASE_MARGIN_H: f64 = 0.25;
+
+/// Minimum useful lease duration (hours) — below this the lender keeps
+/// its instances and the borrower is deferred instead.
+const MIN_LEASE_H: f64 = 0.5;
+
+/// Configuration of one simulated fleet day.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
+    /// The scenario catalogue (defaults to the six standard scenes).
     pub scenarios: Vec<Scenario>,
     /// Scenes (indices into `scenarios`) that receive serving groups.
     pub scenes: Vec<usize>,
+    /// Engine performance model shared by every group's simulator.
     pub engine: EngineConfig,
+    /// Serving-policy knobs (batch sizes, SLOs, retry pacing).
     pub serving: ServingConfig,
     /// Fleet-wide peak arrival rate; split across scenes by weight and
     /// shaped by each scene's phased diurnal curve.
     pub peak_total_rps: f64,
-    /// Simulated day length (hours) and virtual-time compression.
+    /// Simulated day length (hours).
     pub hours: f64,
+    /// Virtual-time compression: virtual ms per simulated hour.
     pub ms_per_hour: f64,
     /// Wall-clock hour the simulation starts at (7.0 = morning ramp).
     pub start_hour: f64,
@@ -64,12 +133,15 @@ pub struct FleetConfig {
     pub group_total: usize,
     /// Initial per-group (n_p, n_d).
     pub init_ratio: (usize, usize),
+    /// Per-scene group floor (a scene never drains below this).
     pub min_groups_per_scene: usize,
+    /// Per-scene group ceiling for the capacity planner.
     pub max_groups_per_scene: usize,
     /// Control-loop period (virtual ms).
     pub control_period_ms: f64,
     /// Arrival-generation slice (virtual ms).
     pub slice_ms: f64,
+    /// Bottleneck-detector sensitivity (Fig. 12c).
     pub thresholds: DetectorThresholds,
     /// Close the ratio loop (off = static ratios, the Fig. 13a baselines).
     pub adjust_ratio: bool,
@@ -88,6 +160,22 @@ pub struct FleetConfig {
     pub upgrade_at_ms: Option<f64>,
     /// Groups upgraded concurrently per wave (1 = strict rolling).
     pub upgrade_wave: usize,
+    /// Fault-injection rate: the paper's faults-per-week-per-400-devices
+    /// knob (§3.4 observes ~1.5). `0.0` disables injection.
+    pub faults_per_week: f64,
+    /// Devices per instance — scales the fleet-wide fault hazard.
+    pub devices_per_instance: usize,
+    /// Fault-detector scan period in *real* ms (the Fig. 8 resident
+    /// process); the detection latency it implies is charged to every
+    /// recovery timeline.
+    pub detect_period_ms: f64,
+    /// Cross-scene instance lending: scale-out and recovery draw on the
+    /// conserved instance budget (banks/pool/leases) instead of minting
+    /// capacity, and a scale-out nothing can fund is deferred.
+    pub lend: bool,
+    /// Stateless spare containers the fleet-wide pool starts with.
+    pub spare_instances: usize,
+    /// PRNG seed (arrivals, tie-breaks, fault schedule).
     pub seed: u64,
 }
 
@@ -121,6 +209,11 @@ impl Default for FleetConfig {
             route: RouteKind::LeastLoaded,
             upgrade_at_ms: None,
             upgrade_wave: 1,
+            faults_per_week: 0.0,
+            devices_per_instance: 8,
+            detect_period_ms: 5_000.0,
+            lend: false,
+            spare_instances: 6,
             seed: 0xF1EE7,
         }
     }
@@ -129,44 +222,79 @@ impl Default for FleetConfig {
 /// One logged control action.
 #[derive(Clone, Debug)]
 pub struct FleetLogEntry {
+    /// Wall-clock hour of the action.
     pub hour: f64,
+    /// Scene the action concerned.
     pub scene: usize,
+    /// Group id, or `u32::MAX` for scene-level actions.
     pub group: u32,
+    /// Human-readable description.
     pub what: String,
 }
 
 /// Aggregate result of one fleet day.
 #[derive(Debug)]
 pub struct FleetOutput {
+    /// Requests injected over the day.
     pub injected: usize,
+    /// Requests completed.
     pub completed: usize,
+    /// Requests terminated (TTFT timeout or fault protection).
     pub timed_out: usize,
     /// Completed requests per virtual second over the whole day.
     pub rps: f64,
     /// TTFT-SLO attainment (timeouts count against).
     pub slo_attainment: f64,
+    /// Mean TTFT over completed requests (ms).
     pub mean_ttft_ms: f64,
+    /// Mean E2E latency over completed requests (ms).
     pub mean_e2e_ms: f64,
+    /// Mid-run P/D ratio migrations.
     pub adjustments: usize,
+    /// Groups spawned by the capacity planner.
     pub scale_outs: usize,
+    /// Groups cordon-drained by the capacity planner.
     pub scale_ins: usize,
+    /// Trough capacity releases to training.
     pub training_switches: usize,
     /// Groups restarted by the rolling upgrade (cordon → drain → cold).
     pub upgraded_groups: usize,
+    /// Faults drawn by the injector that landed on the serving set.
+    pub faults_seen: usize,
+    /// Fatal faults applied (instance killed + recovery started).
+    pub faults_fatal: usize,
+    /// Recoveries completed (substitute back in the serving pools).
+    pub recoveries: usize,
+    /// Requests terminated under §3.4 protection (subset of `timed_out`).
+    pub protected: usize,
+    /// Scale-outs deferred because the instance budget could not fund
+    /// them (lending on).
+    pub scale_deferred: usize,
+    /// Leases called in by draining a borrower group.
+    pub lease_calls: usize,
+    /// Every recovery's (hour, report) — timelines for `repro --fig fault`.
+    pub recovery_reports: Vec<(f64, RecoveryReport)>,
+    /// End-of-day instance-ledger snapshot (budget conservation).
+    pub ledger: LedgerReport,
+    /// Wall-clock hour the day ended at.
+    pub end_hour: f64,
     /// Peak concurrently-serving instances (groups × members).
     pub peak_instances: usize,
     /// Surviving groups' (scene, n_p, n_d).
     pub final_ratios: Vec<(usize, usize, usize)>,
     /// Per control window: (hour, offered rps, served rps).
     pub served_curve: Vec<(f64, f64, f64)>,
+    /// Ordered control-action log.
     pub timeline: Vec<FleetLogEntry>,
 }
 
 impl FleetOutput {
+    /// Requests accounted for (completed + terminated).
     pub fn total(&self) -> usize {
         self.completed + self.timed_out
     }
 
+    /// Print the day's summary (and the action timeline when asked).
     pub fn print_summary(&self, with_timeline: bool) {
         println!(
             "fleet day: injected {} | completed {} ({:.1}% SLO) | timed out {} | {:.2} rps",
@@ -188,6 +316,40 @@ impl FleetOutput {
             self.training_switches,
             self.upgraded_groups
         );
+        if self.faults_seen > 0 {
+            println!(
+                "faults: {} drawn, {} fatal, {} recoveries, {} requests protected",
+                self.faults_seen, self.faults_fatal, self.recoveries, self.protected
+            );
+        }
+        let l = &self.ledger;
+        println!(
+            "instance ledger: {} seed | {} in service, {} banked, {} pool, {} scrapped, {} minted | {} leases ({} called, {} scale-outs deferred) | {}",
+            l.seed_total,
+            l.in_service,
+            l.banked,
+            l.pool,
+            l.scrapped,
+            l.minted,
+            l.leases.len(),
+            self.lease_calls,
+            self.scale_deferred,
+            if l.balanced { "balanced" } else { "UNBALANCED" }
+        );
+        for lease in &l.leases {
+            let to = match lease.borrower {
+                LeaseUse::Scene(s) => format!("scene {s}"),
+                LeaseUse::Recovery => "recovery".to_string(),
+            };
+            let repaid = match lease.repaid_hour {
+                Some(h) => format!("repaid {h:.2} h"),
+                None => "OUTSTANDING".to_string(),
+            };
+            println!(
+                "  lease #{}: {} inst, scene {} -> {to}, granted {:.2} h, due {:.2} h, {repaid}",
+                lease.id, lease.instances, lease.lender, lease.granted_hour, lease.due_hour
+            );
+        }
         for (scene, n_p, n_d) in &self.final_ratios {
             println!("  scene {scene}: final ratio {n_p}:{n_d}");
         }
@@ -225,6 +387,10 @@ struct FleetGroup {
     meta: PdGroup,
     sim: Simulation,
     scene: usize,
+    /// Coordinator-side members (roles kept in sync with the sim pools) —
+    /// what `coordinator::recovery::recover` operates on when a fault
+    /// lands here.
+    members: Vec<Instance>,
     /// sim prefill entrance -> coordinator instance.
     prefill_inst: BTreeMap<usize, InstanceId>,
     /// sim decode slot -> coordinator instance.
@@ -239,6 +405,21 @@ struct FleetGroup {
     draining: bool,
     /// Cordoned by the rolling upgrade: no new traffic until the restart.
     upgrading: bool,
+    /// Recoveries in flight (fault happened, substitute not yet serving).
+    /// A recovering group is never drained, cordoned or upgraded — its
+    /// pending substitute must find it alive.
+    recovering: usize,
+}
+
+impl FleetGroup {
+    /// Can this group take new traffic right now? Cordons and a fault
+    /// that emptied one side both take it out of the routable set.
+    fn routable(&self) -> bool {
+        !self.draining
+            && !self.upgrading
+            && self.sim.n_prefill_alive() > 0
+            && self.sim.n_decode_alive() > 0
+    }
 }
 
 impl FleetGroup {
@@ -253,13 +434,24 @@ enum FleetEv {
     Slice { scene: usize },
     Arrival { scene: usize, req: Request },
     Control,
+    /// A device fault from the seeded schedule fires (§3.4).
+    Fault(FaultEvent),
+    /// A recovery workflow finishes: the substitute starts serving.
+    Recovered { group: u32, inst: InstanceId, role: Role },
 }
 
+/// The fleet-level closed-loop simulator (see module docs).
 pub struct FleetSim {
     cfg: FleetConfig,
     q: EventQueue<FleetEv>,
     groups: Vec<FleetGroup>,
     plans: BTreeMap<usize, ScenePlan>,
+    /// The Zookeeper stand-in the recovery/RoCE workflows run against.
+    meta: MetaStore,
+    /// Workflow timing knobs (RoCE join, model load) for recoveries.
+    setup: SetupConfig,
+    /// The conserved instance budget every elasticity decision draws on.
+    ledger: InstanceLedger,
     /// One route policy per scene — group-level selection across the
     /// groups of that scene (the same `RoutePolicy` code the per-group
     /// gateways run at entrance granularity).
@@ -284,6 +476,13 @@ pub struct FleetSim {
     scale_ins: usize,
     training_switches: usize,
     upgraded_groups: usize,
+    faults_seen: usize,
+    faults_fatal: usize,
+    recoveries: usize,
+    protected: usize,
+    scale_deferred: usize,
+    lease_calls: usize,
+    recovery_reports: Vec<(f64, RecoveryReport)>,
     peak_instances: usize,
     served_curve: Vec<(f64, f64, f64)>,
     timeline: Vec<FleetLogEntry>,
@@ -342,6 +541,9 @@ fn scene_plan(
 }
 
 impl FleetSim {
+    /// Build one fleet day: initial groups per scene, the instance
+    /// ledger, and (when `faults_per_week > 0`) the seeded fault schedule
+    /// on the shared event queue.
     pub fn new(cfg: FleetConfig) -> Self {
         assert!(!cfg.scenes.is_empty(), "fleet needs at least one scene");
         assert!(cfg.group_total >= 2, "a group needs at least 1P + 1D");
@@ -377,6 +579,9 @@ impl FleetSim {
             q: EventQueue::new(),
             groups: Vec::new(),
             plans,
+            meta: MetaStore::new(),
+            setup: SetupConfig::default(),
+            ledger: InstanceLedger::new(0, 0),
             scene_router,
             total_weight,
             rng,
@@ -393,6 +598,13 @@ impl FleetSim {
             scale_ins: 0,
             training_switches: 0,
             upgraded_groups: 0,
+            faults_seen: 0,
+            faults_fatal: 0,
+            recoveries: 0,
+            protected: 0,
+            scale_deferred: 0,
+            lease_calls: 0,
+            recovery_reports: Vec::new(),
             peak_instances: 0,
             served_curve: Vec::new(),
             timeline: Vec::new(),
@@ -406,8 +618,31 @@ impl FleetSim {
             }
             fleet.q.push(0.0, FleetEv::Slice { scene });
         }
+        // The seed fleet: everything serving now plus the spare pool.
+        let in_service = fleet.instances_in_service();
+        let spares = fleet.cfg.spare_instances;
+        fleet.ledger = InstanceLedger::new(in_service + spares, spares);
+        // Draw the day's fault schedule (real-clock hazard, compressed
+        // onto the virtual day) over the seed device fleet.
+        if fleet.cfg.faults_per_week > 0.0 {
+            let mut inj =
+                FaultInjector::new(fleet.cfg.seed ^ 0xFA_017, fleet.cfg.faults_per_week);
+            let devices = in_service * fleet.cfg.devices_per_instance.max(1);
+            let horizon_real_ms = fleet.cfg.hours * REAL_MS_PER_HOUR;
+            let compress = fleet.cfg.ms_per_hour / REAL_MS_PER_HOUR;
+            for ev in inj.schedule(devices, horizon_real_ms) {
+                fleet.q.push(ev.at_ms * compress, FleetEv::Fault(ev));
+            }
+        }
         fleet.q.push(fleet.cfg.control_period_ms, FleetEv::Control);
         fleet
+    }
+
+    /// Instances currently assigned to serving groups (the coordinator
+    /// view — constant across a recovery window, since the substitute
+    /// replaces the casualty atomically in the group meta).
+    fn instances_in_service(&self) -> usize {
+        self.groups.iter().map(|g| g.meta.roles.len()).sum()
     }
 
     fn hour_at(&self, t_ms: f64) -> f64 {
@@ -420,6 +655,50 @@ impl FleetSim {
 
     fn roce_ips(inst: InstanceId) -> Vec<RoceIp> {
         vec![RoceIp { region: 0, host: inst.0 as u16 }]
+    }
+
+    /// The group's subtree in the meta store (entrance, RoCE map, health).
+    fn meta_base(g: &PdGroup) -> String {
+        format!("/svc/{}/{}/g{}", g.service, g.scenario, g.id.0)
+    }
+
+    /// One stateless container: the shape every instance — seed member or
+    /// recovery spare — is built from.
+    fn mk_container(&self, inst: InstanceId) -> Instance {
+        let dpi = self.cfg.devices_per_instance.max(1) as u32;
+        let devices = (0..dpi).map(|k| DeviceId(inst.0 * dpi + k)).collect();
+        Instance::stateless(inst, devices, Self::roce_ips(inst), 1 << 20, 4096)
+    }
+
+    /// A fresh stateless container (what the container pool hands out).
+    fn mk_spare(&mut self) -> Instance {
+        let inst = InstanceId(self.next_instance_id);
+        self.next_instance_id += 1;
+        self.mk_container(inst)
+    }
+
+    /// A serving member for a spawning group: stateless container with a
+    /// role and batch size already assumed (setup happens off-path).
+    fn mk_member(&mut self, inst: InstanceId, role: Role) -> Instance {
+        let batch = match role {
+            Role::Prefill => self.cfg.serving.prefill_batch,
+            Role::Decode => self.cfg.serving.decode_batch,
+        };
+        let mut m = self.mk_container(inst);
+        m.assume_role(role, batch);
+        m.state = InstanceState::Ready;
+        m
+    }
+
+    /// Re-publish a group's entrance + RoCE map so the registered meta
+    /// subtree keeps tracking the live group across role migrations (the
+    /// recovery workflow rewrites these itself; migrations must too).
+    fn refresh_group_meta(meta: &mut MetaStore, g: &PdGroup) {
+        let base = Self::meta_base(g);
+        meta.put(&format!("{base}/roce_map"), &g.roce_map_string());
+        let entrance: Vec<String> =
+            g.prefills().iter().map(|p| p.0.to_string()).collect();
+        meta.put(&format!("{base}/entrance"), &entrance.join(","));
     }
 
     fn log(&mut self, t_ms: f64, scene: usize, group: u32, what: String) {
@@ -447,18 +726,21 @@ impl FleetSim {
         let gid = GroupId(self.next_group_id);
         self.next_group_id += 1;
         let mut meta = PdGroup::new(gid, sc.service, sc.name);
+        let mut members = Vec::with_capacity(n_p + n_d);
         let mut prefill_inst = BTreeMap::new();
         let mut decode_inst = BTreeMap::new();
         for p in 0..n_p {
             let inst = InstanceId(self.next_instance_id);
             self.next_instance_id += 1;
             meta.add_member(inst, Role::Prefill, Self::roce_ips(inst));
+            members.push(self.mk_member(inst, Role::Prefill));
             prefill_inst.insert(p, inst);
         }
         for d in 0..n_d {
             let inst = InstanceId(self.next_instance_id);
             self.next_instance_id += 1;
             meta.add_member(inst, Role::Decode, Self::roce_ips(inst));
+            members.push(self.mk_member(inst, Role::Decode));
             decode_inst.insert(d, inst);
         }
         // Dynamic RoCE construction: full P×D mesh before serving (§3.2).
@@ -468,16 +750,25 @@ impl FleetSim {
             }
         }
         meta.serving = true;
+        // Register the group's subtree in the meta store — what the
+        // recovery workflow's logical removal and RoCE join run against.
+        Self::refresh_group_meta(&mut self.meta, &meta);
+        let base = Self::meta_base(&meta);
+        for m in &members {
+            self.meta.put(&format!("{base}/health/{}", m.id.0), "ok");
+        }
         let group = FleetGroup {
             meta,
             sim,
             scene,
+            members,
             prefill_inst,
             decode_inst,
             cooldown: 0,
             pending_flip: None,
             draining: false,
             upgrading: false,
+            recovering: 0,
         };
         self.groups.push(group);
         self.log(t_ms, scene, gid.0, format!("group up ({n_p}:{n_d})"));
@@ -510,8 +801,9 @@ impl FleetSim {
     /// Route an arrival to a group of its scene through the scene-level
     /// route policy (scenario-affine forwarding, §3.2) — least-loaded by
     /// default, prefix-affine when configured — skipping groups cordoned
-    /// for scale-in or upgrade. The same `RoutePolicy` code each group's
-    /// gateway runs at entrance granularity.
+    /// for scale-in or upgrade and groups a fault has left without a
+    /// routable side. The same `RoutePolicy` code each group's gateway
+    /// runs at entrance granularity.
     fn route(&mut self, scene: usize, req: Request, t_ms: f64) {
         let prefix_hash = if req.prefix_len == 0 {
             None
@@ -532,14 +824,16 @@ impl FleetSim {
         let snap: Vec<(u32, usize)> = self
             .groups
             .iter()
-            .filter(|g| g.scene == scene && !g.draining && !g.upgrading)
+            .filter(|g| g.scene == scene && g.routable())
             .map(|g| (g.id(), g.sim.in_flight()))
             .collect();
         let gi = if snap.is_empty() {
-            // Unreachable by construction (min_groups never drains and a
-            // wave never takes every group), but never drop a request
-            // silently: the least-loaded rule still applies to cordoned
-            // groups.
+            // Nearly unreachable (min_groups never drains and a wave
+            // never takes every group) — but a fault can empty a side of
+            // a scene's only group for the recovery window. Never drop a
+            // request silently: the least-loaded rule still applies to
+            // cordoned/broken groups, where it waits out the outage at
+            // the gateway or times out under protection semantics.
             self.groups
                 .iter()
                 .enumerate()
@@ -610,6 +904,7 @@ impl FleetSim {
     /// its budget of instances. The gateway entrance set changes through
     /// the SseRegistry hooks inside add/remove_prefill.
     fn migrate(&mut self, gi: usize, adj: Adjustment, t_ms: f64) -> bool {
+        let decode_batch = self.cfg.serving.decode_batch;
         let g = &mut self.groups[gi];
         match adj {
             Adjustment::MoreDecode => {
@@ -627,6 +922,10 @@ impl FleetSim {
                 for (pp, dd) in g.meta.pending_connections_for(inst) {
                     g.meta.connect(pp, dd);
                 }
+                if let Some(m) = g.members.iter_mut().find(|m| m.id == inst) {
+                    m.role = Some(Role::Decode);
+                    m.batch_size = decode_batch;
+                }
                 g.decode_inst.insert(d, inst);
                 debug_assert!(g.meta.fully_connected(), "migration broke the RoCE mesh");
                 debug_assert!(g.sim.sse_accounting_balanced());
@@ -634,6 +933,7 @@ impl FleetSim {
                 let scene = g.scene;
                 let id = g.id();
                 g.cooldown = 2;
+                Self::refresh_group_meta(&mut self.meta, &self.groups[gi].meta);
                 self.adjustments += 1;
                 self.log(t_ms, scene, id, format!("ratio -> {n_p}:{n_d} (MoreDecode)"));
                 true
@@ -668,6 +968,7 @@ impl FleetSim {
 
     /// Complete a pending D→P flip once the cordoned decode has drained.
     fn try_finalize_flip(&mut self, gi: usize, t_ms: f64) {
+        let prefill_batch = self.cfg.serving.prefill_batch;
         let g = &mut self.groups[gi];
         let Some((d, inst)) = g.pending_flip else { return };
         if g.sim.decode_commit(d) > 0 {
@@ -679,12 +980,17 @@ impl FleetSim {
         for (pp, dd) in g.meta.pending_connections_for(inst) {
             g.meta.connect(pp, dd);
         }
+        if let Some(m) = g.members.iter_mut().find(|m| m.id == inst) {
+            m.role = Some(Role::Prefill);
+            m.batch_size = prefill_batch;
+        }
         g.prefill_inst.insert(p, inst);
         g.pending_flip = None;
         debug_assert!(g.meta.fully_connected(), "flip broke the RoCE mesh");
         let (n_p, n_d) = g.sim.ratio();
         let scene = g.scene;
         let id = g.id();
+        Self::refresh_group_meta(&mut self.meta, &self.groups[gi].meta);
         self.adjustments += 1;
         self.log(t_ms, scene, id, format!("ratio -> {n_p}:{n_d} (MorePrefill)"));
     }
@@ -733,8 +1039,18 @@ impl FleetSim {
             }
         }
 
+        // 2b) Lease calls: a lease nearing its due hour is repaid from the
+        //     pool if possible, otherwise the borrower cordon-drains one
+        //     group (the same drain path scale-in uses) whose retirement
+        //     release repays the lender.
+        if self.cfg.lend {
+            self.call_due_leases(hour, t_ms);
+        }
+
         // 3) Retire drained groups, handing their affinity streams to the
-        //    least-loaded surviving sibling of the scene (not scattered).
+        //    least-loaded surviving sibling of the scene (not scattered)
+        //    and releasing their instances back to the ledger (repaying
+        //    leases first, banking the rest with the scene).
         let mut gi = 0;
         while gi < self.groups.len() {
             if self.groups[gi].draining && self.groups[gi].sim.in_flight() == 0 {
@@ -746,13 +1062,34 @@ impl FleetSim {
                 let sibling = self
                     .groups
                     .iter()
-                    .filter(|g2| g2.scene == scene && !g2.draining && !g2.upgrading)
+                    .filter(|g2| g2.scene == scene && g2.routable())
                     .min_by_key(|g2| (g2.sim.in_flight(), g2.id()))
                     .map(|g2| g2.id());
                 if let Some(p) = self.scene_router.get_mut(&scene) {
                     p.entrance_removed(id, sibling);
                 }
-                self.log(t_ms, scene, id, "group retired (drained)".into());
+                let n_inst = g.meta.roles.len();
+                for lid in self.ledger.release(scene, n_inst, hour) {
+                    self.log(
+                        t_ms,
+                        scene,
+                        id,
+                        format!("lease #{lid} repaid from the retired group's release"),
+                    );
+                }
+                // "All data in the instances from removed groups are then
+                // erased" — the group's meta subtree goes with it. The
+                // trailing separator keeps the prune from swallowing
+                // sibling subtrees whose group id merely extends this
+                // one's (g1 vs g10).
+                self.meta
+                    .prune_prefix(&format!("{}/", Self::meta_base(&g.meta)));
+                self.log(
+                    t_ms,
+                    scene,
+                    id,
+                    format!("group retired (drained, {n_inst} instances released)"),
+                );
             } else {
                 gi += 1;
             }
@@ -806,16 +1143,52 @@ impl FleetSim {
             .collect();
         if target > active.len() {
             // Scale out, inheriting the scene's currently-adapted ratio so
-            // new groups don't restart the detector's work.
+            // new groups don't restart the detector's work. A sampled
+            // group that is mid-flip or mid-recovery reports one instance
+            // short of the group total — fall back to the initial ratio
+            // so the spawned group always matches what was funded. With
+            // lending on, every group must be funded from the conserved
+            // budget (own bank → pool → lease) — a scale-out nothing can
+            // fund is deferred, never minted.
             let ratio = active
                 .first()
                 .map(|&i| self.groups[i].sim.ratio())
+                .filter(|&(p, d)| p >= 1 && d >= 1 && p + d == self.cfg.group_total)
                 .unwrap_or(self.cfg.init_ratio);
             for _ in active.len()..target {
+                let funding = if self.cfg.lend {
+                    match self.fund_scale_out(scene, hour) {
+                        Some(src) => src,
+                        None => {
+                            self.scale_deferred += 1;
+                            self.log(
+                                t_ms,
+                                scene,
+                                u32::MAX,
+                                format!(
+                                    "scale-out deferred: instance budget exhausted \
+                                     (wanted {} groups)",
+                                    target
+                                ),
+                            );
+                            break;
+                        }
+                    }
+                } else {
+                    // Unconstrained budget: capacity is minted on demand
+                    // (the ledger still records it so the audit balances).
+                    self.ledger.mint(self.cfg.group_total);
+                    "minted".to_string()
+                };
                 let gi = self.spawn_group(scene, ratio, t_ms);
                 self.scale_outs += 1;
                 let id = self.groups[gi].id();
-                self.log(t_ms, scene, id, format!("scale-out ({} groups)", target));
+                self.log(
+                    t_ms,
+                    scene,
+                    id,
+                    format!("scale-out ({} groups, funded: {funding})", target),
+                );
             }
         } else if target < active.len() {
             // Hysteresis: shrink only to exact-fit capacity.
@@ -827,8 +1200,14 @@ impl FleetSim {
                     .clamp(min_g, self.cfg.max_groups_per_scene)
             };
             if relaxed < active.len() {
-                // Drain the least-loaded groups first.
-                let mut by_load: Vec<usize> = active.clone();
+                // Drain the least-loaded groups first; a group with a
+                // recovery in flight is skipped (its substitute must find
+                // it alive).
+                let mut by_load: Vec<usize> = active
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.groups[i].recovering == 0)
+                    .collect();
                 by_load.sort_by_key(|&i| {
                     (self.groups[i].sim.in_flight(), usize::MAX - i)
                 });
@@ -844,6 +1223,168 @@ impl FleetSim {
                     );
                 }
             }
+        }
+    }
+
+    // -- the instance budget (cross-scene lending) ---------------------------
+
+    /// First hour after `from_hour` at which `scene`'s predicted rate
+    /// wants more groups than it currently has active — the moment a
+    /// lender needs its banked instances back. Falls back to a full day
+    /// ahead when the scene never ramps past its current capacity.
+    fn next_demand_hour(&self, scene: usize, from_hour: f64) -> f64 {
+        let sc = &self.cfg.scenarios[scene];
+        let tpl = &self.plans[&scene].template;
+        let min_g = self.cfg.min_groups_per_scene.max(1);
+        let active = self
+            .groups
+            .iter()
+            .filter(|g| g.scene == scene && !g.draining && !g.upgrading)
+            .count();
+        let mut h = from_hour + 0.25;
+        while h <= from_hour + 24.0 {
+            let rate =
+                scene_rate_rps(sc, scene, h, self.cfg.peak_total_rps, self.total_weight);
+            let need = groups_needed(rate, tpl, self.cfg.headroom)
+                .map(|n| n.clamp(min_g, self.cfg.max_groups_per_scene))
+                .unwrap_or(self.cfg.max_groups_per_scene);
+            if need > active {
+                return h;
+            }
+            h += 0.25;
+        }
+        from_hour + 24.0
+    }
+
+    /// The scene best placed to lend `n` instances right now: largest
+    /// bank that covers the loan, troughing scenes preferred (their own
+    /// demand is farthest), excluding `borrower`.
+    fn best_lender(&self, borrower: Option<usize>, n: usize) -> Option<usize> {
+        self.cfg
+            .scenes
+            .iter()
+            .copied()
+            .filter(|&s| Some(s) != borrower && self.ledger.bank(s) >= n)
+            .max_by_key(|&s| (self.plans[&s].training, self.ledger.bank(s), usize::MAX - s))
+    }
+
+    /// Fund one group's worth of instances for a scale-out of `scene`:
+    /// the scene's own bank, the fleet pool, a bank+pool mix, or a lease
+    /// against another scene's bank (due back before the lender's own
+    /// predicted demand). `None` — and no movement — when nothing covers
+    /// it.
+    fn fund_scale_out(&mut self, scene: usize, hour: f64) -> Option<String> {
+        let n = self.cfg.group_total;
+        if self.ledger.take_bank(scene, n) {
+            return Some("own bank".to_string());
+        }
+        if self.ledger.take_pool(n) {
+            return Some("pool".to_string());
+        }
+        let own = self.ledger.bank(scene);
+        if own + self.ledger.pool() >= n {
+            assert!(self.ledger.take_bank(scene, own));
+            assert!(self.ledger.take_pool(n - own));
+            return Some(format!("bank {own} + pool {}", n - own));
+        }
+        let lender = self.best_lender(Some(scene), n)?;
+        let due = self.next_demand_hour(lender, hour) - LEASE_MARGIN_H;
+        if due <= hour + MIN_LEASE_H {
+            return None; // the lender needs them back too soon
+        }
+        let id = self
+            .ledger
+            .borrow(lender, LeaseUse::Scene(scene), n, hour, due)?;
+        Some(format!("lease #{id} from scene {lender}, due {due:.2} h"))
+    }
+
+    /// One stateless container for a recovery substitute, drawn from the
+    /// conserved budget: pool → own bank → (lending on) a lease against
+    /// another scene's bank → emergency mint. Returns the container and a
+    /// log label for where it came from.
+    fn acquire_recovery_spare(&mut self, scene: usize, hour: f64) -> (Instance, String) {
+        let source = if self.ledger.take_pool(1) {
+            "pool".to_string()
+        } else if self.ledger.take_bank(scene, 1) {
+            "own bank".to_string()
+        } else if self.cfg.lend {
+            let lease = self.best_lender(None, 1).and_then(|lender| {
+                let due = self.next_demand_hour(lender, hour) - LEASE_MARGIN_H;
+                if due <= hour + MIN_LEASE_H {
+                    return None;
+                }
+                self.ledger
+                    .borrow(lender, LeaseUse::Recovery, 1, hour, due)
+                    .map(|id| (id, lender))
+            });
+            match lease {
+                Some((id, lender)) => format!("lease #{id} from scene {lender}"),
+                None => {
+                    self.ledger.mint(1);
+                    "emergency mint".to_string()
+                }
+            }
+        } else {
+            self.ledger.mint(1);
+            "emergency mint".to_string()
+        };
+        (self.mk_spare(), source)
+    }
+
+    /// Call in leases nearing their due hour: pool repayment when it
+    /// covers, otherwise cordon-drain one of the borrower's groups (its
+    /// retirement release repays the lender). A borrower pinned at its
+    /// group floor leaves the lease outstanding, logged as overdue.
+    fn call_due_leases(&mut self, hour: f64, t_ms: f64) {
+        let min_g = self.cfg.min_groups_per_scene.max(1);
+        for (id, borrower, lender, _n) in self.ledger.due_before(hour + LEASE_CALL_LEAD_H) {
+            if self.ledger.repay_from_pool(id, hour) {
+                self.log(
+                    t_ms,
+                    lender,
+                    u32::MAX,
+                    format!("lease #{id} repaid from the spare pool"),
+                );
+                continue;
+            }
+            let LeaseUse::Scene(s) = borrower else {
+                // Recovery leases wait for the next release or pool spare.
+                continue;
+            };
+            if self.groups.iter().any(|g| g.scene == s && g.draining) {
+                continue; // a drain already in flight will repay on retirement
+            }
+            let candidates: Vec<usize> = self
+                .groups
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| {
+                    g.scene == s && !g.draining && !g.upgrading && g.recovering == 0
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if candidates.len() <= min_g {
+                self.log(
+                    t_ms,
+                    s,
+                    u32::MAX,
+                    format!("lease #{id} overdue: borrower at its group floor"),
+                );
+                continue;
+            }
+            let gi = candidates
+                .into_iter()
+                .min_by_key(|&i| (self.groups[i].sim.in_flight(), self.groups[i].id()))
+                .expect("candidates checked non-empty");
+            self.groups[gi].draining = true;
+            self.lease_calls += 1;
+            let gid = self.groups[gi].id();
+            self.log(
+                t_ms,
+                s,
+                gid,
+                format!("lease #{id} called: draining to repay scene {lender}"),
+            );
         }
     }
 
@@ -911,6 +1452,12 @@ impl FleetSim {
             else {
                 continue; // retired since planning
             };
+            if self.groups[gi].recovering > 0 {
+                // A recovering group's substitute must find it alive —
+                // roll it in a trailing wave instead.
+                deferred.push(id);
+                continue;
+            }
             let scene = self.groups[gi].scene;
             let scene_serving = self
                 .groups
@@ -998,6 +1545,180 @@ impl FleetSim {
         );
     }
 
+    // -- faults and recovery (§3.4) ------------------------------------------
+
+    /// One fault from the seeded schedule fires. Recoverable faults
+    /// self-heal in place; a fatal fault kills the serving instance the
+    /// device maps onto, protects its in-flight work, and starts the
+    /// Fig. 13c recovery workflow — whose real-clock timeline is
+    /// compressed onto the simulated day before the substitute may serve.
+    fn on_fault(&mut self, ev: FaultEvent, t_ms: f64) {
+        self.faults_seen += 1;
+        let any_scene = self.cfg.scenes[0];
+        if ev.level == FaultLevel::Recoverable {
+            self.log(
+                t_ms,
+                any_scene,
+                u32::MAX,
+                "recoverable device fault (self-heals in place)".to_string(),
+            );
+            return;
+        }
+        // Deterministically map the fault device onto the live serving
+        // set (instances churn over the day; the schedule's device ids
+        // index the seed fleet).
+        let mut slots: Vec<(usize, Role, usize)> = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.draining || g.upgrading {
+                continue; // cordoned groups are leaving/restarting anyway
+            }
+            for &p in g.prefill_inst.keys() {
+                slots.push((gi, Role::Prefill, p));
+            }
+            for &d in g.decode_inst.keys() {
+                slots.push((gi, Role::Decode, d));
+            }
+        }
+        if slots.is_empty() {
+            self.log(
+                t_ms,
+                any_scene,
+                u32::MAX,
+                "fatal fault landed outside the serving set (all cordoned)".to_string(),
+            );
+            return;
+        }
+        let (gi, role, slot) = slots[ev.device.0 as usize % slots.len()];
+        let scene = self.groups[gi].scene;
+        let gid = self.groups[gi].id();
+        let hour = self.hour_at(t_ms);
+        // Sim side: the instance dies now; §3.4 protection covers its
+        // in-flight work and the router re-sticks its streams.
+        let (inst, protected) = match role {
+            Role::Prefill => {
+                let inst = self.groups[gi]
+                    .prefill_inst
+                    .remove(&slot)
+                    .expect("fault victim is a mapped prefill");
+                let n = self.groups[gi]
+                    .sim
+                    .fail_prefill(slot)
+                    .expect("mapped prefill slot is alive");
+                (inst, n)
+            }
+            Role::Decode => {
+                let inst = self.groups[gi]
+                    .decode_inst
+                    .remove(&slot)
+                    .expect("fault victim is a mapped decode");
+                let n = self.groups[gi]
+                    .sim
+                    .fail_decode(slot)
+                    .expect("mapped decode slot is alive");
+                (inst, n)
+            }
+        };
+        self.faults_fatal += 1;
+        self.protected += protected;
+        self.log(
+            t_ms,
+            scene,
+            gid,
+            format!(
+                "FAULT: instance {} ({role}) fatal, {protected} requests protected",
+                inst.0
+            ),
+        );
+        // The substitute competes with scaling for the same budget.
+        let (spare, source) = self.acquire_recovery_spare(scene, hour);
+        self.ledger.scrap(1);
+        let sub_id = spare.id;
+        // Coordinator side: detection latency + logical removal + one
+        // stateless container through the RoCE join, timed in real ms.
+        let detect_ms = detection_delay_ms(ev.at_ms, self.cfg.detect_period_ms);
+        let report = {
+            let FleetSim { meta, groups, setup, .. } = &mut *self;
+            let g = &mut groups[gi];
+            let failed_idx = g
+                .members
+                .iter()
+                .position(|m| m.id == inst)
+                .expect("fault victim tracked in members");
+            recover(
+                meta,
+                &mut g.meta,
+                &mut g.members,
+                spare,
+                failed_idx,
+                setup,
+                detect_ms,
+                protected,
+            )
+            .expect("recovery workflow")
+        };
+        let outage_virt_ms = report.outage_ms() * self.cfg.ms_per_hour / REAL_MS_PER_HOUR;
+        self.groups[gi].recovering += 1;
+        self.log(
+            t_ms,
+            scene,
+            gid,
+            format!(
+                "recovery: container {} substituting from {source} \
+                 ({:.1} real-s outage)",
+                sub_id.0,
+                report.outage_ms() / 1e3
+            ),
+        );
+        self.recovery_reports.push((hour, report));
+        self.q.push(
+            t_ms + outage_virt_ms,
+            FleetEv::Recovered { group: gid, inst: sub_id, role },
+        );
+    }
+
+    /// The recovery workflow finished: the substitute container joins the
+    /// group's serving pools (fresh caches — stateless container).
+    fn on_recovered(&mut self, gid: u32, inst: InstanceId, role: Role, t_ms: f64) {
+        let Some(gi) = self.groups.iter().position(|g| g.id() == gid) else {
+            // Guarded against (a recovering group never drains or
+            // retires). If it ever happens, the substitute was already
+            // swapped into the group's meta at fault time, so a
+            // retirement release has accounted it — adding it anywhere
+            // here would double-count. Log and drop.
+            debug_assert!(false, "substitute {} found group {gid} gone", inst.0);
+            let any_scene = self.cfg.scenes[0];
+            self.log(
+                t_ms,
+                any_scene,
+                gid,
+                format!("substitute {} found its group gone", inst.0),
+            );
+            return;
+        };
+        let g = &mut self.groups[gi];
+        match role {
+            Role::Prefill => {
+                let p = g.sim.add_prefill();
+                g.prefill_inst.insert(p, inst);
+            }
+            Role::Decode => {
+                let d = g.sim.add_decode();
+                g.decode_inst.insert(d, inst);
+            }
+        }
+        g.recovering = g.recovering.saturating_sub(1);
+        g.cooldown = g.cooldown.max(1); // let the detector resettle
+        let scene = g.scene;
+        self.recoveries += 1;
+        self.log(
+            t_ms,
+            scene,
+            gid,
+            format!("recovery complete: substitute {} serving ({role})", inst.0),
+        );
+    }
+
+    /// Run the day to completion and collect the output.
     pub fn run(mut self) -> FleetOutput {
         while let Some((t, ev)) = self.q.pop() {
             // All groups advance to the fleet clock before any cross-group
@@ -1009,6 +1730,10 @@ impl FleetSim {
                 FleetEv::Slice { scene } => self.gen_slice(scene, t),
                 FleetEv::Arrival { scene, req } => self.route(scene, req, t),
                 FleetEv::Control => self.control_tick(t),
+                FleetEv::Fault(ev) => self.on_fault(ev, t),
+                FleetEv::Recovered { group, inst, role } => {
+                    self.on_recovered(group, inst, role, t)
+                }
             }
         }
         // No more arrivals or control: drain in-flight work everywhere.
@@ -1019,6 +1744,13 @@ impl FleetSim {
             debug_assert!(g.sim.sse_accounting_balanced());
         }
         let duration_s = self.end_ms() / 1000.0;
+        let end_hour = self.hour_at(self.end_ms());
+        let in_service = self.instances_in_service();
+        let ledger = self.ledger.report(in_service);
+        debug_assert!(
+            ledger.balanced,
+            "instance budget leaked over the day: {ledger:?}"
+        );
         let totals = self.totals;
         let final_ratios = self
             .groups
@@ -1046,6 +1778,15 @@ impl FleetSim {
             scale_ins: self.scale_ins,
             training_switches: self.training_switches,
             upgraded_groups: self.upgraded_groups,
+            faults_seen: self.faults_seen,
+            faults_fatal: self.faults_fatal,
+            recoveries: self.recoveries,
+            protected: self.protected,
+            scale_deferred: self.scale_deferred,
+            lease_calls: self.lease_calls,
+            recovery_reports: self.recovery_reports,
+            ledger,
+            end_hour,
             peak_instances: self.peak_instances,
             final_ratios,
             served_curve: self.served_curve,
@@ -1281,6 +2022,147 @@ mod tests {
                 }
                 if out.injected > 0 && out.completed == 0 {
                     return Err("nothing completed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    fn fault_cfg() -> FleetConfig {
+        // ~4 groups × 6 instances × 8 devices = 192 devices; at 600
+        // faults/week/400 devices that is ~40 faults over the day, ~40%
+        // of them fatal — several recoveries per group, guaranteed > 0.
+        let mut cfg = small_cfg();
+        cfg.min_groups_per_scene = 2;
+        cfg.scale_groups = false;
+        cfg.faults_per_week = 600.0;
+        cfg
+    }
+
+    #[test]
+    fn fault_day_recovers_every_fatal_fault_and_conserves() {
+        let out = FleetSim::new(fault_cfg()).run();
+        assert_eq!(out.total(), out.injected, "requests lost across the fault day");
+        assert!(out.faults_seen >= 1, "the schedule produced no faults");
+        assert!(
+            out.faults_fatal >= 1,
+            "no fatal fault all day: {:#?}",
+            out.timeline
+        );
+        assert_eq!(
+            out.recoveries, out.faults_fatal,
+            "a recovery never completed: {:#?}",
+            out.timeline
+        );
+        assert_eq!(out.recovery_reports.len(), out.faults_fatal);
+        assert_eq!(out.ledger.scrapped, out.faults_fatal);
+        assert!(out.ledger.balanced, "{:?}", out.ledger);
+        // Every recovery trace follows the Fig. 13c phase order, and its
+        // outage is dominated by the model load (minutes-scale in real
+        // time, compressed onto the simulated day).
+        for (_hour, r) in &out.recovery_reports {
+            crate::coordinator::recovery::phases_ordered(&r.trace)
+                .expect("Fig. 13c phase order");
+            assert!(r.outage_ms() > 1_000.0, "implausibly fast recovery");
+        }
+        // Groups end the day whole (a ±1 slack for a role flip whose
+        // donor was still draining when the day ended).
+        for &(scene, n_p, n_d) in &out.final_ratios {
+            assert!(
+                n_p + n_d >= 5,
+                "scene {scene} group not reassembled: {n_p}:{n_d}"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_day_is_deterministic() {
+        let a = FleetSim::new(fault_cfg()).run();
+        let b = FleetSim::new(fault_cfg()).run();
+        assert_eq!(a.faults_seen, b.faults_seen);
+        assert_eq!(a.faults_fatal, b.faults_fatal);
+        assert_eq!(a.protected, b.protected);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.injected, b.injected);
+    }
+
+    #[test]
+    fn lending_defers_scale_out_when_budget_exhausted() {
+        // Satellite: with lending on and an empty budget, the planner
+        // must defer the morning-ramp scale-out instead of minting blind
+        // capacity (and must never mint for scale-outs at all).
+        let mut cfg = FleetConfig::default();
+        cfg.lend = true;
+        cfg.spare_instances = 0;
+        let out = FleetSim::new(cfg).run();
+        assert!(
+            out.scale_deferred >= 1,
+            "no deferral with an empty budget: {:#?}",
+            out.timeline
+        );
+        assert_eq!(out.ledger.minted, 0, "lending minted scale-out capacity");
+        assert!(out.ledger.balanced, "{:?}", out.ledger);
+        assert_eq!(out.total(), out.injected);
+    }
+
+    #[test]
+    fn prop_instance_budget_conserved_across_fault_lending_days() {
+        // Satellite property: after any fault + recovery + lending day,
+        // the instance books balance — in_service + banked + pool +
+        // scrapped == seed + minted (nothing leaked or double-counted)
+        // — every fatal fault finishes its recovery, and no request is
+        // lost.
+        let cfg = crate::util::prop::Config { cases: 4, ..Default::default() };
+        crate::util::prop::check(
+            "fleet-instance-budget",
+            &cfg,
+            |r| {
+                let scene_pool = [0usize, 1, 2, 3, 4, 5];
+                let a = scene_pool[r.below(6)];
+                let mut b = scene_pool[r.below(6)];
+                if b == a {
+                    b = (b + 1) % 6;
+                }
+                let faults = if r.chance(0.7) { 200.0 + r.f64() * 600.0 } else { 0.0 };
+                let spares = r.below(8);
+                (a, b, faults, spares, r.next_u64())
+            },
+            |&(a, b, faults, spares, seed)| {
+                let cfg = FleetConfig {
+                    scenes: vec![a, b],
+                    peak_total_rps: 20.0,
+                    hours: 12.0,
+                    ms_per_hour: 1_000.0,
+                    control_period_ms: 1_000.0,
+                    slice_ms: 500.0,
+                    lend: true,
+                    faults_per_week: faults,
+                    spare_instances: spares,
+                    seed,
+                    ..Default::default()
+                };
+                let out = FleetSim::new(cfg).run();
+                if out.total() != out.injected {
+                    return Err(format!(
+                        "lost requests: injected {}, accounted {}",
+                        out.injected,
+                        out.total()
+                    ));
+                }
+                if !out.ledger.balanced {
+                    return Err(format!("instance budget leaked: {:?}", out.ledger));
+                }
+                if out.recoveries != out.faults_fatal {
+                    return Err(format!(
+                        "{} fatal faults but {} recoveries completed",
+                        out.faults_fatal, out.recoveries
+                    ));
+                }
+                if out.ledger.scrapped != out.faults_fatal {
+                    return Err(format!(
+                        "scrapped {} != fatal faults {}",
+                        out.ledger.scrapped, out.faults_fatal
+                    ));
                 }
                 Ok(())
             },

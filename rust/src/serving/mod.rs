@@ -8,8 +8,13 @@
 //!   by every evaluation figure.
 //! - `fleet`: the fleet-level closed loop — multiple scenario-specific P/D
 //!   groups under tidal traffic, with dynamic ratio adjustment,
-//!   group-granular scale-in/out (the MLOps circuit of §3.3/Fig. 13) and
-//!   rolling upgrades.
+//!   group-granular scale-in/out (the MLOps circuit of §3.3/Fig. 13),
+//!   rolling upgrades, live fault injection with minimum-cost recovery
+//!   (§3.4), and cross-scene instance lending on one conserved budget.
+//!
+//! `fleet` and `router` carry `#![deny(missing_docs)]` — every public
+//! item there documents its invariant; `sim` and `server` predate the
+//! policy and close their gap incrementally.
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).

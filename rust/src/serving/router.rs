@@ -29,6 +29,25 @@
 //! what makes the single-decision-path invariant testable: the simulator
 //! and the real threaded server run the *same compiled path* and must
 //! produce identical placements from identical snapshots.
+//!
+//! # Invariants
+//!
+//! - **Spill-no-rehome**: a stream's home changes only when the home
+//!   *leaves the serving set* (scale-in, role flip, fault — via
+//!   [`RoutePolicy::entrance_removed`] or the home-missing re-stick in
+//!   `order`). Load never re-homes: an overloaded home is spilled *for
+//!   one request at a time* while the mapping stays put, so traffic
+//!   returns the moment load subsides.
+//! - **Wholesale handoff**: when an entrance is removed, *all* of its
+//!   streams move to exactly one sibling — never scattered — so the
+//!   sibling pays each stream's cold miss once. The fault path reuses
+//!   this: a failed instance's in-flight streams re-stick to one
+//!   surviving sibling (asserted by the sim-level regression test).
+//! - **Determinism**: `order` is a pure function of (policy state,
+//!   snapshot, salt); identical inputs give identical candidate orders in
+//!   the real server, the serving simulator and the fleet loop.
+
+#![deny(missing_docs)]
 
 use std::collections::BTreeMap;
 
@@ -81,6 +100,7 @@ impl RouteRequest {
         RouteRequest { prefix_hash: None }
     }
 
+    /// Hash the leading tokens into a route key (`DEFAULT_HASH_DEPTH`).
     pub fn from_tokens(tokens: &[i32]) -> Self {
         RouteRequest { prefix_hash: rolling_hash(tokens, DEFAULT_HASH_DEPTH) }
     }
@@ -110,19 +130,33 @@ pub trait RoutePolicy {
     /// scattered — so the sibling warms once per stream.
     fn entrance_removed(&mut self, _e: u32, _sibling: Option<u32>) {}
 
+    /// Current sticky home of a prefix stream, if this policy keeps one
+    /// (observability hook for tests and experiments; `None` for
+    /// affinity-free policies).
+    fn sticky_home(&self, _prefix_hash: u64) -> Option<u32> {
+        None
+    }
+
+    /// Which selector this policy was built from.
     fn kind(&self) -> RouteKind;
 }
 
 /// Policy selector (CLI flag / config surface).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouteKind {
+    /// Salted shuffle; the no-information baseline.
     Random,
+    /// Rotate over entrance ids; ignores load.
     RoundRobin,
+    /// Ascending live-connection order (the paper's least-SSE).
     LeastLoaded,
+    /// Sticky prefix→home mapping over the least-loaded order.
     PrefixAffinity,
 }
 
 impl RouteKind {
+    /// Parse a CLI `--route` value (`random`, `round-robin`/`rr`,
+    /// `least-loaded`/`ll`, `prefix-affinity`/`affinity`).
     pub fn parse(s: &str) -> Option<RouteKind> {
         match s {
             "random" => Some(RouteKind::Random),
@@ -133,6 +167,7 @@ impl RouteKind {
         }
     }
 
+    /// Canonical CLI spelling.
     pub fn name(self) -> &'static str {
         match self {
             RouteKind::Random => "random",
@@ -142,6 +177,7 @@ impl RouteKind {
         }
     }
 
+    /// Instantiate a fresh policy of this kind.
     pub fn build(self) -> Box<dyn RoutePolicy> {
         match self {
             RouteKind::Random => Box::new(Random),
@@ -244,6 +280,7 @@ pub struct PrefixAffinity {
 }
 
 impl PrefixAffinity {
+    /// An affinity map bounded to `cap` live streams (LRU beyond it).
     pub fn with_capacity(cap: usize) -> Self {
         PrefixAffinity { home: BTreeMap::new(), tick: 0, cap: cap.max(1) }
     }
@@ -333,6 +370,10 @@ impl RoutePolicy for PrefixAffinity {
             }
             None => self.home.retain(|_, v| v.0 != e),
         }
+    }
+
+    fn sticky_home(&self, prefix_hash: u64) -> Option<u32> {
+        self.home_of(prefix_hash)
     }
 
     fn kind(&self) -> RouteKind {

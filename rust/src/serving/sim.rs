@@ -275,6 +275,10 @@ pub struct WindowStats {
     /// Occupancy-weighted decode iteration time (ms·rows/batch) this
     /// window — ≈ how many instance-ms of decode capacity were used.
     pub decode_occ_ms: f64,
+    /// Requests terminated by §3.4 protection (their instance died); a
+    /// subset of `timed_out` — protection answers the user with a default
+    /// text, which still breaks the SLO.
+    pub protected: usize,
 }
 
 impl WindowStats {
@@ -303,6 +307,7 @@ impl WindowStats {
         self.slo_ok += o.slo_ok;
         self.prefill_busy_ms += o.prefill_busy_ms;
         self.decode_occ_ms += o.decode_occ_ms;
+        self.protected += o.protected;
     }
 }
 
@@ -387,6 +392,8 @@ pub struct Simulation {
     accepts: u64,
     injected: usize,
     finished: usize,
+    /// Lifetime count of §3.4 protection terminations (fault casualties).
+    protected_total: usize,
     per_scenario: Vec<(usize, usize)>,
     per_scenario_ttft: Vec<(f64, usize)>, // (sum, count)
     closed_gen: Option<crate::workload::ClosedLoopGen>,
@@ -437,6 +444,7 @@ impl Simulation {
             accepts: 0,
             injected: 0,
             finished: 0,
+            protected_total: 0,
             per_scenario: vec![(0, 0); cfg.scenarios.len()],
             per_scenario_ttft: vec![(0.0, 0); cfg.scenarios.len()],
             closed_gen: None,
@@ -720,12 +728,20 @@ impl Simulation {
             self.reqs[id as usize].entrance = usize::MAX;
             self.pending.push_back(id);
         }
+        self.retire_entrance(p);
+        true
+    }
+
+    /// The one entrance-departure path scale-in and faults share: drop
+    /// `p` from every gateway's registry (force-closing its live SSE
+    /// connections with the open/close invariant intact) and hand its hot
+    /// prefix streams wholesale to one sibling — the least-committed
+    /// alive prefill — instead of scattering them: the sibling pays each
+    /// stream's cold miss once and keeps it.
+    fn retire_entrance(&mut self, p: usize) {
         for gw in &mut self.gw_sse {
             gw.remove_entrance(p as u32);
         }
-        // Hand the departing instance's hot prefix streams to one sibling
-        // (the least-committed alive prefill) instead of scattering them:
-        // the sibling pays each stream's cold miss once and keeps it.
         let sibling = self
             .ps
             .iter()
@@ -738,7 +754,6 @@ impl Simulation {
         if !self.pending.is_empty() {
             self.gateway_round();
         }
-        true
     }
 
     /// A prefill the controller may remove right now: alive, not mid-batch,
@@ -802,6 +817,107 @@ impl Simulation {
             .filter(|(_, s)| s.alive)
             .min_by_key(|(i, s)| (s.active.len() + s.retrieval.len() + s.reserved, *i))
             .map(|(i, _)| i)
+    }
+
+    // -- faults (§3.4 protection) --------------------------------------------
+
+    /// A fatal fault killed prefill `p`. Unlike `remove_prefill` (a
+    /// controller *asking*), a fault takes the instance regardless of the
+    /// single-point guard or a running batch. Every request whose life is
+    /// inside the dead instance — accepted and waiting for a batch,
+    /// mid-batch, or holding a send-buffer slot awaiting transfer — is
+    /// terminated under protection (answered with a default text, counted
+    /// in `WindowStats::protected`). The entrance's live SSE connections
+    /// (including decode-phase streams that entered through it) are
+    /// force-closed by `remove_entrance`, preserving the open/close
+    /// invariant, and its affinity streams re-stick to one surviving
+    /// sibling. Returns the protected count, or `None` if `p` was not an
+    /// alive instance.
+    pub fn fail_prefill(&mut self, p: usize) -> Option<usize> {
+        assert_eq!(
+            self.cfg.policy,
+            Policy::OnDemand,
+            "fault injection requires the on-demand policy"
+        );
+        if p >= self.ps.len() || !self.ps[p].alive {
+            return None;
+        }
+        self.ps[p].alive = false;
+        self.ps[p].busy = false;
+        self.ps[p].window_open = false;
+        let mut victims: Vec<u64> = std::mem::take(&mut self.ps[p].accepted);
+        if let Some(batch) = self.batches.remove(&p) {
+            victims.extend(batch);
+        }
+        // Requests holding a send-buffer slot on `p` sit in the parked
+        // FIFO; their KVCache died with the instance.
+        let parked = std::mem::take(&mut self.parked);
+        for id in parked {
+            if matches!(self.reqs[id as usize].phase, ReqPhase::AwaitTransfer(q) if q == p) {
+                victims.push(id);
+            } else {
+                self.parked.push_back(id);
+            }
+        }
+        self.ps[p].awaiting = 0;
+        let n = victims.len();
+        for id in victims {
+            self.finish_protected(id);
+        }
+        // The same wholesale handoff scale-in uses: one sibling inherits
+        // every stream the dead instance was home to.
+        self.retire_entrance(p);
+        Some(n)
+    }
+
+    /// A fatal fault killed decode `d`. Committed work dies with it:
+    /// active rows, the retrieval queue, and transfers in flight toward
+    /// its HBM are all terminated under protection (their SSE connections
+    /// at the entrance closed). Returns the protected count, or `None` if
+    /// `d` was not an alive instance.
+    pub fn fail_decode(&mut self, d: usize) -> Option<usize> {
+        if d >= self.ds.len() || !self.ds[d].alive {
+            return None;
+        }
+        self.ds[d].alive = false;
+        let mut victims: Vec<u64> = std::mem::take(&mut self.ds[d].active);
+        victims.extend(std::mem::take(&mut self.ds[d].retrieval));
+        for (id, _) in &self.inflight_assignments {
+            if matches!(self.reqs[*id as usize].phase, ReqPhase::Transferring(t) if t == d) {
+                victims.push(*id);
+            }
+        }
+        // In-flight transfers release their spine slots when their
+        // TransferDone fires (the phase check makes the event a no-op
+        // otherwise); the reservation itself dies with the instance.
+        self.ds[d].reserved = 0;
+        self.report.n_decode -= 1;
+        let n = victims.len();
+        for id in victims {
+            let (gw, entrance) = {
+                let r = &self.reqs[id as usize];
+                (r.gw, r.entrance)
+            };
+            if entrance != usize::MAX {
+                // No-op if the entrance itself is gone (already accounted
+                // by its own removal).
+                self.gw_sse[gw].close(entrance as u32);
+            }
+            self.finish_protected(id);
+        }
+        Some(n)
+    }
+
+    /// Requests terminated by §3.4 protection so far (fault casualties).
+    pub fn protected_so_far(&self) -> usize {
+        self.protected_total
+    }
+
+    /// The route policy's sticky home for a prefix-stream hash (`None`
+    /// for affinity-free policies) — observability for tests and
+    /// experiments.
+    pub fn route_home(&self, prefix_hash: u64) -> Option<u32> {
+        self.policy.sticky_home(prefix_hash)
     }
 
     /// Shared handle onto prefill `p`'s prefix cache (alive or tombstoned)
@@ -1293,6 +1409,19 @@ impl Simulation {
         }
     }
 
+    /// Terminate `id` under §3.4 protection: the connection is stopped and
+    /// the user answered with a default text. Counts as a timeout for SLO
+    /// purposes plus the dedicated protection tally.
+    fn finish_protected(&mut self, id: u64) {
+        debug_assert!(
+            !matches!(self.reqs[id as usize].phase, ReqPhase::Finished),
+            "protected a finished request"
+        );
+        self.finish_timeout(id);
+        self.window.protected += 1;
+        self.protected_total += 1;
+    }
+
     fn finish_timeout(&mut self, id: u64) {
         let now = self.q.now();
         let r = &mut self.reqs[id as usize];
@@ -1724,6 +1853,119 @@ mod tests {
         );
         let out = sim.into_output();
         assert_eq!(out.report.total(), n, "request lost across scale-in");
+    }
+
+    #[test]
+    fn fault_on_home_prefill_resticks_streams_to_one_sibling() {
+        // Satellite regression: a stream homed on a failed instance must
+        // re-stick to exactly one surviving sibling (wholesale handoff,
+        // not a scatter), and the SSE entrance accounting must stay
+        // open/close-balanced across the fault.
+        use crate::serving::router::{rolling_hash, DEFAULT_HASH_DEPTH};
+        let cfg = SimConfig {
+            n_p: 3,
+            n_d: 3,
+            route: RouteKind::PrefixAffinity,
+            only_scenario: Some(0),
+            ..Default::default()
+        };
+        let scenarios = crate::workload::standard_scenarios();
+        let mut sim = Simulation::external(cfg);
+        let mut g =
+            crate::workload::OpenLoopGen::new(scenarios.clone(), 77).only_scenario(0);
+        let reqs = g.window(6.0, 24_000.0);
+        let n = reqs.len();
+        let sc = &scenarios[0];
+        let hashes: Vec<u64> = (0..sc.n_prefixes)
+            .map(|pid| {
+                let toks = sc.prefix_tokens(0, pid, DEFAULT_HASH_DEPTH);
+                rolling_hash(&toks, DEFAULT_HASH_DEPTH).expect("stream has tokens")
+            })
+            .collect();
+        let mut moved = 0usize;
+        let mut failed = false;
+        for r in reqs {
+            let at = r.arrival_ms;
+            sim.run_until(at);
+            sim.inject(r);
+            if !failed && at > 10_000.0 {
+                let Some(home) = hashes.iter().find_map(|&h| sim.route_home(h)) else {
+                    continue;
+                };
+                let homed: Vec<u64> = hashes
+                    .iter()
+                    .copied()
+                    .filter(|&h| sim.route_home(h) == Some(home))
+                    .collect();
+                sim.fail_prefill(home as usize).expect("home instance alive");
+                let new_homes: std::collections::BTreeSet<u32> = homed
+                    .iter()
+                    .map(|&h| sim.route_home(h).expect("mapping survived the fault"))
+                    .collect();
+                assert_eq!(
+                    new_homes.len(),
+                    1,
+                    "streams scattered across siblings: {new_homes:?}"
+                );
+                let sib = *new_homes.iter().next().unwrap();
+                assert_ne!(sib, home, "re-stuck to the dead instance");
+                moved = homed.len();
+                failed = true;
+            }
+        }
+        assert!(failed, "no stream was homed in 10 s of affinity traffic");
+        assert!(moved >= 1);
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        assert!(sim.sse_accounting_balanced(), "fault broke SSE accounting");
+        let out = sim.into_output();
+        assert_eq!(out.report.total(), n, "request lost across the fault");
+        assert!(out.report.completed > 0);
+    }
+
+    #[test]
+    fn fault_on_decode_protects_committed_work_and_conserves() {
+        // A dead decode takes its committed work (active rows, retrieval
+        // queue, in-flight transfers) with it under protection; nothing
+        // is lost from the books and serving continues on the survivor.
+        let cfg = SimConfig {
+            n_p: 2,
+            n_d: 2,
+            only_scenario: Some(2), // gen-heavy: decodes hold work
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            5,
+        )
+        .only_scenario(2);
+        let reqs = g.window(8.0, 16_000.0);
+        let n = reqs.len();
+        let mut failed = false;
+        for r in reqs {
+            sim.run_until(r.arrival_ms);
+            let at = r.arrival_ms;
+            sim.inject(r);
+            if !failed && at > 6_000.0 {
+                failed = sim.fail_decode(0).is_some();
+                assert!(failed);
+                assert_eq!(sim.ratio(), (2, 1));
+                assert!(sim.fail_decode(0).is_none(), "double fault on a corpse");
+            }
+        }
+        assert!(failed);
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        assert!(sim.sse_accounting_balanced());
+        let protected = sim.protected_so_far();
+        let out = sim.into_output();
+        assert_eq!(out.report.total(), n, "request lost across the decode fault");
+        assert!(
+            out.report.timed_out >= protected,
+            "protection must be a subset of the timeout tally"
+        );
+        assert!(out.report.completed > 0);
     }
 
     #[test]
