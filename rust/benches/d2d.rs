@@ -1,0 +1,82 @@
+//! D2D single-pull path benches — gather/pull/place cost scaling with
+//! block count (`cargo bench --bench d2d [-- --fast]`).
+//!
+//! Guards the tentpole's data plane: gather and per-block placement carry
+//! a per-block term (so halving the block size must not silently double
+//! the hot-path cost), the single pull behaves like one bulk copy
+//! regardless of how the sender's HBM was fragmented, and the timing
+//! model's blocked/single-pull split stays pure arithmetic.
+
+use pd_serve::bench::Bencher;
+use pd_serve::kvcache::d2d::{place_into_blocks, AssemblyModel, D2dRegion, LayerBlocks};
+use pd_serve::network::rdma::RdmaModel;
+use pd_serve::util::prng::Rng;
+
+/// 8 layers of `layer_bytes` shattered into `block_bytes` blocks, with a
+/// deliberately ragged tail (last layer one byte short).
+fn layers_at(block_bytes: usize, layer_bytes: usize, rng: &mut Rng) -> Vec<LayerBlocks> {
+    (0..8)
+        .map(|l| {
+            let len = if l == 7 { layer_bytes - 1 } else { layer_bytes };
+            let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            LayerBlocks::from_payload(&payload, block_bytes).unwrap()
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0xD2D);
+    let layer_bytes = 1 << 20; // 8 MiB total payload
+    let total = 8.0 * layer_bytes as f64;
+
+    // Data plane: the same payload at three fragmentation levels — the
+    // per-block cost term is what block count scales.
+    for &block in &[256 << 10, 64 << 10, 16 << 10] {
+        let n_blocks = 8 * layer_bytes / block;
+        b.group(&format!(
+            "d2d data plane ({} KiB blocks, {n_blocks} blocks / 8 MiB)",
+            block >> 10
+        ));
+        let layers = layers_at(block, layer_bytes, &mut rng);
+        b.bench("gather into contiguous region", Some((total, "B")), || {
+            D2dRegion::gather(&layers).unwrap().bytes()
+        });
+        let region = D2dRegion::gather(&layers).unwrap();
+        b.bench("single pull (one read)", Some((total, "B")), || {
+            region.pull().bytes()
+        });
+        let mut out: Vec<Vec<Vec<u8>>> = region
+            .dir()
+            .iter()
+            .map(|&(_, len)| vec![Vec::new(); len.div_ceil(block)])
+            .collect();
+        b.bench("scatter-free place into blocks", Some((total, "B")), || {
+            place_into_blocks(&region, block, &mut out).unwrap()
+        });
+    }
+
+    b.group("transfer-time model (420 MiB per device)");
+    let m = RdmaModel::default();
+    let bytes = 420 << 20;
+    for &block in &[16 << 10, 256 << 10, 1600 << 10] {
+        let name = format!("blocked_cost at {} KiB blocks", block >> 10);
+        b.bench(&name, Some((1.0, "op")), || {
+            m.blocked_cost(bytes, block, 3, 2).total_us()
+        });
+    }
+    b.bench("single_pull_cost", Some((1.0, "op")), || {
+        m.single_pull_cost(bytes, 3, 2).total_us()
+    });
+
+    b.group("assembly cost model");
+    let asm = AssemblyModel::default();
+    for &blocks in &[64usize, 1024, 16384] {
+        let name = format!("gather_us / place_blocked_us at {blocks} blocks");
+        b.bench(&name, Some((1.0, "op")), || {
+            asm.gather_us(bytes, blocks) + asm.place_blocked_us(bytes, blocks)
+        });
+    }
+
+    println!("\n{}", b.finish());
+}

@@ -197,14 +197,25 @@ pub struct Lease {
     /// Hour by which the instances must be back in the lender's bank —
     /// strictly before the lender's own predicted demand.
     pub due_hour: f64,
-    /// Hour the lease was repaid (`None` while outstanding).
+    /// Instances repaid so far. A called lease may be funded by several
+    /// partial releases; counts land in the *lender's* bank as they
+    /// arrive (lender-first), so the conservation audit holds at every
+    /// intermediate step.
+    pub repaid_instances: usize,
+    /// Hour the lease was *fully* repaid (`None` while any instance is
+    /// still owed).
     pub repaid_hour: Option<f64>,
 }
 
 impl Lease {
-    /// Still unpaid?
+    /// Still owing any instances?
     pub fn outstanding(&self) -> bool {
-        self.repaid_hour.is_none()
+        self.repaid_instances < self.instances
+    }
+
+    /// Instances still owed to the lender.
+    pub fn owed(&self) -> usize {
+        self.instances - self.repaid_instances
     }
 }
 
@@ -359,14 +370,15 @@ impl InstanceLedger {
             instances: n,
             granted_hour: now_hour,
             due_hour,
+            repaid_instances: 0,
             repaid_hour: None,
         });
         Some(id)
     }
 
-    /// Repay lease `id` out of the spare pool (cheapest repayment: no
-    /// group needs draining). `false` if the pool is short or the lease
-    /// is unknown/already repaid.
+    /// Repay lease `id`'s outstanding remainder out of the spare pool
+    /// (cheapest repayment: no group needs draining). `false` if the pool
+    /// is short or the lease is unknown/already repaid.
     pub fn repay_from_pool(&mut self, id: u64, now_hour: f64) -> bool {
         let Some(l) = self
             .leases
@@ -375,11 +387,13 @@ impl InstanceLedger {
         else {
             return false;
         };
-        if self.pool < l.instances {
+        let owed = l.owed();
+        if self.pool < owed {
             return false;
         }
-        self.pool -= l.instances;
-        *self.banks.entry(l.lender).or_insert(0) += l.instances;
+        self.pool -= owed;
+        *self.banks.entry(l.lender).or_insert(0) += owed;
+        l.repaid_instances = l.instances;
         l.repaid_hour = Some(now_hour);
         true
     }
@@ -387,7 +401,11 @@ impl InstanceLedger {
     /// A drained group of `scene` released `n` instances. They first
     /// repay this scene's outstanding leases (earliest due first), then
     /// any outstanding recovery leases, and the remainder is banked with
-    /// `scene`. Returns the ids of the leases repaid.
+    /// `scene`. Repayment is *partial-capable*: a release smaller than a
+    /// called lease still lands lender-first — the lender regains what
+    /// arrived, the lease stays outstanding for the rest, and the
+    /// conservation audit balances throughout. Returns the ids of the
+    /// leases *fully* repaid by this release.
     pub fn release(&mut self, scene: usize, n: usize, now_hour: f64) -> Vec<u64> {
         let mut remaining = n;
         let mut repaid = Vec::new();
@@ -415,15 +433,18 @@ impl InstanceLedger {
                     .then(self.leases[a].id.cmp(&self.leases[b].id))
             });
             for i in order {
-                let need = self.leases[i].instances;
-                if need > remaining {
-                    continue;
+                if remaining == 0 {
+                    break;
                 }
-                remaining -= need;
+                let take = self.leases[i].owed().min(remaining);
+                remaining -= take;
                 let lender = self.leases[i].lender;
-                *self.banks.entry(lender).or_insert(0) += need;
-                self.leases[i].repaid_hour = Some(now_hour);
-                repaid.push(self.leases[i].id);
+                *self.banks.entry(lender).or_insert(0) += take;
+                self.leases[i].repaid_instances += take;
+                if !self.leases[i].outstanding() {
+                    self.leases[i].repaid_hour = Some(now_hour);
+                    repaid.push(self.leases[i].id);
+                }
             }
         }
         self.deposit(scene, remaining);
@@ -431,12 +452,12 @@ impl InstanceLedger {
     }
 
     /// Outstanding leases due at or before `horizon_hour` — the control
-    /// loop's call list: `(id, borrower, lender, instances)`.
+    /// loop's call list: `(id, borrower, lender, instances still owed)`.
     pub fn due_before(&self, horizon_hour: f64) -> Vec<(u64, LeaseUse, usize, usize)> {
         self.leases
             .iter()
             .filter(|l| l.outstanding() && l.due_hour <= horizon_hour)
-            .map(|l| (l.id, l.borrower, l.lender, l.instances))
+            .map(|l| (l.id, l.borrower, l.lender, l.owed()))
             .collect()
     }
 
@@ -636,6 +657,66 @@ mod tests {
         assert_eq!(repaid, vec![id]);
         assert_eq!(l.bank(2), 2 + 1, "lender bank restored");
         assert_eq!(l.bank(4), 6, "remainder banked with the releasing scene");
+        l.audit(in_service).unwrap();
+    }
+
+    #[test]
+    fn lease_partial_repayment_lands_lender_first_and_conserves() {
+        // Satellite regression: the old release() skipped any lease larger
+        // than the release, banking the counts with the *borrower* — a
+        // lender regaining only part of a called lease got nothing until
+        // a single release covered the whole loan.
+        let mut l = InstanceLedger::new(12, 0);
+        let mut in_service = 12;
+        in_service -= 6;
+        assert!(l.release(0, 6, 1.0).is_empty()); // scene 0 banks 6
+        let id = l.borrow(0, LeaseUse::Scene(1), 6, 2.0, 10.0).unwrap();
+        in_service += 6;
+        l.audit(in_service).unwrap();
+        // A 4-instance release repays 4 lender-first; the lease stays
+        // outstanding for the remainder and nothing banks with the
+        // borrower while it owes.
+        in_service -= 4;
+        assert!(
+            l.release(1, 4, 5.0).is_empty(),
+            "a partially repaid lease must not report as repaid"
+        );
+        assert_eq!(l.bank(0), 4, "partial counts land in the lender's bank");
+        assert_eq!(l.bank(1), 0, "borrower banked counts while still owing");
+        let lease = &l.leases()[0];
+        assert!(lease.outstanding());
+        assert_eq!(lease.owed(), 2);
+        assert_eq!(lease.repaid_instances, 4);
+        assert_eq!(lease.repaid_hour, None);
+        l.audit(in_service).unwrap();
+        // The call list reports the remainder, not the original size.
+        assert_eq!(l.due_before(10.0), vec![(id, LeaseUse::Scene(1), 0, 2)]);
+        // The rest arrives: the lease completes and only the surplus
+        // banks with the borrower.
+        in_service -= 3;
+        assert_eq!(l.release(1, 3, 6.0), vec![id]);
+        assert_eq!(l.bank(0), 6, "lender made whole");
+        assert_eq!(l.bank(1), 1, "surplus banked with the borrower");
+        assert!(!l.has_outstanding());
+        let lease = &l.leases()[0];
+        assert_eq!(lease.repaid_hour, Some(6.0));
+        assert!(lease.repaid_hour.unwrap() < lease.due_hour);
+        l.audit(in_service).unwrap();
+        // Pool repayment of a partially repaid lease covers the remainder
+        // only (not the original size).
+        let id2 = l.borrow(0, LeaseUse::Scene(1), 6, 6.5, 12.0).unwrap();
+        in_service += 6;
+        in_service -= 5;
+        assert!(l.release(1, 5, 7.0).is_empty());
+        assert_eq!(l.leases()[1].owed(), 1);
+        // An operator-minted spare lands in the pool and clears exactly
+        // the remainder.
+        l.mint(1);
+        l.return_pool(1);
+        assert!(l.repay_from_pool(id2, 7.5), "pool covers the remainder");
+        assert_eq!(l.pool(), 0);
+        assert_eq!(l.bank(0), 6, "partial 5 + pooled remainder 1");
+        assert!(!l.has_outstanding());
         l.audit(in_service).unwrap();
     }
 

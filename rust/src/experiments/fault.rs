@@ -136,7 +136,7 @@ pub fn fault_repro(scale: Scale) -> FaultRepro {
     FaultRepro { clean, faulty, lend: lending_day(scale) }
 }
 
-pub fn run(scale: Scale) {
+pub fn run(scale: Scale, json_dir: Option<&str>) {
     let r = fault_repro(scale);
     let rows = vec![
         (
@@ -196,6 +196,22 @@ pub fn run(scale: Scale) {
                     .unwrap_or_else(|| "never (matures past day end)".into())
             );
         }
+    }
+    if let Some(dir) = json_dir {
+        let j = crate::jobj! {
+            "fig" => "fault",
+            "completion_ratio" => r.completion_ratio(),
+            "bound" => FAULT_TPUT_BOUND,
+            "faults_seen" => r.faulty.faults_seen,
+            "faults_fatal" => r.faulty.faults_fatal,
+            "recoveries" => r.faulty.recoveries,
+            "protected" => r.faulty.protected,
+            "clean_completed" => r.clean.completed,
+            "faulty_completed" => r.faulty.completed,
+            "lend_leases" => r.lend.ledger.leases.len(),
+            "lend_balanced" => r.lend.ledger.balanced,
+        };
+        super::write_json(dir, "fault", &j);
     }
 }
 

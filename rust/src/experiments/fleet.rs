@@ -112,7 +112,7 @@ pub fn fleet_dynamic_vs_static(scale: Scale) -> FleetCompare {
     FleetCompare { rows, dynamic_rps, best_static_rps, dynamic_adjustments }
 }
 
-pub fn run(scale: Scale) {
+pub fn run(scale: Scale, json_dir: Option<&str>) {
     let f = fleet_dynamic_vs_static(scale);
     let rows: Vec<(String, String)> = f
         .rows
@@ -139,6 +139,18 @@ pub fn run(scale: Scale) {
         (f.dynamic_rps / f.best_static_rps - 1.0) * 100.0,
         f.dynamic_adjustments
     );
+    if let Some(dir) = json_dir {
+        let j = crate::jobj! {
+            "fig" => "fleet",
+            "dynamic_rps" => f.dynamic_rps,
+            "best_static_rps" => f.best_static_rps,
+            "dynamic_adjustments" => f.dynamic_adjustments,
+            "labels" => f.rows.iter().map(|r| r.label.clone()).collect::<Vec<_>>(),
+            "rps" => f.rows.iter().map(|r| r.rps).collect::<Vec<_>>(),
+            "slo" => f.rows.iter().map(|r| r.slo_attainment).collect::<Vec<_>>(),
+        };
+        super::write_json(dir, "fleet", &j);
+    }
 }
 
 #[cfg(test)]

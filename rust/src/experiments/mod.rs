@@ -6,6 +6,7 @@
 //! Reproduce with `pdserve repro --fig <id>` (`--fig all` for everything);
 //! add `--fast` to shrink workloads for CI.
 
+pub mod d2d;
 pub mod ext;
 pub mod fault;
 pub mod fig01;
@@ -40,6 +41,9 @@ impl Scale {
 pub fn cmd_repro(args: &ParsedArgs) -> i32 {
     let fig = args.get_or("fig", "all").to_string();
     let scale = if args.has("fast") { Scale::fast() } else { Scale::full() };
+    // `--json DIR`: the fleet-scale figures also write structured results
+    // under DIR (CI uploads them as workflow artifacts).
+    let json_dir = args.get("json");
     let all = fig == "all";
     let mut ran = 0;
     {
@@ -72,10 +76,13 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
             fig14::run(if all { "14" } else { &fig }, scale);
         }
         if want(&["fleet", "13e"]) {
-            fleet::run(scale);
+            fleet::run(scale, json_dir);
         }
         if want(&["fault", "13f"]) {
-            fault::run(scale);
+            fault::run(scale, json_dir);
+        }
+        if want(&["d2d", "14e"]) {
+            d2d::run(scale, json_dir);
         }
         if want(&["routing"]) {
             routing::run(scale);
@@ -91,10 +98,24 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, routing, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, d2d, routing, headline, all)");
         return 2;
     }
     0
+}
+
+/// Write one figure's structured result as `DIR/<fig>.json` (CI uploads
+/// these as workflow artifacts). Failures are warnings, not errors — the
+/// printed tables remain the source of truth.
+pub fn write_json(dir: &str, fig: &str, value: &crate::util::json::Json) {
+    let path = format!("{dir}/{fig}.json");
+    if let Err(e) = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(&path, value.to_string_pretty()))
+    {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("wrote {path}");
+    }
 }
 
 /// Render a simple two-column table.

@@ -86,6 +86,26 @@ impl SendBufferPool {
         Ok(())
     }
 
+    /// Stage one `(offset, len)` range of a buffer — the per-layer gather
+    /// path of `kvcache::d2d`: each layer's KV lands at its `KvLayout`
+    /// offset as prefill produces it, so the region is fully assembled
+    /// (and single-pull-ready) the moment the last layer completes, with
+    /// no gather pass at transfer time.
+    pub fn write_range(&mut self, id: BufferId, offset: usize, data: &[f32]) -> Result<()> {
+        if !self.in_use[id.0] {
+            return Err(anyhow!("write to unacquired buffer {}", id.0));
+        }
+        if offset + data.len() > self.buf_elems {
+            return Err(anyhow!(
+                "range {offset}+{} beyond buffer of {} elems",
+                data.len(),
+                self.buf_elems
+            ));
+        }
+        self.storage[id.0][offset..offset + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
     pub fn read(&self, id: BufferId) -> Result<&[f32]> {
         if !self.in_use[id.0] {
             return Err(anyhow!("read of unacquired buffer {}", id.0));
@@ -138,6 +158,30 @@ mod tests {
         assert_eq!(pool.read_range(id, 2, 3).unwrap(), &[2.0, 3.0, 4.0]);
         assert!(pool.read_range(id, 6, 3).is_err());
         assert!(pool.write(id, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn write_range_stages_layers_in_place() {
+        use crate::kvcache::layout::KvLayout;
+        // Per-layer staged gather: two layers written at their layout
+        // offsets assemble the same region a bulk write would.
+        let layout = KvLayout::new(2, 1, 4, 2, 1);
+        let mut pool = SendBufferPool::new(1, layout.prefill_elems());
+        let id = pool.acquire().unwrap();
+        for l in 0..layout.n_layers {
+            let (off, len) = layout.layer_range(l);
+            let stripe: Vec<f32> = (0..len).map(|i| (l * 100 + i) as f32).collect();
+            pool.write_range(id, off, &stripe).unwrap();
+        }
+        let buf = pool.read(id).unwrap();
+        assert_eq!(buf.len(), layout.prefill_elems());
+        assert_eq!(buf[0], 0.0);
+        let (off1, _) = layout.layer_range(1);
+        assert_eq!(buf[off1], 100.0);
+        // Out-of-range and unacquired stagings are refused.
+        assert!(pool.write_range(id, layout.prefill_elems(), &[1.0]).is_err());
+        pool.release(id).unwrap();
+        assert!(pool.write_range(id, 0, &[1.0]).is_err());
     }
 
     #[test]

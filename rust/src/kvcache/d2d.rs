@@ -1,0 +1,449 @@
+//! The optimized D2D transfer path (paper §3.6, Fig. 14c): contiguous
+//! single-pull instead of block-by-block sends.
+//!
+//! Three steps, each modeled with real byte movement:
+//!
+//! 1. **Gather (P side)**: a prefill instance whose HBM is block-managed
+//!    assembles every layer's KV blocks into one contiguous registered
+//!    region ([`D2dRegion::gather`]). When the prefill writes into a
+//!    reserved [`SendBufferPool`](super::buffer::SendBufferPool) buffer
+//!    instead (the paper's design — `write_range` stages each layer at its
+//!    [`KvLayout`] offset as prefill produces it), the region is already
+//!    contiguous and the gather is free.
+//! 2. **Single pull (D side)**: one RDMA read of the whole region
+//!    ([`D2dRegion::pull`]) after a one-time meta exchange of the
+//!    per-layer directory — the lone wire op of the optimized path
+//!    (`network::rdma::RdmaModel::single_pull_cost` prices it).
+//! 3. **Scatter-free placement (D side)**: the pulled bytes stream
+//!    straight into the receiver's layouts via offset arithmetic — the
+//!    per-slot decode cache ([`place_into_decode`], existing layout math)
+//!    or fixed-size token blocks ([`place_into_blocks`]) — with no
+//!    per-block control round-trips.
+//!
+//! [`AssemblyModel`] prices the host/HBM-side work around the wire so the
+//! simulator can charge the handoff (gather + placement) into TTFT; the
+//! block-fixed baseline pays a per-received-block bookkeeping term the
+//! single-pull path does not.
+
+use anyhow::{anyhow, Result};
+
+use super::layout::KvLayout;
+use super::scatter::{gather_from_blocks, scatter_into_blocks, scatter_into_decode};
+
+/// One layer's KV bytes as a block-managed prefill HBM holds them:
+/// fixed-size blocks with a ragged tail (trailing blocks may be empty
+/// leftovers from a previous occupant — `scatter_into_blocks` clears
+/// them on reuse).
+#[derive(Clone, Debug)]
+pub struct LayerBlocks {
+    /// The allocator's block list for this layer.
+    pub blocks: Vec<Vec<u8>>,
+    /// Valid payload bytes across the blocks (the ragged-tail boundary).
+    pub len: usize,
+}
+
+impl LayerBlocks {
+    /// Shatter one layer's payload into `block_bytes`-sized blocks (the
+    /// inverse of what `gather` undoes) — allocates exactly the blocks
+    /// the payload needs.
+    pub fn from_payload(payload: &[u8], block_bytes: usize) -> Result<Self> {
+        if block_bytes == 0 {
+            return Err(anyhow!("block_bytes must be > 0"));
+        }
+        let mut blocks = vec![Vec::new(); payload.len().div_ceil(block_bytes)];
+        scatter_into_blocks(payload, &mut blocks, block_bytes)?;
+        Ok(LayerBlocks { blocks, len: payload.len() })
+    }
+}
+
+/// One request's KVCache assembled contiguously, plus the per-layer
+/// directory — the meta the single pull exchanges once ("one
+/// communication with a low cost exchange of the meta", §3.6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct D2dRegion {
+    data: Vec<u8>,
+    /// Per-layer `(offset, len)` into `data`.
+    dir: Vec<(usize, usize)>,
+}
+
+impl D2dRegion {
+    /// Gather (P side): assemble per-layer block lists into one contiguous
+    /// registered region. Layers may have non-uniform block counts and
+    /// ragged tails; each layer's `len` is authoritative.
+    pub fn gather(layers: &[LayerBlocks]) -> Result<D2dRegion> {
+        let total: usize = layers.iter().map(|l| l.len).sum();
+        let mut data = Vec::with_capacity(total);
+        let mut dir = Vec::with_capacity(layers.len());
+        for (i, l) in layers.iter().enumerate() {
+            let off = data.len();
+            let bytes = gather_from_blocks(&l.blocks, l.len)
+                .map_err(|e| anyhow!("layer {i}: {e}"))?;
+            data.extend_from_slice(&bytes);
+            dir.push((off, l.len));
+        }
+        Ok(D2dRegion { data, dir })
+    }
+
+    /// Wrap an already-contiguous buffer (the reserved send-buffer path:
+    /// staged during prefill, gather-free) under a layout-derived
+    /// directory. The directory must tile the buffer exactly — in-order,
+    /// gap-free, overlap-free, ending at the buffer's length (the shape
+    /// [`layout_dir`] produces) — so `layer()` can never alias bytes.
+    pub fn from_contiguous(data: Vec<u8>, dir: Vec<(usize, usize)>) -> Result<D2dRegion> {
+        let mut cursor = 0usize;
+        for (l, &(off, len)) in dir.iter().enumerate() {
+            if off != cursor {
+                return Err(anyhow!(
+                    "layer {l} at offset {off}, expected {cursor} (gap or overlap)"
+                ));
+            }
+            cursor += len;
+        }
+        if cursor != data.len() {
+            return Err(anyhow!(
+                "directory covers {cursor} bytes, buffer holds {}",
+                data.len()
+            ));
+        }
+        Ok(D2dRegion { data, dir })
+    }
+
+    /// The D side's single contiguous pull: one read of the whole region
+    /// (the lone RDMA op of the optimized path), the directory riding
+    /// along from the one-time meta exchange.
+    pub fn pull(&self) -> D2dRegion {
+        self.clone()
+    }
+
+    /// Total payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Layers in the directory.
+    pub fn n_layers(&self) -> usize {
+        self.dir.len()
+    }
+
+    /// The per-layer `(offset, len)` directory.
+    pub fn dir(&self) -> &[(usize, usize)] {
+        &self.dir
+    }
+
+    /// One layer's bytes, addressed through the directory — "given the
+    /// index of a layer, the offset and the length can be quickly
+    /// calculated".
+    pub fn layer(&self, l: usize) -> Result<&[u8]> {
+        let &(off, len) = self
+            .dir
+            .get(l)
+            .ok_or_else(|| anyhow!("layer {l} beyond directory of {}", self.dir.len()))?;
+        Ok(&self.data[off..off + len])
+    }
+
+    /// Whole-region view (what the single RDMA read covers).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// The byte-level per-layer directory of a [`KvLayout`]-shaped contiguous
+/// cache: layer `l` ↦ (byte offset, byte len) covering its K and V
+/// stripes — `KvLayout::layer_range` scaled to f32 bytes.
+pub fn layout_dir(layout: &KvLayout) -> Vec<(usize, usize)> {
+    (0..layout.n_layers)
+        .map(|l| {
+            let (off, len) = layout.layer_range(l);
+            (off * 4, len * 4)
+        })
+        .collect()
+}
+
+/// Scatter-free placement into fixed-size token blocks (the simulated
+/// PageAttention receiver): each layer's range streams straight from the
+/// pulled region into that layer's block list in one pass — offset math,
+/// no per-block confirmations. Returns total blocks filled.
+pub fn place_into_blocks(
+    region: &D2dRegion,
+    block_bytes: usize,
+    out: &mut [Vec<Vec<u8>>],
+) -> Result<usize> {
+    if block_bytes == 0 {
+        return Err(anyhow!("block_bytes must be > 0"));
+    }
+    if out.len() != region.dir.len() {
+        return Err(anyhow!(
+            "receiver has {} layer block lists, region directory has {}",
+            out.len(),
+            region.dir.len()
+        ));
+    }
+    let mut used = 0;
+    for (l, &(off, len)) in region.dir.iter().enumerate() {
+        used += scatter_into_blocks(&region.data[off..off + len], &mut out[l], block_bytes)
+            .map_err(|e| anyhow!("layer {l}: {e}"))?;
+    }
+    Ok(used)
+}
+
+/// Scatter-free placement into slot `slot` of the real decode cache
+/// (`[L, 2, B, H, M, hd]` mirror): the pulled region is already in the
+/// sender's contiguous layout, so placement is the existing layout math —
+/// one strided pass, nothing per-block.
+pub fn place_into_decode(
+    decode_mirror: &mut [f32],
+    region: &[f32],
+    layout: &KvLayout,
+    slot: usize,
+) -> Result<()> {
+    let shape = [
+        layout.n_layers,
+        2,
+        layout.decode_batch,
+        layout.n_heads,
+        layout.max_len,
+        layout.head_dim,
+    ];
+    scatter_into_decode(decode_mirror, region, &shape, slot)
+}
+
+// ---------------------------------------------------------------------------
+// Assembly cost model
+// ---------------------------------------------------------------------------
+
+/// Host/HBM-side assembly cost around the wire — what the simulator
+/// charges on top of `network::rdma` wire time.
+///
+/// The single-pull path pays one scatter-free placement pass
+/// ([`AssemblyModel::place_contiguous_us`]); a block-managed sender also
+/// pays the gather ([`AssemblyModel::gather_us`]) — the reserved
+/// send-buffer path stages during prefill and gathers for free. The
+/// block-fixed baseline pays per-received-block bookkeeping
+/// ([`AssemblyModel::place_blocked_us`]) on every one of its N messages.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AssemblyModel {
+    /// Per-block bookkeeping (block-table walk + descriptor setup), µs.
+    pub per_block_us: f64,
+    /// Staging/placement copy bandwidth (GB/s) — HBM-side DMA.
+    pub copy_gbps: f64,
+}
+
+impl Default for AssemblyModel {
+    fn default() -> Self {
+        // HBM-side DMA runs an order of magnitude above the RoCE link;
+        // the per-block term is what makes thousands of PageAttention
+        // blocks per request visible.
+        AssemblyModel { per_block_us: 0.8, copy_gbps: 1000.0 }
+    }
+}
+
+impl AssemblyModel {
+    /// One bulk copy of `bytes` at the staging bandwidth (µs).
+    pub fn copy_us(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.copy_gbps * 1e3)
+    }
+
+    /// Gather `blocks` discrete blocks into a contiguous region (µs).
+    pub fn gather_us(&self, bytes: usize, blocks: usize) -> f64 {
+        blocks as f64 * self.per_block_us + self.copy_us(bytes)
+    }
+
+    /// Scatter-free placement of a pulled contiguous region: one strided
+    /// pass driven by the layout directory (µs).
+    pub fn place_contiguous_us(&self, bytes: usize) -> f64 {
+        self.copy_us(bytes)
+    }
+
+    /// Per-block placement on the block-fixed baseline: every received
+    /// block is book-kept individually before its bytes land (µs).
+    pub fn place_blocked_us(&self, bytes: usize, blocks: usize) -> f64 {
+        blocks as f64 * self.per_block_us + self.copy_us(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn payloads(rng: &mut Rng, n_layers: usize, max_len: usize) -> Vec<Vec<u8>> {
+        (0..n_layers)
+            .map(|_| {
+                let len = 1 + rng.below(max_len);
+                (0..len).map(|_| rng.below(256) as u8).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gather_pull_place_roundtrip() {
+        let mut rng = Rng::new(3);
+        let payloads = payloads(&mut rng, 4, 2000);
+        let layers: Vec<LayerBlocks> = payloads
+            .iter()
+            .map(|p| LayerBlocks::from_payload(p, 96).unwrap())
+            .collect();
+        let region = D2dRegion::gather(&layers).unwrap();
+        assert_eq!(region.n_layers(), 4);
+        assert_eq!(region.bytes(), payloads.iter().map(Vec::len).sum::<usize>());
+        // Directory addresses each layer exactly.
+        for (l, p) in payloads.iter().enumerate() {
+            assert_eq!(region.layer(l).unwrap(), &p[..]);
+        }
+        assert!(region.layer(4).is_err());
+        // One pull, then scatter-free placement into *differently* sized
+        // receiver blocks.
+        let pulled = region.pull();
+        assert_eq!(pulled.as_bytes(), region.as_bytes());
+        let mut out: Vec<Vec<Vec<u8>>> = payloads
+            .iter()
+            .map(|p| vec![Vec::new(); p.len().div_ceil(64)])
+            .collect();
+        place_into_blocks(&pulled, 64, &mut out).unwrap();
+        for (l, p) in payloads.iter().enumerate() {
+            assert_eq!(gather_from_blocks(&out[l], p.len()).unwrap(), *p);
+        }
+    }
+
+    #[test]
+    fn gather_rejects_short_blocks_and_bad_receivers() {
+        let short = LayerBlocks { blocks: vec![vec![0u8; 8]], len: 64 };
+        assert!(D2dRegion::gather(&[short]).is_err());
+        let ok = LayerBlocks::from_payload(&[1, 2, 3], 2).unwrap();
+        let region = D2dRegion::gather(&[ok]).unwrap();
+        let mut wrong_layers: Vec<Vec<Vec<u8>>> = vec![vec![Vec::new()], vec![Vec::new()]];
+        assert!(place_into_blocks(&region, 2, &mut wrong_layers).is_err());
+        let mut too_few = vec![vec![Vec::new(); 1]];
+        assert!(place_into_blocks(&region, 1, &mut too_few).is_err());
+        assert!(place_into_blocks(&region, 0, &mut too_few).is_err());
+        assert!(LayerBlocks::from_payload(&[1], 0).is_err());
+    }
+
+    #[test]
+    fn from_contiguous_requires_an_exact_tiling() {
+        let dir = vec![(0usize, 4usize), (4, 4)];
+        assert!(D2dRegion::from_contiguous(vec![0u8; 8], dir.clone()).is_ok());
+        // Wrong extent, overlap, and gap are all rejected — layer() must
+        // never alias or read past the staged buffer.
+        assert!(D2dRegion::from_contiguous(vec![0u8; 7], dir).is_err());
+        assert!(
+            D2dRegion::from_contiguous(vec![0u8; 8], vec![(0, 8), (0, 8)]).is_err(),
+            "overlapping directory accepted"
+        );
+        assert!(
+            D2dRegion::from_contiguous(vec![0u8; 8], vec![(0, 2), (6, 2)]).is_err(),
+            "gapped directory accepted"
+        );
+    }
+
+    #[test]
+    fn layout_dir_matches_layer_ranges() {
+        let layout = KvLayout::new(4, 4, 96, 32, 4);
+        let dir = layout_dir(&layout);
+        assert_eq!(dir.len(), layout.n_layers);
+        // Contiguous cover of the whole prefill buffer, in byte units.
+        assert_eq!(dir[0].0, 0);
+        for w in dir.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0);
+        }
+        let last = dir.last().unwrap();
+        assert_eq!(last.0 + last.1, layout.prefill_bytes());
+    }
+
+    #[test]
+    fn place_into_decode_matches_layout_math() {
+        use crate::kvcache::scatter::gather_from_decode;
+        let layout = KvLayout::new(2, 2, 32, 8, 3);
+        let mut rng = Rng::new(11);
+        let region: Vec<f32> =
+            (0..layout.prefill_elems()).map(|_| rng.f64() as f32).collect();
+        let mut mirror = vec![0f32; layout.decode_elems()];
+        place_into_decode(&mut mirror, &region, &layout, 2).unwrap();
+        let shape = vec![
+            layout.n_layers, 2, layout.decode_batch,
+            layout.n_heads, layout.max_len, layout.head_dim,
+        ];
+        assert_eq!(gather_from_decode(&mirror, &shape, 2).unwrap(), region);
+    }
+
+    #[test]
+    fn assembly_costs_scale_with_block_count_not_just_bytes() {
+        let m = AssemblyModel::default();
+        let bytes = 64 << 20;
+        // More blocks at fixed bytes: gather and blocked placement grow,
+        // the scatter-free pass does not.
+        assert!(m.gather_us(bytes, 4096) > m.gather_us(bytes, 64));
+        assert!(m.place_blocked_us(bytes, 4096) > m.place_blocked_us(bytes, 64));
+        assert!(
+            m.place_contiguous_us(bytes) < m.place_blocked_us(bytes, 64),
+            "scatter-free placement must undercut per-block placement"
+        );
+        // Copy time is bandwidth-bound and linear.
+        assert!((m.copy_us(2 * bytes) - 2.0 * m.copy_us(bytes)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_gather_then_place_reproduces_ragged_nonuniform_layouts() {
+        // Satellite: gather-into-contiguous followed by scatter-into-blocks
+        // reproduces the original KV layout for ragged tails and
+        // non-uniform per-layer block counts — including receiver block
+        // lists reused from a previous, larger occupant (stale tails).
+        let cfg = prop::Config { cases: 48, ..Default::default() };
+        prop::check(
+            "d2d-gather-place-roundtrip",
+            &cfg,
+            |r| {
+                let n_layers = 1 + r.below(5);
+                let src_block = 16 * (1 + r.below(16));
+                let dst_block = 16 * (1 + r.below(16));
+                let seed = r.next_u64();
+                (n_layers, src_block, dst_block, seed)
+            },
+            |&(n_layers, src_block, dst_block, seed)| {
+                let mut rng = Rng::new(seed);
+                // Ragged, non-uniform layer sizes (never block-aligned by
+                // construction bias).
+                let payloads: Vec<Vec<u8>> = (0..n_layers)
+                    .map(|_| {
+                        let len = 1 + rng.below(3000);
+                        (0..len).map(|_| rng.below(256) as u8).collect()
+                    })
+                    .collect();
+                let layers: Vec<LayerBlocks> = payloads
+                    .iter()
+                    .map(|p| LayerBlocks::from_payload(p, src_block))
+                    .collect::<Result<_>>()
+                    .map_err(|e| e.to_string())?;
+                let region = D2dRegion::gather(&layers).map_err(|e| e.to_string())?;
+                if region.bytes() != payloads.iter().map(Vec::len).sum::<usize>() {
+                    return Err("region size mismatch".into());
+                }
+                // Receiver lists pre-polluted with a larger previous
+                // occupant, so stale-tail resurrection would be caught.
+                let mut out: Vec<Vec<Vec<u8>>> = payloads
+                    .iter()
+                    .map(|p| {
+                        let n = p.len().div_ceil(dst_block) + 2;
+                        vec![vec![0xAAu8; dst_block]; n]
+                    })
+                    .collect();
+                place_into_blocks(&region.pull(), dst_block, &mut out)
+                    .map_err(|e| e.to_string())?;
+                for (l, p) in payloads.iter().enumerate() {
+                    let back = gather_from_blocks(&out[l], p.len())
+                        .map_err(|e| e.to_string())?;
+                    if &back != p {
+                        return Err(format!("layer {l} corrupted in roundtrip"));
+                    }
+                    // A gather sized past this layer's payload must fail,
+                    // not resurrect the 0xAA pollution.
+                    if gather_from_blocks(&out[l], p.len() + dst_block + 1).is_ok() {
+                        return Err(format!("layer {l} stale tail survived"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

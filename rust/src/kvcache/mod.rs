@@ -12,10 +12,16 @@
 //!   the receiver's discrete block layout on the host. The *operator*
 //!   variant is the AOT-compiled `scatter_b4.hlo.txt` executed by
 //!   `runtime::ServingRuntime::scatter_device`.
+//! - `d2d`: the optimized transfer path end to end — gather per-layer
+//!   blocks into one contiguous registered region, one single-pull read,
+//!   scatter-free placement via the layout math — plus the assembly cost
+//!   model the simulator charges on the prefill→decode handoff.
 
 pub mod buffer;
+pub mod d2d;
 pub mod layout;
 pub mod scatter;
 
 pub use buffer::SendBufferPool;
+pub use d2d::{AssemblyModel, D2dRegion, LayerBlocks};
 pub use layout::KvLayout;

@@ -110,6 +110,7 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// Flags: `--peak-rps R --hours H --ms-per-hour MS --group-size N`
 /// `--ratio P:D --scenes 0,2,5 --control-ms MS --seed S`
 /// `--route random|round-robin|least-loaded|prefix-affinity`
+/// `--transfer contiguous|blocked` (D2D discipline on every handoff)
 /// `--upgrade-at MIN` (rolling upgrade, minutes into the simulated day)
 /// `--upgrade-wave N` (groups per wave, default 1)
 /// `--faults-per-week R` (fault injection, per 400 devices — paper: 1.5)
@@ -178,6 +179,14 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
         Some(r) => r,
         None => {
             eprintln!("--route must be random|round-robin|least-loaded|prefix-affinity");
+            return 2;
+        }
+    };
+    cfg.transfer = match args.get_or("transfer", "contiguous") {
+        "contiguous" => pd_serve::serving::sim::TransferDiscipline::Contiguous,
+        "blocked" => pd_serve::serving::sim::TransferDiscipline::Blocked,
+        other => {
+            eprintln!("--transfer must be contiguous|blocked, got '{other}'");
             return 2;
         }
     };

@@ -46,28 +46,96 @@ impl Default for RdmaModel {
     }
 }
 
+/// One D2D move, itemized — what the block-fixed vs single-pull
+/// comparison is made of (`repro --fig d2d` prints these).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransferCost {
+    /// RDMA ops issued: `ceil(S / block)` block sends, or 1 single pull.
+    pub ops: usize,
+    /// Per-op setup summed over all ops: control round-trips, sender
+    /// doorbells, the meta exchange (µs).
+    pub setup_us: f64,
+    /// Path propagation over the hops (µs).
+    pub path_us: f64,
+    /// Bandwidth-bound byte time, conflict-scaled (µs). The blocked path
+    /// includes fragmentation: the ragged tail block occupies a full
+    /// block's wire slot.
+    pub wire_us: f64,
+}
+
+impl TransferCost {
+    /// Total transfer time (µs).
+    pub fn total_us(&self) -> f64 {
+        self.setup_us + self.path_us + self.wire_us
+    }
+
+    /// Total transfer time (ms).
+    pub fn total_ms(&self) -> f64 {
+        self.total_us() / 1e3
+    }
+
+    /// Fraction of the total spent not moving payload bytes.
+    pub fn overhead_frac(&self) -> f64 {
+        let t = self.total_us();
+        if t <= 0.0 { 0.0 } else { (self.setup_us + self.path_us) / t }
+    }
+}
+
 impl RdmaModel {
     /// Pure wire time for `bytes` at full link rate (µs).
     pub fn wire_us(&self, bytes: usize) -> f64 {
         bytes as f64 * 8.0 / (self.link_gbps * 1e3)
     }
 
-    /// Discrete block-by-block transfer (µs): each block pays control +
-    /// software overhead, serialized ("transfer one by one").
-    pub fn blocked_us(&self, bytes: usize, block_bytes: usize, hops: usize, sharers: usize) -> f64 {
+    /// Block-fixed transfer, itemized: `ceil(S / block)` ops each paying
+    /// the control round-trip plus sender software ("transfer one by
+    /// one"), wire time over whole blocks — the tail block's padding is
+    /// transferred too (fragmentation).
+    pub fn blocked_cost(
+        &self,
+        bytes: usize,
+        block_bytes: usize,
+        hops: usize,
+        sharers: usize,
+    ) -> TransferCost {
         debug_assert!(block_bytes > 0);
-        let n = bytes.div_ceil(block_bytes) as f64;
-        let path = hops as f64 * self.hop_latency_us;
-        let wire = self.wire_us(bytes) * sharers.max(1) as f64;
-        path + n * (self.ctrl_rt_us + self.per_msg_sw_us) + wire
+        let n = bytes.div_ceil(block_bytes).max(1);
+        TransferCost {
+            ops: n,
+            setup_us: n as f64 * (self.ctrl_rt_us + self.per_msg_sw_us),
+            path_us: hops as f64 * self.hop_latency_us,
+            wire_us: self.wire_us(n * block_bytes) * sharers.max(1) as f64,
+        }
     }
 
-    /// Contiguous whole-payload transfer (µs): one meta exchange, then
-    /// bytes as a whole.
+    /// The optimized single pull, itemized: one op (meta exchange + one
+    /// doorbell), then the whole payload bandwidth-bound.
+    pub fn single_pull_cost(&self, bytes: usize, hops: usize, sharers: usize) -> TransferCost {
+        TransferCost {
+            ops: 1,
+            setup_us: self.meta_exchange_us + self.per_msg_sw_us,
+            path_us: hops as f64 * self.hop_latency_us,
+            wire_us: self.wire_us(bytes) * sharers.max(1) as f64,
+        }
+    }
+
+    /// Self-conflict sharer count of one multi-device move: `n_sub`
+    /// sub-transfers contending for `qp_capacity` independently-scheduled
+    /// QPs on the path (`Topology::qp_concurrency`). Sub-transfers beyond
+    /// the QP budget serialize, so bandwidth divides by the ceiling ratio.
+    pub fn qp_sharers(n_sub: usize, qp_capacity: usize) -> usize {
+        n_sub.max(1).div_ceil(qp_capacity.max(1)).max(1)
+    }
+
+    /// Discrete block-by-block transfer (µs) — `blocked_cost` totalled.
+    pub fn blocked_us(&self, bytes: usize, block_bytes: usize, hops: usize, sharers: usize) -> f64 {
+        self.blocked_cost(bytes, block_bytes, hops, sharers).total_us()
+    }
+
+    /// Contiguous whole-payload transfer (µs) — `single_pull_cost`
+    /// totalled: one meta exchange, then bytes as a whole.
     pub fn contiguous_us(&self, bytes: usize, hops: usize, sharers: usize) -> f64 {
-        let path = hops as f64 * self.hop_latency_us;
-        let wire = self.wire_us(bytes) * sharers.max(1) as f64;
-        path + self.meta_exchange_us + self.per_msg_sw_us + wire
+        self.single_pull_cost(bytes, hops, sharers).total_us()
     }
 
     /// Per-layer-triggered contiguous transfer (µs): `layers` trigger
@@ -172,6 +240,50 @@ mod tests {
         // 200 Gb/s = 25 GB/s -> 1 MiB in ~41.9 µs.
         let t = m.wire_us(1 << 20);
         assert!((t - 41.94).abs() < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn itemized_costs_total_to_the_aggregate_helpers() {
+        let m = m();
+        let bytes = 64 << 20;
+        let c = m.blocked_cost(bytes, 1 << 20, 3, 2);
+        assert_eq!(c.ops, 64);
+        assert!((c.total_us() - m.blocked_us(bytes, 1 << 20, 3, 2)).abs() < 1e-9);
+        assert!((c.setup_us - 64.0 * (m.ctrl_rt_us + m.per_msg_sw_us)).abs() < 1e-9);
+        let p = m.single_pull_cost(bytes, 3, 2);
+        assert_eq!(p.ops, 1);
+        assert!((p.total_us() - m.contiguous_us(bytes, 3, 2)).abs() < 1e-9);
+        assert!(p.overhead_frac() < c.overhead_frac());
+        assert!((c.total_ms() * 1e3 - c.total_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fragmentation_charges_the_padded_tail_block() {
+        let m = m();
+        let block = 1 << 20;
+        // One byte past a block boundary: two ops, two full blocks on the
+        // wire — not one block plus a byte.
+        let ragged = m.blocked_cost(block + 1, block, 0, 1);
+        assert_eq!(ragged.ops, 2);
+        assert!((ragged.wire_us - m.wire_us(2 * block)).abs() < 1e-9);
+        // Aligned payloads pay no padding.
+        let aligned = m.blocked_cost(2 * block, block, 0, 1);
+        assert!((aligned.wire_us - m.wire_us(2 * block)).abs() < 1e-9);
+        // The single pull never fragments.
+        let pull = m.single_pull_cost(block + 1, 0, 1);
+        assert!((pull.wire_us - m.wire_us(block + 1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qp_sharers_ceiling_semantics() {
+        // 8 sub-transfers over 8 QPs ride conflict-free; over 4 they pair
+        // up; a zero budget degrades to full serialization, never panics.
+        assert_eq!(RdmaModel::qp_sharers(8, 8), 1);
+        assert_eq!(RdmaModel::qp_sharers(8, 4), 2);
+        assert_eq!(RdmaModel::qp_sharers(9, 4), 3);
+        assert_eq!(RdmaModel::qp_sharers(1, 4), 1);
+        assert_eq!(RdmaModel::qp_sharers(0, 4), 1);
+        assert_eq!(RdmaModel::qp_sharers(5, 0), 5);
     }
 
     #[test]

@@ -122,6 +122,22 @@ impl Topology {
         }
     }
 
+    /// Parallel QPs the fabric offers a multi-device pull between `a` and
+    /// `b`: HCCS lanes intra-node (one per peer device), ToR ports
+    /// intra-rack, ToR→spine uplinks cross-rack.
+    /// `RdmaModel::qp_sharers` turns a sub-transfer fan-out against this
+    /// budget into the self-conflict sharer count of one single-pull move.
+    pub fn qp_concurrency(&self, a: DeviceId, b: DeviceId) -> usize {
+        match self.path_kind(a, b) {
+            PathKind::IntraNode | PathKind::IntraRack => {
+                self.cfg.devices_per_node.max(1)
+            }
+            PathKind::CrossRack => {
+                self.cfg.tor_uplinks.min(self.cfg.spine_count).max(1)
+            }
+        }
+    }
+
     /// Global ToR index for a device (one logical data-plane ToR per rack).
     pub fn tor_of(&self, d: DeviceId) -> usize {
         let dev = self.device(d);
@@ -190,6 +206,25 @@ mod tests {
         let locals: Vec<u8> =
             devs.iter().map(|&d| t.device(d).local_index).collect();
         assert_eq!(locals, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn qp_concurrency_follows_path_class() {
+        let t = Topology::build(&small_cfg());
+        // Intra-node / intra-rack: one QP per peer device (4 per node).
+        assert_eq!(t.qp_concurrency(DeviceId(0), DeviceId(1)), 4);
+        assert_eq!(t.qp_concurrency(DeviceId(0), DeviceId(4)), 4);
+        // Cross-rack: bounded by the ToR uplink / spine budget.
+        let cfg = small_cfg();
+        let expect = cfg.tor_uplinks.min(cfg.spine_count).max(1);
+        assert_eq!(t.qp_concurrency(DeviceId(0), DeviceId(8)), expect);
+        // An 8-sub-transfer pull self-conflicts cross-rack but not
+        // intra-node (the RdmaModel bridge).
+        use crate::network::rdma::RdmaModel;
+        let cross = RdmaModel::qp_sharers(8, t.qp_concurrency(DeviceId(0), DeviceId(8)));
+        let local = RdmaModel::qp_sharers(4, t.qp_concurrency(DeviceId(0), DeviceId(1)));
+        assert!(cross > local);
+        assert_eq!(local, 1);
     }
 
     #[test]

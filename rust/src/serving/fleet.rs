@@ -84,15 +84,26 @@ use crate::coordinator::ratio::{
 use crate::coordinator::recovery::{recover, RecoveryReport};
 use crate::coordinator::setup::SetupConfig;
 use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
-use crate::serving::sim::{SimConfig, Simulation, WindowStats, WorkloadKind};
+use crate::serving::sim::{
+    SimConfig, Simulation, TransferDiscipline, WindowStats, WorkloadKind,
+};
 use crate::sim::EventQueue;
 use crate::util::config::{EngineConfig, ServingConfig};
 use crate::util::prng::Rng;
 use crate::workload::traffic::{scene_rate_rps, TRAINING_SWITCH_FRACTION};
 use crate::workload::{route_hash, Request, Scenario};
 
-/// Assumed D2D transfer time for capacity planning (ms) — the ξ term.
-const XFER_EST_MS: f64 = 10.0;
+/// The planner's ξ term: the modeled D2D handoff for one mean-length
+/// prompt of `sc` under the configured transfer discipline, conflict-free
+/// — priced by the *same* `SimConfig::handoff_ms` the group simulators
+/// charge, so the detector's healthy-profile T_p share tracks what
+/// measured TTFT actually includes (a `--transfer blocked` day must not
+/// read as a permanent prefill bottleneck).
+fn xfer_estimate_ms(transfer: TransferDiscipline, sc: &Scenario) -> f64 {
+    let sim = SimConfig { transfer, ..Default::default() };
+    let prompt = (sc.prompt_mean.round() as usize).max(1);
+    sim.handoff_ms(sim.per_device_bytes(prompt), 1)
+}
 
 /// Real-to-virtual clock factor: recovery traces and detector periods are
 /// real milliseconds; one simulated hour is `ms_per_hour` virtual ms.
@@ -154,6 +165,9 @@ pub struct FleetConfig {
     /// Route policy — scene-level group selection *and* each group's
     /// internal gateway use the same unified routing layer.
     pub route: RouteKind,
+    /// D2D transfer discipline every group's simulator charges on the
+    /// prefill→decode handoff (`repro --fig d2d` pairs the two).
+    pub transfer: TransferDiscipline,
     /// Start a rolling upgrade at this virtual time (`pdserve fleet
     /// --upgrade-at <min>`). One wave is cordoned per control tick,
     /// drained via the group cordon path, then restarted cold.
@@ -207,6 +221,7 @@ impl Default for FleetConfig {
             headroom: 1.2,
             min_window_total: 5,
             route: RouteKind::LeastLoaded,
+            transfer: TransferDiscipline::Contiguous,
             upgrade_at_ms: None,
             upgrade_wave: 1,
             faults_per_week: 0.0,
@@ -232,6 +247,27 @@ pub struct FleetLogEntry {
     pub what: String,
 }
 
+/// One control window of the served curve — the per-tick aggregate the
+/// fleet plots: offered vs served load, §3.4 protection spikes, and D2D
+/// transfer health.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetWindow {
+    /// Wall-clock hour at the window's close.
+    pub hour: f64,
+    /// Offered load over the window (arrivals/s).
+    pub offered_rps: f64,
+    /// Served rate over the window (completions/s).
+    pub served_rps: f64,
+    /// Requests terminated under §3.4 protection this window.
+    pub protected: usize,
+    /// D2D transfers started this window, across all groups.
+    pub xfers: usize,
+    /// Mean modeled D2D transfer time this window (ms; 0 when idle).
+    pub mean_xfer_ms: f64,
+    /// Achieved D2D bandwidth utilization this window (0 when idle).
+    pub d2d_util: f64,
+}
+
 /// Aggregate result of one fleet day.
 #[derive(Debug)]
 pub struct FleetOutput {
@@ -249,6 +285,12 @@ pub struct FleetOutput {
     pub mean_ttft_ms: f64,
     /// Mean E2E latency over completed requests (ms).
     pub mean_e2e_ms: f64,
+    /// D2D transfers charged over the day.
+    pub xfers: usize,
+    /// Mean modeled D2D transfer time over the day (ms).
+    pub mean_xfer_ms: f64,
+    /// Achieved D2D bandwidth utilization over the day (wire/total).
+    pub d2d_utilization: f64,
     /// Mid-run P/D ratio migrations.
     pub adjustments: usize,
     /// Groups spawned by the capacity planner.
@@ -282,8 +324,9 @@ pub struct FleetOutput {
     pub peak_instances: usize,
     /// Surviving groups' (scene, n_p, n_d).
     pub final_ratios: Vec<(usize, usize, usize)>,
-    /// Per control window: (hour, offered rps, served rps).
-    pub served_curve: Vec<(f64, f64, f64)>,
+    /// Per-control-window aggregates (offered/served, protection spikes,
+    /// D2D utilization).
+    pub served_curve: Vec<FleetWindow>,
     /// Ordered control-action log.
     pub timeline: Vec<FleetLogEntry>,
 }
@@ -308,6 +351,14 @@ impl FleetOutput {
             "mean TTFT {:.0} ms | mean E2E {:.0} ms | peak instances {}",
             self.mean_ttft_ms, self.mean_e2e_ms, self.peak_instances
         );
+        if self.xfers > 0 {
+            println!(
+                "D2D: {} transfers | mean {:.2} ms | utilization {:.0}%",
+                self.xfers,
+                self.mean_xfer_ms,
+                self.d2d_utilization * 100.0
+            );
+        }
         println!(
             "control actions: {} ratio adjustments, {} scale-outs, {} scale-ins, {} training switches, {} group upgrades",
             self.adjustments,
@@ -343,6 +394,10 @@ impl FleetOutput {
             };
             let repaid = match lease.repaid_hour {
                 Some(h) => format!("repaid {h:.2} h"),
+                None if lease.repaid_instances > 0 => format!(
+                    "OUTSTANDING ({} of {} repaid)",
+                    lease.repaid_instances, lease.instances
+                ),
                 None => "OUTSTANDING".to_string(),
             };
             println!(
@@ -353,11 +408,23 @@ impl FleetOutput {
         for (scene, n_p, n_d) in &self.final_ratios {
             println!("  scene {scene}: final ratio {n_p}:{n_d}");
         }
-        let offered: Vec<f64> = self.served_curve.iter().map(|c| c.1).collect();
-        let served: Vec<f64> = self.served_curve.iter().map(|c| c.2).collect();
+        let offered: Vec<f64> = self.served_curve.iter().map(|c| c.offered_rps).collect();
+        let served: Vec<f64> = self.served_curve.iter().map(|c| c.served_rps).collect();
         if !served.is_empty() {
             println!("offered {}", crate::experiments::spark(&offered));
             println!("served  {}", crate::experiments::spark(&served));
+        }
+        // §3.4 protection spikes, per window: each fault's casualties land
+        // in one control window — visible next to the served dip it caused.
+        let protected: Vec<f64> =
+            self.served_curve.iter().map(|c| c.protected as f64).collect();
+        if protected.iter().any(|&p| p > 0.0) {
+            let spiked = protected.iter().filter(|&&p| p > 0.0).count();
+            let worst = protected.iter().cloned().fold(0.0, f64::max);
+            println!(
+                "protect {}   ({spiked} windows spiked, worst {worst:.0} in one window)",
+                crate::experiments::spark(&protected)
+            );
         }
         if with_timeline {
             println!("timeline:");
@@ -484,7 +551,7 @@ pub struct FleetSim {
     lease_calls: usize,
     recovery_reports: Vec<(f64, RecoveryReport)>,
     peak_instances: usize,
-    served_curve: Vec<(f64, f64, f64)>,
+    served_curve: Vec<FleetWindow>,
     timeline: Vec<FleetLogEntry>,
 }
 
@@ -517,13 +584,14 @@ fn scene_plan(
     serving: &ServingConfig,
     sc: &Scenario,
     group_total: usize,
+    xfer_ms: f64,
 ) -> (ScenePlan, WorkloadProfile) {
     let prompt = sc.prompt_mean.round() as usize;
     let cached = (sc.prompt_mean * sc.prefix_frac).round() as usize;
     let gen = (sc.gen_mean.round() as usize).max(1);
     let (bp, ttft_ms) = feasible_prefill_batch(engine, serving, prompt, cached);
     let bd = serving.decode_batch;
-    let profile = WorkloadProfile::from_means(prompt, cached, gen, bp, bd, XFER_EST_MS);
+    let profile = WorkloadProfile::from_means(prompt, cached, gen, bp, bd, xfer_ms);
     let (n_p, n_d) = optimal_ratio(engine, &profile, group_total, 1);
     let template = GroupTemplate::from_profile(engine, &profile, n_p, n_d);
     assert!(
@@ -531,10 +599,12 @@ fn scene_plan(
         "scene '{}' yields a degenerate group template",
         sc.name
     );
-    let e2e = ttft_ms + XFER_EST_MS + engine.tpot_ms(bd, profile.ctx_len) * gen as f64;
+    let e2e = ttft_ms + xfer_ms + engine.tpot_ms(bd, profile.ctx_len) * gen as f64;
     let plan = ScenePlan {
         template,
-        baseline: (e2e, ttft_ms / e2e),
+        // Measured TTFT is charged through the D2D handoff, so the
+        // healthy-profile reference includes the ξ term too.
+        baseline: (e2e, (ttft_ms + xfer_ms) / e2e),
         training: false,
     };
     (plan, profile)
@@ -570,7 +640,14 @@ impl FleetSim {
         let mut plans = BTreeMap::new();
         let mut scene_router = BTreeMap::new();
         for &s in &cfg.scenes {
-            let (plan, _) = scene_plan(&engine, &cfg.serving, &cfg.scenarios[s], cfg.group_total);
+            let xfer_ms = xfer_estimate_ms(cfg.transfer, &cfg.scenarios[s]);
+            let (plan, _) = scene_plan(
+                &engine,
+                &cfg.serving,
+                &cfg.scenarios[s],
+                cfg.group_total,
+                xfer_ms,
+            );
             plans.insert(s, plan);
             scene_router.insert(s, cfg.route.build());
         }
@@ -718,6 +795,7 @@ impl FleetSim {
             only_scenario: Some(scene),
             workload: WorkloadKind::External,
             route: self.cfg.route,
+            transfer: self.cfg.transfer,
             seed: self.rng.next_u64(),
             n_gateways: 2,
             ..Default::default()
@@ -997,11 +1075,13 @@ impl FleetSim {
 
     fn control_tick(&mut self, t_ms: f64) {
         let period = self.cfg.control_period_ms;
-        // 1) Windows: collect, aggregate, detect, adjust.
-        let mut served = 0usize;
+        // 1) Windows: collect, aggregate, detect, adjust. `tick` is the
+        // fleet-wide aggregate of this window — what the served curve
+        // (offered/served, protection spikes, D2D utilization) plots.
+        let mut tick = WindowStats::default();
         for gi in 0..self.groups.len() {
             let w = self.groups[gi].sim.take_window();
-            served += w.completed;
+            tick.merge(&w);
             self.totals.merge(&w);
             self.try_finalize_flip(gi, t_ms);
             let g = &mut self.groups[gi];
@@ -1024,8 +1104,15 @@ impl FleetSim {
         }
         let hour = self.hour_at(t_ms);
         let secs = period / 1000.0;
-        self.served_curve
-            .push((hour, self.win_injected as f64 / secs, served as f64 / secs));
+        self.served_curve.push(FleetWindow {
+            hour,
+            offered_rps: self.win_injected as f64 / secs,
+            served_rps: tick.completed as f64 / secs,
+            protected: tick.protected,
+            xfers: tick.xfers,
+            mean_xfer_ms: tick.mean_xfer_ms(),
+            d2d_util: tick.d2d_utilization(),
+        });
         self.win_injected = 0;
 
         // 1b) Rolling upgrade: finalize the draining wave, cordon the next.
@@ -1526,6 +1613,7 @@ impl FleetSim {
             only_scenario: Some(scene),
             workload: WorkloadKind::External,
             route: self.cfg.route,
+            transfer: self.cfg.transfer,
             seed,
             n_gateways: 2,
             ..Default::default()
@@ -1773,6 +1861,9 @@ impl FleetSim {
             },
             mean_ttft_ms: totals.mean_ttft_ms(),
             mean_e2e_ms: totals.mean_e2e_ms(),
+            xfers: totals.xfers,
+            mean_xfer_ms: totals.mean_xfer_ms(),
+            d2d_utilization: totals.d2d_utilization(),
             adjustments: self.adjustments,
             scale_outs: self.scale_outs,
             scale_ins: self.scale_ins,
@@ -1868,10 +1959,11 @@ mod tests {
         let out = FleetSim::new(cfg).run();
         assert!(out.served_curve.len() >= 8);
         let mut by_offer = out.served_curve.clone();
-        by_offer.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        by_offer.sort_by(|a, b| a.offered_rps.partial_cmp(&b.offered_rps).unwrap());
         let q = by_offer.len() / 4;
-        let low_served: f64 = by_offer[..q].iter().map(|c| c.2).sum();
-        let high_served: f64 = by_offer[by_offer.len() - q..].iter().map(|c| c.2).sum();
+        let low_served: f64 = by_offer[..q].iter().map(|c| c.served_rps).sum();
+        let high_served: f64 =
+            by_offer[by_offer.len() - q..].iter().map(|c| c.served_rps).sum();
         assert!(
             high_served > 2.0 * low_served.max(1.0),
             "served rate does not track the tide: low {low_served}, high {high_served}"
@@ -1883,6 +1975,55 @@ mod tests {
             out.completed,
             out.injected
         );
+    }
+
+    #[test]
+    fn fleet_day_aggregates_d2d_windows_and_blocked_pairs_worse() {
+        let mut cfg = small_cfg();
+        // Frozen control: rng draws and control trajectories stay
+        // identical across the paired days, so the transfer discipline is
+        // the only difference.
+        cfg.scale_groups = false;
+        cfg.adjust_ratio = false;
+        let out = FleetSim::new(cfg.clone()).run();
+        assert!(out.xfers > 0, "no transfer charged all day");
+        assert!(out.mean_xfer_ms > 0.0);
+        assert!(out.d2d_utilization > 0.0 && out.d2d_utilization <= 1.0);
+        // Per-window aggregates are consistent with the day totals (drain
+        // windows after the last tick never land on the curve).
+        let curve_xfers: usize = out.served_curve.iter().map(|c| c.xfers).sum();
+        assert!(curve_xfers > 0 && curve_xfers <= out.xfers);
+        assert!(out
+            .served_curve
+            .iter()
+            .filter(|c| c.xfers > 0)
+            .all(|c| c.mean_xfer_ms > 0.0 && c.d2d_util > 0.0 && c.d2d_util <= 1.0));
+        // The paired block-fixed day: same arrivals, strictly slower
+        // transfers, strictly worse TTFT (the handoff charge), lower
+        // utilization.
+        let mut blocked_cfg = cfg;
+        blocked_cfg.transfer = TransferDiscipline::Blocked;
+        let blocked = FleetSim::new(blocked_cfg).run();
+        assert_eq!(blocked.injected, out.injected, "paired arrivals diverged");
+        assert!(blocked.mean_xfer_ms > out.mean_xfer_ms);
+        assert!(blocked.mean_ttft_ms > out.mean_ttft_ms);
+        assert!(blocked.d2d_utilization < out.d2d_utilization);
+    }
+
+    #[test]
+    fn fault_day_surfaces_protection_spikes_per_window() {
+        // Satellite (ROADMAP follow-up from PR 3): `WindowStats::protected`
+        // reaches the served-curve output, so §3.4 spikes are visible next
+        // to the served dip they caused.
+        let out = FleetSim::new(fault_cfg()).run();
+        assert!(out.protected > 0, "fault day protected nothing");
+        let curve_protected: usize =
+            out.served_curve.iter().map(|c| c.protected).sum();
+        assert!(
+            curve_protected > 0,
+            "protection never landed on the served curve"
+        );
+        assert!(curve_protected <= out.protected);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::cluster::prefix::SharedPrefixCache;
 use crate::gateway::baseline::StaleQueueScheduler;
 use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
+use crate::kvcache::d2d::AssemblyModel;
 use crate::metrics::{Outcome, ServingReport};
 use crate::network::rdma::RdmaModel;
 use crate::network::route;
@@ -64,6 +65,9 @@ pub struct SimConfig {
     pub n_d: usize,
     pub engine: EngineConfig,
     pub rdma: RdmaModel,
+    /// Host/HBM-side assembly costs around the wire (gather/placement) —
+    /// charged on every prefill→decode handoff alongside `rdma`.
+    pub assembly: AssemblyModel,
     pub serving: ServingConfig,
     pub policy: Policy,
     /// Candidate-ordering policy for the gateway (the unified routing
@@ -113,6 +117,7 @@ impl Default for SimConfig {
             n_d: 4,
             engine: EngineConfig::default(),
             rdma: RdmaModel::default(),
+            assembly: AssemblyModel::default(),
             serving: ServingConfig::default(),
             policy: Policy::OnDemand,
             route: RouteKind::LeastLoaded,
@@ -133,6 +138,43 @@ impl Default for SimConfig {
             burst: 4,
             n_gateways: 4,
         }
+    }
+}
+
+impl SimConfig {
+    /// The modeled prefill→decode handoff (wire + assembly) for one
+    /// per-device payload under this config's discipline — the single
+    /// pricing shared by `try_start_transfer` and the fleet's capacity
+    /// planner (whose healthy-profile ξ must match what measured TTFT
+    /// charges).
+    pub fn handoff_ms(&self, per_dev_bytes: usize, sharers: usize) -> f64 {
+        let block_bytes = self.block_tokens * self.kv_bytes_per_token
+            / self.devices_per_instance.max(1);
+        let block_bytes = block_bytes.max(1);
+        match self.transfer {
+            TransferDiscipline::Contiguous => {
+                // The region was staged into the reserved send buffer
+                // during prefill (`SendBufferPool::write_range` per
+                // layer), so the handoff pays one pull plus the
+                // scatter-free placement pass — no gather.
+                let pull = self.rdma.single_pull_cost(per_dev_bytes, 3, sharers);
+                let place = self.assembly.place_contiguous_us(per_dev_bytes);
+                (pull.total_us() + place) / 1e3
+            }
+            TransferDiscipline::Blocked => {
+                // N block sends, each confirmed, plus per-received-block
+                // bookkeeping at the decode side.
+                let n_blocks = per_dev_bytes.div_ceil(block_bytes).max(1);
+                let cost = self.rdma.blocked_cost(per_dev_bytes, block_bytes, 3, sharers);
+                let place = self.assembly.place_blocked_us(per_dev_bytes, n_blocks);
+                (cost.total_us() + place) / 1e3
+            }
+        }
+    }
+
+    /// Per-device share of one request's KVCache payload.
+    pub fn per_device_bytes(&self, prompt_len: usize) -> usize {
+        prompt_len * self.kv_bytes_per_token / self.devices_per_instance.max(1)
     }
 }
 
@@ -279,6 +321,13 @@ pub struct WindowStats {
     /// subset of `timed_out` — protection answers the user with a default
     /// text, which still breaks the SLO.
     pub protected: usize,
+    /// D2D transfers started this window.
+    pub xfers: usize,
+    /// Summed modeled transfer time of those transfers (ms).
+    pub xfer_sum_ms: f64,
+    /// Summed conflict-free wire time of those transfers (ms) — the
+    /// utilization numerator.
+    pub xfer_wire_sum_ms: f64,
 }
 
 impl WindowStats {
@@ -299,6 +348,21 @@ impl WindowStats {
         if self.e2e_sum_ms <= 0.0 { 0.0 } else { self.ttft_sum_ms / self.e2e_sum_ms }
     }
 
+    /// Mean modeled D2D transfer time this window (ms; 0 when idle).
+    pub fn mean_xfer_ms(&self) -> f64 {
+        if self.xfers == 0 { 0.0 } else { self.xfer_sum_ms / self.xfers as f64 }
+    }
+
+    /// Achieved D2D bandwidth utilization this window: conflict-free wire
+    /// time over total transfer occupancy (0 when idle).
+    pub fn d2d_utilization(&self) -> f64 {
+        if self.xfer_sum_ms <= 0.0 {
+            0.0
+        } else {
+            (self.xfer_wire_sum_ms / self.xfer_sum_ms).min(1.0)
+        }
+    }
+
     pub fn merge(&mut self, o: &WindowStats) {
         self.completed += o.completed;
         self.timed_out += o.timed_out;
@@ -308,6 +372,9 @@ impl WindowStats {
         self.prefill_busy_ms += o.prefill_busy_ms;
         self.decode_occ_ms += o.decode_occ_ms;
         self.protected += o.protected;
+        self.xfers += o.xfers;
+        self.xfer_sum_ms += o.xfer_sum_ms;
+        self.xfer_wire_sum_ms += o.xfer_wire_sum_ms;
     }
 }
 
@@ -1191,6 +1258,11 @@ impl Simulation {
         self.ps[p].busy = false;
         for id in batch {
             let r = &mut self.reqs[id as usize];
+            // Provisional TTFT: arrival → prefill completion. The modeled
+            // D2D handoff is added when the transfer is priced
+            // (`try_start_transfer`) — the user's first token needs the
+            // KVCache at the decode side, so the transfer itself is on
+            // the first-token critical path.
             r.ttft_ms = now - r.req.arrival_ms;
             // Post-execution timeout check (Fig. 14b: "the timeout check is
             // conducted before and after the prefill inference").
@@ -1242,9 +1314,7 @@ impl Simulation {
             return;
         };
         // Transfer timing: sub-transfers across devices, spine conflicts.
-        let bytes_total =
-            self.reqs[id as usize].req.prompt_len * self.cfg.kv_bytes_per_token;
-        let per_dev = bytes_total / self.cfg.devices_per_instance.max(1);
+        let per_dev = self.cfg.per_device_bytes(self.reqs[id as usize].req.prompt_len);
         let move_id = self.rng.next_u64();
         let assignment = if self.cfg.spray {
             route::assign_sprayed(move_id, self.cfg.devices_per_instance, self.cfg.n_spines)
@@ -1257,21 +1327,20 @@ impl Simulation {
             self.spine_load[s] += 1;
             max_sharers = max_sharers.max(self.spine_load[s]);
         }
-        let block_bytes = self.cfg.block_tokens * self.cfg.kv_bytes_per_token
-            / self.cfg.devices_per_instance.max(1);
-        let dur = match self.cfg.transfer {
-            TransferDiscipline::Contiguous => {
-                self.cfg.rdma.contiguous_ms(per_dev, 3, max_sharers)
-            }
-            TransferDiscipline::Blocked => {
-                self.cfg.rdma.blocked_ms(per_dev, block_bytes.max(1), 3, max_sharers)
-            }
-        };
+        let dur = self.cfg.handoff_ms(per_dev, max_sharers);
         let ideal = self.cfg.rdma.wire_us(per_dev) / 1e3;
         self.util.add((ideal / dur).min(1.0));
         self.xfer_samples.push(dur);
+        self.window.xfers += 1;
+        self.window.xfer_sum_ms += dur;
+        self.window.xfer_wire_sum_ms += ideal;
         let r = &mut self.reqs[id as usize];
         r.xfer_ms = dur;
+        // The handoff charge: the modeled transfer (wire + assembly) sits
+        // on the first-token critical path, so it lands in TTFT. Waiting
+        // for decode headroom (parking) is a decode-capacity effect and
+        // stays in E2E only.
+        r.ttft_ms += dur;
         r.phase = ReqPhase::Transferring(d);
         self.ds[d].reserved += 1;
         self.ps[p].awaiting -= 1;
@@ -1591,6 +1660,46 @@ mod tests {
     }
 
     #[test]
+    fn ttft_charges_the_d2d_handoff() {
+        // One request end to end under each discipline: everything about
+        // the two runs is identical except the modeled transfer, so the
+        // TTFT difference must equal the transfer-time difference exactly
+        // — the handoff charge lands in the first-token clock, and only
+        // the handoff.
+        let run_one = |transfer| {
+            let cfg = SimConfig {
+                n_p: 1,
+                n_d: 1,
+                transfer,
+                only_scenario: Some(1), // long prompts -> big KVCaches
+                ..Default::default()
+            };
+            let mut sim = Simulation::external(cfg);
+            let mut g = crate::workload::OpenLoopGen::new(
+                crate::workload::standard_scenarios(),
+                42,
+            )
+            .only_scenario(1);
+            sim.inject(g.sample_at(0.0));
+            sim.drain();
+            let out = sim.into_output();
+            assert_eq!(out.report.completed, 1);
+            (out.report.ttft.mean(), out.report.xfer.mean())
+        };
+        let (ttft_b, xfer_b) = run_one(TransferDiscipline::Blocked);
+        let (ttft_c, xfer_c) = run_one(TransferDiscipline::Contiguous);
+        assert!(xfer_c < xfer_b, "single pull {xfer_c} !< blocked {xfer_b}");
+        assert!(ttft_c < ttft_b, "contiguous TTFT {ttft_c} !< blocked {ttft_b}");
+        assert!(
+            ((ttft_b - ttft_c) - (xfer_b - xfer_c)).abs() < 1e-9,
+            "TTFT delta {} != transfer delta {}",
+            ttft_b - ttft_c,
+            xfer_b - xfer_c
+        );
+        assert!(ttft_c > xfer_c, "TTFT must include the transfer it charges");
+    }
+
+    #[test]
     fn prop_conservation_across_random_configs() {
         // Every injected request ends exactly once (completed or timed
         // out), for random fleet shapes, policies and loads.
@@ -1772,9 +1881,15 @@ mod tests {
         assert!(w.mean_e2e_ms() >= w.mean_ttft_ms());
         assert!(w.tp_share() > 0.0 && w.tp_share() <= 1.0);
         assert!(w.slo_ok <= w.completed);
+        // D2D accounting rides the same window.
+        assert!(w.xfers > 0, "no transfer accounted in the window");
+        assert!(w.mean_xfer_ms() > 0.0);
+        assert!(w.d2d_utilization() > 0.0 && w.d2d_utilization() <= 1.0);
         // Reset-on-take.
         let w2 = sim.take_window();
         assert_eq!(w2.total(), 0);
+        assert_eq!(w2.xfers, 0);
+        assert_eq!(w2.mean_xfer_ms(), 0.0);
     }
 
     #[test]
