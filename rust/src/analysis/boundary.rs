@@ -1,0 +1,88 @@
+//! Compile-time shard-boundary assertions.
+//!
+//! The ROADMAP's parallel-sim item shards independent scenes onto worker
+//! threads with a deterministic merge. That is only sound for state that
+//! is `Send`. This module pins the current boundary in the type system:
+//! state that already crosses threads safely is asserted `Send` below (a
+//! regression fails `cargo build`), and state that must *become* `Send`
+//! before sharding lands is documented on [`NotYetSend`] with
+//! `compile_fail` doctests that flip the moment someone fixes it.
+
+/// Compile-time proof that `T: Send`. Usable in `const` position:
+/// `const _: () = assert_send::<T>();`.
+pub const fn assert_send<T: Send>() {}
+
+/// Compile-time proof that `T: Sync`.
+pub const fn assert_sync<T: Sync>() {}
+
+// The state a scene-sharding worker thread would own or return. Every
+// type here is part of the per-scene simulation loop or its merged
+// output; if a refactor makes one of them non-Send (an Rc, a RefCell, a
+// raw pointer), the build breaks here instead of in the sharding PR.
+const _: () = {
+    assert_send::<crate::util::prng::Rng>();
+    assert_send::<crate::sim::EventQueue<u64>>();
+    assert_send::<crate::workload::Request>();
+    assert_send::<crate::workload::Scenario>();
+    assert_send::<crate::workload::generator::OpenLoopGen>();
+    assert_send::<crate::workload::generator::ClosedLoopGen>();
+    assert_send::<crate::cluster::hbm::BlockAllocator>();
+    assert_send::<crate::util::stats::Welford>();
+    assert_send::<crate::util::stats::Summary>();
+    assert_send::<crate::util::stats::Histogram>();
+    assert_send::<crate::serving::sim::WindowStats>();
+    assert_send::<crate::serving::fleet::FleetConfig>();
+    assert_send::<crate::coordinator::mlops::InstanceLedger>();
+    assert_send::<crate::coordinator::mlops::LedgerReport>();
+};
+
+/// What is **not** yet `Send` — the debt the scene-sharding PR must
+/// clear before per-scene state can move onto worker threads.
+///
+/// Each block below is a `compile_fail` doctest: it fails to compile
+/// *today* because the named type holds `Rc`/`RefCell` state or a
+/// non-`Send` trait object. When a refactor makes one of these `Send`,
+/// its doctest starts compiling, `cargo test` flags it, and the type
+/// should move up into this module's positive assertions.
+///
+/// [`Simulation`] holds `Rc<Vec<i32>>` shared-prefix token state and an
+/// `Rc<RefCell<…>>` prefix cache:
+///
+/// ```compile_fail
+/// fn assert_send<T: Send>() {}
+/// assert_send::<pd_serve::serving::sim::Simulation>();
+/// ```
+///
+/// [`FleetSim`] embeds one `Simulation` per group plus a boxed
+/// `RoutePolicy` without a `Send` bound:
+///
+/// ```compile_fail
+/// fn assert_send<T: Send>() {}
+/// assert_send::<pd_serve::serving::fleet::FleetSim>();
+/// ```
+///
+/// [`SharedPrefixCache`] is literally an `Rc<RefCell<PrefixCache>>`
+/// handle:
+///
+/// ```compile_fail
+/// fn assert_send<T: Send>() {}
+/// assert_send::<pd_serve::cluster::prefix::SharedPrefixCache>();
+/// ```
+///
+/// [`Simulation`]: crate::serving::sim::Simulation
+/// [`FleetSim`]: crate::serving::fleet::FleetSim
+/// [`SharedPrefixCache`]: crate::cluster::prefix::SharedPrefixCache
+pub struct NotYetSend;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assertions_also_hold_at_runtime_use_sites() {
+        // The const block above is the real gate; this keeps the helpers
+        // exercised from test code too (and under Miri-like runners).
+        assert_send::<crate::util::prng::Rng>();
+        assert_sync::<crate::workload::Scenario>();
+    }
+}

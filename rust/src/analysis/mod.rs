@@ -1,0 +1,459 @@
+//! `pdserve lint` — determinism and invariant static analysis over the
+//! crate's own sources.
+//!
+//! A fixed seed must yield bit-identical simulation results: that is the
+//! contract every figure repro rests on, and the precondition for the
+//! ROADMAP's scene-sharding work. This subsystem enforces the contract
+//! with a dependency-free, token/line-level linter over `src/`:
+//!
+//! - [`scanner`] strips comments and literal bodies so rules only ever
+//!   match code, and parses suppression pragmas out of comments;
+//! - [`rules`] implements the determinism rules — `wall-clock-in-sim`,
+//!   `ambient-rng`, `unordered-iteration`, `nan-unwrap-ordering`,
+//!   `unstable-tie-sort` — plus the unwrap/expect counting behind
+//!   `unwrap-in-lib`;
+//! - [`ratchet`] holds the committed per-file unwrap budget that may
+//!   only shrink;
+//! - [`boundary`] pins the shard boundary in the type system with
+//!   compile-time `Send` assertions.
+//!
+//! A finding is suppressed by a comment reading
+//! `pdlint: allow(<rule> — <reason>)` on (or directly above) the line;
+//! the reason is mandatory and an unused pragma is itself an error, so
+//! suppressions cannot rot. `pdserve lint` exits non-zero on any
+//! error-severity finding, which is the CI gate.
+#![deny(missing_docs)]
+
+pub mod boundary;
+pub mod ratchet;
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::jobj;
+use crate::util::cli::ParsedArgs;
+use crate::util::json::Json;
+
+use self::ratchet::Baseline;
+use self::rules::{Finding, Severity};
+
+/// This crate's `src/` at build time — `pdserve lint` with no flags
+/// lints the tree it was compiled from, regardless of the working
+/// directory it runs in.
+pub const DEFAULT_SRC: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+
+/// The committed ratchet baseline, next to `Cargo.toml`.
+pub const DEFAULT_BASELINE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/lint.baseline");
+
+/// Result of one lint run.
+#[derive(Clone, Debug)]
+pub struct LintReport {
+    /// Files scanned (relative paths under `src/`).
+    pub files_scanned: usize,
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Measured per-file unwrap/expect counts in non-test code — the
+    /// input to `--write-baseline`.
+    pub counts: BTreeMap<String, usize>,
+}
+
+impl LintReport {
+    /// Error-severity findings (the CI gate).
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Advisory findings.
+    pub fn notes(&self) -> usize {
+        self.findings.len() - self.errors()
+    }
+
+    /// The report as JSON with stable key order — the shape uploaded as
+    /// a CI artifact by the lint job.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                jobj! {
+                    "rule" => f.rule,
+                    "severity" => f.severity.label(),
+                    "file" => f.file.as_str(),
+                    "line" => f.line,
+                    "message" => f.message.as_str(),
+                }
+            })
+            .collect();
+        jobj! {
+            "files_scanned" => self.files_scanned,
+            "errors" => self.errors(),
+            "notes" => self.notes(),
+            "findings" => findings,
+        }
+    }
+
+    /// Human-readable rendering: one line per finding plus a summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.line > 0 {
+                out.push_str(&format!(
+                    "src/{}:{}: {}[{}]: {}\n",
+                    f.file,
+                    f.line,
+                    f.severity.label(),
+                    f.rule,
+                    f.message
+                ));
+            } else {
+                out.push_str(&format!(
+                    "src/{}: {}[{}]: {}\n",
+                    f.file,
+                    f.severity.label(),
+                    f.rule,
+                    f.message
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "{} files scanned: {} errors, {} notes\n",
+            self.files_scanned,
+            self.errors(),
+            self.notes()
+        ));
+        out
+    }
+}
+
+/// Lint in-memory `(path, contents)` sources against a baseline — the
+/// pure core behind [`lint_tree`], used directly by the fixture tests.
+pub fn lint_sources(files: &[(String, String)], baseline: &Baseline) -> LintReport {
+    let mut findings = Vec::new();
+    let mut counts = BTreeMap::new();
+    for (path, text) in files {
+        let lines = scanner::scan(text);
+        let (pragmas, syntax_errors) = scanner::pragmas(&lines);
+        for (line, message) in syntax_errors {
+            findings.push(Finding {
+                rule: rules::BAD_PRAGMA,
+                severity: Severity::Error,
+                file: path.clone(),
+                line,
+                message,
+            });
+        }
+        // A pragma must name a known rule and carry a reason to count.
+        let mut valid = Vec::with_capacity(pragmas.len());
+        for p in &pragmas {
+            if !rules::RULE_IDS.contains(&p.rule.as_str()) {
+                findings.push(Finding {
+                    rule: rules::BAD_PRAGMA,
+                    severity: Severity::Error,
+                    file: path.clone(),
+                    line: p.line,
+                    message: format!("pragma names unknown rule `{}`", p.rule),
+                });
+                valid.push(false);
+            } else if p.reason.is_empty() {
+                findings.push(Finding {
+                    rule: rules::BAD_PRAGMA,
+                    severity: Severity::Error,
+                    file: path.clone(),
+                    line: p.line,
+                    message: format!(
+                        "pragma for `{0}` carries no reason; write `allow({0} — <why>)`",
+                        p.rule
+                    ),
+                });
+                valid.push(false);
+            } else {
+                valid.push(true);
+            }
+        }
+        let mut used = vec![false; pragmas.len()];
+        for finding in rules::check_file(path, &lines) {
+            let mut suppressed = false;
+            for (k, p) in pragmas.iter().enumerate() {
+                if valid[k] && p.rule == finding.rule && p.applies_to == finding.line {
+                    used[k] = true;
+                    suppressed = true;
+                }
+            }
+            if !suppressed {
+                findings.push(finding);
+            }
+        }
+        // The unwrap ratchet: pragma-carrying lines are excused from the
+        // count (and such a pragma is "used" only if the line has hits).
+        let mut total = 0;
+        for &(line, n) in &rules::unwrap_lines(&lines) {
+            let mut excused = false;
+            for (k, p) in pragmas.iter().enumerate() {
+                if valid[k] && p.rule == rules::UNWRAP_BUDGET && p.applies_to == line {
+                    used[k] = true;
+                    excused = true;
+                }
+            }
+            if !excused {
+                total += n;
+            }
+        }
+        counts.insert(path.clone(), total);
+        for (k, p) in pragmas.iter().enumerate() {
+            if valid[k] && !used[k] {
+                findings.push(Finding {
+                    rule: rules::BAD_PRAGMA,
+                    severity: Severity::Error,
+                    file: path.clone(),
+                    line: p.line,
+                    message: format!(
+                        "unused pragma: no `{}` finding on line {}",
+                        p.rule, p.applies_to
+                    ),
+                });
+            }
+        }
+    }
+    findings.extend(ratchet::check(&counts, baseline));
+    findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    LintReport { files_scanned: files.len(), findings, counts }
+}
+
+/// Collect `(relative path, contents)` for every `.rs` file under
+/// `src_dir`, sorted by path — scan order is part of the deterministic
+/// output contract.
+pub fn collect_sources(src_dir: &Path) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    walk(src_dir, src_dir, &mut out)?;
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn walk(dir: &Path, base: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, base, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel: Vec<String> = path
+                .strip_prefix(base)?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect();
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push((rel.join("/"), text));
+        }
+    }
+    Ok(())
+}
+
+/// Options for a tree lint.
+#[derive(Clone, Copy, Debug)]
+pub struct LintOptions<'a> {
+    /// Directory scanned recursively for `.rs` files.
+    pub src_dir: &'a Path,
+    /// Path of the committed ratchet baseline.
+    pub baseline_path: &'a Path,
+}
+
+/// Lint a source tree against its committed baseline.
+pub fn lint_tree(opts: &LintOptions) -> Result<LintReport> {
+    let files = collect_sources(opts.src_dir)?;
+    let text = fs::read_to_string(opts.baseline_path)
+        .with_context(|| format!("reading baseline {}", opts.baseline_path.display()))?;
+    let baseline = Baseline::parse(&text).map_err(anyhow::Error::msg)?;
+    Ok(lint_sources(&files, &baseline))
+}
+
+/// `pdserve lint [--json] [--out FILE] [--src DIR] [--baseline FILE]
+/// [--write-baseline]`.
+///
+/// Exit code 0 when the tree is clean (notes allowed), 1 on any
+/// error-severity finding, 2 on I/O problems. `--out` writes the JSON
+/// report to a file regardless of the console format — the CI job
+/// uploads that file as a workflow artifact.
+pub fn cmd_lint(args: &ParsedArgs) -> i32 {
+    let src = args.get_or("src", DEFAULT_SRC);
+    let baseline_path = args.get_or("baseline", DEFAULT_BASELINE);
+    if args.has("write-baseline") {
+        return write_baseline(Path::new(src), Path::new(baseline_path));
+    }
+    let opts =
+        LintOptions { src_dir: Path::new(src), baseline_path: Path::new(baseline_path) };
+    let report = match lint_tree(&opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: {e:#}");
+            return 2;
+        }
+    };
+    if let Some(out_path) = args.get("out") {
+        if let Err(e) = fs::write(out_path, report.to_json().to_string_pretty()) {
+            eprintln!("lint: writing {out_path}: {e}");
+            return 2;
+        }
+    }
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.errors() > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn write_baseline(src: &Path, baseline: &Path) -> i32 {
+    let files = match collect_sources(src) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: {e:#}");
+            return 2;
+        }
+    };
+    let report = lint_sources(&files, &Baseline::empty());
+    let text = Baseline::render(&report.counts);
+    match fs::write(baseline, &text) {
+        Ok(()) => {
+            print!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("lint: writing {}: {e}", baseline.display());
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs.iter().map(|(p, t)| (p.to_string(), t.to_string())).collect()
+    }
+
+    fn errors(report: &LintReport) -> Vec<String> {
+        report
+            .findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .map(|f| format!("{}:{}:{}", f.file, f.line, f.rule))
+            .collect()
+    }
+
+    #[test]
+    fn one_violation_per_rule_is_found() {
+        let report = lint_sources(
+            &files(&[
+                ("serving/fleet_shard.rs", "let t = std::time::Instant::now();\n"),
+                ("workload/gen2.rs", "let r = thread_rng();\n"),
+                ("cluster/map.rs", "use std::collections::HashMap;\n"),
+                ("experiments/sorty.rs", "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"),
+                ("serving/fleet.rs", "groups.sort_by_key(|g| g.load);\n"),
+            ]),
+            &Baseline::empty(),
+        );
+        let got = errors(&report);
+        assert_eq!(
+            got,
+            vec![
+                "cluster/map.rs:1:unordered-iteration",
+                "experiments/sorty.rs:1:nan-unwrap-ordering",
+                "serving/fleet.rs:1:unstable-tie-sort",
+                "serving/fleet_shard.rs:1:wall-clock-in-sim",
+                "workload/gen2.rs:1:ambient-rng",
+            ]
+        );
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses_and_is_consumed() {
+        let src = "\
+// pdlint: allow(wall-clock-in-sim — fixture: measured path shim)
+let t = std::time::Instant::now();
+";
+        let report = lint_sources(&files(&[("serving/x.rs", src)]), &Baseline::empty());
+        assert!(report.findings.is_empty(), "{:?}", report.findings);
+    }
+
+    #[test]
+    fn pragma_problems_are_errors() {
+        let cases = [
+            // Missing reason.
+            "let t = std::time::Instant::now(); // pdlint: allow(wall-clock-in-sim)\n",
+            // Unknown rule.
+            "let t = std::time::Instant::now(); // pdlint: allow(no-such-rule — x)\n",
+            // Unused pragma (nothing to suppress on the line).
+            "let t = 1; // pdlint: allow(ambient-rng — stale)\n",
+            // Malformed body.
+            "let t = 1; // pdlint: warn(ambient-rng)\n",
+        ];
+        for src in cases {
+            let report = lint_sources(&files(&[("serving/x.rs", src)]), &Baseline::empty());
+            assert!(
+                report.findings.iter().any(|f| f.rule == rules::BAD_PRAGMA),
+                "no bad-pragma for {src:?}: {:?}",
+                report.findings
+            );
+        }
+        // The invalid-pragma cases still report the underlying finding.
+        let report = lint_sources(&files(&[("serving/x.rs", cases[0])]), &Baseline::empty());
+        assert!(report.findings.iter().any(|f| f.rule == rules::WALL_CLOCK));
+    }
+
+    #[test]
+    fn unwrap_ratchet_counts_pragmas_and_budgets() {
+        let src = "\
+fn a() {
+    x.unwrap();
+    y.expect(\"msg\"); // pdlint: allow(unwrap-in-lib — startup invariant)
+}
+#[cfg(test)]
+mod tests {
+    fn t() { q.unwrap(); }
+}
+";
+        // One counted unwrap (the pragma excuses the expect, tests are
+        // free): budget 1 is clean, budget 0 fails, budget 2 notes.
+        let sources = files(&[("kvcache/x.rs", src)]);
+        let clean = lint_sources(&sources, &Baseline::parse("kvcache/x.rs 1\n").unwrap());
+        assert_eq!(clean.errors(), 0, "{:?}", clean.findings);
+        assert_eq!(clean.counts["kvcache/x.rs"], 1);
+        let over = lint_sources(&sources, &Baseline::empty());
+        assert_eq!(over.errors(), 1);
+        let under = lint_sources(&sources, &Baseline::parse("kvcache/x.rs 2\n").unwrap());
+        assert_eq!(under.errors(), 0);
+        assert_eq!(under.notes(), 1);
+    }
+
+    #[test]
+    fn json_report_shape_is_stable() {
+        let report = lint_sources(
+            &files(&[("workload/gen2.rs", "let r = thread_rng();\n")]),
+            &Baseline::empty(),
+        );
+        let j = report.to_json();
+        assert_eq!(j.at(&["errors"]).and_then(Json::as_usize), Some(1));
+        let arr = j.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("ambient-rng"));
+        assert_eq!(arr[0].get("line").and_then(Json::as_usize), Some(1));
+        // The writer is byte-deterministic; two renders agree.
+        assert_eq!(j.to_string_pretty(), report.to_json().to_string_pretty());
+    }
+}

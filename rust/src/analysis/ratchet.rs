@@ -1,0 +1,156 @@
+//! The unwrap/expect ratchet: a committed per-file budget that may only
+//! shrink.
+//!
+//! `lint.baseline` (crate root, next to `Cargo.toml`) records how many
+//! `.unwrap()`/`.expect(…)` calls each source file carries in non-test
+//! code. A file over its budget is an error; a file under it is a note
+//! suggesting the baseline be tightened. New files start at budget zero,
+//! so new panicking call sites cannot land silently anywhere.
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, Severity, UNWRAP_BUDGET};
+
+/// Parsed `lint.baseline`: per-file unwrap/expect budgets.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    /// Budget per source path (relative to `src/`); absent means 0.
+    pub budgets: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    /// The all-zero baseline: every non-test unwrap is over budget.
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    /// Parse the committed baseline. `#`-prefixed and blank lines are
+    /// skipped; data lines are `<path> <budget>`.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut budgets = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(path), Some(count), None) = (parts.next(), parts.next(), parts.next())
+            else {
+                return Err(format!("baseline line {}: expected `<path> <budget>`", ln + 1));
+            };
+            let Ok(budget) = count.parse::<usize>() else {
+                return Err(format!("baseline line {}: bad budget `{count}`", ln + 1));
+            };
+            budgets.insert(path.to_string(), budget);
+        }
+        Ok(Baseline { budgets })
+    }
+
+    /// Budget for `path` (0 when unlisted).
+    pub fn budget(&self, path: &str) -> usize {
+        self.budgets.get(path).copied().unwrap_or(0)
+    }
+
+    /// Render a baseline file from measured counts; zero-count files are
+    /// omitted so the committed file only lists real debt.
+    pub fn render(counts: &BTreeMap<String, usize>) -> String {
+        let mut out = String::from(
+            "# pdserve lint: per-file unwrap/expect budget (non-test code).\n\
+             # The ratchet may only shrink: equal or lower counts pass, higher fail.\n\
+             # Regenerate after review with `pdserve lint --write-baseline`.\n",
+        );
+        for (path, n) in counts {
+            if *n > 0 {
+                out.push_str(&format!("{path} {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Compare measured per-file counts against the committed budgets.
+pub fn check(counts: &BTreeMap<String, usize>, baseline: &Baseline) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (path, &n) in counts {
+        let budget = baseline.budget(path);
+        if n > budget {
+            out.push(Finding {
+                rule: UNWRAP_BUDGET,
+                severity: Severity::Error,
+                file: path.clone(),
+                line: 0,
+                message: format!(
+                    "{n} unwrap/expect calls in non-test code exceed the ratchet budget \
+                     {budget}; handle the error instead, or lower the count elsewhere in \
+                     the file"
+                ),
+            });
+        } else if n < budget {
+            out.push(Finding {
+                rule: UNWRAP_BUDGET,
+                severity: Severity::Note,
+                file: path.clone(),
+                line: 0,
+                message: format!(
+                    "{n} unwrap/expect calls under the budget of {budget} — tighten the \
+                     ratchet with `pdserve lint --write-baseline`"
+                ),
+            });
+        }
+    }
+    for path in baseline.budgets.keys() {
+        if !counts.contains_key(path) {
+            out.push(Finding {
+                rule: UNWRAP_BUDGET,
+                severity: Severity::Note,
+                file: path.clone(),
+                line: 0,
+                message: "baseline lists a file that was not scanned; regenerate with \
+                          `pdserve lint --write-baseline`"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|(p, n)| (p.to_string(), *n)).collect()
+    }
+
+    #[test]
+    fn parse_skips_comments_and_rejects_garbage() {
+        let b = Baseline::parse("# header\n\ncluster/hbm.rs 3\nutil/json.rs 12\n").unwrap();
+        assert_eq!(b.budget("cluster/hbm.rs"), 3);
+        assert_eq!(b.budget("unlisted.rs"), 0);
+        assert!(Baseline::parse("cluster/hbm.rs three\n").is_err());
+        assert!(Baseline::parse("too many words here\n").is_err());
+    }
+
+    #[test]
+    fn ratchet_over_under_and_exact() {
+        let base = Baseline::parse("a.rs 2\nb.rs 2\ngone.rs 1\n").unwrap();
+        let got = check(&counts(&[("a.rs", 3), ("b.rs", 1), ("c.rs", 0)]), &base);
+        let over: Vec<_> =
+            got.iter().filter(|f| f.severity == Severity::Error).collect();
+        assert_eq!(over.len(), 1);
+        assert_eq!(over[0].file, "a.rs");
+        let notes: Vec<_> = got.iter().filter(|f| f.severity == Severity::Note).collect();
+        // b.rs is under budget, gone.rs is stale; c.rs at zero is silent.
+        assert_eq!(notes.len(), 2);
+    }
+
+    #[test]
+    fn roundtrip_render_parse() {
+        let c = counts(&[("x.rs", 2), ("y.rs", 0)]);
+        let text = Baseline::render(&c);
+        let back = Baseline::parse(&text).unwrap();
+        assert_eq!(back.budget("x.rs"), 2);
+        // Zero-count files are omitted entirely.
+        assert!(!text.contains("y.rs"));
+    }
+}

@@ -1,0 +1,448 @@
+//! The determinism rule engine.
+//!
+//! Each rule scans the code channel of a scanned file (see
+//! [`super::scanner`]) and yields [`Finding`]s. Rules are deliberately
+//! line-level and allowlist-driven: the point is not general Rust
+//! analysis but enforcing this crate's reproducibility contract — a
+//! fixed seed must yield bit-identical simulation results, which is the
+//! precondition for sharding scenes onto worker threads (ROADMAP).
+
+use super::scanner::LineView;
+
+/// Wall-clock reads (`Instant`/`SystemTime`) outside the measured-path
+/// allowlist.
+pub const WALL_CLOCK: &str = "wall-clock-in-sim";
+/// Ambient randomness (`thread_rng`, `rand::random`, `RandomState`)
+/// outside the seeded-PRNG module.
+pub const AMBIENT_RNG: &str = "ambient-rng";
+/// Hash-ordered containers (`HashMap`/`HashSet`) in deterministic
+/// modules.
+pub const UNORDERED_ITER: &str = "unordered-iteration";
+/// `partial_cmp(..)` forced with unwrap/expect in comparator position.
+pub const NAN_UNWRAP: &str = "nan-unwrap-ordering";
+/// Load-keyed sorts without an explicit id tie-break.
+pub const UNSTABLE_SORT: &str = "unstable-tie-sort";
+/// The per-file unwrap/expect budget (may only shrink).
+pub const UNWRAP_BUDGET: &str = "unwrap-in-lib";
+/// Pseudo-rule for pragma syntax/usage problems (not suppressible).
+pub const BAD_PRAGMA: &str = "bad-pragma";
+
+/// Every pragma-addressable rule id.
+pub const RULE_IDS: [&str; 6] =
+    [WALL_CLOCK, AMBIENT_RNG, UNORDERED_ITER, NAN_UNWRAP, UNSTABLE_SORT, UNWRAP_BUDGET];
+
+/// Severity of a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Fails `pdserve lint` (and therefore CI).
+    Error,
+    /// Advisory — e.g. an unwrap budget that can be tightened.
+    Note,
+}
+
+impl Severity {
+    /// Lowercase label used in text and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Note => "note",
+        }
+    }
+}
+
+/// One finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id.
+    pub rule: &'static str,
+    /// Severity.
+    pub severity: Severity,
+    /// Source path relative to `src/`, forward slashes.
+    pub file: String,
+    /// 1-based line, or 0 for whole-file findings (the unwrap ratchet).
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+/// Files where wall-clock reads are legitimate: the real serving engine,
+/// the PJRT runtime and the bench harness measure real time by design.
+const WALL_CLOCK_ALLOWED: [&str; 3] = ["bench.rs", "runtime/model.rs", "serving/server.rs"];
+
+/// Files exempt from the hash-container ban (not on the sim result path).
+const UNORDERED_ALLOWED: [&str; 4] =
+    ["bench.rs", "main.rs", "runtime/model.rs", "serving/server.rs"];
+
+/// The one module allowed to own randomness.
+const RNG_ALLOWED: [&str; 1] = ["util/prng.rs"];
+
+/// Files whose load-keyed sorts must carry an id tie-break.
+const TIE_SORT_SCOPE: [&str; 2] = ["serving/fleet.rs", "coordinator/mlops.rs"];
+
+/// Run the five line-level rules over one scanned file.
+pub fn check_file(path: &str, lines: &[LineView]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    wall_clock(path, lines, &mut out);
+    ambient_rng(path, lines, &mut out);
+    unordered_iteration(path, lines, &mut out);
+    nan_unwrap_ordering(path, lines, &mut out);
+    unstable_tie_sort(path, lines, &mut out);
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whole-word occurrence of `word` in `code` (identifier boundaries on
+/// both sides).
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let a = from + pos;
+        let b = a + word.len();
+        let pre = a == 0 || !is_ident_byte(bytes[a - 1]);
+        let post = b == bytes.len() || !is_ident_byte(bytes[b]);
+        if pre && post {
+            return true;
+        }
+        from = b;
+    }
+    false
+}
+
+fn push(out: &mut Vec<Finding>, rule: &'static str, path: &str, line: usize, message: String) {
+    out.push(Finding {
+        rule,
+        severity: Severity::Error,
+        file: path.to_string(),
+        line,
+        message,
+    });
+}
+
+fn wall_clock(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    if WALL_CLOCK_ALLOWED.contains(&path) {
+        return;
+    }
+    for (idx, lv) in lines.iter().enumerate() {
+        for word in ["Instant", "SystemTime"] {
+            if has_word(&lv.code, word) {
+                push(
+                    out,
+                    WALL_CLOCK,
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{word}` reads the wall clock in a deterministic module; use sim \
+                         virtual time (allowed only in {})",
+                        WALL_CLOCK_ALLOWED.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn ambient_rng(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    if RNG_ALLOWED.contains(&path) {
+        return;
+    }
+    for (idx, lv) in lines.iter().enumerate() {
+        for word in ["thread_rng", "rand::random", "RandomState"] {
+            if has_word(&lv.code, word) {
+                push(
+                    out,
+                    AMBIENT_RNG,
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{word}` is ambient randomness; every stochastic draw must come \
+                         from an explicitly seeded `util::prng::Rng`"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn unordered_iteration(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    if UNORDERED_ALLOWED.contains(&path) {
+        return;
+    }
+    for (idx, lv) in lines.iter().enumerate() {
+        for word in ["HashMap", "HashSet"] {
+            if has_word(&lv.code, word) {
+                push(
+                    out,
+                    UNORDERED_ITER,
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{word}` iteration order is seeded per process; use \
+                         `BTreeMap`/`BTreeSet` (or sort keys before iterating) in \
+                         deterministic modules"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn nan_unwrap_ordering(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    for (idx, lv) in lines.iter().enumerate() {
+        if !has_word(&lv.code, "partial_cmp") || lv.code.contains("fn partial_cmp") {
+            continue;
+        }
+        // The statement window: this line from the call site, plus up to
+        // two continuation lines, cut at the first `;`.
+        let Some(pos) = lv.code.find("partial_cmp") else {
+            continue;
+        };
+        let mut window = lv.code[pos..].to_string();
+        for next in lines.iter().skip(idx + 1).take(2) {
+            if window.contains(';') {
+                break;
+            }
+            window.push('\n');
+            window.push_str(&next.code);
+        }
+        let stmt = match window.find(';') {
+            Some(end) => &window[..end],
+            None => window.as_str(),
+        };
+        if [".unwrap()", ".expect(", ".unwrap_or("].iter().any(|&p| stmt.contains(p)) {
+            push(
+                out,
+                NAN_UNWRAP,
+                path,
+                idx + 1,
+                "`partial_cmp(..)` forced in comparator position panics (unwrap/expect) or \
+                 silently reorders (unwrap_or) on NaN; use `f64::total_cmp`"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+fn unstable_tie_sort(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    if !TIE_SORT_SCOPE.contains(&path) {
+        return;
+    }
+    for (idx, lv) in lines.iter().enumerate() {
+        let code = &lv.code;
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(".sort") {
+            let at = from + pos;
+            let rest = &code[at..];
+            let (name, is_key) = if rest.starts_with(".sort_by_key(") {
+                (".sort_by_key", true)
+            } else if rest.starts_with(".sort_unstable_by_key(") {
+                (".sort_unstable_by_key", true)
+            } else if rest.starts_with(".sort_by(") {
+                (".sort_by", false)
+            } else if rest.starts_with(".sort_unstable_by(") {
+                (".sort_unstable_by", false)
+            } else {
+                from = at + ".sort".len();
+                continue;
+            };
+            let open = at + name.len();
+            let arg = balanced_arg(lines, idx, open);
+            // A comparator needs an explicit `.then`/`.then_with` chain;
+            // a key function passes with a composite (tuple) key or an
+            // explicit reversed-id component.
+            let ok = if is_key {
+                arg.contains(".then") || arg.contains("usize::MAX") || arg.contains(',')
+            } else {
+                arg.contains(".then")
+            };
+            if !ok {
+                push(
+                    out,
+                    UNSTABLE_SORT,
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{}` keyed on load without an explicit id tie-break; equal loads \
+                         order nondeterministically — append `.then(id cmp)` or add an id \
+                         key component",
+                        &name[1..]
+                    ),
+                );
+            }
+            from = open;
+        }
+    }
+}
+
+/// The balanced-paren argument starting at `lines[start].code[open]`
+/// (which must be the call's `(`), spanning at most a dozen lines.
+fn balanced_arg(lines: &[LineView], start: usize, open: usize) -> String {
+    let mut depth = 0usize;
+    let mut arg = String::new();
+    for (k, lv) in lines.iter().enumerate().skip(start).take(12) {
+        let code = if k == start { &lv.code[open..] } else { lv.code.as_str() };
+        for c in code.chars() {
+            match c {
+                '(' => {
+                    if depth > 0 {
+                        arg.push(c);
+                    }
+                    depth += 1;
+                }
+                ')' => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return arg;
+                    }
+                    arg.push(c);
+                }
+                _ => {
+                    if depth > 0 {
+                        arg.push(c);
+                    }
+                }
+            }
+        }
+        arg.push('\n');
+    }
+    arg
+}
+
+/// Per-line unwrap/expect counts in non-test code: `(line, count)` for
+/// every line with at least one hit. Everything from the first
+/// `#[cfg(test)]` line on is exempt — panics in tests are assertions.
+pub fn unwrap_lines(lines: &[LineView]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (idx, lv) in lines.iter().enumerate() {
+        if lv.code.contains("#[cfg(test)]") {
+            break;
+        }
+        let n = count_occurrences(&lv.code, ".unwrap()") + count_occurrences(&lv.code, ".expect(");
+        if n > 0 {
+            out.push((idx + 1, n));
+        }
+    }
+    out
+}
+
+fn count_occurrences(hay: &str, needle: &str) -> usize {
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        n += 1;
+        from += pos + needle.len();
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn findings(path: &str, src: &str) -> Vec<Finding> {
+        check_file(path, &scan(src))
+    }
+
+    #[test]
+    fn wall_clock_flags_and_allowlists() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        let hits = findings("serving/fleet.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, WALL_CLOCK);
+        assert_eq!(hits[0].line, 1);
+        assert!(findings("serving/server.rs", src).is_empty());
+        // Words inside strings or comments never match.
+        assert!(findings("serving/fleet.rs", "let s = \"Instant\"; // Instant\n").is_empty());
+    }
+
+    #[test]
+    fn ambient_rng_flags_all_three_forms() {
+        for src in
+            ["let mut r = thread_rng();\n", "let x: f64 = rand::random();\n", "RandomState::new()\n"]
+        {
+            let hits = findings("workload/generator.rs", src);
+            assert_eq!(hits.len(), 1, "{src}");
+            assert_eq!(hits[0].rule, AMBIENT_RNG);
+        }
+        assert!(findings("util/prng.rs", "thread_rng()\n").is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_flags_hash_containers() {
+        let src = "use std::collections::HashMap;\n";
+        let hits = findings("cluster/hbm.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, UNORDERED_ITER);
+        // Identifier boundaries: a BTreeMap mentioning module is clean.
+        assert!(findings("cluster/hbm.rs", "use std::collections::BTreeMap;\n").is_empty());
+        assert!(findings("main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nan_unwrap_same_line_and_continuation() {
+        let one = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let hits = findings("experiments/fig01.rs", one);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, NAN_UNWRAP);
+        let multi = "xs.sort_by(|a, b| {\n    a.partial_cmp(b)\n        .unwrap()\n});\n";
+        assert_eq!(findings("util/stats.rs", multi).len(), 1);
+        let or = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n";
+        assert_eq!(findings("util/stats.rs", or).len(), 1);
+        // total_cmp and the trait impl's own definition are clean.
+        assert!(findings("util/stats.rs", "xs.sort_by(f64::total_cmp);\n").is_empty());
+        assert!(findings(
+            "sim/mod.rs",
+            "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n"
+        )
+        .is_empty());
+        // The unwrap after the statement boundary belongs to other code.
+        assert!(findings("util/stats.rs", "let c = a.partial_cmp(&b); opt.unwrap();\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn unstable_sort_needs_tie_break_in_scope_only() {
+        let bare = "groups.sort_by_key(|g| g.load);\n";
+        let hits = findings("serving/fleet.rs", bare);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, UNSTABLE_SORT);
+        // Composite keys, .then chains and reversed-id components pass.
+        assert!(findings("serving/fleet.rs", "groups.sort_by_key(|g| (g.load, g.id));\n")
+            .is_empty());
+        assert!(findings(
+            "coordinator/mlops.rs",
+            "order.sort_by(|a, b| a.due.total_cmp(&b.due).then(a.id.cmp(&b.id)));\n"
+        )
+        .is_empty());
+        assert!(findings(
+            "serving/fleet.rs",
+            "v.sort_by_key(|&i| {\n    (load(i), usize::MAX - i)\n});\n"
+        )
+        .is_empty());
+        // A comparator with no .then is flagged even across lines.
+        let cmp = "order.sort_by(|a, b| {\n    a.due\n        .total_cmp(&b.due)\n});\n";
+        assert_eq!(findings("coordinator/mlops.rs", cmp).len(), 1);
+        // Out-of-scope files are not this rule's business.
+        assert!(findings("util/stats.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn unwrap_counting_stops_at_test_mod() {
+        let src = "\
+fn a() {
+    x.unwrap();
+    y.expect(\"msg\"); z.unwrap();
+}
+#[cfg(test)]
+mod tests {
+    fn t() { q.unwrap(); }
+}
+";
+        let per_line = unwrap_lines(&scan(src));
+        assert_eq!(per_line, vec![(2, 1), (3, 2)]);
+    }
+}

@@ -1,0 +1,360 @@
+//! Line-level scanner: strips comments and literal bodies from Rust
+//! source so rules match *code*, and extracts suppression pragmas from
+//! the comment channel.
+//!
+//! The scanner is a small state machine, not a parser. It tracks line
+//! comments, nested block comments, string literals (plain, byte, and raw
+//! with any `#` count) and char literals (disambiguated from lifetimes),
+//! and emits two aligned channels per line:
+//!
+//! - `code`: the source with every comment and literal body blanked to
+//!   spaces (columns preserved), so rule patterns can never match text
+//!   that only appears inside a string or a comment — including the
+//!   pattern strings in the rule engine's own source;
+//! - `comment`: the comment text of the line, which is where the
+//!   suppression pragmas described in [`Pragma`] live.
+
+/// One source line split into aligned channels.
+#[derive(Clone, Debug, Default)]
+pub struct LineView {
+    /// What the compiler sees, minus comment and literal text.
+    pub code: String,
+    /// The line's comment text (`//`, `///`, `//!` and block bodies).
+    pub comment: String,
+}
+
+/// Scanner state that survives a newline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    /// Plain code.
+    Code,
+    /// Inside a block comment, nested this deep.
+    Block(usize),
+    /// Inside a `"…"` or `b"…"` string literal.
+    Str,
+    /// Inside a raw string literal delimited by this many `#`s.
+    Raw(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If a raw or byte string literal opens at `chars[i]`, return its state
+/// and the opener length (`b"`, `r"`, `r##"`, `br#"` …).
+fn literal_open(chars: &[char], i: usize) -> Option<(State, usize)> {
+    let mut j = i;
+    let mut raw = false;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    if raw {
+        let mut hashes = 0;
+        while chars.get(j + hashes) == Some(&'#') {
+            hashes += 1;
+        }
+        if chars.get(j + hashes) == Some(&'"') {
+            return Some((State::Raw(hashes), j + hashes + 1 - i));
+        }
+        return None;
+    }
+    if chars.get(j) == Some(&'"') {
+        return Some((State::Str, j + 1 - i));
+    }
+    None
+}
+
+/// Split `text` into per-line code/comment channels.
+pub fn scan(text: &str) -> Vec<LineView> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = LineView::default();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+                    if let Some((next, len)) = literal_open(&chars, i) {
+                        state = next;
+                        for _ in 0..len {
+                            cur.code.push(' ');
+                        }
+                        i += len;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // Escaped char literal: blank through the close.
+                        let mut j = i + 3;
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'\'') {
+                            j += 1;
+                        }
+                        for _ in i..j {
+                            cur.code.push(' ');
+                        }
+                        i = j;
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'')
+                    {
+                        // Simple char literal like 'x' (incl. non-ASCII).
+                        cur.code.push_str("   ");
+                        i += 3;
+                    } else {
+                        // A lifetime; keep the tick as code.
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        // Backslash-newline continues the string.
+                        lines.push(std::mem::take(&mut cur));
+                        i += 2;
+                    } else {
+                        cur.code.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            State::Raw(hashes) => {
+                if c == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    for _ in 0..=hashes {
+                        cur.code.push(' ');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// A parsed suppression pragma.
+///
+/// Written as a comment whose text begins with the `pdlint:` marker and
+/// continues `allow(<rule> — <reason>)` — as a trailing comment on the
+/// offending line, or on a comment-only line directly above it. The
+/// separator between rule id and reason is an em dash or `--`; the
+/// reason is mandatory (an empty one is a `bad-pragma` finding).
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line the pragma is written on.
+    pub line: usize,
+    /// 1-based line the suppression applies to: its own line, or the
+    /// next line carrying code when the pragma stands alone.
+    pub applies_to: usize,
+    /// Rule id named inside `allow(…)`.
+    pub rule: String,
+    /// Justification after the dash separator (possibly empty).
+    pub reason: String,
+}
+
+/// Extract pragmas — and pragma syntax errors as `(line, message)` —
+/// from scanned lines.
+pub fn pragmas(lines: &[LineView]) -> (Vec<Pragma>, Vec<(usize, String)>) {
+    let mut found = Vec::new();
+    let mut errors = Vec::new();
+    for (idx, lv) in lines.iter().enumerate() {
+        let line = idx + 1;
+        let text = lv
+            .comment
+            .trim_start_matches(|c: char| matches!(c, '/' | '*' | '!' | ' ' | '\t'));
+        let Some(rest) = text.strip_prefix("pdlint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        let Some(inner) = rest.strip_prefix("allow(").and_then(|r| r.strip_suffix(')'))
+        else {
+            errors.push((
+                line,
+                format!("malformed pragma `{rest}`: expected `allow(<rule> — <reason>)`"),
+            ));
+            continue;
+        };
+        let (rule, reason) = split_reason(inner);
+        let applies_to = if lv.code.trim().is_empty() {
+            lines[idx + 1..]
+                .iter()
+                .position(|l| !l.code.trim().is_empty())
+                .map_or(line, |off| line + 1 + off)
+        } else {
+            line
+        };
+        found.push(Pragma { line, applies_to, rule, reason });
+    }
+    (found, errors)
+}
+
+/// Split `<rule> — <reason>` on the first em dash or `--`.
+fn split_reason(inner: &str) -> (String, String) {
+    for sep in ["—", "--"] {
+        if let Some(pos) = inner.find(sep) {
+            let rule = inner[..pos].trim().to_string();
+            let reason = inner[pos + sep.len()..].trim().to_string();
+            return (rule, reason);
+        }
+    }
+    (inner.trim().to_string(), String::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        scan(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let src = "let x = \"Instant::now()\"; // Instant::now()\nlet y = 1;\n";
+        let lines = scan(src);
+        assert!(!lines[0].code.contains("Instant"));
+        assert!(lines[0].comment.contains("Instant::now()"));
+        assert_eq!(lines[1].code, "let y = 1;");
+        // Columns are preserved through the blanking.
+        assert_eq!(lines[0].code.find(';'), src.find(';'));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* one /* two */ still */ b\nc /* open\nmore */ d\n";
+        let lines = code_of(src);
+        assert!(lines[0].contains('a') && lines[0].contains('b'));
+        assert!(!lines[0].contains("one") && !lines[0].contains("still"));
+        assert!(!lines[1].contains("open"));
+        assert!(!lines[2].contains("more") && lines[2].contains('d'));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let src = "let a = r#\"HashMap \"quoted\" inside\"#; let b = 2;\nlet c = b\"HashSet\";\n";
+        let lines = code_of(src);
+        assert!(!lines[0].contains("HashMap"));
+        assert!(lines[0].contains("let b = 2;"));
+        assert!(!lines[1].contains("HashSet"));
+    }
+
+    #[test]
+    fn multiline_string_state_persists() {
+        let src = "let s = \"line one\nthread_rng() inside\nstill\"; let t = 3;\n";
+        let lines = code_of(src);
+        assert!(!lines[1].contains("thread_rng"));
+        assert!(lines[2].contains("let t = 3;"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'H'; let d = '\\n'; c }\n";
+        let lines = code_of(src);
+        // The lifetime survives as code; the literals are blanked.
+        assert!(lines[0].contains("<'a>"));
+        assert!(!lines[0].contains('H'));
+        assert!(lines[0].contains("let d =     ;"));
+    }
+
+    #[test]
+    fn pragma_trailing_and_standalone() {
+        let src = "\
+let a = 1; // pdlint: allow(wall-clock-in-sim — measured path)
+// pdlint: allow(ambient-rng -- fixture shim)
+
+let b = 2;
+";
+        let lines = scan(src);
+        let (ps, errs) = pragmas(&lines);
+        assert!(errs.is_empty());
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].rule, "wall-clock-in-sim");
+        assert_eq!(ps[0].reason, "measured path");
+        assert_eq!(ps[0].applies_to, 1);
+        // Standalone pragma reaches past the blank line to the next code.
+        assert_eq!(ps[1].rule, "ambient-rng");
+        assert_eq!(ps[1].reason, "fixture shim");
+        assert_eq!(ps[1].applies_to, 4);
+    }
+
+    #[test]
+    fn pragma_without_reason_and_malformed() {
+        let src = "let a = 1; // pdlint: allow(ambient-rng)\nlet b = 2; // pdlint: deny(x)\n";
+        let lines = scan(src);
+        let (ps, errs) = pragmas(&lines);
+        assert_eq!(ps.len(), 1);
+        assert!(ps[0].reason.is_empty());
+        assert_eq!(errs.len(), 1);
+        assert_eq!(errs[0].0, 2);
+    }
+
+    #[test]
+    fn doc_comment_prose_is_not_a_pragma() {
+        let src = "/// Suppress with a trailing `pdlint:` comment.\nlet a = 1;\n";
+        let (ps, errs) = pragmas(&scan(src));
+        assert!(ps.is_empty() && errs.is_empty());
+    }
+}

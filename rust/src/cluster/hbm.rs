@@ -210,7 +210,7 @@ mod tests {
                         a.release(h).map_err(|e| e.to_string())?;
                     }
                     // Invariant: used == sum of live tables; all blocks unique.
-                    let mut seen = std::collections::HashSet::new();
+                    let mut seen = std::collections::BTreeSet::new();
                     let mut used = 0;
                     for (h, _) in &live {
                         let t = a.table(*h).ok_or("lost table")?;

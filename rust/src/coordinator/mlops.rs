@@ -428,8 +428,7 @@ impl InstanceLedger {
             order.sort_by(|&a, &b| {
                 self.leases[a]
                     .due_hour
-                    .partial_cmp(&self.leases[b].due_hour)
-                    .unwrap()
+                    .total_cmp(&self.leases[b].due_hour)
                     .then(self.leases[a].id.cmp(&self.leases[b].id))
             });
             for i in order {

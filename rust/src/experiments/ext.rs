@@ -92,7 +92,7 @@ pub fn run(which: &str) {
         for (name, sweep) in &f.series {
             let best = sweep
                 .iter()
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             let line: Vec<String> = sweep
                 .iter()

@@ -103,7 +103,7 @@ mod tests {
     fn scenes_have_distinct_prompt_medians() {
         let f = fig1a(2000);
         let mut medians: Vec<f64> = f.rows.iter().map(|r| r.2).collect();
-        medians.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        medians.sort_by(|a, b| a.total_cmp(b));
         // Fig. 1a property: scene medians span > 5x.
         assert!(medians.last().unwrap() / medians.first().unwrap() > 5.0);
     }

@@ -68,7 +68,7 @@ pub fn run(which: &str) {
             let peak_h = s
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             println!("{name:<8} {}  (peak {peak_h:02}:00)", super::spark(s));
@@ -108,7 +108,7 @@ mod tests {
             .map(|(_, s)| {
                 s.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .unwrap()
                     .0
             })
@@ -125,7 +125,7 @@ mod tests {
             .rows
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1 .4.partial_cmp(&b.1 .4).unwrap())
+            .max_by(|a, b| a.1 .4.total_cmp(&b.1 .4))
             .unwrap()
             .0;
         // The bottleneck curve rises then falls around the optimum.

@@ -233,7 +233,7 @@ mod tests {
         let best = f
             .rows
             .iter()
-            .max_by(|a, b| a.4.partial_cmp(&b.4).unwrap())
+            .max_by(|a, b| a.4.total_cmp(&b.4))
             .unwrap();
         assert!(best.0 > 1 && best.0 < 7, "optimum {}:{} not extreme", best.0, best.1);
         // Throughput at the optimum clearly beats both extremes.

@@ -17,6 +17,7 @@
 //! `ARCHITECTURE.md` (crate root) maps every paper section to its module
 //! and walks the fleet loop; its code blocks run as doctests here.
 
+pub mod analysis;
 pub mod bench;
 pub mod cluster;
 pub mod coordinator;

@@ -5,6 +5,8 @@
 //! - `repro`   regenerate a paper figure/table (`--fig 14a`, `--fig all`)
 //! - `fleet`   one simulated day of multi-group tidal serving with the
 //!             closed MLOps loop (dynamic P/D ratio + group scaling)
+//! - `lint`    determinism & invariant static analysis over this crate's
+//!             own sources (the CI gate for the reproducibility contract)
 //! - `runtime` smoke-test artifact loading and one request
 //! - `info`    print artifact + config summary
 
@@ -18,13 +20,14 @@ fn main() {
         Some("repro") => pd_serve::experiments::cmd_repro(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("lint") => pd_serve::analysis::cmd_lint(&args),
         Some("info") => cmd_info(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
             }
             eprintln!(
-                "usage: pdserve <serve|repro|simulate|fleet|runtime|info> \
+                "usage: pdserve <serve|repro|simulate|fleet|lint|runtime|info> \
                  [--artifacts DIR] [--config FILE] [--fig ID] ..."
             );
             2
@@ -117,7 +120,8 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// `--lend` (cross-scene instance lending) `--spares N` (spare pool)
 /// `--detect-ms MS` (fault-detector period, real ms)
 /// `--static` (freeze ratios) `--no-scale` (freeze group counts)
-/// `--quiet` (summary only, no timeline).
+/// `--quiet` (summary only, no timeline)
+/// `--json` (full deterministic JSON report instead of the summary).
 fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     use pd_serve::serving::fleet::{FleetConfig, FleetSim};
     use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
@@ -217,7 +221,11 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
         return 2;
     }
     let out = FleetSim::new(cfg).run();
-    out.print_summary(!args.has("quiet"));
+    if args.has("json") {
+        println!("{}", out.to_json().to_string_pretty());
+    } else {
+        out.print_summary(!args.has("quiet"));
+    }
     0
 }
 

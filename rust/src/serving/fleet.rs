@@ -83,12 +83,14 @@ use crate::coordinator::ratio::{
 };
 use crate::coordinator::recovery::{recover, RecoveryReport};
 use crate::coordinator::setup::SetupConfig;
+use crate::jobj;
 use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
 use crate::serving::sim::{
     SimConfig, Simulation, TransferDiscipline, WindowStats, WorkloadKind,
 };
 use crate::sim::EventQueue;
 use crate::util::config::{EngineConfig, ServingConfig};
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::workload::traffic::{scene_rate_rps, TRAINING_SWITCH_FRACTION};
 use crate::workload::{route_hash, Request, Scenario};
@@ -335,6 +337,127 @@ impl FleetOutput {
     /// Requests accounted for (completed + terminated).
     pub fn total(&self) -> usize {
         self.completed + self.timed_out
+    }
+
+    /// Full day report as deterministic JSON.
+    ///
+    /// Object keys are sorted (BTreeMap-backed `Json::Obj`) and every
+    /// value derives from the seeded simulation, so two identically-seeded
+    /// `pdserve fleet --json` runs print byte-identical reports — the
+    /// determinism double-run test pins exactly this.
+    pub fn to_json(&self) -> Json {
+        let ledger = &self.ledger;
+        let leases: Vec<Json> = ledger
+            .leases
+            .iter()
+            .map(|l| {
+                let borrower = match l.borrower {
+                    LeaseUse::Scene(s) => format!("scene {s}"),
+                    LeaseUse::Recovery => "recovery".to_string(),
+                };
+                jobj! {
+                    "id" => l.id as usize,
+                    "lender" => l.lender,
+                    "borrower" => borrower,
+                    "instances" => l.instances,
+                    "granted_hour" => l.granted_hour,
+                    "due_hour" => l.due_hour,
+                    "repaid_instances" => l.repaid_instances,
+                    "repaid_hour" => l.repaid_hour.map_or(Json::Null, Json::from),
+                }
+            })
+            .collect();
+        let recoveries: Vec<Json> = self
+            .recovery_reports
+            .iter()
+            .map(|(hour, r)| {
+                jobj! {
+                    "hour" => *hour,
+                    "failed_instance" => r.failed_instance as usize,
+                    "substitute_instance" => r.substitute_instance as usize,
+                    "role" => r.role.to_string(),
+                    "outage_ms" => r.outage_ms(),
+                    "protected_requests" => r.protected_requests,
+                }
+            })
+            .collect();
+        let ratios: Vec<Json> = self
+            .final_ratios
+            .iter()
+            .map(|&(scene, n_p, n_d)| {
+                jobj! { "scene" => scene, "n_p" => n_p, "n_d" => n_d }
+            })
+            .collect();
+        let curve: Vec<Json> = self
+            .served_curve
+            .iter()
+            .map(|w| {
+                jobj! {
+                    "hour" => w.hour,
+                    "offered_rps" => w.offered_rps,
+                    "served_rps" => w.served_rps,
+                    "protected" => w.protected,
+                    "xfers" => w.xfers,
+                    "mean_xfer_ms" => w.mean_xfer_ms,
+                    "d2d_util" => w.d2d_util,
+                }
+            })
+            .collect();
+        let timeline: Vec<Json> = self
+            .timeline
+            .iter()
+            .map(|e| {
+                jobj! {
+                    "hour" => e.hour,
+                    "scene" => e.scene,
+                    "group" => if e.group == u32::MAX {
+                        Json::Null
+                    } else {
+                        Json::from(e.group as usize)
+                    },
+                    "what" => e.what.clone(),
+                }
+            })
+            .collect();
+        jobj! {
+            "injected" => self.injected,
+            "completed" => self.completed,
+            "timed_out" => self.timed_out,
+            "rps" => self.rps,
+            "slo_attainment" => self.slo_attainment,
+            "mean_ttft_ms" => self.mean_ttft_ms,
+            "mean_e2e_ms" => self.mean_e2e_ms,
+            "xfers" => self.xfers,
+            "mean_xfer_ms" => self.mean_xfer_ms,
+            "d2d_utilization" => self.d2d_utilization,
+            "adjustments" => self.adjustments,
+            "scale_outs" => self.scale_outs,
+            "scale_ins" => self.scale_ins,
+            "training_switches" => self.training_switches,
+            "upgraded_groups" => self.upgraded_groups,
+            "faults_seen" => self.faults_seen,
+            "faults_fatal" => self.faults_fatal,
+            "recoveries" => self.recoveries,
+            "recovery_reports" => recoveries,
+            "protected" => self.protected,
+            "scale_deferred" => self.scale_deferred,
+            "lease_calls" => self.lease_calls,
+            "end_hour" => self.end_hour,
+            "peak_instances" => self.peak_instances,
+            "ledger" => jobj! {
+                "seed_total" => ledger.seed_total,
+                "minted" => ledger.minted,
+                "pool" => ledger.pool,
+                "banked" => ledger.banked,
+                "scrapped" => ledger.scrapped,
+                "in_service" => ledger.in_service,
+                "balanced" => ledger.balanced,
+                "leases" => leases,
+            },
+            "final_ratios" => ratios,
+            "served_curve" => curve,
+            "timeline" => timeline,
+        }
     }
 
     /// Print the day's summary (and the action timeline when asked).
@@ -1959,7 +2082,9 @@ mod tests {
         let out = FleetSim::new(cfg).run();
         assert!(out.served_curve.len() >= 8);
         let mut by_offer = out.served_curve.clone();
-        by_offer.sort_by(|a, b| a.offered_rps.partial_cmp(&b.offered_rps).unwrap());
+        by_offer.sort_by(|a, b| {
+            a.offered_rps.total_cmp(&b.offered_rps).then(a.hour.total_cmp(&b.hour))
+        });
         let q = by_offer.len() / 4;
         let low_served: f64 = by_offer[..q].iter().map(|c| c.served_rps).sum();
         let high_served: f64 =

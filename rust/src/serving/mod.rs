@@ -12,12 +12,13 @@
 //!   rolling upgrades, live fault injection with minimum-cost recovery
 //!   (§3.4), and cross-scene instance lending on one conserved budget.
 //!
-//! `fleet` and `router` carry `#![deny(missing_docs)]` — every public
-//! item there documents its invariant; `sim` and `server` predate the
-//! policy and close their gap incrementally.
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
+//!
+//! Every submodule here carries `#![deny(missing_docs)]`: each public
+//! item documents its invariant (the `sim`/`server` gap noted in earlier
+//! revisions is closed).
 
 pub mod fleet;
 pub mod router;

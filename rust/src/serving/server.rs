@@ -9,6 +9,7 @@
 //! the single CPU device, which preserves every protocol step (accept/
 //! reject, buffer hold, scatter, continuous batching) while keeping
 //! latency numbers honest wall-clock measurements.
+#![deny(missing_docs)]
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -26,34 +27,50 @@ use crate::util::stats::Summary;
 /// One request for the real engine.
 #[derive(Clone, Debug)]
 pub struct RealRequest {
+    /// Caller-assigned request id, echoed in the outcome.
     pub id: u64,
+    /// Prompt text (tokenized, then truncated to the largest bucket).
     pub prompt: String,
+    /// Generation cap for this request (further bounded by `gen_budget`).
     pub max_new_tokens: usize,
 }
 
 /// Per-request result.
 #[derive(Clone, Debug)]
 pub struct RealOutcome {
+    /// The request's id.
     pub id: u64,
+    /// Detokenized generated text.
     pub output: String,
+    /// Prompt length after tokenization.
     pub prompt_tokens: usize,
+    /// Tokens actually generated.
     pub gen_tokens: usize,
+    /// Wall-clock time to first token (ms) — prefill execution.
     pub ttft_ms: f64,
+    /// Wall-clock end-to-end latency (ms).
     pub e2e_ms: f64,
+    /// Measured KVCache transfer time (ms) — the byte move.
     pub xfer_ms: f64,
+    /// Measured RecvScatter placement time (ms).
     pub scatter_ms: f64,
 }
 
 /// Aggregate report.
 #[derive(Debug, Default)]
 pub struct RealReport {
+    /// One entry per completed request.
     pub outcomes: Vec<RealOutcome>,
+    /// Wall-clock duration of the whole batch (ms).
     pub wall_ms: f64,
+    /// Prefill executions launched.
     pub prefill_execs: usize,
+    /// Decode iterations stepped.
     pub decode_iters: usize,
 }
 
 impl RealReport {
+    /// Print the latency/throughput summary to stdout.
     pub fn print(&self) {
         let mut ttft = Summary::new();
         let mut e2e = Summary::new();
@@ -101,10 +118,14 @@ pub struct RealEngine {
     decodes: Vec<RealDecode>,
     n_prefill: usize,
     route: RouteKind,
+    /// Per-request generation cap (defaults to `max_len` minus the
+    /// largest prefill bucket, so prompt + generation always fit).
     pub gen_budget: usize,
 }
 
 impl RealEngine {
+    /// Load the artifacts and build an engine with `n_prefill` logical
+    /// prefill entrances and `n_decode` decode handles.
     pub fn new(artifacts_dir: &str, n_prefill: usize, n_decode: usize) -> Result<Self> {
         let rt = ServingRuntime::load(artifacts_dir)?;
         let mut decodes = Vec::new();
@@ -131,6 +152,7 @@ impl RealEngine {
         self
     }
 
+    /// Metadata of the loaded model (buckets, batch, limits).
     pub fn meta(&self) -> &crate::runtime::ModelMeta {
         &self.rt.meta
     }

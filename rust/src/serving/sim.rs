@@ -12,6 +12,7 @@
 //!   constant concurrency (the paper's throughput methodology).
 //!
 //! Time unit: milliseconds (virtual).
+#![deny(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
@@ -32,6 +33,7 @@ use crate::util::prng::Rng;
 use crate::util::stats::Welford;
 use crate::workload::{Request, Scenario};
 
+/// Gateway scheduling policy (the paper's central comparison).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     /// Prior work: immediate assignment into local queues via stale
@@ -41,6 +43,7 @@ pub enum Policy {
     OnDemand,
 }
 
+/// KVCache handoff discipline on the prefill→decode transfer (§3.6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransferDiscipline {
     /// Per-block transfers with control round-trips (vLLM-style).
@@ -49,37 +52,63 @@ pub enum TransferDiscipline {
     Contiguous,
 }
 
+/// How arrivals are generated and when the run terminates.
 #[derive(Clone, Copy, Debug)]
 pub enum WorkloadKind {
-    Open { rps: f64, duration_ms: f64 },
-    Closed { concurrency: usize, requests: usize },
+    /// Open-loop Poisson arrivals at `rps` for `duration_ms` (SLO and
+    /// timeout studies).
+    Open {
+        /// Mean arrival rate, requests per second.
+        rps: f64,
+        /// Injection horizon (virtual ms); the run drains afterwards.
+        duration_ms: f64,
+    },
+    /// Closed-loop constant concurrency (the paper's throughput
+    /// methodology): a completion immediately injects a replacement.
+    Closed {
+        /// Concurrent requests held in flight.
+        concurrency: usize,
+        /// Total requests before the run ends.
+        requests: usize,
+    },
     /// Arrivals injected by an external driver (`Simulation::inject`), and
     /// time advanced with `run_until` — the fleet simulator's per-group
     /// mode. No internal priming, no internal termination condition.
     External,
 }
 
+/// Full parameterization of one simulated P/D group.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Prefill instances at start.
     pub n_p: usize,
+    /// Decode instances at start.
     pub n_d: usize,
+    /// Execution-time model (prefill batch / decode iteration costs).
     pub engine: EngineConfig,
+    /// RDMA wire model for the D2D transfer.
     pub rdma: RdmaModel,
     /// Host/HBM-side assembly costs around the wire (gather/placement) —
     /// charged on every prefill→decode handoff alongside `rdma`.
     pub assembly: AssemblyModel,
+    /// Serving-side knobs (batch sizes, queues, SLO thresholds, retries).
     pub serving: ServingConfig,
+    /// Gateway scheduling policy under test.
     pub policy: Policy,
     /// Candidate-ordering policy for the gateway (the unified routing
     /// layer — the same `RoutePolicy` code the real server runs).
     pub route: RouteKind,
+    /// KVCache handoff discipline on every prefill→decode transfer.
     pub transfer: TransferDiscipline,
     /// Path-diversity spraying for sub-transfers (vs plain ECMP).
     pub spray: bool,
+    /// The scenario mix traffic is drawn from.
     pub scenarios: Vec<Scenario>,
     /// Restrict traffic to one scenario (fine-grained group sims).
     pub only_scenario: Option<usize>,
+    /// Arrival process and termination condition.
     pub workload: WorkloadKind,
+    /// PRNG seed — equal seeds yield bit-identical runs.
     pub seed: u64,
     /// Full-model KVCache bytes per token (all layers, K+V).
     pub kv_bytes_per_token: usize,
@@ -181,6 +210,7 @@ impl SimConfig {
 /// Aggregate output + auxiliary series.
 #[derive(Debug)]
 pub struct SimOutput {
+    /// Latency/outcome accounting (TTFT, E2E, transfer summaries).
     pub report: ServingReport,
     /// Mean achieved D2D utilization over all transfers.
     pub xfer_utilization: f64,
@@ -306,9 +336,13 @@ impl DState {
 /// fleet's ratio detector consumes (`take_window` resets it).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WindowStats {
+    /// Requests completed this window.
     pub completed: usize,
+    /// Requests timed out (or terminated under protection) this window.
     pub timed_out: usize,
+    /// Summed TTFT (ms) over completed requests.
     pub ttft_sum_ms: f64,
+    /// Summed end-to-end latency (ms) over completed requests.
     pub e2e_sum_ms: f64,
     /// Completed within their per-request TTFT threshold.
     pub slo_ok: usize,
@@ -331,14 +365,17 @@ pub struct WindowStats {
 }
 
 impl WindowStats {
+    /// Requests that reached a terminal state this window.
     pub fn total(&self) -> usize {
         self.completed + self.timed_out
     }
 
+    /// Mean TTFT (ms) over completed requests (0 when none).
     pub fn mean_ttft_ms(&self) -> f64 {
         if self.completed == 0 { 0.0 } else { self.ttft_sum_ms / self.completed as f64 }
     }
 
+    /// Mean end-to-end latency (ms) over completed requests (0 when none).
     pub fn mean_e2e_ms(&self) -> f64 {
         if self.completed == 0 { 0.0 } else { self.e2e_sum_ms / self.completed as f64 }
     }
@@ -363,6 +400,7 @@ impl WindowStats {
         }
     }
 
+    /// Accumulate another window into this one (fleet-level aggregation).
     pub fn merge(&mut self, o: &WindowStats) {
         self.completed += o.completed;
         self.timed_out += o.timed_out;
@@ -424,6 +462,10 @@ enum Ev {
     DecodeIter(usize),
 }
 
+/// The discrete-event simulator for one P/D group: gateway, prefill
+/// pool, D2D transfer fabric and decode pool, driven off one
+/// [`EventQueue`]. Construct with [`Simulation::run`] (self-driving
+/// workloads) or [`Simulation::external`] (fleet mode).
 pub struct Simulation {
     cfg: SimConfig,
     engine: EngineModel,
@@ -470,6 +512,7 @@ pub struct Simulation {
 }
 
 impl Simulation {
+    /// Build a simulation in its initial state (no events queued yet).
     pub fn new(cfg: SimConfig) -> Self {
         let engine = EngineModel::new(cfg.engine.clone());
         let ps = (0..cfg.n_p)
@@ -538,6 +581,7 @@ impl Simulation {
         Simulation::new(cfg)
     }
 
+    /// Run a self-driving workload (`Open`/`Closed`) to completion.
     pub fn run(cfg: SimConfig) -> SimOutput {
         let mut sim = Simulation::new(cfg);
         sim.prime();
@@ -718,18 +762,22 @@ impl Simulation {
         std::mem::take(&mut self.window)
     }
 
+    /// Current virtual time (ms).
     pub fn now_ms(&self) -> f64 {
         self.q.now()
     }
 
+    /// Requests injected so far.
     pub fn injected(&self) -> usize {
         self.injected
     }
 
+    /// Requests that reached a terminal state so far.
     pub fn finished(&self) -> usize {
         self.finished
     }
 
+    /// Requests currently anywhere in the pipeline.
     pub fn in_flight(&self) -> usize {
         self.injected - self.finished
     }
@@ -742,10 +790,12 @@ impl Simulation {
 
     // -- dynamic pools (mid-run scale / ratio adjustment) --------------------
 
+    /// Alive (non-tombstoned) prefill instances.
     pub fn n_prefill_alive(&self) -> usize {
         self.ps.iter().filter(|p| p.alive).count()
     }
 
+    /// Alive (non-tombstoned) decode instances.
     pub fn n_decode_alive(&self) -> usize {
         self.ds.iter().filter(|d| d.alive).count()
     }

@@ -12,6 +12,7 @@
 //! This module models the decode-side speedup and the placement tradeoff
 //! analytically on top of `cluster::engine`, and is exercised by the
 //! `spec_decode` ablation (`pdserve repro --fig spec`).
+#![deny(missing_docs)]
 
 use crate::cluster::engine::EngineModel;
 
@@ -20,10 +21,14 @@ use crate::cluster::engine::EngineModel;
 pub enum DraftPlacement {
     /// Draft on host CPU of the decode instance: no xPU contention, but a
     /// fixed per-token CPU latency that serializes with verification.
-    Cpu { per_token_ms: f64 },
+    Cpu {
+        /// CPU draft latency per proposed token (ms).
+        per_token_ms: f64,
+    },
     /// Draft disaggregated onto the same xPUs (paper's scheme): fast draft
     /// steps, paying a small interruption share on the large model.
     Disaggregated {
+        /// xPU draft latency per proposed token (ms).
         per_token_ms: f64,
         /// Fraction of large-model throughput lost to sharing (< 1).
         interference: f64,
@@ -37,6 +42,7 @@ pub struct SpecConfig {
     pub k: usize,
     /// Per-token acceptance probability α (i.i.d. approximation).
     pub alpha: f64,
+    /// Where the draft model runs.
     pub placement: DraftPlacement,
 }
 
@@ -162,7 +168,7 @@ mod tests {
         let sweep = k_sweep(&e, 0.75, CPU_FAST, 16, 725, 16);
         let best = sweep
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         assert!(best.0 < 16, "optimum K {} should be interior", best.0);
         assert!(sweep.last().unwrap().1 < best.1);

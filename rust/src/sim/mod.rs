@@ -27,11 +27,11 @@ impl<E> Eq for Scheduled<E> {}
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap on (time, seq). Times are finite by
-        // construction (asserted on push).
+        // construction (asserted on push); total_cmp keeps the order
+        // total — and deterministic — even if that invariant slips.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap()
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }

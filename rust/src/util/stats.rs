@@ -83,10 +83,14 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// NaN policy: samples sort by IEEE 754 total order (`f64::total_cmp`),
+    /// so `-NaN < -inf < … < +inf < +NaN` — any NaN that slips in lands
+    /// deterministically at the ends instead of scrambling the sort (the
+    /// old `unwrap_or(Equal)` fallback made percentile output depend on
+    /// the incoming sample order).
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -263,6 +267,21 @@ mod tests {
         assert!((s.fraction_le(5.0) - 0.5).abs() < 1e-12);
         assert_eq!(s.fraction_le(100.0), 1.0);
         assert_eq!(s.fraction_le(0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_nan_samples_sort_deterministically() {
+        // total_cmp: no panic, NaN lands past +inf, and the result does
+        // not depend on the order samples arrived in.
+        let mut a = Summary::new();
+        a.extend(&[1.0, f64::NAN, 2.0]);
+        let mut b = Summary::new();
+        b.extend(&[f64::NAN, 2.0, 1.0]);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(b.min(), 1.0);
+        assert!(a.max().is_nan() && b.max().is_nan());
+        assert_eq!(a.p50(), b.p50());
+        assert!((a.p50() - 2.0).abs() < 1e-12);
     }
 
     #[test]

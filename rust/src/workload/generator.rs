@@ -153,7 +153,7 @@ mod tests {
     #[test]
     fn closed_loop_ids_unique() {
         let mut g = ClosedLoopGen::new(standard_scenarios(), 8, 4);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for i in 0..500 {
             let r = g.next_request(i as f64);
             assert!(seen.insert(r.id));

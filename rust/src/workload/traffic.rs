@@ -82,7 +82,7 @@ mod tests {
                 .max_by(|&a, &b| {
                     let ra = scene_rate_rps(&scenes[idx], idx, a as f64, 100.0, tw);
                     let rb = scene_rate_rps(&scenes[idx], idx, b as f64, 100.0, tw);
-                    ra.partial_cmp(&rb).unwrap()
+                    ra.total_cmp(&rb)
                 })
                 .unwrap()
         };

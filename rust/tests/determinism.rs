@@ -1,0 +1,51 @@
+//! Determinism double-run: the scene-sharding contract `pdserve lint`
+//! protects, pinned end to end. Two in-process fleet days with the same
+//! seed must render byte-identical `--json` reports — not just equal
+//! aggregates, but the same bytes: JSON object keys are BTreeMap-sorted,
+//! every sort in the control loop carries an id tie-break, and no wall
+//! clock or ambient RNG feeds the simulation.
+
+use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+
+fn cfg() -> FleetConfig {
+    FleetConfig {
+        scenes: vec![2, 5],
+        peak_total_rps: 24.0,
+        hours: 24.0,
+        ms_per_hour: 1_500.0,
+        control_period_ms: 1_500.0,
+        slice_ms: 500.0,
+        max_groups_per_scene: 3,
+        seed: 0xFA57,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fleet_json_report_is_byte_identical_across_runs() {
+    let a = FleetSim::new(cfg()).run().to_json().to_string_pretty();
+    let b = FleetSim::new(cfg()).run().to_json().to_string_pretty();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed must render byte-identical JSON");
+}
+
+#[test]
+fn fleet_json_report_has_the_headline_fields() {
+    let out = FleetSim::new(cfg()).run();
+    let json = out.to_json();
+    assert_eq!(json.get("injected").and_then(|v| v.as_usize()), Some(out.injected));
+    assert_eq!(json.get("completed").and_then(|v| v.as_usize()), Some(out.completed));
+    assert!(json.at(&["ledger", "seed_total"]).is_some());
+    let curve = json.get("served_curve").and_then(|v| v.as_arr()).expect("served_curve");
+    assert_eq!(curve.len(), out.served_curve.len());
+}
+
+#[test]
+fn different_seeds_actually_differ() {
+    // Guards the double-run test against vacuous passes (e.g. a to_json
+    // that ignores the simulation entirely).
+    let a = FleetSim::new(cfg()).run().to_json().to_string_pretty();
+    let other = FleetConfig { seed: 0x5EED, ..cfg() };
+    let b = FleetSim::new(other).run().to_json().to_string_pretty();
+    assert_ne!(a, b, "seed must influence the report");
+}

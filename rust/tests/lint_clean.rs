@@ -1,0 +1,47 @@
+//! The tree lints clean: `pdserve lint` over this crate's own sources
+//! must report zero errors against the committed ratchet baseline.
+//!
+//! This is the same invocation CI runs (`pdserve lint --json`); keeping it
+//! as an integration test means a plain `cargo test` catches a regression
+//! before the workflow does.
+
+use std::path::Path;
+
+use pd_serve::analysis::rules::{Severity, UNWRAP_BUDGET};
+use pd_serve::analysis::{lint_tree, LintOptions, DEFAULT_BASELINE, DEFAULT_SRC};
+
+fn report() -> pd_serve::analysis::LintReport {
+    lint_tree(&LintOptions {
+        src_dir: Path::new(DEFAULT_SRC),
+        baseline_path: Path::new(DEFAULT_BASELINE),
+    })
+    .expect("lint over the crate's own sources")
+}
+
+#[test]
+fn crate_sources_lint_clean_at_zero_errors() {
+    let report = report();
+    assert!(report.files_scanned > 20, "scanned {} files", report.files_scanned);
+    let errors: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Error)
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(errors.is_empty(), "lint errors:\n{}", errors.join("\n"));
+}
+
+#[test]
+fn unwrap_ratchet_baseline_is_not_stale() {
+    // Every path in lint.baseline must still exist in the tree — a stale
+    // entry means a file was renamed or deleted without regenerating the
+    // baseline. (Under-budget notes are tolerated here; they only ask for
+    // a tightening, which `--write-baseline` performs.)
+    let stale: Vec<String> = report()
+        .findings
+        .iter()
+        .filter(|f| f.rule == UNWRAP_BUDGET && f.message.contains("was not scanned"))
+        .map(|f| f.file.clone())
+        .collect();
+    assert!(stale.is_empty(), "stale baseline entries: {}", stale.join(", "));
+}
