@@ -3,7 +3,14 @@
 //! These measure how fast the *simulator* regenerates each paper result
 //! (events/sec of the discrete-event core) and double as regression
 //! anchors for the figures themselves: each bench runs the exact config a
-//! figure uses. `cargo bench --bench e2e_sim -- --fast` for CI.
+//! figure uses. The `hotloop` group pins the flattened hot-loop
+//! primitives against their pre-flattening shapes so the win stays
+//! measured, not asserted. `cargo bench --bench e2e_sim -- --fast` for
+//! CI; every run refreshes `BENCH_sim.json` at the repo root for
+//! `pdserve bench-diff`.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use pd_serve::bench::Bencher;
 use pd_serve::serving::sim::{
@@ -20,6 +27,97 @@ fn fig14_scenario() -> Scenario {
     }
 }
 
+/// The `hotloop` group: paired before/after microbenches for each
+/// flattening in `serving::sim`, on synthetic state shaped like a busy
+/// decode pool. "(before)" cases reproduce the replaced implementation
+/// so `BENCH_sim.json` carries the comparison forward.
+fn hotloop(b: &mut Bencher) {
+    b.group("hotloop — pool scans");
+    let active: Vec<u64> = (0..4096u64).collect();
+    // Every 64th request completes this decode iteration, in scan order
+    // (ascending), exactly like `on_decode_iter`'s completion list.
+    let completed: Vec<u64> = (0..4096u64).step_by(64).collect();
+    let params = format!("active={} completed={}", active.len(), completed.len());
+    b.bench_case("per-id retain scan (before)", &params, Some((completed.len() as f64, "removal")), || {
+        let mut v = active.clone();
+        for &id in &completed {
+            v.retain(|&x| x != id);
+        }
+        v.len()
+    });
+    b.bench_case("single merge-retain (after)", &params, Some((completed.len() as f64, "removal")), || {
+        let mut v = active.clone();
+        let mut ci = 0;
+        v.retain(|&x| {
+            if ci < completed.len() && completed[ci] == x {
+                ci += 1;
+                false
+            } else {
+                true
+            }
+        });
+        v.len()
+    });
+
+    b.group("hotloop — shared-prefix handles");
+    const N_PREFIXES: usize = 8;
+    const PREFIX_LEN: usize = 2048;
+    const REQUESTS: usize = 4096;
+    let params = format!("prefixes={N_PREFIXES} len={PREFIX_LEN} reqs={REQUESTS}");
+    b.bench_case("Rc<Vec<i32>> per request (before)", &params, Some((REQUESTS as f64, "req")), || {
+        // The replaced shape: a memo of Rc handles, one clone per request
+        // held for the request's lifetime (dropped at batch end here).
+        let mut memo: BTreeMap<usize, Rc<Vec<i32>>> = BTreeMap::new();
+        let mut held: Vec<Rc<Vec<i32>>> = Vec::with_capacity(REQUESTS);
+        let mut sum = 0i64;
+        for r in 0..REQUESTS {
+            let pid = r % N_PREFIXES;
+            let toks = memo
+                .entry(pid)
+                .or_insert_with(|| {
+                    Rc::new((0..PREFIX_LEN as i32).map(|t| (pid as i32) ^ t).collect())
+                })
+                .clone();
+            sum += toks[r % PREFIX_LEN] as i64;
+            held.push(toks);
+        }
+        std::hint::black_box(held.len());
+        sum
+    });
+    b.bench_case("interned arena ids (after)", &params, Some((REQUESTS as f64, "req")), || {
+        // The landed shape: requests hold a u32 into a scene-level arena.
+        let mut arena: Vec<Vec<i32>> = Vec::new();
+        let mut memo: BTreeMap<usize, u32> = BTreeMap::new();
+        let mut held: Vec<u32> = Vec::with_capacity(REQUESTS);
+        let mut sum = 0i64;
+        for r in 0..REQUESTS {
+            let pid = r % N_PREFIXES;
+            let idx = *memo.entry(pid).or_insert_with(|| {
+                arena.push((0..PREFIX_LEN as i32).map(|t| (pid as i32) ^ t).collect());
+                (arena.len() - 1) as u32
+            });
+            sum += arena[idx as usize][r % PREFIX_LEN] as i64;
+            held.push(idx);
+        }
+        std::hint::black_box(held.len());
+        sum
+    });
+
+    b.group("hotloop — window stats");
+    // `take_window` is the per-control-tick read on every group; after
+    // flattening it is a plain Copy + reset, no allocation.
+    let mut sim = Simulation::external(SimConfig {
+        n_p: 2,
+        n_d: 2,
+        only_scenario: Some(2),
+        workload: WorkloadKind::Closed { concurrency: 1, requests: 1 },
+        ..Default::default()
+    });
+    b.bench_case("take_window (copy, allocation-free)", "n_p=2 n_d=2", None, || {
+        sim.take_window().xfers
+    });
+}
+
 fn main() {
     let mut b = Bencher::new();
 
@@ -31,7 +129,7 @@ fn main() {
         workload: WorkloadKind::Closed { concurrency: 48, requests: 200 },
         ..Default::default()
     };
-    b.bench("closed loop, 200 requests", Some((200.0, "req")), || {
+    b.bench_case("closed loop, 200 requests", "n_p=4 n_d=4 conc=48", Some((200.0, "req")), || {
         Simulation::run(closed.clone()).report.completed
     });
 
@@ -49,7 +147,7 @@ fn main() {
             workload: WorkloadKind::Open { rps: 8.0, duration_ms: 20_000.0 },
             ..Default::default()
         };
-        b.bench(name, Some((1.0, "run")), || {
+        b.bench_case(name, "n_p=6 n_d=3 rps=8", Some((1.0, "run")), || {
             Simulation::run(cfg.clone()).report.total()
         });
     }
@@ -67,10 +165,16 @@ fn main() {
             workload: WorkloadKind::Closed { concurrency: 24, requests: 150 },
             ..Default::default()
         };
-        b.bench(name, Some((150.0, "req")), || {
+        b.bench_case(name, "n_p=4 n_d=4 conc=24", Some((150.0, "req")), || {
             Simulation::run(cfg.clone()).report.completed
         });
     }
 
+    hotloop(&mut b);
+
     println!("\n{}", b.finish());
+    match b.write_json_report("sim") {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("BENCH_sim.json not written: {e}"),
+    }
 }

@@ -1,10 +1,13 @@
 //! Fleet-loop benches: how fast the closed-loop simulator turns one
 //! compressed tidal day, dynamic vs frozen control — the regression anchor
 //! for the `serving::fleet` event path (shared queue + per-group sims +
-//! control ticks). `cargo bench --bench fleet -- --fast` for CI.
+//! control ticks) and for the scene-sharded parallel day.
+//! `cargo bench --bench fleet -- --fast` for CI; every run refreshes
+//! `BENCH_fleet.json` at the repo root for `pdserve bench-diff`.
 
 use pd_serve::bench::Bencher;
 use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+use pd_serve::serving::shard::run_sharded;
 
 fn day(adjust: bool, scale: bool) -> FleetConfig {
     FleetConfig {
@@ -30,7 +33,8 @@ fn main() {
         ("frozen (static baseline)", false, false),
     ] {
         let cfg = day(adjust, scale);
-        b.bench(name, Some((1.0, "day")), || {
+        let params = format!("adjust={adjust} scale={scale} scenes=2 peak=20");
+        b.bench_case(name, &params, Some((1.0, "day")), || {
             FleetSim::new(cfg.clone()).run().completed
         });
     }
@@ -41,10 +45,28 @@ fn main() {
         let n = scenes.len();
         cfg.scenes = scenes;
         let name = format!("{n} scene groups");
-        b.bench(&name, Some((n as f64, "group-day")), || {
+        b.bench_case(&name, &format!("scenes={n} peak=20"), Some((n as f64, "group-day")), || {
             FleetSim::new(cfg.clone()).run().completed
         });
     }
 
+    // The scene-sharded day: the same 6-scene workload on 1 worker vs all
+    // cores. Both runs produce byte-identical reports (the determinism
+    // oracle); the delta is pure wall clock.
+    b.group("fleet — scene-sharded day (6 scenes)");
+    let mut wide = day(true, true);
+    wide.scenes = vec![0, 1, 2, 3, 4, 5];
+    for workers in [1usize, 4] {
+        let cfg = wide.clone();
+        let name = format!("--workers {workers}");
+        b.bench_case(&name, &format!("scenes=6 peak=20 workers={workers}"), Some((6.0, "group-day")), || {
+            run_sharded(cfg.clone(), workers).completed
+        });
+    }
+
     println!("\n{}", b.finish());
+    match b.write_json_report("fleet") {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("BENCH_fleet.json not written: {e}"),
+    }
 }

@@ -1,12 +1,14 @@
 //! Compile-time shard-boundary assertions.
 //!
-//! The ROADMAP's parallel-sim item shards independent scenes onto worker
-//! threads with a deterministic merge. That is only sound for state that
-//! is `Send`. This module pins the current boundary in the type system:
-//! state that already crosses threads safely is asserted `Send` below (a
-//! regression fails `cargo build`), and state that must *become* `Send`
-//! before sharding lands is documented on [`NotYetSend`] with
-//! `compile_fail` doctests that flip the moment someone fixes it.
+//! Scene sharding (`serving::shard`, `fleet --workers N`) runs one whole
+//! `FleetSim` per scene on worker threads with a deterministic merge.
+//! That is only sound for state that is `Send`. This module pins the
+//! boundary in the type system: everything that actually crosses the
+//! thread boundary — the per-scene `FleetConfig` inbound, the per-scene
+//! `FleetOutput` and its constituents outbound — is asserted `Send`
+//! below (a regression fails `cargo build`), while the simulators
+//! themselves stay deliberately non-`Send` ([`NotYetSend`]) so a worker
+//! can only ever *own* its scene whole, never share it.
 
 /// Compile-time proof that `T: Send`. Usable in `const` position:
 /// `const _: () = assert_send::<T>();`.
@@ -34,19 +36,32 @@ const _: () = {
     assert_send::<crate::serving::fleet::FleetConfig>();
     assert_send::<crate::coordinator::mlops::InstanceLedger>();
     assert_send::<crate::coordinator::mlops::LedgerReport>();
+    // The sharded-fleet return channel: one FleetOutput per scene moves
+    // off its worker thread at join time (serving::shard).
+    assert_send::<crate::serving::fleet::FleetOutput>();
+    assert_send::<crate::serving::fleet::FleetWindow>();
+    assert_send::<crate::serving::fleet::FleetLogEntry>();
+    assert_send::<crate::coordinator::mlops::Lease>();
+    assert_send::<crate::coordinator::recovery::RecoveryReport>();
 };
 
-/// What is **not** yet `Send` — the debt the scene-sharding PR must
-/// clear before per-scene state can move onto worker threads.
+/// What is deliberately **not** `Send` — the tripwires that keep scene
+/// sharding honest.
 ///
-/// Each block below is a `compile_fail` doctest: it fails to compile
-/// *today* because the named type holds `Rc`/`RefCell` state or a
-/// non-`Send` trait object. When a refactor makes one of these `Send`,
-/// its doctest starts compiling, `cargo test` flags it, and the type
-/// should move up into this module's positive assertions.
+/// Scene sharding works by *ownership transfer of configs*, never by
+/// sharing simulators: a worker receives a per-scene `FleetConfig` and
+/// builds, runs and consumes its `FleetSim` entirely on one thread
+/// (`serving::shard`). Each block below is a `compile_fail` doctest: it
+/// fails to compile *today* because the named type holds `Rc`/`RefCell`
+/// state or a non-`Send` trait object — which is exactly what prevents a
+/// future refactor from quietly handing live simulator state across
+/// threads. If one of these starts compiling, `cargo test` flags it;
+/// re-audit the sharding oracle before moving the type up into the
+/// positive assertions.
 ///
-/// [`Simulation`] holds `Rc<Vec<i32>>` shared-prefix token state and an
-/// `Rc<RefCell<…>>` prefix cache:
+/// [`Simulation`] holds an `Rc<RefCell<…>>` shared-prefix cache per
+/// prefill instance (its prefix *tokens* are interned plain data now,
+/// but the cache handle keeps it thread-local):
 ///
 /// ```compile_fail
 /// fn assert_send<T: Send>() {}

@@ -10,8 +10,8 @@
 //!   match code, and parses suppression pragmas out of comments;
 //! - [`rules`] implements the determinism rules — `wall-clock-in-sim`,
 //!   `ambient-rng`, `unordered-iteration`, `nan-unwrap-ordering`,
-//!   `unstable-tie-sort` — plus the unwrap/expect counting behind
-//!   `unwrap-in-lib`;
+//!   `unstable-tie-sort`, `thread-outside-shard` — plus the
+//!   unwrap/expect counting behind `unwrap-in-lib`;
 //! - [`ratchet`] holds the committed per-file unwrap budget that may
 //!   only shrink;
 //! - [`boundary`] pins the shard boundary in the type system with
@@ -365,6 +365,7 @@ mod tests {
                 ("cluster/map.rs", "use std::collections::HashMap;\n"),
                 ("experiments/sorty.rs", "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"),
                 ("serving/fleet.rs", "groups.sort_by_key(|g| g.load);\n"),
+                ("cluster/par.rs", "std::thread::spawn(|| run());\n"),
             ]),
             &Baseline::empty(),
         );
@@ -373,6 +374,7 @@ mod tests {
             got,
             vec![
                 "cluster/map.rs:1:unordered-iteration",
+                "cluster/par.rs:1:thread-outside-shard",
                 "experiments/sorty.rs:1:nan-unwrap-ordering",
                 "serving/fleet.rs:1:unstable-tie-sort",
                 "serving/fleet_shard.rs:1:wall-clock-in-sim",

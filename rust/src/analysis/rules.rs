@@ -24,12 +24,22 @@ pub const NAN_UNWRAP: &str = "nan-unwrap-ordering";
 pub const UNSTABLE_SORT: &str = "unstable-tie-sort";
 /// The per-file unwrap/expect budget (may only shrink).
 pub const UNWRAP_BUDGET: &str = "unwrap-in-lib";
+/// Thread spawning (`thread::spawn`/`thread::scope`/`thread::Builder`)
+/// outside the sanctioned scene-shard module.
+pub const THREAD_SHARD: &str = "thread-outside-shard";
 /// Pseudo-rule for pragma syntax/usage problems (not suppressible).
 pub const BAD_PRAGMA: &str = "bad-pragma";
 
 /// Every pragma-addressable rule id.
-pub const RULE_IDS: [&str; 6] =
-    [WALL_CLOCK, AMBIENT_RNG, UNORDERED_ITER, NAN_UNWRAP, UNSTABLE_SORT, UNWRAP_BUDGET];
+pub const RULE_IDS: [&str; 7] = [
+    WALL_CLOCK,
+    AMBIENT_RNG,
+    UNORDERED_ITER,
+    NAN_UNWRAP,
+    UNSTABLE_SORT,
+    UNWRAP_BUDGET,
+    THREAD_SHARD,
+];
 
 /// Severity of a finding.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,7 +77,8 @@ pub struct Finding {
 
 /// Files where wall-clock reads are legitimate: the real serving engine,
 /// the PJRT runtime and the bench harness measure real time by design.
-const WALL_CLOCK_ALLOWED: [&str; 3] = ["bench.rs", "runtime/model.rs", "serving/server.rs"];
+const WALL_CLOCK_ALLOWED: [&str; 4] =
+    ["bench.rs", "experiments/scale.rs", "runtime/model.rs", "serving/server.rs"];
 
 /// Files exempt from the hash-container ban (not on the sim result path).
 const UNORDERED_ALLOWED: [&str; 4] =
@@ -79,7 +90,12 @@ const RNG_ALLOWED: [&str; 1] = ["util/prng.rs"];
 /// Files whose load-keyed sorts must carry an id tie-break.
 const TIE_SORT_SCOPE: [&str; 2] = ["serving/fleet.rs", "coordinator/mlops.rs"];
 
-/// Run the five line-level rules over one scanned file.
+/// The one module allowed to spawn threads: the scene-shard worker pool,
+/// whose worker-count-invariant merge is the determinism oracle that
+/// ad-hoc parallelism elsewhere would bypass.
+const THREAD_ALLOWED: [&str; 1] = ["serving/shard.rs"];
+
+/// Run the six line-level rules over one scanned file.
 pub fn check_file(path: &str, lines: &[LineView]) -> Vec<Finding> {
     let mut out = Vec::new();
     wall_clock(path, lines, &mut out);
@@ -87,6 +103,7 @@ pub fn check_file(path: &str, lines: &[LineView]) -> Vec<Finding> {
     unordered_iteration(path, lines, &mut out);
     nan_unwrap_ordering(path, lines, &mut out);
     unstable_tie_sort(path, lines, &mut out);
+    thread_outside_shard(path, lines, &mut out);
     out
 }
 
@@ -120,6 +137,30 @@ fn push(out: &mut Vec<Finding>, rule: &'static str, path: &str, line: usize, mes
         line,
         message,
     });
+}
+
+fn thread_outside_shard(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
+    if THREAD_ALLOWED.contains(&path) {
+        return;
+    }
+    for (idx, lv) in lines.iter().enumerate() {
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if lv.code.contains(pat) {
+                push(
+                    out,
+                    THREAD_SHARD,
+                    path,
+                    idx + 1,
+                    format!(
+                        "`{pat}` spawns a thread outside the sanctioned scene-shard \
+                         module; route parallelism through `serving::shard` so the \
+                         worker-count-invariance oracle keeps holding (allowed only in {})",
+                        THREAD_ALLOWED.join(", ")
+                    ),
+                );
+            }
+        }
+    }
 }
 
 fn wall_clock(path: &str, lines: &[LineView], out: &mut Vec<Finding>) {
@@ -428,6 +469,32 @@ mod tests {
         assert_eq!(findings("coordinator/mlops.rs", cmp).len(), 1);
         // Out-of-scope files are not this rule's business.
         assert!(findings("util/stats.rs", bare).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_flags_outside_shard_module() {
+        for src in [
+            "std::thread::spawn(move || run());\n",
+            "thread::scope(|s| { s.spawn(|| ()); });\n",
+            "let h = thread::Builder::new().name(n).spawn(f);\n",
+        ] {
+            let hits = findings("serving/fleet.rs", src);
+            assert_eq!(hits.len(), 1, "{src}");
+            assert_eq!(hits[0].rule, THREAD_SHARD);
+            assert_eq!(hits[0].line, 1);
+        }
+        // The sanctioned module is exempt — and only exactly that path.
+        assert!(findings("serving/shard.rs", "thread::scope(|s| ());\n").is_empty());
+        let hits = findings("serving/fleet_shard.rs", "thread::scope(|s| ());\n");
+        assert_eq!(hits.len(), 1);
+        // Non-spawning thread API is fine anywhere (no ambient state).
+        assert!(findings(
+            "experiments/scale.rs",
+            "let n = std::thread::available_parallelism();\n"
+        )
+        .is_empty());
+        // Words inside strings or comments never match.
+        assert!(findings("serving/fleet.rs", "// thread::spawn is banned here\n").is_empty());
     }
 
     #[test]

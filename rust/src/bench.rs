@@ -1,11 +1,19 @@
 //! Micro-benchmark harness (the offline stand-in for `criterion`).
 //!
 //! `cargo bench` targets use `harness = false` and drive this module:
-//! warmup, timed iterations, mean/p50/p99 and throughput reporting, plus a
-//! `--filter` flag and JSON output for regression tracking.
+//! warmup, timed iterations, mean/p50/p95/p99 and throughput reporting,
+//! plus a `--filter` flag and JSON output for regression tracking.
+//!
+//! Regression trajectory: each bench target calls
+//! [`Bencher::write_json_report`] to refresh `BENCH_<name>.json` at the
+//! repo root (mean/p95 per case, git sha, case params), and
+//! `pdserve bench-diff <old> <new>` compares two such files, exiting
+//! nonzero on a >15% mean regression — so the hot-loop numbers are
+//! tracked per PR instead of asserted once.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 pub struct BenchConfig {
@@ -50,9 +58,13 @@ pub struct Bencher {
 pub struct BenchResult {
     pub group: String,
     pub name: String,
+    /// Free-form case parameters ("scenes=2 peak=20") carried into the
+    /// JSON report so a diff can tell whether the workload changed.
+    pub params: String,
     pub iters: usize,
     pub mean_ns: f64,
     pub p50_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
     pub throughput: Option<(f64, &'static str)>,
 }
@@ -85,6 +97,18 @@ impl Bencher {
         &mut self,
         name: &str,
         elements: Option<(f64, &'static str)>,
+        f: impl FnMut() -> R,
+    ) {
+        self.bench_case(name, "", elements, f);
+    }
+
+    /// Like [`Bencher::bench`] but records free-form case parameters
+    /// ("scenes=2 peak=20") into the JSON report.
+    pub fn bench_case<R>(
+        &mut self,
+        name: &str,
+        params: &str,
+        elements: Option<(f64, &'static str)>,
         mut f: impl FnMut() -> R,
     ) {
         if self.skip(name) {
@@ -107,9 +131,11 @@ impl Bencher {
         let res = BenchResult {
             group: self.group.clone(),
             name: name.to_string(),
+            params: params.to_string(),
             iters,
             mean_ns: samples.mean(),
             p50_ns: samples.p50(),
+            p95_ns: samples.percentile(95.0),
             p99_ns: samples.p99(),
             throughput: elements.map(|(n, u)| (n / (samples.mean() / 1e9), u)),
         };
@@ -126,12 +152,163 @@ impl Bencher {
                 .map(|(v, u)| format!(",\"throughput\":{v:.1},\"unit\":\"{u}\""))
                 .unwrap_or_default();
             out.push_str(&format!(
-                "{{\"group\":\"{}\",\"name\":\"{}\",\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1}{}}}\n",
-                r.group, r.name, r.mean_ns, r.p50_ns, r.p99_ns, tp
+                "{{\"group\":\"{}\",\"name\":\"{}\",\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"p99_ns\":{:.1}{}}}\n",
+                r.group, r.name, r.mean_ns, r.p50_ns, r.p95_ns, r.p99_ns, tp
             ));
         }
         out
     }
+
+    /// The machine-readable report: bench name, git sha, and every case's
+    /// mean/p50/p95/p99 + params. This is what `BENCH_*.json` holds.
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = crate::jobj! {
+                    "group" => r.group.as_str(),
+                    "name" => r.name.as_str(),
+                    "params" => r.params.as_str(),
+                    "iters" => r.iters,
+                    "mean_ns" => r.mean_ns,
+                    "p50_ns" => r.p50_ns,
+                    "p95_ns" => r.p95_ns,
+                    "p99_ns" => r.p99_ns,
+                };
+                if let (Json::Obj(m), Some((v, u))) = (&mut o, r.throughput) {
+                    m.insert("throughput".to_string(), Json::Num(v));
+                    m.insert("unit".to_string(), Json::Str(u.to_string()));
+                }
+                o
+            })
+            .collect();
+        crate::jobj! {
+            "bench" => bench_name,
+            "schema" => 1usize,
+            "git_sha" => git_sha(),
+            "cases" => Json::Arr(cases),
+        }
+    }
+
+    /// Write `BENCH_<bench_name>.json` at the repo root (one level above
+    /// the crate) and return the path. Bench targets call this from
+    /// `main` so every `cargo bench` run refreshes the tracked file; CI
+    /// uploads it as an artifact and `pdserve bench-diff` gates on it.
+    pub fn write_json_report(&self, bench_name: &str) -> std::io::Result<String> {
+        let path = format!(
+            "{}/../BENCH_{}.json",
+            env!("CARGO_MANIFEST_DIR"),
+            bench_name
+        );
+        let mut text = self.to_json(bench_name).to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text)?;
+        Ok(path)
+    }
+}
+
+/// Short git sha of HEAD, or "unknown" outside a git checkout — the
+/// report must stay writable in stripped CI images and source tarballs.
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// `pdserve bench-diff <old.json> <new.json> [--threshold PCT]`: compare
+/// two `BENCH_*.json` reports case by case (keyed on group/name) and exit
+/// nonzero if any case's mean regressed by more than the threshold
+/// (default 15%). New and removed cases are reported but never fail the
+/// diff — the gate is for the trajectory of cases both reports share.
+pub fn cmd_bench_diff(args: &crate::util::cli::ParsedArgs) -> i32 {
+    let [old_path, new_path] = match args.positional.as_slice() {
+        [a, b] => [a.as_str(), b.as_str()],
+        _ => {
+            eprintln!("usage: pdserve bench-diff <old.json> <new.json> [--threshold PCT]");
+            return 2;
+        }
+    };
+    let threshold = args.get_f64("threshold", 15.0) / 100.0;
+    let old = match load_cases(old_path) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench-diff: {old_path}: {e}");
+            return 2;
+        }
+    };
+    let new = match load_cases(new_path) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench-diff: {new_path}: {e}");
+            return 2;
+        }
+    };
+    let mut regressions = 0usize;
+    for (key, new_mean) in &new {
+        let Some(old_mean) = old.iter().find(|(k, _)| k == key).map(|&(_, m)| m) else {
+            println!("NEW        {key}  (no baseline)");
+            continue;
+        };
+        let delta = if old_mean > 0.0 { new_mean / old_mean - 1.0 } else { 0.0 };
+        let verdict = if delta > threshold {
+            regressions += 1;
+            "REGRESSED"
+        } else if delta < -threshold {
+            "IMPROVED"
+        } else {
+            "ok"
+        };
+        println!(
+            "{verdict:<10} {key}  {:.2} ms -> {:.2} ms ({:+.1}%)",
+            old_mean / 1e6,
+            new_mean / 1e6,
+            delta * 100.0
+        );
+    }
+    for (key, _) in &old {
+        if !new.iter().any(|(k, _)| k == key) {
+            println!("REMOVED    {key}");
+        }
+    }
+    if regressions > 0 {
+        eprintln!(
+            "bench-diff: {regressions} case(s) regressed by more than {:.0}%",
+            threshold * 100.0
+        );
+        1
+    } else {
+        0
+    }
+}
+
+/// Parse one `BENCH_*.json` into `(group/name, mean_ns)` rows in file
+/// order.
+fn load_cases(path: &str) -> Result<Vec<(String, f64)>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let doc = Json::parse(&text)?;
+    let cases = doc
+        .get("cases")
+        .and_then(|c| c.as_arr())
+        .ok_or("missing 'cases' array")?;
+    let mut out = Vec::new();
+    for c in cases {
+        let group = c.get("group").and_then(|v| v.as_str()).unwrap_or("");
+        let name = c.get("name").and_then(|v| v.as_str()).unwrap_or("");
+        let mean = c
+            .get("mean_ns")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("case {group}/{name}: missing mean_ns"))?;
+        out.push((format!("{group}/{name}"), mean));
+    }
+    Ok(out)
 }
 
 impl Default for Bencher {

@@ -19,6 +19,7 @@ pub mod fig13;
 pub mod fig14;
 pub mod headline;
 pub mod routing;
+pub mod scale;
 
 use crate::util::cli::ParsedArgs;
 
@@ -87,6 +88,9 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         if want(&["routing"]) {
             routing::run(scale);
         }
+        if want(&["scale"]) {
+            scale::run(scale, json_dir);
+        }
         if want(&["headline"]) {
             headline::run(scale);
         }
@@ -98,7 +102,7 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, d2d, routing, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, d2d, routing, scale, headline, all)");
         return 2;
     }
     0

@@ -1,0 +1,305 @@
+//! `repro --fig scale` — the scaling trajectory for the sharded fleet.
+//!
+//! Three claims, measured instead of asserted:
+//!
+//! 1. **Scene scaling** — sweeping the scene count at fixed per-scene
+//!    load, served throughput grows near-linearly: scenes share nothing,
+//!    so the combined day must serve ≈ the sum of the solo days.
+//! 2. **Group scaling** — sweeping groups-per-scene at fixed per-group
+//!    load, served throughput again grows near-linearly (the fleet adds
+//!    capacity in group quanta; §3.3).
+//! 3. **Worker speedup** (full mode only) — the 10k-instance day under
+//!    `--workers 4` beats `--workers 1` wall-clock by ≥ 2× while
+//!    producing a byte-identical JSON report (the sharding oracle).
+//!
+//! Per-scene load is held fixed across the scene sweep by setting
+//! `peak_total_rps = C · Σweights`: `scene_rate_rps` multiplies the peak
+//! by `w_s / W`, so each scene sees rate `C · w_s · diurnal` no matter
+//! how many other scenes run beside it. Solo and combined days draw
+//! per-scene PRNG streams from different shard seeds, so the comparison
+//! is statistical (tolerance ±10%), not bitwise — the bitwise claim is
+//! the worker-count invariance, which is asserted exactly.
+//!
+//! This file is on the wall-clock lint allowlist for the speedup
+//! measurement; the in-module test never touches `Instant`.
+
+use crate::serving::fleet::FleetConfig;
+use crate::serving::shard::run_sharded;
+
+use super::Scale;
+
+/// One row of the scene/group sweep.
+pub struct ScaleRow {
+    pub label: String,
+    /// Served throughput of the combined sharded day (req/s).
+    pub combined_rps: f64,
+    /// Sum of the solo days' served throughput (req/s).
+    pub solo_sum_rps: f64,
+    /// combined / solo-sum: 1.0 is perfectly linear.
+    pub linearity: f64,
+}
+
+/// Everything `repro --fig scale` measures.
+pub struct ScaleResult {
+    pub scene_rows: Vec<ScaleRow>,
+    pub group_rows: Vec<ScaleRow>,
+    /// `--workers 1` vs `--workers 4` reports are byte-identical.
+    pub workers_identical: bool,
+    /// Wall-clock speedup of workers=4 over workers=1 (full mode only).
+    pub speedup: Option<f64>,
+    /// Peak in-service instances of the big day (full mode only).
+    pub day_instances: Option<usize>,
+}
+
+/// Offered load per unit of scenario weight (req/s) in the sweeps. The
+/// scenes run mildly saturated so served throughput reflects capacity,
+/// which is what must scale.
+const RPS_PER_WEIGHT: f64 = 12.0;
+
+/// Base day for the sweeps: fixed group count (min = max, no scaling) so
+/// capacity is pinned, compressed hours for tractability.
+fn sweep_cfg(scale: Scale, scenes: Vec<usize>, groups: usize, rps_per_weight: f64) -> FleetConfig {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    let mut cfg = FleetConfig {
+        scenes,
+        hours: 24.0,
+        ms_per_hour: if fast { 600.0 } else { 1_200.0 },
+        min_groups_per_scene: groups,
+        max_groups_per_scene: groups,
+        scale_groups: false,
+        seed: 0x5CA1E,
+        ..Default::default()
+    };
+    let total_w: f64 = cfg.scenes.iter().map(|&s| cfg.scenarios[s].weight).sum();
+    cfg.peak_total_rps = rps_per_weight * total_w;
+    cfg
+}
+
+/// Serve the day sharded (1 worker — the count is output-invariant) and
+/// return served req/s.
+fn served_rps(cfg: FleetConfig) -> f64 {
+    run_sharded(cfg, 1).rps
+}
+
+/// Claim 1: served throughput vs scene count at fixed per-scene load.
+pub fn scene_sweep(scale: Scale) -> Vec<ScaleRow> {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    let counts: &[usize] = if fast { &[1, 2, 3] } else { &[1, 2, 4, 6] };
+    let all_scenes: Vec<usize> = vec![0, 1, 2, 3, 4, 5];
+    // Solo day per scene, computed once and summed per row.
+    let solo: Vec<f64> = all_scenes
+        .iter()
+        .take(*counts.last().unwrap_or(&1))
+        .map(|&s| served_rps(sweep_cfg(scale, vec![s], 2, RPS_PER_WEIGHT)))
+        .collect();
+    counts
+        .iter()
+        .map(|&n| {
+            let combined = served_rps(sweep_cfg(scale, all_scenes[..n].to_vec(), 2, RPS_PER_WEIGHT));
+            let solo_sum: f64 = solo[..n].iter().sum();
+            ScaleRow {
+                label: format!("{n} scene(s)"),
+                combined_rps: combined,
+                solo_sum_rps: solo_sum,
+                linearity: combined / solo_sum,
+            }
+        })
+        .collect()
+}
+
+/// Claim 2: served throughput vs groups-per-scene at fixed per-group
+/// load (offered load scales with the group count).
+pub fn group_sweep(scale: Scale) -> Vec<ScaleRow> {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    let counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let base = served_rps(sweep_cfg(scale, vec![0, 3], 1, RPS_PER_WEIGHT));
+    counts
+        .iter()
+        .map(|&g| {
+            let combined =
+                served_rps(sweep_cfg(scale, vec![0, 3], g, RPS_PER_WEIGHT * g as f64));
+            let solo_sum = base * g as f64;
+            ScaleRow {
+                label: format!("{g} group(s)/scene"),
+                combined_rps: combined,
+                solo_sum_rps: solo_sum,
+                linearity: combined / solo_sum,
+            }
+        })
+        .collect()
+}
+
+/// The 10k-instance tractability day: 6 scenes × 14 groups × 120
+/// instances = 10,080 in service from hour zero. Lightly loaded by
+/// design — the claim is that a fleet this wide *turns* in one sitting,
+/// and that scene sharding splits its wall clock.
+pub fn tenk_day() -> FleetConfig {
+    let mut cfg = FleetConfig {
+        scenes: vec![0, 1, 2, 3, 4, 5],
+        hours: 24.0,
+        ms_per_hour: 2_000.0,
+        group_total: 120,
+        init_ratio: (60, 60),
+        min_groups_per_scene: 14,
+        max_groups_per_scene: 14,
+        scale_groups: false,
+        seed: 0x10_000,
+        ..Default::default()
+    };
+    let total_w: f64 = cfg.scenes.iter().map(|&s| cfg.scenarios[s].weight).sum();
+    cfg.peak_total_rps = 20.0 * total_w;
+    cfg
+}
+
+/// Byte-identity of the `--workers 1` vs `--workers 4` reports on `cfg`.
+pub fn workers_invariant(cfg: &FleetConfig) -> bool {
+    let a = run_sharded(cfg.clone(), 1).to_json().to_string_pretty();
+    let b = run_sharded(cfg.clone(), 4).to_json().to_string_pretty();
+    a == b
+}
+
+pub fn measure(scale: Scale) -> ScaleResult {
+    let fast = scale.closed_requests < Scale::full().closed_requests;
+    let scene_rows = scene_sweep(scale);
+    let group_rows = group_sweep(scale);
+    // The bitwise oracle, on a cheap config in both modes.
+    let workers_identical = workers_invariant(&sweep_cfg(scale, vec![0, 1, 2], 2, RPS_PER_WEIGHT));
+    let (speedup, day_instances) = if fast {
+        (None, None)
+    } else {
+        // Full mode: time the 10k-instance day. Wall clock lives here —
+        // never in the in-module test — and this file is on the
+        // wall-clock lint allowlist for exactly this block.
+        use std::time::Instant;
+        let day = tenk_day();
+        let t0 = Instant::now();
+        let one = run_sharded(day.clone(), 1);
+        let t_one = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let four = run_sharded(day.clone(), 4);
+        let t_four = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            one.to_json().to_string_pretty(),
+            four.to_json().to_string_pretty(),
+            "workers 1 vs 4 reports differ on the 10k-instance day"
+        );
+        (Some(t_one / t_four.max(1e-9)), Some(one.peak_instances))
+    };
+    ScaleResult { scene_rows, group_rows, workers_identical, speedup, day_instances }
+}
+
+pub fn run(sc: Scale, json_dir: Option<&str>) {
+    let r = measure(sc);
+    let fmt = |rows: &[ScaleRow]| -> Vec<(String, String)> {
+        rows.iter()
+            .map(|row| {
+                (
+                    row.label.clone(),
+                    format!(
+                        "{:.2} rps  (solo sum {:.2}, linearity {:.2})",
+                        row.combined_rps, row.solo_sum_rps, row.linearity
+                    ),
+                )
+            })
+            .collect()
+    };
+    super::table(
+        "scale — served throughput vs scene count (fixed per-scene load)",
+        ("fleet width", "served"),
+        &fmt(&r.scene_rows),
+    );
+    super::table(
+        "scale — served throughput vs groups/scene (fixed per-group load)",
+        ("fleet depth", "served"),
+        &fmt(&r.group_rows),
+    );
+    for row in r.scene_rows.iter().chain(&r.group_rows) {
+        assert!(
+            (0.9..=1.1).contains(&row.linearity),
+            "{}: served {:.2} rps vs solo sum {:.2} — scaling is not near-linear",
+            row.label,
+            row.combined_rps,
+            row.solo_sum_rps
+        );
+    }
+    assert!(r.workers_identical, "workers 1 vs 4 reports differ (sweep config)");
+    println!("\nworkers 1 vs 4: byte-identical JSON report ✓");
+    if let (Some(speedup), Some(instances)) = (r.speedup, r.day_instances) {
+        println!(
+            "10k-instance day: {instances} peak instances, --workers 4 speedup {speedup:.2}x"
+        );
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores >= 4 {
+            assert!(
+                speedup >= 2.0,
+                "--workers 4 speedup {speedup:.2}x < 2x on a {cores}-core host"
+            );
+        } else {
+            println!("(speedup bound skipped: only {cores} cores available)");
+        }
+    }
+    if let Some(dir) = json_dir {
+        let j = crate::jobj! {
+            "fig" => "scale",
+            "scene_labels" => r.scene_rows.iter().map(|x| x.label.clone()).collect::<Vec<_>>(),
+            "scene_rps" => r.scene_rows.iter().map(|x| x.combined_rps).collect::<Vec<_>>(),
+            "scene_linearity" => r.scene_rows.iter().map(|x| x.linearity).collect::<Vec<_>>(),
+            "group_labels" => r.group_rows.iter().map(|x| x.label.clone()).collect::<Vec<_>>(),
+            "group_rps" => r.group_rows.iter().map(|x| x.combined_rps).collect::<Vec<_>>(),
+            "group_linearity" => r.group_rows.iter().map(|x| x.linearity).collect::<Vec<_>>(),
+            "workers_identical" => r.workers_identical,
+            "speedup" => r.speedup.unwrap_or(0.0),
+            "day_instances" => r.day_instances.unwrap_or(0),
+        };
+        super::write_json(dir, "scale", &j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_scaling_is_near_linear() {
+        for row in scene_sweep(Scale::fast()) {
+            assert!(
+                (0.9..=1.1).contains(&row.linearity),
+                "{}: linearity {:.3} (served {:.2} vs solo sum {:.2})",
+                row.label,
+                row.linearity,
+                row.combined_rps,
+                row.solo_sum_rps
+            );
+        }
+    }
+
+    #[test]
+    fn group_scaling_is_near_linear() {
+        for row in group_sweep(Scale::fast()) {
+            assert!(
+                (0.9..=1.1).contains(&row.linearity),
+                "{}: linearity {:.3}",
+                row.label,
+                row.linearity
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_config_is_worker_count_invariant() {
+        let cfg = sweep_cfg(Scale::fast(), vec![0, 1, 2], 2, RPS_PER_WEIGHT);
+        assert!(workers_invariant(&cfg));
+    }
+
+    #[test]
+    fn tenk_day_really_is_ten_thousand_instances() {
+        let cfg = tenk_day();
+        let groups = cfg.scenes.len() * cfg.min_groups_per_scene;
+        assert!(
+            groups * cfg.group_total >= 10_000,
+            "{} groups x {} instances < 10k",
+            groups,
+            cfg.group_total
+        );
+    }
+}

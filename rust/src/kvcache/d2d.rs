@@ -159,6 +159,23 @@ pub fn layout_dir(layout: &KvLayout) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// The full single-pull handoff charge (µs) for one per-device payload:
+/// one RDMA pull over `hops` switch hops under `sharers`-way spine
+/// conflict, plus the scatter-free placement pass. The one pricing both
+/// the simulator (`SimConfig::handoff_ms`, Contiguous discipline) and the
+/// real server's staged-transfer accounting use — a regression test in
+/// `serving::sim` pins the two to the same number.
+pub fn single_pull_handoff_us(
+    rdma: &crate::network::rdma::RdmaModel,
+    assembly: &AssemblyModel,
+    per_dev_bytes: usize,
+    hops: usize,
+    sharers: usize,
+) -> f64 {
+    rdma.single_pull_cost(per_dev_bytes, hops, sharers).total_us()
+        + assembly.place_contiguous_us(per_dev_bytes)
+}
+
 /// Scatter-free placement into fixed-size token blocks (the simulated
 /// PageAttention receiver): each layer's range streams straight from the
 /// pulled region into that layer's block list in one pass — offset math,

@@ -7,6 +7,8 @@
 //!             closed MLOps loop (dynamic P/D ratio + group scaling)
 //! - `lint`    determinism & invariant static analysis over this crate's
 //!             own sources (the CI gate for the reproducibility contract)
+//! - `bench-diff` compare two BENCH_*.json files, exit nonzero on >15%
+//!             mean regression (the per-PR bench trajectory gate)
 //! - `runtime` smoke-test artifact loading and one request
 //! - `info`    print artifact + config summary
 
@@ -21,13 +23,14 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("lint") => pd_serve::analysis::cmd_lint(&args),
+        Some("bench-diff") => pd_serve::bench::cmd_bench_diff(&args),
         Some("info") => cmd_info(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
             }
             eprintln!(
-                "usage: pdserve <serve|repro|simulate|fleet|lint|runtime|info> \
+                "usage: pdserve <serve|repro|simulate|fleet|lint|bench-diff|runtime|info> \
                  [--artifacts DIR] [--config FILE] [--fig ID] ..."
             );
             2
@@ -121,7 +124,12 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// `--detect-ms MS` (fault-detector period, real ms)
 /// `--static` (freeze ratios) `--no-scale` (freeze group counts)
 /// `--quiet` (summary only, no timeline)
-/// `--json` (full deterministic JSON report instead of the summary).
+/// `--json` (full deterministic JSON report instead of the summary)
+/// `--workers N` (scene-sharded parallel day: one whole `FleetSim` per
+/// scene on N worker threads, deterministic merge — the report is
+/// byte-identical for every N; omit the flag for the legacy
+/// single-queue day, whose shared arrival stream is a different —
+/// equally deterministic — interleaving).
 fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     use pd_serve::serving::fleet::{FleetConfig, FleetSim};
     use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
@@ -220,7 +228,20 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
         eprintln!("--group-size must be >= 2");
         return 2;
     }
-    let out = FleetSim::new(cfg).run();
+    let out = match args.get("workers") {
+        Some(w) => {
+            let Ok(workers) = w.parse::<usize>() else {
+                eprintln!("--workers must be a thread count >= 1, got '{w}'");
+                return 2;
+            };
+            if workers == 0 {
+                eprintln!("--workers must be a thread count >= 1");
+                return 2;
+            }
+            pd_serve::serving::shard::run_sharded(cfg, workers)
+        }
+        None => FleetSim::new(cfg).run(),
+    };
     if args.has("json") {
         println!("{}", out.to_json().to_string_pretty());
     } else {

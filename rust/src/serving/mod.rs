@@ -12,6 +12,10 @@
 //!   rolling upgrades, live fault injection with minimum-cost recovery
 //!   (§3.4), and cross-scene instance lending on one conserved budget.
 //!
+//! - `shard`: scene-sharded parallel fleet execution (`fleet --workers N`)
+//!   — one whole `FleetSim` per scene on worker threads, deterministic
+//!   merge on the caller; the one sanctioned home for thread spawning
+//!   (enforced by the `thread-outside-shard` lint rule).
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
@@ -23,9 +27,11 @@
 pub mod fleet;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod speculative;
 pub mod sim;
 
 pub use fleet::{FleetConfig, FleetOutput, FleetSim};
+pub use shard::run_sharded;
 pub use router::{RouteKind, RoutePolicy, RouteRequest};
 pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WindowStats, WorkloadKind};

@@ -1,7 +1,12 @@
 //! The real-model serving engine: the same gateway policy as the
 //! simulator, but prefill/decode execute the AOT-compiled artifacts on the
-//! PJRT CPU client and every KVCache moves as actual bytes
-//! (contiguous buffer → RecvScatter), with python nowhere on the path.
+//! PJRT CPU client and every KVCache moves as actual bytes through the
+//! staged single-pull path (reserved send buffer → `write_range` per
+//! layer → one contiguous `D2dRegion::pull` → RecvScatter), with python
+//! nowhere on the path. The cost model this path realizes is priced by
+//! `kvcache::d2d::single_pull_handoff_us`; a regression test in
+//! `serving::sim` pins the simulator's Contiguous discipline to the same
+//! charge, so the sim and the server agree on what a transfer costs.
 //!
 //! Topology note: PJRT wrapper handles are not `Send`, so the engine runs
 //! all logical instances on one thread, interleaving prefill executions
@@ -14,10 +19,12 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
+use crate::kvcache::d2d::{layout_dir, D2dRegion};
+use crate::kvcache::{KvLayout, SendBufferPool};
 use crate::runtime::tokenizer;
 use crate::runtime::{DecodeHandle, ServingRuntime};
 use crate::serving::router::{RouteKind, RoutePolicy, RouteRequest};
@@ -118,6 +125,11 @@ pub struct RealEngine {
     decodes: Vec<RealDecode>,
     n_prefill: usize,
     route: RouteKind,
+    // Reserved contiguous send buffers (one per logical prefill) and the
+    // layout that prices their per-layer (offset, len) staging ranges —
+    // the sender half of the single-pull transfer path (§3.6).
+    send_pool: SendBufferPool,
+    layout: KvLayout,
     /// Per-request generation cap (defaults to `max_len` minus the
     /// largest prefill bucket, so prompt + generation always fit).
     pub gen_budget: usize,
@@ -136,11 +148,23 @@ impl RealEngine {
         }
         // max_len bounds prompt + generation; default budget below.
         let gen_budget = rt.meta.max_len.saturating_sub(rt.meta.prefill_buckets[rt.meta.prefill_buckets.len() - 1]);
+        let n_prefill = n_prefill.max(1);
+        // The layout comes from meta.json's cache shapes; the pool
+        // reserves one full-cache buffer per logical prefill entrance (a
+        // prompt occupies its buffer until the transfer finishes).
+        let layout = KvLayout::from_shapes(
+            &rt.meta.prefill_cache_shape,
+            &rt.meta.decode_cache_shape,
+        )
+        .ok_or_else(|| anyhow!("meta.json cache shapes are not a KV layout"))?;
+        let send_pool = SendBufferPool::new(n_prefill, layout.prefill_elems());
         Ok(RealEngine {
             rt,
             decodes,
-            n_prefill: n_prefill.max(1),
+            n_prefill,
             route: RouteKind::LeastLoaded,
+            send_pool,
+            layout,
             gen_budget,
         })
     }
@@ -214,13 +238,38 @@ impl RealEngine {
                     report.prefill_execs += 1;
                     let ttft_ms = t_arrival.elapsed().as_secs_f64() * 1e3;
 
-                    // Block-free transfer: the contiguous cache crosses the
-                    // "wire" as bytes (in-process move, timed).
+                    // Staged single-pull transfer (§3.6): prefill lands
+                    // each layer in its reserved send buffer at the
+                    // layout's (offset, len) — in the real flow this
+                    // happens as layers complete, so the region is
+                    // assembled the moment prefill finishes — then the
+                    // decode side issues one contiguous pull of the whole
+                    // region, directory riding along from the one-time
+                    // meta exchange.
                     let t_x = Instant::now();
-                    let bytes =
-                        crate::runtime::model::bytemuck_cast(&out.cache).to_vec();
-                    let restored = crate::runtime::model::bytes_as_f32(&bytes);
+                    let buf = self.send_pool.acquire().ok_or_else(|| {
+                        anyhow!("send buffer pool exhausted with a free decode slot")
+                    })?;
+                    for l in 0..self.layout.n_layers {
+                        let (off, len) = self.layout.layer_range(l);
+                        self.send_pool.write_range(
+                            buf,
+                            off,
+                            &out.cache[off..off + len],
+                        )?;
+                    }
+                    let region = D2dRegion::from_contiguous(
+                        crate::runtime::model::bytemuck_cast(
+                            self.send_pool.read(buf)?,
+                        )
+                        .to_vec(),
+                        layout_dir(&self.layout),
+                    )?;
+                    let pulled = region.pull();
+                    let restored =
+                        crate::runtime::model::bytes_as_f32(pulled.as_bytes());
                     let xfer_ms = t_x.elapsed().as_secs_f64() * 1e3;
+                    self.send_pool.release(buf)?;
 
                     // Operator RecvScatter into the decode cache slot.
                     let scatter_ms = self.rt.scatter_device(

@@ -1,0 +1,397 @@
+//! Scene-sharded parallel fleet execution (`pdserve fleet --workers N`).
+//!
+//! The paper's fleet spans tens of thousands of NPUs; one simulated day
+//! at that scale is too much work for a single event loop. Scenes are
+//! the natural shard boundary: a scene's groups, traffic, faults and
+//! ledger never touch another scene's state inside the day (cross-scene
+//! lending is the one coupling, and it is scene-local in sharded mode —
+//! see below). So sharded mode runs **one whole [`FleetSim`] per scene**
+//! on a pool of worker threads and deterministically merges the
+//! per-scene [`FleetOutput`]s on the calling thread.
+//!
+//! # Ownership model
+//!
+//! `Simulation` and `FleetSim` are deliberately **not** `Send`
+//! (documented `compile_fail` tripwires in `analysis::boundary`), so a
+//! worker cannot be handed a simulator — it is handed a [`FleetConfig`]
+//! (plain data, `Send + Clone`) and builds, runs and *consumes* its
+//! `FleetSim` entirely on its own thread. The only values that cross the
+//! thread boundary are:
+//!
+//! - inbound: one `FleetConfig` per scene (scene list narrowed to that
+//!   scene, peak rate scaled by the scene's weight share, spare pool
+//!   partitioned, seed derived per scene), and
+//! - outbound: one [`FleetOutput`] per scene — counters, window rows,
+//!   ledger/lease/recovery reports and log strings, all plain data
+//!   (`assert_send` pins in `analysis::boundary`).
+//!
+//! # Determinism oracle
+//!
+//! Each scene's output depends only on its own config — never on which
+//! worker ran it or in what order — and the merge consumes the outputs
+//! in scene-index order on the calling thread. Therefore `--workers 1`
+//! and `--workers N` produce **byte-identical** `FleetOutput::to_json()`
+//! for the same seed; `tests/determinism.rs` pins exactly this. The
+//! merge keys every concatenated series on (scene index, sequence):
+//! window rows zip index-wise (control ticks are synchronous across
+//! scenes), recovery reports and the timeline stable-sort by hour with
+//! scene order breaking ties, and lease ids are renumbered in scene
+//! order so they stay unique fleet-wide.
+//!
+//! # Sharded-mode semantics (documented divergences)
+//!
+//! Sharding changes *scheduling*, not workload: per-scene arrival
+//! processes, tidal shapes and control loops are the same as the legacy
+//! single-queue day. Three things are scene-local where the legacy path
+//! interleaved them fleet-wide, and the derived per-scene seeds make
+//! them reproducible but not byte-equal to the legacy path:
+//!
+//! - arrivals and tie-breaks draw from a per-scene PRNG stream
+//!   ([`scene_seed`]) instead of one shared stream,
+//! - the fault injector draws a per-scene schedule over that scene's
+//!   devices,
+//! - instance lending (`--lend`) operates within a scene's own ledger
+//!   partition — a lease can no longer cross scenes, and an unfundable
+//!   scale-out is deferred exactly as before,
+//! - `peak_instances` is the sum of per-scene peaks (an upper bound on
+//!   the legacy concurrent peak, since scene peaks are tidally phased).
+//!
+//! This module is the **one sanctioned home for thread spawning** in the
+//! crate: the `thread-outside-shard` lint rule makes `std::thread::spawn`
+//! / `std::thread::scope` anywhere else an error, so ad-hoc parallelism
+//! cannot bypass this oracle.
+#![deny(missing_docs)]
+
+use std::thread;
+
+use crate::coordinator::mlops::LedgerReport;
+use crate::serving::fleet::{FleetConfig, FleetOutput, FleetSim, FleetWindow};
+
+/// Derive the PRNG seed for scene shard `idx` (running scene id `scene`)
+/// from the fleet seed: a splitmix-style mix so per-scene streams are
+/// decorrelated but fully determined by (fleet seed, shard index, scene).
+pub fn scene_seed(seed: u64, idx: usize, scene: usize) -> u64 {
+    let mut z = seed
+        ^ ((idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        ^ ((scene as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z
+}
+
+/// The per-scene shard config: the scene list narrowed to one scene, the
+/// fleet peak scaled to that scene's weight share (so the scene sees the
+/// identical tidal rate it would in the multi-scene day), `spares` of the
+/// fleet spare pool, and a derived per-scene seed.
+fn scene_config(cfg: &FleetConfig, idx: usize, scene: usize, spares: usize) -> FleetConfig {
+    let total_w: f64 = cfg.scenes.iter().map(|&s| cfg.scenarios[s].weight).sum();
+    let w = cfg.scenarios[scene].weight;
+    FleetConfig {
+        scenes: vec![scene],
+        peak_total_rps: cfg.peak_total_rps * w / total_w,
+        spare_instances: spares,
+        seed: scene_seed(cfg.seed, idx, scene),
+        ..cfg.clone()
+    }
+}
+
+/// Run one fleet day sharded by scene over `workers` threads and merge
+/// the per-scene outputs deterministically. `workers` is clamped to
+/// `[1, n_scenes]`; the result is byte-identical for every worker count
+/// (see the module docs for the oracle).
+pub fn run_sharded(cfg: FleetConfig, workers: usize) -> FleetOutput {
+    let n = cfg.scenes.len();
+    assert!(n > 0, "sharded fleet needs at least one scene");
+    let w = workers.clamp(1, n);
+    // Per-scene configs built up front on the calling thread: plain
+    // `Send` data is all that crosses into the workers.
+    let base_spares = cfg.spare_instances / n;
+    let extra = cfg.spare_instances % n;
+    let mut shard_cfgs: Vec<(usize, FleetConfig)> = cfg
+        .scenes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let spares = base_spares + usize::from(i < extra);
+            (i, scene_config(&cfg, i, s, spares))
+        })
+        .collect();
+    // Round-robin scenes onto workers. Assignment affects only wall
+    // clock: each scene's result is a pure function of its config.
+    let mut buckets: Vec<Vec<(usize, FleetConfig)>> = (0..w).map(|_| Vec::new()).collect();
+    for (i, c) in shard_cfgs.drain(..) {
+        buckets[i % w].push((i, c));
+    }
+    let mut results: Vec<(usize, FleetOutput)> = thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                scope.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(i, c)| (i, FleetSim::new(c).run()))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    });
+    // Merge in scene-index order regardless of completion order.
+    results.sort_by_key(|&(i, _)| i);
+    merge(&cfg, results.into_iter().map(|(_, o)| o).collect())
+}
+
+/// Deterministic merge of per-scene day outputs, keyed on (scene index,
+/// sequence). Runs on the calling thread; identical for any worker count.
+fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
+    let duration_s = cfg.hours * cfg.ms_per_hour / 1000.0;
+    let mut injected = 0usize;
+    let mut completed = 0usize;
+    let mut timed_out = 0usize;
+    let mut slo_ok = 0usize;
+    let mut total = 0usize;
+    let mut ttft_sum = 0.0f64;
+    let mut e2e_sum = 0.0f64;
+    let mut xfers = 0usize;
+    let mut xfer_sum = 0.0f64;
+    let mut wire_sum = 0.0f64;
+    let mut adjustments = 0usize;
+    let mut scale_outs = 0usize;
+    let mut scale_ins = 0usize;
+    let mut training_switches = 0usize;
+    let mut upgraded_groups = 0usize;
+    let mut faults_seen = 0usize;
+    let mut faults_fatal = 0usize;
+    let mut recoveries = 0usize;
+    let mut protected = 0usize;
+    let mut scale_deferred = 0usize;
+    let mut lease_calls = 0usize;
+    let mut peak_instances = 0usize;
+    let mut end_hour = 0.0f64;
+    let mut ledger = LedgerReport {
+        seed_total: 0,
+        minted: 0,
+        pool: 0,
+        banked: 0,
+        scrapped: 0,
+        in_service: 0,
+        leases: Vec::new(),
+        balanced: true,
+    };
+    let mut next_lease_id = 0u64;
+    for (i, o) in outs.iter().enumerate() {
+        injected += o.injected;
+        completed += o.completed;
+        timed_out += o.timed_out;
+        total += o.total();
+        // Reconstruct the integer tallies behind the per-scene ratios —
+        // exact, since attainment = slo_ok / total for integer counts.
+        if o.total() > 0 {
+            slo_ok += (o.slo_attainment * o.total() as f64).round() as usize;
+        }
+        ttft_sum += o.mean_ttft_ms * o.completed as f64;
+        e2e_sum += o.mean_e2e_ms * o.completed as f64;
+        xfers += o.xfers;
+        let xs = o.mean_xfer_ms * o.xfers as f64;
+        xfer_sum += xs;
+        wire_sum += o.d2d_utilization * xs;
+        adjustments += o.adjustments;
+        scale_outs += o.scale_outs;
+        scale_ins += o.scale_ins;
+        training_switches += o.training_switches;
+        upgraded_groups += o.upgraded_groups;
+        faults_seen += o.faults_seen;
+        faults_fatal += o.faults_fatal;
+        recoveries += o.recoveries;
+        protected += o.protected;
+        scale_deferred += o.scale_deferred;
+        lease_calls += o.lease_calls;
+        peak_instances += o.peak_instances;
+        if i == 0 {
+            end_hour = o.end_hour;
+        }
+        ledger.seed_total += o.ledger.seed_total;
+        ledger.minted += o.ledger.minted;
+        ledger.pool += o.ledger.pool;
+        ledger.banked += o.ledger.banked;
+        ledger.scrapped += o.ledger.scrapped;
+        ledger.in_service += o.ledger.in_service;
+        ledger.balanced &= o.ledger.balanced;
+        for l in &o.ledger.leases {
+            // Scene-local lease ids renumbered in scene order so they
+            // stay unique fleet-wide.
+            let mut l = l.clone();
+            l.id = next_lease_id;
+            next_lease_id += 1;
+            ledger.leases.push(l);
+        }
+    }
+    // Window rows zip index-wise: control ticks fire at the same virtual
+    // times in every scene shard, so row `i` of each curve is the same
+    // control window.
+    let n_windows = outs.iter().map(|o| o.served_curve.len()).max().unwrap_or(0);
+    let mut served_curve = Vec::with_capacity(n_windows);
+    for wi in 0..n_windows {
+        let mut hour = 0.0f64;
+        let mut have_hour = false;
+        let mut offered = 0.0f64;
+        let mut served = 0.0f64;
+        let mut w_protected = 0usize;
+        let mut w_xfers = 0usize;
+        let mut w_xfer_sum = 0.0f64;
+        let mut w_wire_sum = 0.0f64;
+        for o in &outs {
+            let Some(w) = o.served_curve.get(wi) else { continue };
+            if !have_hour {
+                hour = w.hour;
+                have_hour = true;
+            }
+            offered += w.offered_rps;
+            served += w.served_rps;
+            w_protected += w.protected;
+            w_xfers += w.xfers;
+            let xs = w.mean_xfer_ms * w.xfers as f64;
+            w_xfer_sum += xs;
+            w_wire_sum += w.d2d_util * xs;
+        }
+        served_curve.push(FleetWindow {
+            hour,
+            offered_rps: offered,
+            served_rps: served,
+            protected: w_protected,
+            xfers: w_xfers,
+            mean_xfer_ms: if w_xfers == 0 { 0.0 } else { w_xfer_sum / w_xfers as f64 },
+            d2d_util: if w_xfer_sum <= 0.0 { 0.0 } else { (w_wire_sum / w_xfer_sum).min(1.0) },
+        });
+    }
+    // Consume the outputs for the owned series (RecoveryReport is not
+    // Clone by design — timelines move, never duplicate).
+    let mut recovery_reports = Vec::new();
+    let mut timeline = Vec::new();
+    let mut final_ratios = Vec::new();
+    for o in outs {
+        recovery_reports.extend(o.recovery_reports);
+        timeline.extend(o.timeline);
+        final_ratios.extend(o.final_ratios);
+    }
+    // Stable sorts: hour order, scene order breaking ties. NaN-free by
+    // construction; total_cmp keeps the comparator total anyway.
+    recovery_reports.sort_by(|a, b| a.0.total_cmp(&b.0));
+    timeline.sort_by(|a, b| a.hour.total_cmp(&b.hour));
+    FleetOutput {
+        injected,
+        completed,
+        timed_out,
+        rps: completed as f64 / duration_s,
+        slo_attainment: if total == 0 { 1.0 } else { slo_ok as f64 / total as f64 },
+        mean_ttft_ms: if completed == 0 { 0.0 } else { ttft_sum / completed as f64 },
+        mean_e2e_ms: if completed == 0 { 0.0 } else { e2e_sum / completed as f64 },
+        xfers,
+        mean_xfer_ms: if xfers == 0 { 0.0 } else { xfer_sum / xfers as f64 },
+        d2d_utilization: if xfer_sum <= 0.0 { 0.0 } else { (wire_sum / xfer_sum).min(1.0) },
+        adjustments,
+        scale_outs,
+        scale_ins,
+        training_switches,
+        upgraded_groups,
+        faults_seen,
+        faults_fatal,
+        recoveries,
+        protected,
+        scale_deferred,
+        lease_calls,
+        recovery_reports,
+        ledger,
+        end_hour,
+        peak_instances,
+        final_ratios,
+        served_curve,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> FleetConfig {
+        FleetConfig {
+            scenes: vec![2, 5],
+            peak_total_rps: 24.0,
+            hours: 24.0,
+            ms_per_hour: 1_500.0,
+            control_period_ms: 1_500.0,
+            slice_ms: 500.0,
+            max_groups_per_scene: 3,
+            seed: 0xFA57,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_day_is_worker_count_invariant() {
+        // The merge oracle at module scope: the full JSON report must be
+        // byte-identical across worker counts (tests/determinism.rs pins
+        // the same property on the 4-way split).
+        let a = run_sharded(small_cfg(), 1).to_json().to_string_pretty();
+        let b = run_sharded(small_cfg(), 2).to_json().to_string_pretty();
+        assert_eq!(a, b, "worker count changed the merged day report");
+    }
+
+    #[test]
+    fn sharded_day_conserves_requests_and_balances_the_ledger() {
+        let out = run_sharded(small_cfg(), 2);
+        assert!(out.injected > 100, "tidal day injected only {}", out.injected);
+        assert_eq!(out.total(), out.injected, "requests lost across shards");
+        assert!(out.completed > 0);
+        assert!(out.ledger.balanced, "merged ledger unbalanced: {:?}", out.ledger);
+        // Conservation holds on the merged books exactly as per scene.
+        let l = &out.ledger;
+        assert_eq!(
+            l.in_service + l.banked + l.pool + l.scrapped,
+            l.seed_total + l.minted
+        );
+    }
+
+    #[test]
+    fn worker_clamp_and_spare_partition_cover_all_scenes() {
+        // More workers than scenes: clamped, still correct and invariant.
+        let a = run_sharded(small_cfg(), 64).to_json().to_string_pretty();
+        let b = run_sharded(small_cfg(), 1).to_json().to_string_pretty();
+        assert_eq!(a, b);
+        // Odd spare pool across two scenes: nothing dropped.
+        let cfg = FleetConfig { spare_instances: 7, ..small_cfg() };
+        let out = run_sharded(cfg, 2);
+        let l = &out.ledger;
+        assert_eq!(l.in_service + l.banked + l.pool + l.scrapped, l.seed_total + l.minted);
+    }
+
+    #[test]
+    fn scene_seeds_are_decorrelated() {
+        let s0 = scene_seed(0xF1EE7, 0, 2);
+        let s1 = scene_seed(0xF1EE7, 1, 5);
+        let s2 = scene_seed(0xF1EE7, 0, 5);
+        assert_ne!(s0, s1);
+        assert_ne!(s0, s2);
+        assert_ne!(s1, s2);
+        // Pure function of (seed, idx, scene).
+        assert_eq!(s0, scene_seed(0xF1EE7, 0, 2));
+    }
+
+    #[test]
+    fn merged_window_rows_zip_by_control_tick() {
+        let out1 = run_sharded(small_cfg(), 1);
+        // Each merged row's hour must be a real control-tick hour and the
+        // rows strictly ordered — the zip never interleaves scenes.
+        for w in out1.served_curve.windows(2) {
+            assert!(w[0].hour < w[1].hour, "window rows out of order");
+        }
+    }
+}

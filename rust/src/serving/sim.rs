@@ -15,7 +15,6 @@
 #![deny(missing_docs)]
 
 use std::collections::{BTreeMap, VecDeque};
-use std::rc::Rc;
 
 use crate::cluster::engine::{EngineModel, PrefillItem};
 use crate::cluster::prefix::SharedPrefixCache;
@@ -185,10 +184,16 @@ impl SimConfig {
                 // The region was staged into the reserved send buffer
                 // during prefill (`SendBufferPool::write_range` per
                 // layer), so the handoff pays one pull plus the
-                // scatter-free placement pass — no gather.
-                let pull = self.rdma.single_pull_cost(per_dev_bytes, 3, sharers);
-                let place = self.assembly.place_contiguous_us(per_dev_bytes);
-                (pull.total_us() + place) / 1e3
+                // scatter-free placement pass — no gather. Priced by the
+                // shared `kvcache::d2d` helper so the real server's
+                // staged path charges the identical TransferCost.
+                crate::kvcache::d2d::single_pull_handoff_us(
+                    &self.rdma,
+                    &self.assembly,
+                    per_dev_bytes,
+                    3,
+                    sharers,
+                ) / 1e3
             }
             TransferDiscipline::Blocked => {
                 // N block sends, each confirmed, plus per-received-block
@@ -255,21 +260,25 @@ struct ReqState {
     gw: usize,
     /// Tokens still to generate once decoding.
     remaining: usize,
-    /// The stream's canonical prefix tokens (shared via `Rc` across every
-    /// request of one (scenario, prefix_id) stream; empty when
-    /// prefix-free). This request's own prefix is the leading
-    /// `req.prefix_len` tokens — what per-instance `PrefixCache`s are
-    /// probed and warmed with.
-    prefix_toks: Rc<Vec<i32>>,
+    /// Index into the simulation's interned prefix arena
+    /// (`Simulation::prefix_arena`): one canonical token vector per
+    /// (scenario, prefix_id) stream, shared by every request of that
+    /// stream (slot 0 is the shared empty prefix). This request's own
+    /// prefix is the leading `req.prefix_len` tokens of the interned
+    /// vector — what per-instance `PrefixCache`s are probed and warmed
+    /// with. An id instead of an `Rc` keeps `ReqState` `Send`-shaped and
+    /// kills the per-request refcount churn on the hot path.
+    prefix_ref: u32,
     /// Routing view of this request (rolling prefix hash).
     route_req: RouteRequest,
 }
 
-impl ReqState {
-    /// This request's shared-prefix tokens.
-    fn prefix(&self) -> &[i32] {
-        &self.prefix_toks[..self.req.prefix_len.min(self.prefix_toks.len())]
-    }
+/// This request's shared-prefix tokens, resolved against the interned
+/// arena. A free function (not a method) so callers can borrow the arena
+/// and `reqs` disjointly from sibling `Simulation` fields.
+fn prefix_of<'a>(arena: &'a [Vec<i32>], r: &ReqState) -> &'a [i32] {
+    let toks = &arena[r.prefix_ref as usize];
+    &toks[..r.req.prefix_len.min(toks.len())]
 }
 
 /// Per-prefill-instance simulated state.
@@ -280,8 +289,10 @@ impl ReqState {
 struct PState {
     alive: bool,
     busy: bool,
-    /// Accepted, waiting for the batch window (on-demand path).
-    accepted: Vec<u64>,
+    /// Accepted, waiting for the batch window (on-demand path). A deque:
+    /// batch formation consumes from the front (`pop_front`), so
+    /// admission is O(1) instead of the `Vec::remove(0)` shift.
+    accepted: VecDeque<u64>,
     /// Local queue (baseline path).
     queue: VecDeque<u64>,
     /// Requests whose KVCache sits in a send buffer (slot held).
@@ -300,7 +311,7 @@ impl PState {
         PState {
             alive: true,
             busy: false,
-            accepted: Vec::new(),
+            accepted: VecDeque::new(),
             queue: VecDeque::new(),
             awaiting: 0,
             busy_ms: 0.0,
@@ -422,6 +433,7 @@ impl WindowStats {
 /// gateway round can run it as the forwarder's accept probe while the
 /// route policy (a sibling field) is mutably borrowed.
 fn prefill_accepts(
+    arena: &[Vec<i32>],
     ps: &[PState],
     reqs: &[ReqState],
     engine: &EngineModel,
@@ -444,7 +456,7 @@ fn prefill_accepts(
         let r = &reqs[aid as usize];
         items.push(PrefillItem {
             prompt_len: r.req.prompt_len,
-            cached_len: st.prefix.peek(r.prefix()),
+            cached_len: st.prefix.peek(prefix_of(arena, r)),
         });
         min_slack = min_slack.min((r.deadline_ms - now).max(0.0));
     }
@@ -480,9 +492,12 @@ pub struct Simulation {
     /// Affinity state is fleet-level; each gateway contributes its own
     /// SSE snapshot.
     policy: Box<dyn RoutePolicy>,
-    /// Canonical prefix tokens per (scenario, prefix_id) stream, shared
-    /// into every `ReqState` of that stream.
-    prefix_memo: BTreeMap<(usize, usize), Rc<Vec<i32>>>,
+    /// Interned canonical prefix tokens: one arena slot per
+    /// (scenario, prefix_id) stream (slot 0 is the shared empty prefix),
+    /// referenced by id from every `ReqState` of that stream.
+    prefix_arena: Vec<Vec<i32>>,
+    /// Stream → arena-slot memo behind the interning.
+    prefix_memo: BTreeMap<(usize, usize), u32>,
     baseline: StaleQueueScheduler,
     pending: VecDeque<u64>, // gateway-held (on-demand)
     /// Requests in `AwaitTransfer` (all decodes were saturated) — retried
@@ -492,7 +507,17 @@ pub struct Simulation {
     batches: BTreeMap<usize, Vec<u64>>, // running prefill batches
     spine_load: Vec<usize>,
     /// Spine slots held by in-flight transfers, released on TransferDone.
-    inflight_assignments: Vec<(u64, Vec<usize>)>,
+    /// Keyed by request id so release is a map lookup, not an O(n) scan
+    /// over every in-flight transfer.
+    inflight_assignments: BTreeMap<u64, Vec<usize>>,
+    /// Scratch for `on_decode_iter`'s active-row scan (reused each
+    /// iteration instead of cloning the active vector).
+    decode_scan: Vec<u64>,
+    /// Scratch for `on_decode_iter`'s completed-id list (reused).
+    decode_done: Vec<u64>,
+    /// Scratch deque swapped with `parked` during `retry_parked` so the
+    /// FIFO retry pass reuses capacity instead of reallocating.
+    parked_scratch: VecDeque<u64>,
     rng: Rng,
     report: ServingReport,
     util: Welford,
@@ -539,13 +564,17 @@ impl Simulation {
             gw_sse,
             forwarder,
             policy: cfg.route.build(),
+            prefix_arena: vec![Vec::new()],
             prefix_memo: BTreeMap::new(),
             baseline,
             pending: VecDeque::new(),
             parked: VecDeque::new(),
             batches: BTreeMap::new(),
             spine_load,
-            inflight_assignments: Vec::new(),
+            inflight_assignments: BTreeMap::new(),
+            decode_scan: Vec::new(),
+            decode_done: Vec::new(),
+            parked_scratch: VecDeque::new(),
             rng,
             report,
             util: Welford::new(),
@@ -647,26 +676,28 @@ impl Simulation {
             + self.cfg.serving.ttft_threshold_ms(req.prompt_len);
         let id = self.reqs.len() as u64;
         let remaining = req.gen_len;
-        let (prefix_toks, route_req) = if req.prefix_len == 0 {
-            (Rc::new(Vec::new()), RouteRequest { prefix_hash: None })
+        let (prefix_ref, route_req) = if req.prefix_len == 0 {
+            (0u32, RouteRequest { prefix_hash: None })
         } else {
-            // One token vector per (scenario, prefix_id) stream, shared by
-            // every request of that stream — regenerating ~1k tokens per
-            // arrival (and keeping a copy per ReqState) would make inject
-            // itself the hot path.
+            // One interned token vector per (scenario, prefix_id) stream,
+            // shared by every request of that stream — regenerating ~1k
+            // tokens per arrival (or refcounting a shared vector per
+            // request) would make inject itself the hot path.
             let sc = &self.cfg.scenarios[req.scenario];
             let canon = sc.canonical_prefix_len().max(req.prefix_len);
-            let toks = self
+            let arena = &mut self.prefix_arena;
+            let idx = *self
                 .prefix_memo
                 .entry((req.scenario, req.prefix_id))
                 .or_insert_with(|| {
-                    Rc::new(sc.prefix_tokens(req.scenario, req.prefix_id, canon))
-                })
-                .clone();
-            // Clamp like `ReqState::prefix`: an externally injected request
-            // may claim a longer prefix than the stream's memoized canon.
+                    arena.push(sc.prefix_tokens(req.scenario, req.prefix_id, canon));
+                    (arena.len() - 1) as u32
+                });
+            // Clamp like `prefix_of`: an externally injected request may
+            // claim a longer prefix than the stream's memoized canon.
+            let toks = &self.prefix_arena[idx as usize];
             let rr = RouteRequest::from_tokens(&toks[..req.prefix_len.min(toks.len())]);
-            (toks, rr)
+            (idx, rr)
         };
         self.reqs.push(ReqState {
             req,
@@ -678,7 +709,7 @@ impl Simulation {
             entrance: usize::MAX,
             gw: id as usize % self.gw_sse.len(),
             remaining,
-            prefix_toks,
+            prefix_ref,
             route_req,
         });
         id
@@ -757,7 +788,10 @@ impl Simulation {
         self.run_until(f64::INFINITY);
     }
 
-    /// Take and reset the control-window accounting.
+    /// Take and reset the control-window accounting. `WindowStats` is
+    /// `Copy`, so this is a plain register-width move — no allocation per
+    /// control tick (guarded by the `hotloop` bench case in
+    /// `benches/e2e_sim.rs`).
     pub fn take_window(&mut self) -> WindowStats {
         std::mem::take(&mut self.window)
     }
@@ -962,7 +996,8 @@ impl Simulation {
         self.ps[p].alive = false;
         self.ps[p].busy = false;
         self.ps[p].window_open = false;
-        let mut victims: Vec<u64> = std::mem::take(&mut self.ps[p].accepted);
+        let mut victims: Vec<u64> =
+            std::mem::take(&mut self.ps[p].accepted).into_iter().collect();
         if let Some(batch) = self.batches.remove(&p) {
             victims.extend(batch);
         }
@@ -999,9 +1034,9 @@ impl Simulation {
         self.ds[d].alive = false;
         let mut victims: Vec<u64> = std::mem::take(&mut self.ds[d].active);
         victims.extend(std::mem::take(&mut self.ds[d].retrieval));
-        for (id, _) in &self.inflight_assignments {
-            if matches!(self.reqs[*id as usize].phase, ReqPhase::Transferring(t) if t == d) {
-                victims.push(*id);
+        for (&id, _) in &self.inflight_assignments {
+            if matches!(self.reqs[id as usize].phase, ReqPhase::Transferring(t) if t == d) {
+                victims.push(id);
             }
         }
         // In-flight transfers release their spine slots when their
@@ -1125,8 +1160,9 @@ impl Simulation {
             // engine — exactly the knowledge a remote estimator lacks).
             let salt = self.rng.next_u64();
             let decision = {
-                let Simulation { policy, forwarder, gw_sse, ps, reqs, engine, cfg, .. } =
-                    &mut *self;
+                let Simulation {
+                    policy, forwarder, gw_sse, ps, reqs, engine, cfg, prefix_arena, ..
+                } = &mut *self;
                 let bp = cfg.serving.prefill_batch;
                 forwarder.probe(
                     policy.as_mut(),
@@ -1135,7 +1171,7 @@ impl Simulation {
                     salt,
                     now,
                     deadline,
-                    |e| prefill_accepts(ps, reqs, engine, bp, e as usize, id, now),
+                    |e| prefill_accepts(prefix_arena, ps, reqs, engine, bp, e as usize, id, now),
                 )
             };
             match decision {
@@ -1145,7 +1181,7 @@ impl Simulation {
                     self.reqs[id as usize].entrance = p;
                     self.reqs[id as usize].phase = ReqPhase::Accepted(p);
                     self.gw_sse[gw].open(e);
-                    self.ps[p].accepted.push(id);
+                    self.ps[p].accepted.push_back(id);
                     self.try_open_window(p);
                 }
                 ForwardDecision::RetryLater => {
@@ -1225,7 +1261,7 @@ impl Simulation {
             }
             // Next candidate from the policy's source.
             let cand = match self.cfg.policy {
-                Policy::OnDemand => self.ps[p].accepted.first().copied(),
+                Policy::OnDemand => self.ps[p].accepted.front().copied(),
                 Policy::BaselineQueue => self.ps[p].queue.front().copied(),
             };
             let Some(id) = cand else { break };
@@ -1241,23 +1277,32 @@ impl Simulation {
             // Hit length: the longest cached prefix of this prompt on
             // *this* instance — those tokens are not recomputed, which is
             // exactly the service-time credit routing quality buys.
-            let cached = self.ps[p].prefix.peek(self.reqs[id as usize].prefix());
+            let cached = self
+                .ps[p]
+                .prefix
+                .peek(prefix_of(&self.prefix_arena, &self.reqs[id as usize]));
             let cand_item = PrefillItem { prompt_len, cached_len: cached };
-            let mut trial = items.clone();
-            trial.push(cand_item);
-            let predicted = self.engine.prefill_batch_ms(&trial);
+            // Trial admission in place (popped again on reject) — cloning
+            // the whole item vector per candidate made batch formation
+            // O(batch²) allocations.
+            items.push(cand_item);
+            let predicted = self.engine.prefill_batch_ms(&items);
             let slack = (self.reqs[id as usize].deadline_ms - now).max(0.0);
             let new_min_slack = min_slack.min(slack);
             if predicted > new_min_slack * 0.95 && !batch.is_empty() {
                 // Adding this prompt would push someone past their TTFT
                 // threshold; launch what we have, candidate stays.
+                items.pop();
                 break;
             }
             // Accept into the batch; computing the uncovered tail warms
             // this instance's cache for the rest of the stream.
             self.pop_candidate(p, id);
             if self.reqs[id as usize].req.prefix_len > 0 {
-                let hit = self.ps[p].prefix.lookup(self.reqs[id as usize].prefix());
+                let hit = self
+                    .ps[p]
+                    .prefix
+                    .lookup(prefix_of(&self.prefix_arena, &self.reqs[id as usize]));
                 debug_assert_eq!(hit, cached);
                 // Only a full canonical-length prefill warms the cache: a
                 // truncated prompt (rare: prompt shorter than the stream's
@@ -1266,13 +1311,15 @@ impl Simulation {
                 // budget once per distinct length instead of once per
                 // stream.
                 let r = &self.reqs[id as usize];
-                if hit < r.req.prefix_len && r.req.prefix_len == r.prefix_toks.len() {
-                    self.ps[p].prefix.insert(self.reqs[id as usize].prefix());
+                let canon_len = self.prefix_arena[r.prefix_ref as usize].len();
+                if hit < r.req.prefix_len && r.req.prefix_len == canon_len {
+                    self.ps[p]
+                        .prefix
+                        .insert(prefix_of(&self.prefix_arena, &self.reqs[id as usize]));
                 }
             }
             self.reqs[id as usize].cached_len = cached;
             self.reqs[id as usize].phase = ReqPhase::InBatch(p);
-            items = trial;
             batch.push(id);
             min_slack = new_min_slack;
         }
@@ -1292,8 +1339,8 @@ impl Simulation {
     fn pop_candidate(&mut self, p: usize, id: u64) {
         match self.cfg.policy {
             Policy::OnDemand => {
-                debug_assert_eq!(self.ps[p].accepted.first(), Some(&id));
-                self.ps[p].accepted.remove(0);
+                debug_assert_eq!(self.ps[p].accepted.front(), Some(&id));
+                self.ps[p].accepted.pop_front();
             }
             Policy::BaselineQueue => {
                 debug_assert_eq!(self.ps[p].queue.front(), Some(&id));
@@ -1394,21 +1441,15 @@ impl Simulation {
         r.phase = ReqPhase::Transferring(d);
         self.ds[d].reserved += 1;
         self.ps[p].awaiting -= 1;
-        // Remember spine slots to release: encode in a side map via event
-        // payload — we release at TransferDone by re-deriving assignment
-        // deterministically from move_id.
-        self.inflight_assignments.push((id, assignment));
+        // Remember spine slots to release at TransferDone, keyed by
+        // request id for O(log n) release.
+        self.inflight_assignments.insert(id, assignment);
         self.q.push_after(dur, Ev::TransferDone(id));
     }
 
     fn on_transfer_done(&mut self, id: u64) {
         // Release spine load.
-        if let Some(pos) = self
-            .inflight_assignments
-            .iter()
-            .position(|(rid, _)| *rid == id)
-        {
-            let (_, assignment) = self.inflight_assignments.swap_remove(pos);
+        if let Some(assignment) = self.inflight_assignments.remove(&id) {
             for s in assignment {
                 self.spine_load[s] = self.spine_load[s].saturating_sub(1);
             }
@@ -1452,18 +1493,23 @@ impl Simulation {
     fn on_decode_iter(&mut self, d: usize) {
         let now = self.q.now();
         self.ds[d].iter_scheduled = false;
-        // Each active request generated one token this iteration.
-        let active = self.ds[d].active.clone();
-        let mut completed = Vec::new();
-        for id in active {
+        // Each active request generated one token this iteration. The
+        // scan and completed lists are reused scratch buffers — the old
+        // per-iteration `active.clone()` allocation was the decode loop's
+        // hottest allocation site.
+        let mut scan = std::mem::take(&mut self.decode_scan);
+        let mut completed = std::mem::take(&mut self.decode_done);
+        scan.clear();
+        completed.clear();
+        scan.extend_from_slice(&self.ds[d].active);
+        for &id in &scan {
             let r = &mut self.reqs[id as usize];
             r.remaining = r.remaining.saturating_sub(1);
             if r.remaining == 0 {
                 completed.push(id);
             }
         }
-        for id in completed {
-            self.ds[d].active.retain(|&x| x != id);
+        for &id in &completed {
             let r = &mut self.reqs[id as usize];
             r.phase = ReqPhase::Finished;
             let entrance = r.entrance;
@@ -1498,6 +1544,26 @@ impl Simulation {
                 self.ds[d].active.push(nid);
             }
         }
+        // One order-preserving sweep removes every completed id — they
+        // appear in `completed` in active-row order, so a single cursor
+        // replaces the old per-id `retain` scan (O(batch²) → O(batch)).
+        // Retrieval backfills were appended at the tail above, after every
+        // completed id, so the surviving order is byte-identical to the
+        // per-id removal.
+        if !completed.is_empty() {
+            let mut ci = 0;
+            self.ds[d].active.retain(|&x| {
+                if ci < completed.len() && completed[ci] == x {
+                    ci += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            debug_assert_eq!(ci, completed.len(), "completed id missing from active");
+        }
+        self.decode_scan = scan;
+        self.decode_done = completed;
         // Saturated decodes freed slots: requests parked in prefill retry.
         self.retry_parked();
         self.schedule_decode_iter(d);
@@ -1506,8 +1572,10 @@ impl Simulation {
     /// Retry every parked request once (FIFO); those still blocked stay
     /// parked.
     fn retry_parked(&mut self) {
-        let parked = std::mem::take(&mut self.parked);
-        for id in parked {
+        // Swap with the scratch deque so both FIFOs keep their capacity
+        // across the (frequent) retry passes.
+        std::mem::swap(&mut self.parked, &mut self.parked_scratch);
+        while let Some(id) = self.parked_scratch.pop_front() {
             self.try_start_transfer(id);
             if matches!(self.reqs[id as usize].phase, ReqPhase::AwaitTransfer(_)) {
                 self.parked.push_back(id);
@@ -2144,5 +2212,39 @@ mod tests {
         let out = Simulation::run(cfg);
         assert!(out.retries_per_accept < 1.0, "{}", out.retries_per_accept);
         assert!(out.report.success_rate() > 0.95);
+    }
+
+    #[test]
+    fn sim_and_server_charge_the_same_single_pull_handoff() {
+        // Satellite regression: the Contiguous handoff the simulator
+        // charges and the staged single-pull path the real server runs
+        // must price the same TransferCost — both call the shared
+        // `kvcache::d2d::single_pull_handoff_us`, pinned here over a
+        // sweep of payload sizes and spine-conflict levels.
+        let cfg = SimConfig::default();
+        for &prompt_len in &[64usize, 512, 2048, 8192] {
+            for &sharers in &[1usize, 2, 5] {
+                let per_dev = cfg.per_device_bytes(prompt_len);
+                let expect = crate::kvcache::d2d::single_pull_handoff_us(
+                    &cfg.rdma,
+                    &cfg.assembly,
+                    per_dev,
+                    3,
+                    sharers,
+                ) / 1e3;
+                let got = cfg.handoff_ms(per_dev, sharers);
+                assert!(
+                    (got - expect).abs() < 1e-12,
+                    "sim handoff {got} ms != shared single-pull pricing {expect} ms"
+                );
+                // The blocked discipline must *not* collapse onto the
+                // single-pull price — the comparison stays meaningful.
+                let blocked = SimConfig {
+                    transfer: TransferDiscipline::Blocked,
+                    ..SimConfig::default()
+                };
+                assert!(blocked.handoff_ms(per_dev, sharers) > got);
+            }
+        }
     }
 }

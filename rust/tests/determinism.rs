@@ -6,6 +6,7 @@
 //! clock or ambient RNG feeds the simulation.
 
 use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+use pd_serve::serving::shard::run_sharded;
 
 fn cfg() -> FleetConfig {
     FleetConfig {
@@ -38,6 +39,36 @@ fn fleet_json_report_has_the_headline_fields() {
     assert!(json.at(&["ledger", "seed_total"]).is_some());
     let curve = json.get("served_curve").and_then(|v| v.as_arr()).expect("served_curve");
     assert_eq!(curve.len(), out.served_curve.len());
+}
+
+#[test]
+fn sharded_fleet_json_is_byte_identical_across_worker_counts() {
+    // The sharding oracle, end to end: `--workers N` must be a pure
+    // performance knob. One worker and four workers render the same
+    // bytes, because each scene's day is a pure function of its shard
+    // config and the merge runs single-threaded in scene-index order.
+    let a = run_sharded(cfg(), 1).to_json().to_string_pretty();
+    let b = run_sharded(cfg(), 4).to_json().to_string_pretty();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "--workers must not change the report bytes");
+}
+
+#[test]
+fn sharded_ledger_conserves_instances_for_every_worker_count() {
+    // The InstanceLedger invariant survives the merge no matter how the
+    // scenes are bucketed onto threads: in-service + banked + pool +
+    // scrapped always equals seeded + minted, and the merged report
+    // stays balanced.
+    for workers in [1usize, 2, 3, 5] {
+        let out = run_sharded(cfg(), workers);
+        let l = &out.ledger;
+        assert_eq!(
+            l.in_service + l.banked + l.pool + l.scrapped,
+            l.seed_total + l.minted,
+            "ledger leaks instances at workers={workers}"
+        );
+        assert!(l.balanced, "merged ledger unbalanced at workers={workers}");
+    }
 }
 
 #[test]
