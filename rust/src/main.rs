@@ -130,9 +130,63 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// byte-identical for every N; omit the flag for the legacy
 /// single-queue day, whose shared arrival stream is a different —
 /// equally deterministic — interleaving).
+///
+/// `--scenario FILE.toml` replaces the whole ad-hoc flag surface with a
+/// declarative scenario pack (see `rust/scenarios/example.toml`): the
+/// pack defines the day, its `[[assert]]` rows self-check the report
+/// (violations exit 1), and combining it with any day-defining flag
+/// above is a usage error. Only `--workers`, `--json` and `--quiet`
+/// remain valid alongside it.
 fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     use pd_serve::serving::fleet::{FleetConfig, FleetSim};
+    use pd_serve::serving::scenario::{self, ScenarioPack};
     use pd_serve::util::config::{Doc, EngineConfig, ServingConfig};
+
+    if let Some(path) = args.get("scenario") {
+        if let Some(flag) = scenario::conflicting_flag(args) {
+            eprintln!(
+                "--scenario packs define the whole day; --{flag} conflicts with it \
+                 (edit the pack instead)"
+            );
+            return 2;
+        }
+        let pack = match ScenarioPack::load(path) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("scenario: {e}");
+                return 2;
+            }
+        };
+        let workers = match args.get("workers") {
+            Some(w) => match w.parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("--workers must be a thread count >= 1, got '{w}'");
+                    return 2;
+                }
+            },
+            None => pack.workers,
+        };
+        let out = pack.run(workers);
+        let report = out.to_json();
+        if args.has("json") {
+            println!("{}", report.to_string_pretty());
+        } else {
+            out.print_summary(!args.has("quiet"));
+        }
+        return match pack.check_asserts(&report) {
+            Ok(n) => {
+                if !args.has("json") {
+                    println!("asserts: {n}/{n} passed");
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        };
+    }
 
     let mut cfg = FleetConfig::default();
     if let Some(path) = args.get("config") {

@@ -16,6 +16,10 @@
 //!   — one whole `FleetSim` per scene on worker threads, deterministic
 //!   merge on the caller; the one sanctioned home for thread spawning
 //!   (enforced by the `thread-outside-shard` lint rule).
+//! - `scenario`: declarative scenario packs (`fleet --scenario day.toml`)
+//!   — a typed, fail-fast TOML descriptor for a whole fleet day (scenes,
+//!   route/transfer policy, fault/lending/upgrade schedules, `[[assert]]`
+//!   self-checks) compiled into the `FleetConfig` `shard` consumes.
 //! - `server`: the *real* serving engine: same policies, but prefill and
 //!   decode execute the AOT-compiled model on the PJRT CPU client and the
 //!   KVCache moves as actual bytes (contiguous buffer → RecvScatter).
@@ -26,12 +30,14 @@
 
 pub mod fleet;
 pub mod router;
+pub mod scenario;
 pub mod server;
 pub mod shard;
 pub mod speculative;
 pub mod sim;
 
 pub use fleet::{FleetConfig, FleetOutput, FleetSim};
+pub use scenario::ScenarioPack;
 pub use shard::run_sharded;
 pub use router::{RouteKind, RoutePolicy, RouteRequest};
 pub use sim::{Policy, SimConfig, SimOutput, TransferDiscipline, WindowStats, WorkloadKind};

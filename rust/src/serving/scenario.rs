@@ -1,0 +1,1096 @@
+//! Declarative scenario packs: one TOML file describes a whole fleet day.
+//!
+//! The paper's core argument is that scenario diversity — disparate
+//! prompt shapes, shared-prefix pools, phased tidal peaks — demands
+//! per-scenario organization. Every workload regime this repo models
+//! (flash crowds, fault storms, rolling upgrades, instance lending,
+//! transfer disciplines) used to be reachable only through an
+//! ever-growing `pdserve fleet` flag surface; a *scenario pack* turns
+//! that whole behavior surface into data:
+//!
+//! ```text
+//! scenarios/flash_crowd.toml ──parse──► ScenarioPack ──compile──►
+//!     FleetConfig ──run_sharded──► FleetOutput ──check_asserts──► pass/fail
+//! ```
+//!
+//! Packs are **fail-fast**: the parser rejects unknown keys/tables
+//! (`Doc::check_unknown`), wrong types, duplicate tables and out-of-range
+//! values with line-numbered errors, so a typo'd pack dies before it
+//! burns a simulated day. Packs are **self-checking**: each `[[assert]]`
+//! row bounds one metric of the final report (`FleetOutput::to_json`
+//! paths, dotted for `ledger.*`), so every committed pack doubles as a
+//! golden regression test (`tests/scenario_packs.rs`). And packs are
+//! **worker-invariant for free**: `compile` targets
+//! [`run_sharded`](crate::serving::shard::run_sharded), whose merge
+//! renders byte-identical JSON for every `--workers N`.
+#![deny(missing_docs)]
+
+use crate::serving::fleet::{FleetConfig, FleetOutput};
+use crate::serving::router::RouteKind;
+use crate::serving::shard::run_sharded;
+use crate::serving::sim::TransferDiscipline;
+use crate::util::cli::ParsedArgs;
+use crate::util::config::{Doc, Schema, Value};
+use crate::util::json::Json;
+
+/// Every key a pack may set, per table — the `check_unknown` allowlist.
+const SCHEMA: Schema<'static> = Schema {
+    tables: &[
+        ("", &["name", "seed", "workers"]),
+        (
+            "day",
+            &["hours", "peak_rps", "ms_per_hour", "start_hour", "control_ms", "slice_ms"],
+        ),
+        (
+            "fleet",
+            &[
+                "ratio",
+                "min_groups",
+                "max_groups",
+                "spares",
+                "route",
+                "transfer",
+                "adjust_ratio",
+                "scale_groups",
+                "headroom",
+            ],
+        ),
+        ("faults", &["per_week", "detect_ms"]),
+        ("lending", &["enabled"]),
+        ("upgrade", &["at_minutes", "wave"]),
+    ],
+    arrays: &[
+        (
+            "scene",
+            &[
+                "base",
+                "weight",
+                "prompt_mean",
+                "prompt_cv",
+                "gen_mean",
+                "gen_cv",
+                "prefix_count",
+                "prefix_frac",
+            ],
+        ),
+        ("assert", &["metric", "min", "max", "eq"]),
+    ],
+};
+
+/// Report metrics an `[[assert]]` row may bound: the numeric top-level
+/// keys of `FleetOutput::to_json`, the `ledger.*` counters,
+/// `ledger.balanced` (bool, bound with `eq`) and `ledger.leases` (bound
+/// by its length).
+pub const ASSERT_METRICS: &[&str] = &[
+    "injected",
+    "completed",
+    "timed_out",
+    "rps",
+    "slo_attainment",
+    "mean_ttft_ms",
+    "mean_e2e_ms",
+    "xfers",
+    "mean_xfer_ms",
+    "d2d_utilization",
+    "adjustments",
+    "scale_outs",
+    "scale_ins",
+    "training_switches",
+    "upgraded_groups",
+    "faults_seen",
+    "faults_fatal",
+    "recoveries",
+    "protected",
+    "scale_deferred",
+    "lease_calls",
+    "end_hour",
+    "peak_instances",
+    "ledger.seed_total",
+    "ledger.minted",
+    "ledger.pool",
+    "ledger.banked",
+    "ledger.scrapped",
+    "ledger.in_service",
+    "ledger.balanced",
+    "ledger.leases",
+];
+
+/// Ad-hoc `pdserve fleet` flags a pack replaces; any of them alongside
+/// `--scenario` is a usage error ([`conflicting_flag`]). `--workers`,
+/// `--json` and `--quiet` stay valid: they change how the day runs or
+/// prints, never what it simulates.
+pub const ADHOC_FLEET_FLAGS: &[&str] = &[
+    "peak-rps",
+    "hours",
+    "ms-per-hour",
+    "control-ms",
+    "seed",
+    "group-size",
+    "ratio",
+    "scenes",
+    "static",
+    "no-scale",
+    "route",
+    "transfer",
+    "upgrade-at",
+    "upgrade-wave",
+    "faults-per-week",
+    "lend",
+    "spares",
+    "detect-ms",
+    "config",
+];
+
+/// The `[day]` table: clock, load and control cadence of the day.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DaySpec {
+    /// Simulated day length (hours).
+    pub hours: f64,
+    /// Fleet-wide peak arrival rate, split across scenes by weight.
+    pub peak_rps: f64,
+    /// Virtual-time compression: virtual ms per simulated hour.
+    pub ms_per_hour: f64,
+    /// Wall-clock hour the day starts at.
+    pub start_hour: f64,
+    /// Control-loop period (virtual ms).
+    pub control_ms: f64,
+    /// Arrival-generation slice (virtual ms).
+    pub slice_ms: f64,
+}
+
+/// The `[fleet]` table: group shape, policies and elasticity knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Initial per-group `(n_p, n_d)`; the group total is their sum.
+    pub ratio: (usize, usize),
+    /// Per-scene group floor.
+    pub min_groups: usize,
+    /// Per-scene group ceiling.
+    pub max_groups: usize,
+    /// Stateless spare containers the fleet pool starts with.
+    pub spares: usize,
+    /// Route policy for scene-level and in-group selection.
+    pub route: RouteKind,
+    /// D2D transfer discipline on every prefill→decode handoff.
+    pub transfer: TransferDiscipline,
+    /// Close the ratio loop (false = static ratios).
+    pub adjust_ratio: bool,
+    /// Close the capacity loop (false = frozen group counts).
+    pub scale_groups: bool,
+    /// Scale-out headroom (hysteresis against scale-in).
+    pub headroom: f64,
+}
+
+/// One `[[scene]]` entry: a standard scenario by name plus overrides for
+/// its traffic shape and shared-prefix pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SceneSpec {
+    /// Standard scenario this scene builds on (`scene1`..`scene6`).
+    pub base: String,
+    /// Index of `base` in the standard catalogue (derived at parse).
+    pub base_idx: usize,
+    /// Relative traffic weight at peak.
+    pub weight: Option<f64>,
+    /// Log-normal prompt-length mean (tokens).
+    pub prompt_mean: Option<f64>,
+    /// Prompt-length coefficient of variation.
+    pub prompt_cv: Option<f64>,
+    /// Log-normal generation-length mean (tokens).
+    pub gen_mean: Option<f64>,
+    /// Generation-length coefficient of variation.
+    pub gen_cv: Option<f64>,
+    /// Distinct shared prefixes in the scene's pool.
+    pub prefix_count: Option<usize>,
+    /// Fraction of the prompt covered by the shared prefix.
+    pub prefix_frac: Option<f64>,
+}
+
+/// The `[faults]` table: §3.4 fault injection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Faults per week per 400 devices (paper observes ~1.5; 0 disables).
+    pub per_week: f64,
+    /// Fault-detector scan period (real ms).
+    pub detect_ms: f64,
+}
+
+/// The `[upgrade]` table: a rolling upgrade scheduled into the day.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpgradeSpec {
+    /// Minutes into the simulated day the upgrade starts.
+    pub at_minutes: f64,
+    /// Groups upgraded concurrently per wave.
+    pub wave: usize,
+}
+
+/// One `[[assert]]` row: a bound on one metric of the day's report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssertSpec {
+    /// Report metric path (see [`ASSERT_METRICS`]).
+    pub metric: String,
+    /// Lower bound (inclusive).
+    pub min: Option<f64>,
+    /// Upper bound (inclusive).
+    pub max: Option<f64>,
+    /// Exact numeric value.
+    pub eq: Option<f64>,
+    /// Exact bool value (for `ledger.balanced`).
+    pub eq_bool: Option<bool>,
+}
+
+/// A parsed scenario pack: the typed, validated form of one
+/// `scenarios/*.toml` day descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioPack {
+    /// Pack name (reported in assert failures).
+    pub name: String,
+    /// PRNG seed for the whole day.
+    pub seed: u64,
+    /// Default scene-shard worker count (`--workers` overrides; the
+    /// report is byte-identical either way).
+    pub workers: usize,
+    /// Clock, load and cadence.
+    pub day: DaySpec,
+    /// Group shape and policies.
+    pub fleet: FleetSpec,
+    /// The day's scenes, in pack order.
+    pub scenes: Vec<SceneSpec>,
+    /// Fault injection.
+    pub faults: FaultSpec,
+    /// Instance lending on the conserved budget.
+    pub lend: bool,
+    /// Rolling upgrade, when scheduled.
+    pub upgrade: Option<UpgradeSpec>,
+    /// Self-checks against the final report.
+    pub asserts: Vec<AssertSpec>,
+}
+
+/// `line N: msg` when the key's line is known, bare `msg` otherwise.
+fn at_key(doc: &Doc, section: &str, key: &str, msg: String) -> String {
+    match doc.line_of(section, key) {
+        Some(l) => format!("line {l}: {msg}"),
+        None => msg,
+    }
+}
+
+/// Positive-finite check shared by every duration/rate key.
+fn pos_finite(doc: &Doc, section: &str, key: &str, v: f64) -> Result<f64, String> {
+    if v.is_finite() && v > 0.0 {
+        Ok(v)
+    } else {
+        Err(at_key(doc, section, key, format!("'{key}' must be a finite number > 0")))
+    }
+}
+
+impl ScenarioPack {
+    /// Parse and validate one pack. Fail-fast: unknown keys/tables, wrong
+    /// types, duplicates and out-of-range values are line-numbered errors.
+    pub fn parse(text: &str) -> Result<ScenarioPack, String> {
+        let doc = Doc::parse(text)?;
+        doc.check_unknown(&SCHEMA)?;
+
+        let name = doc.req_str("", "name")?.to_string();
+        if name.is_empty() {
+            return Err(at_key(&doc, "", "name", "'name' must not be empty".to_string()));
+        }
+        let seed = doc.req_u64("", "seed")?;
+        let workers = doc.try_usize("", "workers")?.unwrap_or(1);
+        if workers == 0 {
+            return Err(at_key(&doc, "", "workers", "'workers' must be >= 1".to_string()));
+        }
+
+        let base_day = FleetConfig::default();
+        let day = DaySpec {
+            hours: pos_finite(&doc, "day", "hours", doc.req_f64("day", "hours")?)?,
+            peak_rps: pos_finite(&doc, "day", "peak_rps", doc.req_f64("day", "peak_rps")?)?,
+            ms_per_hour: pos_finite(
+                &doc,
+                "day",
+                "ms_per_hour",
+                doc.try_f64("day", "ms_per_hour")?.unwrap_or(base_day.ms_per_hour),
+            )?,
+            start_hour: doc.try_f64("day", "start_hour")?.unwrap_or(base_day.start_hour),
+            control_ms: pos_finite(
+                &doc,
+                "day",
+                "control_ms",
+                doc.try_f64("day", "control_ms")?.unwrap_or(base_day.control_period_ms),
+            )?,
+            slice_ms: pos_finite(
+                &doc,
+                "day",
+                "slice_ms",
+                doc.try_f64("day", "slice_ms")?.unwrap_or(base_day.slice_ms),
+            )?,
+        };
+
+        let ratio_str = doc.try_str("fleet", "ratio")?.unwrap_or("3:3");
+        let parts: Vec<usize> =
+            ratio_str.split(':').filter_map(|x| x.parse().ok()).collect();
+        if parts.len() != 2 || parts[0] == 0 || parts[1] == 0 {
+            return Err(at_key(
+                &doc,
+                "fleet",
+                "ratio",
+                format!("'ratio' must be \"P:D\" with both sides >= 1 (got '{ratio_str}')"),
+            ));
+        }
+        let min_groups = doc.try_usize("fleet", "min_groups")?.unwrap_or(1);
+        let max_groups = doc.try_usize("fleet", "max_groups")?.unwrap_or(4);
+        if min_groups == 0 {
+            return Err(at_key(
+                &doc,
+                "fleet",
+                "min_groups",
+                "'min_groups' must be >= 1".to_string(),
+            ));
+        }
+        if max_groups < min_groups {
+            return Err(at_key(
+                &doc,
+                "fleet",
+                "max_groups",
+                format!("'max_groups' must be >= min_groups ({min_groups})"),
+            ));
+        }
+        let route_str = doc.try_str("fleet", "route")?.unwrap_or("least-loaded");
+        let Some(route) = RouteKind::parse(route_str) else {
+            return Err(at_key(
+                &doc,
+                "fleet",
+                "route",
+                format!(
+                    "'route' must be random|round-robin|least-loaded|prefix-affinity \
+                     (got '{route_str}')"
+                ),
+            ));
+        };
+        let transfer = match doc.try_str("fleet", "transfer")?.unwrap_or("contiguous") {
+            "contiguous" => TransferDiscipline::Contiguous,
+            "blocked" => TransferDiscipline::Blocked,
+            other => {
+                return Err(at_key(
+                    &doc,
+                    "fleet",
+                    "transfer",
+                    format!("'transfer' must be contiguous|blocked (got '{other}')"),
+                ));
+            }
+        };
+        let fleet = FleetSpec {
+            ratio: (parts[0], parts[1]),
+            min_groups,
+            max_groups,
+            spares: doc.try_usize("fleet", "spares")?.unwrap_or(6),
+            route,
+            transfer,
+            adjust_ratio: doc.try_bool("fleet", "adjust_ratio")?.unwrap_or(true),
+            scale_groups: doc.try_bool("fleet", "scale_groups")?.unwrap_or(true),
+            headroom: pos_finite(
+                &doc,
+                "fleet",
+                "headroom",
+                doc.try_f64("fleet", "headroom")?.unwrap_or(1.2),
+            )?,
+        };
+
+        let catalogue = crate::workload::standard_scenarios();
+        let known_scenes: Vec<&str> = catalogue.iter().map(|s| s.name).collect();
+        let mut scenes = Vec::new();
+        for e in doc.arrays.get("scene").map(Vec::as_slice).unwrap_or(&[]) {
+            let base = e.req_str("scene", "base")?.to_string();
+            let Some(base_idx) = catalogue.iter().position(|s| s.name == base) else {
+                return Err(format!(
+                    "line {}: 'base' must name a standard scenario (got '{base}'; known: {})",
+                    e.key_lines.get("base").copied().unwrap_or(e.line),
+                    known_scenes.join(", ")
+                ));
+            };
+            if scenes.iter().any(|s: &SceneSpec| s.base_idx == base_idx) {
+                return Err(format!(
+                    "line {}: duplicate [[scene]] base '{base}' — each scene may appear once",
+                    e.line
+                ));
+            }
+            let spec = SceneSpec {
+                base,
+                base_idx,
+                weight: e.try_f64("scene", "weight")?,
+                prompt_mean: e.try_f64("scene", "prompt_mean")?,
+                prompt_cv: e.try_f64("scene", "prompt_cv")?,
+                gen_mean: e.try_f64("scene", "gen_mean")?,
+                gen_cv: e.try_f64("scene", "gen_cv")?,
+                prefix_count: e.try_usize("scene", "prefix_count")?,
+                prefix_frac: e.try_f64("scene", "prefix_frac")?,
+            };
+            let range = |key: &str, v: Option<f64>, lo: f64, what: &str| -> Result<(), String> {
+                match v {
+                    Some(x) if x.is_finite() && x >= lo => Ok(()),
+                    None => Ok(()),
+                    Some(_) => Err(format!(
+                        "line {}: '{key}' must be {what}",
+                        e.key_lines.get(key).copied().unwrap_or(e.line)
+                    )),
+                }
+            };
+            range("weight", spec.weight.map(|w| if w > 0.0 { w } else { -1.0 }), 0.0, "a finite number > 0")?;
+            range("prompt_mean", spec.prompt_mean, 1.0, "a finite number >= 1")?;
+            range("prompt_cv", spec.prompt_cv, 0.0, "a finite number >= 0")?;
+            range("gen_mean", spec.gen_mean, 1.0, "a finite number >= 1")?;
+            range("gen_cv", spec.gen_cv, 0.0, "a finite number >= 0")?;
+            if let Some(f) = spec.prefix_frac {
+                if !(f.is_finite() && (0.0..=1.0).contains(&f)) {
+                    return Err(format!(
+                        "line {}: 'prefix_frac' must be in [0, 1]",
+                        e.key_lines.get("prefix_frac").copied().unwrap_or(e.line)
+                    ));
+                }
+            }
+            if spec.prefix_count == Some(0) {
+                return Err(format!(
+                    "line {}: 'prefix_count' must be >= 1",
+                    e.key_lines.get("prefix_count").copied().unwrap_or(e.line)
+                ));
+            }
+            scenes.push(spec);
+        }
+        if scenes.is_empty() {
+            return Err("scenario pack needs at least one [[scene]]".to_string());
+        }
+
+        let per_week = doc.try_f64("faults", "per_week")?.unwrap_or(0.0);
+        if !(per_week.is_finite() && per_week >= 0.0) {
+            return Err(at_key(
+                &doc,
+                "faults",
+                "per_week",
+                "'per_week' must be a finite rate >= 0".to_string(),
+            ));
+        }
+        let faults = FaultSpec {
+            per_week,
+            detect_ms: pos_finite(
+                &doc,
+                "faults",
+                "detect_ms",
+                doc.try_f64("faults", "detect_ms")?.unwrap_or(base_day.detect_period_ms),
+            )?,
+        };
+
+        let lend = doc.try_bool("lending", "enabled")?.unwrap_or(false);
+
+        let upgrade = if doc.sections.contains_key("upgrade") {
+            let at_minutes = doc.req_f64("upgrade", "at_minutes")?;
+            if !(at_minutes.is_finite() && at_minutes >= 0.0) {
+                return Err(at_key(
+                    &doc,
+                    "upgrade",
+                    "at_minutes",
+                    "'at_minutes' must be a finite number >= 0".to_string(),
+                ));
+            }
+            let wave = doc.try_usize("upgrade", "wave")?.unwrap_or(1);
+            if wave == 0 {
+                return Err(at_key(
+                    &doc,
+                    "upgrade",
+                    "wave",
+                    "'wave' must be >= 1".to_string(),
+                ));
+            }
+            Some(UpgradeSpec { at_minutes, wave })
+        } else {
+            None
+        };
+
+        let mut asserts = Vec::new();
+        for e in doc.arrays.get("assert").map(Vec::as_slice).unwrap_or(&[]) {
+            let metric = e.req_str("assert", "metric")?.to_string();
+            if !ASSERT_METRICS.contains(&metric.as_str()) {
+                return Err(format!(
+                    "line {}: unknown assert metric '{metric}' (known: {})",
+                    e.key_lines.get("metric").copied().unwrap_or(e.line),
+                    ASSERT_METRICS.join(", ")
+                ));
+            }
+            let (eq, eq_bool) = match e.get("eq") {
+                Some(Value::Bool(b)) => (None, Some(*b)),
+                Some(v) => match v.as_f64() {
+                    Some(x) => (Some(x), None),
+                    None => {
+                        return Err(format!(
+                            "line {}: key 'eq' in [[assert]] must be a number or bool, got {}",
+                            e.key_lines.get("eq").copied().unwrap_or(e.line),
+                            v.kind()
+                        ));
+                    }
+                },
+                None => (None, None),
+            };
+            let spec = AssertSpec {
+                metric,
+                min: e.try_f64("assert", "min")?,
+                max: e.try_f64("assert", "max")?,
+                eq,
+                eq_bool,
+            };
+            if spec.min.is_none() && spec.max.is_none() && spec.eq.is_none()
+                && spec.eq_bool.is_none()
+            {
+                return Err(format!(
+                    "line {}: [[assert]] needs at least one of min/max/eq",
+                    e.line
+                ));
+            }
+            asserts.push(spec);
+        }
+
+        Ok(ScenarioPack {
+            name,
+            seed,
+            workers,
+            day,
+            fleet,
+            scenes,
+            faults,
+            lend,
+            upgrade,
+            asserts,
+        })
+    }
+
+    /// Load a pack from disk; errors carry the path.
+    pub fn load(path: &str) -> Result<ScenarioPack, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        ScenarioPack::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Render the pack back to TOML. `parse(to_toml(p)) == p` — the
+    /// roundtrip property `tests/scenario_packs.rs` pins.
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "workers = {}", self.workers);
+        let _ = writeln!(s, "\n[day]");
+        let _ = writeln!(s, "hours = {}", self.day.hours);
+        let _ = writeln!(s, "peak_rps = {}", self.day.peak_rps);
+        let _ = writeln!(s, "ms_per_hour = {}", self.day.ms_per_hour);
+        let _ = writeln!(s, "start_hour = {}", self.day.start_hour);
+        let _ = writeln!(s, "control_ms = {}", self.day.control_ms);
+        let _ = writeln!(s, "slice_ms = {}", self.day.slice_ms);
+        let _ = writeln!(s, "\n[fleet]");
+        let _ = writeln!(s, "ratio = \"{}:{}\"", self.fleet.ratio.0, self.fleet.ratio.1);
+        let _ = writeln!(s, "min_groups = {}", self.fleet.min_groups);
+        let _ = writeln!(s, "max_groups = {}", self.fleet.max_groups);
+        let _ = writeln!(s, "spares = {}", self.fleet.spares);
+        let route = match self.fleet.route {
+            RouteKind::Random => "random",
+            RouteKind::RoundRobin => "round-robin",
+            RouteKind::LeastLoaded => "least-loaded",
+            RouteKind::PrefixAffinity => "prefix-affinity",
+        };
+        let _ = writeln!(s, "route = \"{route}\"");
+        let transfer = match self.fleet.transfer {
+            TransferDiscipline::Contiguous => "contiguous",
+            TransferDiscipline::Blocked => "blocked",
+        };
+        let _ = writeln!(s, "transfer = \"{transfer}\"");
+        let _ = writeln!(s, "adjust_ratio = {}", self.fleet.adjust_ratio);
+        let _ = writeln!(s, "scale_groups = {}", self.fleet.scale_groups);
+        let _ = writeln!(s, "headroom = {}", self.fleet.headroom);
+        for sc in &self.scenes {
+            let _ = writeln!(s, "\n[[scene]]");
+            let _ = writeln!(s, "base = \"{}\"", sc.base);
+            if let Some(v) = sc.weight {
+                let _ = writeln!(s, "weight = {v}");
+            }
+            if let Some(v) = sc.prompt_mean {
+                let _ = writeln!(s, "prompt_mean = {v}");
+            }
+            if let Some(v) = sc.prompt_cv {
+                let _ = writeln!(s, "prompt_cv = {v}");
+            }
+            if let Some(v) = sc.gen_mean {
+                let _ = writeln!(s, "gen_mean = {v}");
+            }
+            if let Some(v) = sc.gen_cv {
+                let _ = writeln!(s, "gen_cv = {v}");
+            }
+            if let Some(v) = sc.prefix_count {
+                let _ = writeln!(s, "prefix_count = {v}");
+            }
+            if let Some(v) = sc.prefix_frac {
+                let _ = writeln!(s, "prefix_frac = {v}");
+            }
+        }
+        let _ = writeln!(s, "\n[faults]");
+        let _ = writeln!(s, "per_week = {}", self.faults.per_week);
+        let _ = writeln!(s, "detect_ms = {}", self.faults.detect_ms);
+        let _ = writeln!(s, "\n[lending]");
+        let _ = writeln!(s, "enabled = {}", self.lend);
+        if let Some(u) = &self.upgrade {
+            let _ = writeln!(s, "\n[upgrade]");
+            let _ = writeln!(s, "at_minutes = {}", u.at_minutes);
+            let _ = writeln!(s, "wave = {}", u.wave);
+        }
+        for a in &self.asserts {
+            let _ = writeln!(s, "\n[[assert]]");
+            let _ = writeln!(s, "metric = \"{}\"", a.metric);
+            if let Some(v) = a.min {
+                let _ = writeln!(s, "min = {v}");
+            }
+            if let Some(v) = a.max {
+                let _ = writeln!(s, "max = {v}");
+            }
+            if let Some(v) = a.eq {
+                let _ = writeln!(s, "eq = {v}");
+            }
+            if let Some(v) = a.eq_bool {
+                let _ = writeln!(s, "eq = {v}");
+            }
+        }
+        s
+    }
+
+    /// Compile into the [`FleetConfig`] `run_sharded` consumes: scene
+    /// overrides applied to a copy of the standard catalogue, scenes
+    /// listed in pack order, everything else mapped 1:1. Engine/serving
+    /// perf-model constants stay at their calibrated defaults — a pack
+    /// describes a *workload day*, not a hardware model.
+    pub fn compile(&self) -> FleetConfig {
+        let mut scenarios = crate::workload::standard_scenarios();
+        let mut scenes = Vec::with_capacity(self.scenes.len());
+        for spec in &self.scenes {
+            let sc = &mut scenarios[spec.base_idx];
+            if let Some(v) = spec.weight {
+                sc.weight = v;
+            }
+            if let Some(v) = spec.prompt_mean {
+                sc.prompt_mean = v;
+            }
+            if let Some(v) = spec.prompt_cv {
+                sc.prompt_cv = v;
+            }
+            if let Some(v) = spec.gen_mean {
+                sc.gen_mean = v;
+            }
+            if let Some(v) = spec.gen_cv {
+                sc.gen_cv = v;
+            }
+            if let Some(v) = spec.prefix_count {
+                sc.n_prefixes = v;
+            }
+            if let Some(v) = spec.prefix_frac {
+                sc.prefix_frac = v;
+            }
+            scenes.push(spec.base_idx);
+        }
+        FleetConfig {
+            scenarios,
+            scenes,
+            peak_total_rps: self.day.peak_rps,
+            hours: self.day.hours,
+            ms_per_hour: self.day.ms_per_hour,
+            start_hour: self.day.start_hour,
+            control_period_ms: self.day.control_ms,
+            slice_ms: self.day.slice_ms,
+            group_total: self.fleet.ratio.0 + self.fleet.ratio.1,
+            init_ratio: self.fleet.ratio,
+            min_groups_per_scene: self.fleet.min_groups,
+            max_groups_per_scene: self.fleet.max_groups,
+            adjust_ratio: self.fleet.adjust_ratio,
+            scale_groups: self.fleet.scale_groups,
+            headroom: self.fleet.headroom,
+            route: self.fleet.route,
+            transfer: self.fleet.transfer,
+            upgrade_at_ms: self
+                .upgrade
+                .as_ref()
+                .map(|u| u.at_minutes / 60.0 * self.day.ms_per_hour),
+            upgrade_wave: self.upgrade.as_ref().map(|u| u.wave).unwrap_or(1),
+            faults_per_week: self.faults.per_week,
+            detect_period_ms: self.faults.detect_ms,
+            lend: self.lend,
+            spare_instances: self.fleet.spares,
+            seed: self.seed,
+            ..FleetConfig::default()
+        }
+    }
+
+    /// Run the pack's day through the scene-sharded path (so the report is
+    /// byte-identical for every worker count).
+    pub fn run(&self, workers: usize) -> FleetOutput {
+        run_sharded(self.compile(), workers.max(1))
+    }
+
+    /// Evaluate every `[[assert]]` row against the day's JSON report.
+    /// Returns the number of rows checked; the first violated bound is an
+    /// error naming the pack, the assertion and the actual value.
+    pub fn check_asserts(&self, report: &Json) -> Result<usize, String> {
+        let fmt = |x: f64| Json::Num(x).to_string_pretty();
+        for a in &self.asserts {
+            let path: Vec<&str> = a.metric.split('.').collect();
+            let Some(v) = report.at(&path) else {
+                return Err(format!(
+                    "pack '{}': assert metric '{}' missing from the report",
+                    self.name, a.metric
+                ));
+            };
+            if let Some(want) = a.eq_bool {
+                let Some(got) = v.as_bool() else {
+                    return Err(format!(
+                        "pack '{}': assert metric '{}' is not a bool; bound it with min/max/eq",
+                        self.name, a.metric
+                    ));
+                };
+                if got != want {
+                    return Err(format!(
+                        "pack '{}': assert failed: {} == {want} (actual {got})",
+                        self.name, a.metric
+                    ));
+                }
+                continue;
+            }
+            let num = match v {
+                Json::Num(x) => *x,
+                Json::Arr(items) => items.len() as f64,
+                _ => {
+                    return Err(format!(
+                        "pack '{}': assert metric '{}' is not numeric; bound it with `eq = true/false`",
+                        self.name, a.metric
+                    ));
+                }
+            };
+            if let Some(min) = a.min {
+                if num < min {
+                    return Err(format!(
+                        "pack '{}': assert failed: {} >= {} (actual {})",
+                        self.name,
+                        a.metric,
+                        fmt(min),
+                        fmt(num)
+                    ));
+                }
+            }
+            if let Some(max) = a.max {
+                if num > max {
+                    return Err(format!(
+                        "pack '{}': assert failed: {} <= {} (actual {})",
+                        self.name,
+                        a.metric,
+                        fmt(max),
+                        fmt(num)
+                    ));
+                }
+            }
+            if let Some(eq) = a.eq {
+                if num != eq {
+                    return Err(format!(
+                        "pack '{}': assert failed: {} == {} (actual {})",
+                        self.name,
+                        a.metric,
+                        fmt(eq),
+                        fmt(num)
+                    ));
+                }
+            }
+        }
+        Ok(self.asserts.len())
+    }
+}
+
+/// First ad-hoc fleet flag present alongside `--scenario`, if any — the
+/// CLI rejects the combination naming the flag (a pack defines the whole
+/// day; editing it beats shadowing it from the command line).
+pub fn conflicting_flag(args: &ParsedArgs) -> Option<&'static str> {
+    ADHOC_FLEET_FLAGS.iter().copied().find(|f| args.has(f))
+}
+
+/// Human-usable golden-mismatch message: the first differing line of the
+/// two reports plus the bless instruction.
+pub fn golden_diff_hint(golden: &str, actual: &str, path: &str) -> String {
+    let mut line = 0usize;
+    let mut g_line = "";
+    let mut a_line = "";
+    for (i, (g, a)) in golden.lines().zip(actual.lines()).enumerate() {
+        if g != a {
+            line = i + 1;
+            g_line = g;
+            a_line = a;
+            break;
+        }
+    }
+    if line == 0 {
+        // Common prefix matches; the reports differ in length.
+        line = golden.lines().count().min(actual.lines().count()) + 1;
+        g_line = golden.lines().nth(line - 1).unwrap_or("<end of file>");
+        a_line = actual.lines().nth(line - 1).unwrap_or("<end of file>");
+    }
+    format!(
+        "golden mismatch at {path}:{line}\n  golden: {g_line}\n  actual: {a_line}\n\
+         if the change is intended, bless it with:\n  \
+         UPDATE_GOLDENS=1 cargo test --test scenario_packs\nand commit the regenerated {path}"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli;
+
+    /// A minimal valid pack most tests start from.
+    const MINI: &str = r#"
+name = "mini"
+seed = 7
+
+[day]
+hours = 6
+peak_rps = 8
+ms_per_hour = 500
+control_ms = 500
+
+[[scene]]
+base = "scene6"
+
+[[assert]]
+metric = "injected"
+min = 1
+"#;
+
+    #[test]
+    fn minimal_pack_parses_with_defaults() {
+        let p = ScenarioPack::parse(MINI).unwrap();
+        assert_eq!(p.name, "mini");
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.workers, 1);
+        assert_eq!(p.fleet.ratio, (3, 3));
+        assert_eq!(p.fleet.route, RouteKind::LeastLoaded);
+        assert_eq!(p.fleet.transfer, TransferDiscipline::Contiguous);
+        assert!(!p.lend);
+        assert!(p.upgrade.is_none());
+        assert_eq!(p.scenes.len(), 1);
+        assert_eq!(p.scenes[0].base_idx, 5);
+        assert_eq!(p.asserts.len(), 1);
+    }
+
+    #[test]
+    fn compile_maps_every_field_onto_fleet_config() {
+        let text = r#"
+name = "full"
+seed = 42
+workers = 3
+
+[day]
+hours = 12
+peak_rps = 30
+ms_per_hour = 800
+start_hour = 6
+control_ms = 800
+slice_ms = 400
+
+[fleet]
+ratio = "4:2"
+min_groups = 1
+max_groups = 3
+spares = 5
+route = "prefix-affinity"
+transfer = "blocked"
+adjust_ratio = false
+scale_groups = false
+headroom = 1.5
+
+[[scene]]
+base = "scene3"
+weight = 2.5
+prompt_mean = 900
+prefix_count = 32
+prefix_frac = 0.25
+
+[faults]
+per_week = 10
+detect_ms = 2000
+
+[lending]
+enabled = true
+
+[upgrade]
+at_minutes = 90
+wave = 2
+"#;
+        let p = ScenarioPack::parse(text).unwrap();
+        let cfg = p.compile();
+        assert_eq!(cfg.scenes, vec![2]);
+        assert_eq!(cfg.scenarios[2].weight, 2.5);
+        assert_eq!(cfg.scenarios[2].prompt_mean, 900.0);
+        assert_eq!(cfg.scenarios[2].n_prefixes, 32);
+        assert_eq!(cfg.scenarios[2].prefix_frac, 0.25);
+        // Untouched catalogue entries keep their standard shape.
+        assert_eq!(cfg.scenarios[5].prompt_mean, 320.0);
+        assert_eq!(cfg.peak_total_rps, 30.0);
+        assert_eq!(cfg.group_total, 6);
+        assert_eq!(cfg.init_ratio, (4, 2));
+        assert_eq!(cfg.route, RouteKind::PrefixAffinity);
+        assert_eq!(cfg.transfer, TransferDiscipline::Blocked);
+        assert!(!cfg.adjust_ratio);
+        assert!(!cfg.scale_groups);
+        assert_eq!(cfg.upgrade_at_ms, Some(90.0 / 60.0 * 800.0));
+        assert_eq!(cfg.upgrade_wave, 2);
+        assert_eq!(cfg.faults_per_week, 10.0);
+        assert_eq!(cfg.detect_period_ms, 2000.0);
+        assert!(cfg.lend);
+        assert_eq!(cfg.spare_instances, 5);
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn roundtrips_through_toml() {
+        let p = ScenarioPack::parse(MINI).unwrap();
+        let back = ScenarioPack::parse(&p.to_toml()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    // -- fail-fast fixtures -------------------------------------------------
+
+    #[test]
+    fn unknown_key_in_pack_is_rejected_with_line() {
+        let text = "name = \"x\"\nseed = 1\n[day]\nhours = 1\npeak_rps = 1\nhourz = 2\n\n[[scene]]\nbase = \"scene1\"\n";
+        let err = ScenarioPack::parse(text).unwrap_err();
+        assert!(
+            err.starts_with("line 6: unknown key 'hourz' in [day]"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn missing_required_field_is_rejected() {
+        let err = ScenarioPack::parse("name = \"x\"\nseed = 1\n[day]\nhours = 1\n").unwrap_err();
+        assert_eq!(err, "line 3: [day] is missing required key 'peak_rps'");
+        let err = ScenarioPack::parse("seed = 1\n").unwrap_err();
+        assert_eq!(err, "the top level is missing required key 'name'");
+    }
+
+    #[test]
+    fn unknown_scene_base_and_duplicates_are_rejected() {
+        let bad = MINI.replace("base = \"scene6\"", "base = \"scene9\"");
+        let err = ScenarioPack::parse(&bad).unwrap_err();
+        assert!(
+            err.contains("'base' must name a standard scenario (got 'scene9'"),
+            "got: {err}"
+        );
+        let dup = format!("{MINI}\n[[scene]]\nbase = \"scene6\"\n");
+        let err = ScenarioPack::parse(&dup).unwrap_err();
+        assert!(
+            err.contains("duplicate [[scene]] base 'scene6'"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_assert_metric_and_empty_assert_are_rejected() {
+        let bad = MINI.replace("metric = \"injected\"", "metric = \"injectd\"");
+        let err = ScenarioPack::parse(&bad).unwrap_err();
+        assert!(err.contains("unknown assert metric 'injectd'"), "got: {err}");
+        let empty = MINI.replace("min = 1", "");
+        let err = ScenarioPack::parse(&empty).unwrap_err();
+        assert!(
+            err.contains("[[assert]] needs at least one of min/max/eq"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn bad_ratio_and_bad_route_are_rejected() {
+        let text = format!("{MINI}\n[fleet]\nratio = \"3:0\"\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'ratio' must be \"P:D\""), "got: {err}");
+        let text = format!("{MINI}\n[fleet]\nroute = \"fastest\"\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(
+            err.contains("'route' must be random|round-robin|least-loaded|prefix-affinity"),
+            "got: {err}"
+        );
+    }
+
+    // -- assert evaluation --------------------------------------------------
+
+    #[test]
+    fn violated_assert_names_pack_metric_and_actual() {
+        let p = ScenarioPack::parse(MINI).unwrap();
+        let report = crate::jobj! { "injected" => 0usize };
+        let err = p.check_asserts(&report).unwrap_err();
+        assert_eq!(err, "pack 'mini': assert failed: injected >= 1 (actual 0)");
+    }
+
+    #[test]
+    fn bool_and_length_metrics_evaluate() {
+        let text = MINI.replace(
+            "metric = \"injected\"\nmin = 1",
+            "metric = \"ledger.balanced\"\neq = true\n\n[[assert]]\nmetric = \"ledger.leases\"\nmax = 2",
+        );
+        let p = ScenarioPack::parse(&text).unwrap();
+        let ok = crate::jobj! {
+            "ledger" => crate::jobj! {
+                "balanced" => true,
+                "leases" => vec![crate::jobj! {}, crate::jobj! {}],
+            },
+        };
+        assert_eq!(p.check_asserts(&ok).unwrap(), 2);
+        let bad = crate::jobj! {
+            "ledger" => crate::jobj! { "balanced" => false, "leases" => Vec::<Json>::new() },
+        };
+        let err = p.check_asserts(&bad).unwrap_err();
+        assert_eq!(
+            err,
+            "pack 'mini': assert failed: ledger.balanced == true (actual false)"
+        );
+    }
+
+    // -- CLI conflicts ------------------------------------------------------
+
+    #[test]
+    fn scenario_conflicts_with_every_adhoc_fleet_flag() {
+        for flag in ADHOC_FLEET_FLAGS {
+            let argv: Vec<String> = vec![
+                "fleet".into(),
+                "--scenario".into(),
+                "x.toml".into(),
+                format!("--{flag}"),
+                "1".into(),
+            ];
+            let args = cli::parse(&argv, true);
+            assert_eq!(
+                conflicting_flag(&args),
+                Some(*flag),
+                "--{flag} must conflict with --scenario"
+            );
+        }
+    }
+
+    #[test]
+    fn workers_json_quiet_do_not_conflict() {
+        let argv: Vec<String> = ["fleet", "--scenario", "x.toml", "--workers", "4", "--json", "--quiet"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = cli::parse(&argv, true);
+        assert_eq!(conflicting_flag(&args), None);
+    }
+
+    // -- golden diff hint ---------------------------------------------------
+
+    #[test]
+    fn golden_diff_hint_points_at_first_difference_and_bless_flow() {
+        let hint = golden_diff_hint("a\nb\nc\n", "a\nX\nc\n", "scenarios/goldens/p.golden.json");
+        assert!(hint.contains("scenarios/goldens/p.golden.json:2"), "got: {hint}");
+        assert!(hint.contains("golden: b"), "got: {hint}");
+        assert!(hint.contains("actual: X"), "got: {hint}");
+        assert!(hint.contains("UPDATE_GOLDENS=1"), "got: {hint}");
+        // Length-only difference still yields a usable location.
+        let hint = golden_diff_hint("a\nb\n", "a\nb\nc\n", "g.json");
+        assert!(hint.contains("g.json:3"), "got: {hint}");
+        assert!(hint.contains("actual: c"), "got: {hint}");
+    }
+}

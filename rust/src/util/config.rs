@@ -1,9 +1,18 @@
 //! Configuration system: a TOML-subset parser plus the typed configs every
 //! layer consumes (cluster shape, engine perf model, serving policy).
 //!
-//! Grammar supported: `[section]` headers, `key = value` with string,
-//! integer, float, bool and flat array values, `#` comments. This covers
-//! the repo's config files (`configs/*.toml`) without the full TOML spec.
+//! Grammar supported: `[section]` headers, `[[section]]` array-of-tables
+//! headers, `key = value` with string, integer, float, bool and flat array
+//! values, `#` comments. This covers the repo's config files
+//! (`configs/*.toml`) and scenario packs (`scenarios/*.toml`) without the
+//! full TOML spec.
+//!
+//! The parser is fail-fast: duplicate tables, duplicate keys and malformed
+//! lines are errors carrying the offending line number, and a caller can
+//! reject unknown keys/tables against a declared [`Schema`]
+//! (`deny_unknown_fields` without serde). The lenient `*_or` accessors
+//! remain for the defaulted configs below; the strict `req_*`/`try_*`
+//! accessors are for fail-fast consumers (`serving::scenario`).
 
 use std::collections::BTreeMap;
 
@@ -42,40 +51,225 @@ impl Value {
             _ => None,
         }
     }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(x) if *x >= 0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+    /// Human-readable kind for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::Arr(_) => "array",
+        }
+    }
 }
 
 pub type Section = BTreeMap<String, Value>;
 
+/// One `[[name]]` array-of-tables entry: the header line plus the entry's
+/// keyed values (and each key's line, for error reporting).
+#[derive(Clone, Debug, Default)]
+pub struct TableEntry {
+    /// Line of the `[[name]]` header.
+    pub line: usize,
+    /// The entry's key/value pairs.
+    pub values: Section,
+    /// Line each key was set on.
+    pub key_lines: BTreeMap<String, usize>,
+}
+
+impl TableEntry {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    fn line_of(&self, key: &str) -> usize {
+        self.key_lines.get(key).copied().unwrap_or(self.line)
+    }
+
+    fn missing(&self, table: &str, key: &str) -> String {
+        format!("line {}: [[{table}]] is missing required key '{key}'", self.line)
+    }
+
+    fn type_err(&self, table: &str, key: &str, want: &str, got: &Value) -> String {
+        format!(
+            "line {}: key '{key}' in [[{table}]] must be {want}, got {}",
+            self.line_of(key),
+            got.kind()
+        )
+    }
+
+    /// Required string key of this entry (`table` names the array, for
+    /// error text only).
+    pub fn req_str(&self, table: &str, key: &str) -> Result<&str, String> {
+        match self.get(key) {
+            Some(v) => v.as_str().ok_or_else(|| self.type_err(table, key, "a string", v)),
+            None => Err(self.missing(table, key)),
+        }
+    }
+
+    /// Optional number key: absent is `Ok(None)`, wrong type is an error.
+    pub fn try_f64(&self, table: &str, key: &str) -> Result<Option<f64>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| self.type_err(table, key, "a number", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Optional non-negative integer key: absent is `Ok(None)`, wrong type
+    /// is an error.
+    pub fn try_usize(&self, table: &str, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| self.type_err(table, key, "a non-negative integer", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Optional bool key: absent is `Ok(None)`, wrong type is an error.
+    pub fn try_bool(&self, table: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(key) {
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| self.type_err(table, key, "a bool", v)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// Known-key schema for [`Doc::check_unknown`]: `(table, keys)` pairs for
+/// plain `[table]`s and for `[[array]]` tables. `""` names the top level.
+pub struct Schema<'a> {
+    /// Known plain tables and their keys.
+    pub tables: &'a [(&'a str, &'a [&'a str])],
+    /// Known array-of-tables names and their keys.
+    pub arrays: &'a [(&'a str, &'a [&'a str])],
+}
+
 /// A parsed config document: section name -> key -> value. Keys before any
-/// `[section]` land in the "" root section.
+/// `[section]` land in the "" root section; `[[name]]` entries land in
+/// `arrays` in file order.
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
     pub sections: BTreeMap<String, Section>,
+    /// `[[name]]` array-of-tables entries, in file order.
+    pub arrays: BTreeMap<String, Vec<TableEntry>>,
+    /// Line of each `[section]` header (root = 0).
+    pub section_lines: BTreeMap<String, usize>,
+    /// Per-section line of each key.
+    pub key_lines: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+/// Error-text preposition phrase for a table name (root = top level).
+fn in_table(name: &str) -> String {
+    if name.is_empty() {
+        "at the top level".to_string()
+    } else {
+        format!("in [{name}]")
+    }
+}
+
+/// Validated `[name]` / `[[name]]` header interior.
+fn section_name(rest: &str, suffix: &str, lno: usize) -> Result<String, String> {
+    rest.strip_suffix(suffix)
+        .map(str::trim)
+        .filter(|n| !n.is_empty() && !n.contains('[') && !n.contains(']'))
+        .map(str::to_string)
+        .ok_or_else(|| format!("line {lno}: bad section"))
 }
 
 impl Doc {
     pub fn parse(text: &str) -> Result<Doc, String> {
         let mut doc = Doc::default();
+        doc.sections.insert(String::new(), Section::new());
+        doc.section_lines.insert(String::new(), 0);
+        doc.key_lines.insert(String::new(), BTreeMap::new());
+        // Where `key = value` lines currently bind: the named table, or
+        // (when `in_array`) the latest entry of `[[current]]`.
         let mut current = String::new();
-        doc.sections.insert(current.clone(), Section::new());
+        let mut in_array = false;
         for (ln, raw) in text.lines().enumerate() {
+            let lno = ln + 1;
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
-            if let Some(name) = line.strip_prefix('[') {
-                let name = name
-                    .strip_suffix(']')
-                    .ok_or_else(|| format!("line {}: bad section", ln + 1))?;
-                current = name.trim().to_string();
-                doc.sections.entry(current.clone()).or_default();
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = section_name(rest, "]]", lno)?;
+                if let Some(first) = doc.section_lines.get(&name).filter(|_| !name.is_empty()) {
+                    return Err(format!(
+                        "line {lno}: [[{name}]] conflicts with table [{name}] (line {first})"
+                    ));
+                }
+                doc.arrays
+                    .entry(name.clone())
+                    .or_default()
+                    .push(TableEntry { line: lno, ..TableEntry::default() });
+                current = name;
+                in_array = true;
+            } else if let Some(rest) = line.strip_prefix('[') {
+                let name = section_name(rest, "]", lno)?;
+                if let Some(first) = doc.arrays.get(&name).and_then(|v| v.first()) {
+                    return Err(format!(
+                        "line {lno}: table [{name}] conflicts with array table [[{name}]] (line {})",
+                        first.line
+                    ));
+                }
+                if let Some(first) = doc.section_lines.get(&name) {
+                    return Err(format!(
+                        "line {lno}: duplicate table [{name}] (first defined at line {first})"
+                    ));
+                }
+                doc.sections.insert(name.clone(), Section::new());
+                doc.section_lines.insert(name.clone(), lno);
+                doc.key_lines.insert(name.clone(), BTreeMap::new());
+                current = name;
+                in_array = false;
             } else if let Some(eq) = line.find('=') {
                 let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(format!("line {lno}: expected key = value"));
+                }
                 let val = parse_value(line[eq + 1..].trim())
-                    .map_err(|e| format!("line {}: {}", ln + 1, e))?;
-                doc.sections.get_mut(&current).unwrap().insert(key, val);
+                    .map_err(|e| format!("line {lno}: {e}"))?;
+                if in_array {
+                    let Some(entry) =
+                        doc.arrays.get_mut(&current).and_then(|v| v.last_mut())
+                    else {
+                        return Err(format!("line {lno}: key outside any table"));
+                    };
+                    if let Some(first) = entry.key_lines.get(&key) {
+                        return Err(format!(
+                            "line {lno}: duplicate key '{key}' in [[{current}]] \
+                             (first set at line {first})"
+                        ));
+                    }
+                    entry.key_lines.insert(key.clone(), lno);
+                    entry.values.insert(key, val);
+                } else {
+                    let lines = doc.key_lines.entry(current.clone()).or_default();
+                    if let Some(first) = lines.get(&key) {
+                        return Err(format!(
+                            "line {lno}: duplicate key '{key}' {} (first set at line {first})",
+                            in_table(&current)
+                        ));
+                    }
+                    lines.insert(key.clone(), lno);
+                    doc.sections.entry(current.clone()).or_default().insert(key, val);
+                }
             } else {
-                return Err(format!("line {}: expected key = value", ln + 1));
+                return Err(format!("line {lno}: expected key = value"));
             }
         }
         Ok(doc)
@@ -89,6 +283,11 @@ impl Doc {
 
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
+    }
+
+    /// Line `key` was set on in `section`, if present.
+    pub fn line_of(&self, section: &str, key: &str) -> Option<usize> {
+        self.key_lines.get(section)?.get(key).copied()
     }
 
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
@@ -105,6 +304,176 @@ impl Doc {
 
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    // -- strict accessors (fail-fast consumers) -----------------------------
+
+    fn missing(&self, section: &str, key: &str) -> String {
+        if !self.sections.contains_key(section) {
+            return format!("missing required table [{section}]");
+        }
+        let where_ = if section.is_empty() {
+            "the top level".to_string()
+        } else {
+            let l = self.section_lines.get(section).copied().unwrap_or(0);
+            format!("line {l}: [{section}]")
+        };
+        format!("{where_} is missing required key '{key}'")
+    }
+
+    fn type_err(&self, section: &str, key: &str, want: &str, got: &Value) -> String {
+        let l = self.line_of(section, key).unwrap_or(0);
+        format!(
+            "line {l}: key '{key}' {} must be {want}, got {}",
+            in_table(section),
+            got.kind()
+        )
+    }
+
+    /// Required number; missing key/table or a non-number is an error.
+    pub fn req_f64(&self, section: &str, key: &str) -> Result<f64, String> {
+        match self.get(section, key) {
+            Some(v) => v.as_f64().ok_or_else(|| self.type_err(section, key, "a number", v)),
+            None => Err(self.missing(section, key)),
+        }
+    }
+
+    /// Required string; missing key/table or a non-string is an error.
+    pub fn req_str(&self, section: &str, key: &str) -> Result<&str, String> {
+        match self.get(section, key) {
+            Some(v) => v.as_str().ok_or_else(|| self.type_err(section, key, "a string", v)),
+            None => Err(self.missing(section, key)),
+        }
+    }
+
+    /// Required non-negative integer (u64 range).
+    pub fn req_u64(&self, section: &str, key: &str) -> Result<u64, String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| self.type_err(section, key, "a non-negative integer", v)),
+            None => Err(self.missing(section, key)),
+        }
+    }
+
+    /// Optional number: absent is `Ok(None)`, wrong type is an error.
+    pub fn try_f64(&self, section: &str, key: &str) -> Result<Option<f64>, String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| self.type_err(section, key, "a number", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Optional non-negative integer: absent is `Ok(None)`, wrong type is
+    /// an error.
+    pub fn try_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| self.type_err(section, key, "a non-negative integer", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Optional string: absent is `Ok(None)`, wrong type is an error.
+    pub fn try_str(&self, section: &str, key: &str) -> Result<Option<&str>, String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .as_str()
+                .map(Some)
+                .ok_or_else(|| self.type_err(section, key, "a string", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Optional bool: absent is `Ok(None)`, wrong type is an error.
+    pub fn try_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| self.type_err(section, key, "a bool", v)),
+            None => Ok(None),
+        }
+    }
+
+    /// Reject any table, array table or key the schema does not declare —
+    /// `deny_unknown_fields` without serde. Errors carry the line of the
+    /// offending key/header and list the known names.
+    pub fn check_unknown(&self, schema: &Schema) -> Result<(), String> {
+        let known = |keys: &[&str]| {
+            if keys.is_empty() {
+                "none".to_string()
+            } else {
+                keys.join(", ")
+            }
+        };
+        for (name, sect) in &self.sections {
+            let decl = schema.tables.iter().find(|(t, _)| *t == name.as_str());
+            let Some((_, keys)) = decl else {
+                if name.is_empty() && sect.is_empty() {
+                    continue;
+                }
+                if !name.is_empty() {
+                    let l = self.section_lines.get(name).copied().unwrap_or(0);
+                    let names: Vec<String> = schema
+                        .tables
+                        .iter()
+                        .filter(|(t, _)| !t.is_empty())
+                        .map(|(t, _)| format!("[{t}]"))
+                        .collect();
+                    return Err(format!(
+                        "line {l}: unknown table [{name}] (known: {})",
+                        known(&names.iter().map(String::as_str).collect::<Vec<_>>())
+                    ));
+                }
+                // Top-level keys with no declared top-level schema.
+                if let Some(key) = sect.keys().next() {
+                    let l = self.line_of(name, key).unwrap_or(0);
+                    return Err(format!(
+                        "line {l}: unknown key '{key}' at the top level (known: none)"
+                    ));
+                }
+                continue;
+            };
+            for key in sect.keys() {
+                if !keys.contains(&key.as_str()) {
+                    let l = self.line_of(name, key).unwrap_or(0);
+                    return Err(format!(
+                        "line {l}: unknown key '{key}' {} (known: {})",
+                        in_table(name),
+                        known(keys)
+                    ));
+                }
+            }
+        }
+        for (name, entries) in &self.arrays {
+            let Some((_, keys)) = schema.arrays.iter().find(|(t, _)| *t == name.as_str()) else {
+                let l = entries.first().map(|e| e.line).unwrap_or(0);
+                let names: Vec<String> =
+                    schema.arrays.iter().map(|(t, _)| format!("[[{t}]]")).collect();
+                return Err(format!(
+                    "line {l}: unknown array table [[{name}]] (known: {})",
+                    known(&names.iter().map(String::as_str).collect::<Vec<_>>())
+                ));
+            };
+            for e in entries {
+                for key in e.values.keys() {
+                    if !keys.contains(&key.as_str()) {
+                        return Err(format!(
+                            "line {}: unknown key '{key}' in [[{name}]] (known: {})",
+                            e.line_of(key),
+                            known(keys)
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -389,5 +758,131 @@ mod tests {
     fn hash_in_string_preserved() {
         let doc = Doc::parse("s = \"a#b\"\n").unwrap();
         assert_eq!(doc.str_or("", "s", ""), "a#b");
+    }
+
+    #[test]
+    fn parses_array_of_tables_in_file_order() {
+        let doc = Doc::parse(
+            "[day]\nhours = 24\n[[scene]]\nbase = \"scene3\"\n\
+             [[scene]]\nbase = \"scene6\"\nweight = 2.0\n",
+        )
+        .unwrap();
+        let scenes = doc.arrays.get("scene").expect("[[scene]] entries");
+        assert_eq!(scenes.len(), 2);
+        assert_eq!(scenes[0].req_str("scene", "base").unwrap(), "scene3");
+        assert_eq!(scenes[1].req_str("scene", "base").unwrap(), "scene6");
+        assert_eq!(scenes[1].try_f64("scene", "weight").unwrap(), Some(2.0));
+        assert_eq!(scenes[0].line, 3);
+        assert_eq!(scenes[1].line, 5);
+    }
+
+    // -- malformed-input fixtures: the exact fail-fast error text ----------
+
+    #[test]
+    fn duplicate_table_is_an_error_with_both_lines() {
+        let err = Doc::parse("[day]\nhours = 1\n[day]\npeak = 2\n").unwrap_err();
+        assert_eq!(err, "line 3: duplicate table [day] (first defined at line 1)");
+    }
+
+    #[test]
+    fn duplicate_key_is_an_error_with_both_lines() {
+        let err = Doc::parse("[day]\nhours = 1\nhours = 2\n").unwrap_err();
+        assert_eq!(
+            err,
+            "line 3: duplicate key 'hours' in [day] (first set at line 1)"
+        );
+        let err = Doc::parse("seed = 1\nseed = 2\n").unwrap_err();
+        assert_eq!(
+            err,
+            "line 2: duplicate key 'seed' at the top level (first set at line 1)"
+        );
+    }
+
+    #[test]
+    fn table_vs_array_table_conflicts_are_errors() {
+        let err = Doc::parse("[scene]\nbase = \"x\"\n[[scene]]\nbase = \"y\"\n").unwrap_err();
+        assert_eq!(err, "line 3: [[scene]] conflicts with table [scene] (line 1)");
+        let err = Doc::parse("[[scene]]\nbase = \"x\"\n[scene]\nbase = \"y\"\n").unwrap_err();
+        assert_eq!(
+            err,
+            "line 3: table [scene] conflicts with array table [[scene]] (line 1)"
+        );
+    }
+
+    #[test]
+    fn wrong_type_is_an_error_with_line_and_kinds() {
+        let doc = Doc::parse("[day]\nhours = \"ten\"\n").unwrap();
+        assert_eq!(
+            doc.req_f64("day", "hours").unwrap_err(),
+            "line 2: key 'hours' in [day] must be a number, got string"
+        );
+        let doc = Doc::parse("seed = -3\n").unwrap();
+        assert_eq!(
+            doc.req_u64("", "seed").unwrap_err(),
+            "line 1: key 'seed' at the top level must be a non-negative integer, got integer"
+        );
+    }
+
+    #[test]
+    fn missing_required_key_and_table_errors() {
+        let doc = Doc::parse("[day]\npeak_rps = 10\n").unwrap();
+        assert_eq!(
+            doc.req_f64("day", "hours").unwrap_err(),
+            "line 1: [day] is missing required key 'hours'"
+        );
+        assert_eq!(
+            doc.req_f64("fleet", "headroom").unwrap_err(),
+            "missing required table [fleet]"
+        );
+        assert_eq!(
+            doc.req_str("", "name").unwrap_err(),
+            "the top level is missing required key 'name'"
+        );
+    }
+
+    #[test]
+    fn unknown_keys_and_tables_are_rejected_by_schema() {
+        let schema = Schema {
+            tables: &[("", &["name"]), ("day", &["hours", "peak_rps"])],
+            arrays: &[("scene", &["base", "weight"])],
+        };
+        let doc = Doc::parse("name = \"p\"\n[day]\nhours = 1\n").unwrap();
+        assert!(doc.check_unknown(&schema).is_ok());
+
+        let doc = Doc::parse("name = \"p\"\n[day]\nhourz = 1\n").unwrap();
+        assert_eq!(
+            doc.check_unknown(&schema).unwrap_err(),
+            "line 3: unknown key 'hourz' in [day] (known: hours, peak_rps)"
+        );
+
+        let doc = Doc::parse("[dayz]\nhours = 1\n").unwrap();
+        assert_eq!(
+            doc.check_unknown(&schema).unwrap_err(),
+            "line 1: unknown table [dayz] (known: [day])"
+        );
+
+        let doc = Doc::parse("[[scenez]]\nbase = \"x\"\n").unwrap();
+        assert_eq!(
+            doc.check_unknown(&schema).unwrap_err(),
+            "line 1: unknown array table [[scenez]] (known: [[scene]])"
+        );
+
+        let doc = Doc::parse("[[scene]]\nbase = \"x\"\nweigth = 1.0\n").unwrap();
+        assert_eq!(
+            doc.check_unknown(&schema).unwrap_err(),
+            "line 3: unknown key 'weigth' in [[scene]] (known: base, weight)"
+        );
+    }
+
+    #[test]
+    fn strict_optionals_fail_on_wrong_type_not_on_absence() {
+        let doc = Doc::parse("[fleet]\nspares = 4\nroute = 7\n").unwrap();
+        assert_eq!(doc.try_usize("fleet", "spares").unwrap(), Some(4));
+        assert_eq!(doc.try_f64("fleet", "missing").unwrap(), None);
+        assert_eq!(doc.try_f64("nosuch", "key").unwrap(), None);
+        assert!(doc
+            .try_str("fleet", "route")
+            .unwrap_err()
+            .contains("must be a string, got integer"));
     }
 }

@@ -72,6 +72,42 @@ fn sharded_ledger_conserves_instances_for_every_worker_count() {
 }
 
 #[test]
+fn scenario_pack_day_is_byte_identical_across_runs_and_worker_counts() {
+    // The scenario path inherits the whole contract: a pack compiled
+    // through `ScenarioPack::compile` runs on `run_sharded`, so two runs
+    // of the same pack — and any two worker counts — must render the
+    // same report bytes. Mirrors `cfg()` above, expressed as a pack.
+    use pd_serve::serving::scenario::ScenarioPack;
+    let text = r#"
+name = "determinism"
+seed = 64087
+
+[day]
+hours = 24
+peak_rps = 24
+ms_per_hour = 1500
+control_ms = 1500
+slice_ms = 500
+
+[fleet]
+max_groups = 3
+
+[[scene]]
+base = "scene3"
+
+[[scene]]
+base = "scene6"
+"#;
+    let pack = ScenarioPack::parse(text).expect("inline pack parses");
+    let a = pack.run(1).to_json().to_string_pretty();
+    let b = pack.run(1).to_json().to_string_pretty();
+    let c = pack.run(4).to_json().to_string_pretty();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same pack must render byte-identical JSON across runs");
+    assert_eq!(a, c, "--workers must not change a scenario pack's report bytes");
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guards the double-run test against vacuous passes (e.g. a to_json
     // that ignores the simulation entirely).

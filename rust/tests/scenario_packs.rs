@@ -1,0 +1,290 @@
+//! Data-driven golden suite over the committed scenario packs.
+//!
+//! Every `scenarios/*.toml` is discovered, parsed fail-fast, run through
+//! the scene-sharded day at `--workers 1` **and** `--workers 4` (the two
+//! reports must be byte-identical — the sharding oracle), self-checked
+//! against its own `[[assert]]` rows, and byte-compared against its
+//! committed golden report under `scenarios/goldens/`.
+//!
+//! Bless flow: a *missing* golden is written in place with a loud note
+//! (commit it — first run in a fresh build environment bootstraps the
+//! snapshots); a *mismatching* golden fails with a first-difference diff
+//! hint and the explicit re-bless instruction:
+//!
+//! ```text
+//! UPDATE_GOLDENS=1 cargo test --test scenario_packs
+//! ```
+//!
+//! The property tests at the bottom extend the same contract to *random*
+//! in-range packs: serialize → re-parse → equal struct, and workers-1 vs
+//! workers-4 byte identity on the compiled day.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use pd_serve::serving::router::RouteKind;
+use pd_serve::serving::scenario::{
+    golden_diff_hint, AssertSpec, DaySpec, FaultSpec, FleetSpec, ScenarioPack, SceneSpec,
+    UpgradeSpec, ASSERT_METRICS,
+};
+use pd_serve::serving::sim::TransferDiscipline;
+use pd_serve::util::prng::Rng;
+use pd_serve::util::prop;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+/// Every committed pack, sorted by file name (deterministic order).
+fn discover() -> Vec<PathBuf> {
+    let mut packs: Vec<PathBuf> = fs::read_dir(scenarios_dir())
+        .expect("scenarios/ directory is committed")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("toml"))
+        .collect();
+    packs.sort();
+    packs
+}
+
+#[test]
+fn pack_library_is_committed_and_complete() {
+    let names: Vec<String> = discover()
+        .iter()
+        .filter_map(|p| p.file_stem().and_then(|s| s.to_str()).map(str::to_string))
+        .collect();
+    for required in ["chat_heavy", "example", "flash_crowd", "mixed_day", "region_failover"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "pack library lost scenarios/{required}.toml (have: {names:?})"
+        );
+    }
+}
+
+/// The whole gate for one pack: parse, worker-invariance, asserts, golden.
+fn gate_pack(path: &Path) {
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("?");
+    let pack = ScenarioPack::load(&path.display().to_string())
+        .unwrap_or_else(|e| panic!("committed pack failed to parse: {e}"));
+
+    let out = pack.run(1);
+    let report = out.to_json();
+    let w1 = format!("{}\n", report.to_string_pretty());
+    let w4 = format!("{}\n", pack.run(4).to_json().to_string_pretty());
+    assert_eq!(
+        w1, w4,
+        "pack '{name}': --workers 1 and --workers 4 reports differ (sharding oracle broken)"
+    );
+
+    let checked = pack
+        .check_asserts(&report)
+        .unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(checked, pack.asserts.len());
+
+    let golden_path = scenarios_dir().join("goldens").join(format!("{name}.golden.json"));
+    let bless = std::env::var("UPDATE_GOLDENS").is_ok();
+    match fs::read_to_string(&golden_path) {
+        Ok(golden) if golden == w1 => {}
+        Ok(golden) if bless => {
+            assert_ne!(golden, w1);
+            fs::write(&golden_path, &w1).expect("write blessed golden");
+            eprintln!("blessed {} — commit it", golden_path.display());
+        }
+        Ok(golden) => {
+            panic!(
+                "pack '{name}': {}",
+                golden_diff_hint(&golden, &w1, &golden_path.display().to_string())
+            );
+        }
+        Err(_) => {
+            // Bootstrap: first run in a fresh build environment writes the
+            // snapshot. Commit it — from then on it is a hard gate.
+            fs::create_dir_all(golden_path.parent().expect("goldens dir has a parent"))
+                .expect("create scenarios/goldens/");
+            fs::write(&golden_path, &w1).expect("write bootstrap golden");
+            eprintln!(
+                "bootstrapped golden {} — commit it to pin this pack",
+                golden_path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_committed_pack_runs_asserts_and_matches_its_golden() {
+    let packs = discover();
+    assert!(packs.len() >= 5, "pack library shrank: {packs:?}");
+    for path in packs {
+        gate_pack(&path);
+    }
+}
+
+#[test]
+fn violated_assert_bound_names_the_assertion() {
+    // A fast inline day whose assert bound is impossible: the failure
+    // must name the pack, the assertion and the actual value — this is
+    // the message `pdserve fleet --scenario` prints before exiting 1.
+    let text = r#"
+name = "doomed"
+seed = 9
+
+[day]
+hours = 2
+peak_rps = 5
+ms_per_hour = 250
+control_ms = 250
+
+[[scene]]
+base = "scene6"
+
+[[assert]]
+metric = "completed"
+min = 1000000000
+"#;
+    let pack = ScenarioPack::parse(text).expect("pack itself is valid");
+    let report = pack.run(1).to_json();
+    let err = pack.check_asserts(&report).expect_err("bound is impossible");
+    assert!(
+        err.starts_with("pack 'doomed': assert failed: completed >= 1000000000 (actual "),
+        "failure must name pack, assertion and actual value, got: {err}"
+    );
+}
+
+// ---------------------------------------------------------------- property
+
+/// Random in-range pack descriptor (small but schema-covering).
+fn arb_pack(r: &mut Rng) -> ScenarioPack {
+    let routes = [
+        RouteKind::Random,
+        RouteKind::RoundRobin,
+        RouteKind::LeastLoaded,
+        RouteKind::PrefixAffinity,
+    ];
+    let catalogue = pd_serve::workload::standard_scenarios();
+    // Distinct scene bases, 1..=3 of them, in random order.
+    let mut idxs: Vec<usize> = (0..catalogue.len()).collect();
+    for i in (1..idxs.len()).rev() {
+        idxs.swap(i, r.below(i + 1));
+    }
+    idxs.truncate(1 + r.below(3));
+    let scenes = idxs
+        .into_iter()
+        .map(|base_idx| SceneSpec {
+            base: catalogue[base_idx].name.to_string(),
+            base_idx,
+            weight: (r.below(2) == 0).then(|| r.uniform(0.2, 3.0)),
+            prompt_mean: (r.below(2) == 0).then(|| r.uniform(50.0, 4000.0)),
+            prompt_cv: (r.below(2) == 0).then(|| r.uniform(0.05, 0.9)),
+            gen_mean: (r.below(2) == 0).then(|| r.uniform(8.0, 300.0)),
+            gen_cv: (r.below(2) == 0).then(|| r.uniform(0.05, 0.9)),
+            prefix_count: (r.below(2) == 0).then(|| 1 + r.below(32)),
+            prefix_frac: (r.below(2) == 0).then(|| r.uniform(0.0, 1.0)),
+        })
+        .collect();
+    let min_groups = 1 + r.below(2);
+    let n_p = 1 + r.below(3);
+    let n_d = 1 + r.below(3);
+    let mut asserts = vec![AssertSpec {
+        metric: ASSERT_METRICS[r.below(ASSERT_METRICS.len())].to_string(),
+        min: Some(r.uniform(0.0, 10.0)),
+        max: None,
+        eq: None,
+        eq_bool: None,
+    }];
+    if r.below(2) == 0 {
+        asserts.push(AssertSpec {
+            metric: "ledger.balanced".to_string(),
+            min: None,
+            max: None,
+            eq: None,
+            eq_bool: Some(r.below(2) == 0),
+        });
+    }
+    ScenarioPack {
+        name: ["alpha", "beta", "gamma", "delta"][r.below(4)].to_string(),
+        // Stay in i64 range: TOML integers are signed.
+        seed: r.next_u64() >> 1,
+        workers: 1 + r.below(4),
+        day: DaySpec {
+            hours: r.uniform(2.0, 24.0),
+            peak_rps: r.uniform(2.0, 40.0),
+            ms_per_hour: r.uniform(200.0, 2000.0),
+            start_hour: r.uniform(0.0, 23.0),
+            control_ms: r.uniform(200.0, 2000.0),
+            slice_ms: r.uniform(100.0, 500.0),
+        },
+        fleet: FleetSpec {
+            ratio: (n_p, n_d),
+            min_groups,
+            max_groups: min_groups + r.below(3),
+            spares: r.below(16),
+            route: routes[r.below(routes.len())],
+            transfer: if r.below(2) == 0 {
+                TransferDiscipline::Contiguous
+            } else {
+                TransferDiscipline::Blocked
+            },
+            adjust_ratio: r.below(2) == 0,
+            scale_groups: r.below(2) == 0,
+            headroom: r.uniform(1.0, 1.6),
+        },
+        scenes,
+        faults: FaultSpec {
+            per_week: if r.below(2) == 0 { 0.0 } else { r.uniform(1.0, 600.0) },
+            detect_ms: r.uniform(1000.0, 8000.0),
+        },
+        lend: r.below(2) == 0,
+        upgrade: (r.below(3) == 0).then(|| UpgradeSpec {
+            at_minutes: r.uniform(10.0, 600.0),
+            wave: 1 + r.below(2),
+        }),
+        asserts,
+    }
+}
+
+#[test]
+fn prop_descriptor_roundtrips_through_toml() {
+    // serialize → re-parse → equal struct, for every random in-range
+    // descriptor. This is what makes `to_toml` a faithful serializer and
+    // the pack schema total over its own value space.
+    let cfg = prop::Config::default();
+    prop::check("scenario-toml-roundtrip", &cfg, arb_pack, |pack| {
+        let text = pack.to_toml();
+        let back = ScenarioPack::parse(&text)
+            .map_err(|e| format!("re-parse failed: {e}\n--- toml ---\n{text}"))?;
+        if &back != pack {
+            return Err(format!(
+                "roundtrip changed the descriptor\n--- toml ---\n{text}\n--- back ---\n{back:#?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_pack_day_is_worker_invariant() {
+    // Byte-identical `--json` reports at workers 1 vs 4 for random tiny
+    // packs — the sharding oracle holds across the whole descriptor
+    // space, not just the committed library. Days are kept tiny (a few
+    // virtual seconds) so the case budget stays CI-sized.
+    let base = prop::Config::default();
+    let cfg = prop::Config { cases: base.cases.min(6), seed: base.seed };
+    let tiny = |r: &mut Rng| {
+        let mut pack = arb_pack(r);
+        pack.day.hours = r.uniform(2.0, 4.0);
+        pack.day.ms_per_hour = r.uniform(200.0, 350.0);
+        pack.day.control_ms = r.uniform(200.0, 350.0);
+        pack.day.slice_ms = 100.0;
+        pack.day.peak_rps = r.uniform(2.0, 8.0);
+        pack.faults.per_week = if r.below(2) == 0 { 0.0 } else { 400.0 };
+        pack
+    };
+    prop::check("scenario-worker-invariance", &cfg, tiny, |pack| {
+        let a = pack.run(1).to_json().to_string_pretty();
+        let b = pack.run(4).to_json().to_string_pretty();
+        if a == b {
+            Ok(())
+        } else {
+            Err("workers 1 vs 4 reports differ".to_string())
+        }
+    });
+}
