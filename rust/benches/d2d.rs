@@ -4,11 +4,16 @@
 //! Guards the tentpole's data plane: gather and per-block placement carry
 //! a per-block term (so halving the block size must not silently double
 //! the hot-path cost), the single pull behaves like one bulk copy
-//! regardless of how the sender's HBM was fragmented, and the timing
-//! model's blocked/single-pull split stays pure arithmetic.
+//! regardless of how the sender's HBM was fragmented, the layer-wise
+//! pipelined pull stays within a constant factor of the monolithic copy
+//! (its reads coalesce), and the timing model's blocked / single-pull /
+//! overlapped split stays pure arithmetic. Every run refreshes
+//! `BENCH_d2d.json` at the repo root for `pdserve bench-diff`.
 
 use pd_serve::bench::Bencher;
-use pd_serve::kvcache::d2d::{place_into_blocks, AssemblyModel, D2dRegion, LayerBlocks};
+use pd_serve::kvcache::d2d::{
+    place_into_blocks, AssemblyModel, D2dRegion, LayerBlocks, PipelinedPull,
+};
 use pd_serve::network::rdma::RdmaModel;
 use pd_serve::util::prng::Rng;
 
@@ -56,6 +61,32 @@ fn main() {
         });
     }
 
+    // Layer-wise pipelined pull over the same payload: the eager receiver
+    // reads each of the 8 layers as it is staged. Benched against the one
+    // contiguous pull above — the pipeline's reads coalesce, so the byte
+    // volume is identical and the delta is per-read bookkeeping only.
+    b.group("d2d pipelined pull (8 layers / 8 MiB)");
+    let layers = layers_at(256 << 10, layer_bytes, &mut rng);
+    let region = D2dRegion::gather(&layers).unwrap();
+    let src = region.as_bytes();
+    let dir: Vec<(usize, usize)> = region.dir().to_vec();
+    b.bench("eager layer-wise pull (8 reads)", Some((total, "B")), || {
+        let mut plan = PipelinedPull::new(dir.clone()).unwrap();
+        for l in 0..dir.len() {
+            plan.stage(l).unwrap();
+            plan.pull_ready(src).unwrap();
+        }
+        plan.finish().unwrap().bytes()
+    });
+    b.bench("lazy pipelined pull (1 coalesced read)", Some((total, "B")), || {
+        let mut plan = PipelinedPull::new(dir.clone()).unwrap();
+        for l in 0..dir.len() {
+            plan.stage(l).unwrap();
+        }
+        plan.pull_ready(src).unwrap();
+        plan.finish().unwrap().bytes()
+    });
+
     b.group("transfer-time model (420 MiB per device)");
     let m = RdmaModel::default();
     let bytes = 420 << 20;
@@ -68,6 +99,11 @@ fn main() {
     b.bench("single_pull_cost", Some((1.0, "op")), || {
         m.single_pull_cost(bytes, 3, 2).total_us()
     });
+    // 40 layers hidden behind 100 ms of prefill compute — the tentpole's
+    // closed form must stay as cheap as the single-pull arithmetic.
+    b.bench("overlapped_cost (40 layers)", Some((1.0, "op")), || {
+        m.overlapped_cost(bytes, 40, 100_000.0, 3, 2).exposed_us
+    });
 
     b.group("assembly cost model");
     let asm = AssemblyModel::default();
@@ -79,4 +115,8 @@ fn main() {
     }
 
     println!("\n{}", b.finish());
+    match b.write_json_report("d2d") {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("BENCH_d2d.json not written: {e}"),
+    }
 }

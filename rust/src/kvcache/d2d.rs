@@ -176,6 +176,121 @@ pub fn single_pull_handoff_us(
         + assembly.place_contiguous_us(per_dev_bytes)
 }
 
+/// The overlapped handoff charge for one per-device payload, split into
+/// `(occupancy_us, exposed_us)`: the wire is occupied for the full
+/// single-pull cost plus placement, but only the exposed tail (what
+/// remains after the last prefill layer finishes) plus placement lands on
+/// the request's critical path. At `compute_us = 0` both components equal
+/// [`single_pull_handoff_us`] exactly — the sim's parity test pins this.
+pub fn overlapped_handoff_us(
+    rdma: &crate::network::rdma::RdmaModel,
+    assembly: &AssemblyModel,
+    per_dev_bytes: usize,
+    layers: usize,
+    compute_us: f64,
+    hops: usize,
+    sharers: usize,
+) -> (f64, f64) {
+    let o = rdma.overlapped_cost(per_dev_bytes, layers, compute_us, hops, sharers);
+    let place = assembly.place_contiguous_us(per_dev_bytes);
+    (o.pull.total_us() + place, o.exposed_us + place)
+}
+
+/// Layer-wise pipelined pull plan (the server's overlapped transfer
+/// path): the P side stages layers in order into its reserved send
+/// buffer; whenever the D side polls, every staged-but-unpulled layer is
+/// read as **one coalesced contiguous range** — so a receiver that polls
+/// once at the end degenerates to the single pull (one op), and an eager
+/// receiver issues at most one read per layer. `finish` yields the same
+/// [`D2dRegion`] the monolithic path builds.
+#[derive(Debug)]
+pub struct PipelinedPull {
+    dir: Vec<(usize, usize)>,
+    staged: usize,
+    pulled: usize,
+    data: Vec<u8>,
+    ops: usize,
+}
+
+impl PipelinedPull {
+    /// Start a plan over a [`layout_dir`]-shaped directory (validated the
+    /// same way [`D2dRegion::from_contiguous`] validates: in-order,
+    /// gap-free, overlap-free).
+    pub fn new(dir: Vec<(usize, usize)>) -> Result<PipelinedPull> {
+        let mut cursor = 0usize;
+        for (l, &(off, len)) in dir.iter().enumerate() {
+            if off != cursor {
+                return Err(anyhow!(
+                    "layer {l} at offset {off}, expected {cursor} (gap or overlap)"
+                ));
+            }
+            cursor += len;
+        }
+        Ok(PipelinedPull { dir, staged: 0, pulled: 0, data: Vec::with_capacity(cursor), ops: 0 })
+    }
+
+    /// P side: layer `l` finished and its KV slice is staged. Layers land
+    /// in prefill order — staging out of order is a protocol error.
+    pub fn stage(&mut self, l: usize) -> Result<()> {
+        if l != self.staged {
+            return Err(anyhow!("staged layer {l}, expected {} (in-order)", self.staged));
+        }
+        if l >= self.dir.len() {
+            return Err(anyhow!("layer {l} beyond directory of {}", self.dir.len()));
+        }
+        self.staged += 1;
+        Ok(())
+    }
+
+    /// D side: pull every staged-but-unpulled layer as one coalesced
+    /// contiguous read from the staged buffer `src`. Returns the `(off,
+    /// len)` range read, or `None` when nothing new is staged.
+    pub fn pull_ready(&mut self, src: &[u8]) -> Result<Option<(usize, usize)>> {
+        if self.pulled == self.staged {
+            return Ok(None);
+        }
+        let off = self.dir[self.pulled].0;
+        let end_layer = self.staged - 1;
+        let end = self.dir[end_layer].0 + self.dir[end_layer].1;
+        if end > src.len() {
+            return Err(anyhow!(
+                "staged range ends at {end}, source buffer holds {}",
+                src.len()
+            ));
+        }
+        self.data.extend_from_slice(&src[off..end]);
+        self.pulled = self.staged;
+        self.ops += 1;
+        Ok(Some((off, end - off)))
+    }
+
+    /// Coalesced reads issued so far.
+    pub fn ops(&self) -> usize {
+        self.ops
+    }
+
+    /// Layers staged so far.
+    pub fn staged(&self) -> usize {
+        self.staged
+    }
+
+    /// All layers staged and pulled → the assembled region, identical to
+    /// what [`D2dRegion::from_contiguous`] builds over the full buffer.
+    pub fn finish(self) -> Result<D2dRegion> {
+        if self.staged != self.dir.len() {
+            return Err(anyhow!(
+                "only {} of {} layers staged",
+                self.staged,
+                self.dir.len()
+            ));
+        }
+        if self.pulled != self.staged {
+            return Err(anyhow!("{} staged layers never pulled", self.staged - self.pulled));
+        }
+        D2dRegion::from_contiguous(self.data, self.dir)
+    }
+}
+
 /// Scatter-free placement into fixed-size token blocks (the simulated
 /// PageAttention receiver): each layer's range streams straight from the
 /// pulled region into that layer's block list in one pass — offset math,
@@ -398,6 +513,75 @@ mod tests {
         );
         // Copy time is bandwidth-bound and linear.
         assert!((m.copy_us(2 * bytes) - 2.0 * m.copy_us(bytes)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapped_handoff_degenerates_to_single_pull_at_zero_compute() {
+        let rdma = crate::network::rdma::RdmaModel::default();
+        let assembly = AssemblyModel::default();
+        let bytes = 420 << 20;
+        let full = single_pull_handoff_us(&rdma, &assembly, bytes, 3, 2);
+        let (occ, exp) = overlapped_handoff_us(&rdma, &assembly, bytes, 40, 0.0, 3, 2);
+        assert!((occ - full).abs() < 1e-9, "occupancy {occ} != single pull {full}");
+        assert!((exp - full).abs() < 1e-9, "exposed {exp} != single pull {full}");
+        // With compute to hide behind, occupancy holds and exposure drops.
+        let (occ2, exp2) = overlapped_handoff_us(&rdma, &assembly, bytes, 40, 1e5, 3, 2);
+        assert!((occ2 - full).abs() < 1e-9);
+        assert!(exp2 < full);
+        assert!(exp2 > 0.0);
+    }
+
+    #[test]
+    fn pipelined_pull_coalesces_and_matches_the_monolithic_region() {
+        let mut rng = Rng::new(7);
+        let payloads = payloads(&mut rng, 5, 400);
+        let mut buf = Vec::new();
+        let mut dir = Vec::new();
+        for p in &payloads {
+            dir.push((buf.len(), p.len()));
+            buf.extend_from_slice(p);
+        }
+        let mono = D2dRegion::from_contiguous(buf.clone(), dir.clone()).unwrap();
+        // Lazy receiver: stage all five layers, poll once → one coalesced op.
+        let mut lazy = PipelinedPull::new(dir.clone()).unwrap();
+        for l in 0..5 {
+            lazy.stage(l).unwrap();
+        }
+        assert_eq!(lazy.pull_ready(&buf).unwrap(), Some((0, buf.len())));
+        assert_eq!(lazy.ops(), 1);
+        assert_eq!(lazy.finish().unwrap(), mono);
+        // Eager receiver: poll after every stage → 5 ops, same region.
+        let mut eager = PipelinedPull::new(dir.clone()).unwrap();
+        for l in 0..5 {
+            eager.stage(l).unwrap();
+            assert!(eager.pull_ready(&buf).unwrap().is_some());
+            assert!(eager.pull_ready(&buf).unwrap().is_none(), "double pull");
+        }
+        assert_eq!(eager.ops(), 5);
+        assert_eq!(eager.finish().unwrap(), mono);
+    }
+
+    #[test]
+    fn pipelined_pull_rejects_protocol_violations() {
+        let dir = vec![(0usize, 4usize), (4, 4)];
+        // Gapped directory.
+        assert!(PipelinedPull::new(vec![(0, 2), (6, 2)]).is_err());
+        // Out-of-order staging.
+        let mut p = PipelinedPull::new(dir.clone()).unwrap();
+        assert!(p.stage(1).is_err());
+        p.stage(0).unwrap();
+        assert!(p.stage(0).is_err());
+        // Finish before all layers staged / pulled.
+        assert!(PipelinedPull::new(dir.clone()).unwrap().finish().is_err());
+        let mut q = PipelinedPull::new(dir.clone()).unwrap();
+        q.stage(0).unwrap();
+        q.stage(1).unwrap();
+        assert!(q.finish().is_err(), "unpulled staged layers accepted");
+        // Source buffer shorter than the staged range.
+        let mut r = PipelinedPull::new(dir).unwrap();
+        r.stage(0).unwrap();
+        r.stage(1).unwrap();
+        assert!(r.pull_ready(&[0u8; 4]).is_err());
     }
 
     #[test]

@@ -67,6 +67,7 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     };
     cfg.transfer = match args.get_or("transfer", "contiguous") {
         "blocked" => TransferDiscipline::Blocked,
+        "overlapped" => TransferDiscipline::Overlapped,
         _ => TransferDiscipline::Contiguous,
     };
     cfg.route = match pd_serve::serving::router::RouteKind::parse(
@@ -116,7 +117,12 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// Flags: `--peak-rps R --hours H --ms-per-hour MS --group-size N`
 /// `--ratio P:D --scenes 0,2,5 --control-ms MS --seed S`
 /// `--route random|round-robin|least-loaded|prefix-affinity`
-/// `--transfer contiguous|blocked` (D2D discipline on every handoff)
+/// `--transfer contiguous|blocked|overlapped` (D2D discipline on every
+/// handoff; `overlapped` streams per-layer KV slices behind prefill
+/// compute and charges only the exposed tail into TTFT)
+/// `--ecmp` (plain ECMP instead of path spraying for D2D sub-transfers)
+/// `--d2d-response` (close the congestion loop: sustained low d2d_util
+/// widens spray fan-out and defers D2P ratio flips)
 /// `--upgrade-at MIN` (rolling upgrade, minutes into the simulated day)
 /// `--upgrade-wave N` (groups per wave, default 1)
 /// `--faults-per-week R` (fault injection, per 400 devices — paper: 1.5)
@@ -251,11 +257,18 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     cfg.transfer = match args.get_or("transfer", "contiguous") {
         "contiguous" => pd_serve::serving::sim::TransferDiscipline::Contiguous,
         "blocked" => pd_serve::serving::sim::TransferDiscipline::Blocked,
+        "overlapped" => pd_serve::serving::sim::TransferDiscipline::Overlapped,
         other => {
-            eprintln!("--transfer must be contiguous|blocked, got '{other}'");
+            eprintln!("--transfer must be contiguous|blocked|overlapped, got '{other}'");
             return 2;
         }
     };
+    if args.has("ecmp") {
+        cfg.spray = false;
+    }
+    if args.has("d2d-response") {
+        cfg.d2d_response = true;
+    }
     if let Some(m) = args.get("upgrade-at") {
         let Ok(minutes) = m.parse::<f64>() else {
             eprintln!("--upgrade-at must be minutes into the simulated day, got '{m}'");

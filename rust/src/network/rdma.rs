@@ -81,6 +81,31 @@ impl TransferCost {
     }
 }
 
+/// A layer-wise pipelined pull, split into what the wire carries and
+/// what TTFT actually sees. The pull occupies the wire for the full
+/// single-pull cost (`pull`), but layers ready before prefill finishes
+/// stream *under* the remaining compute, so only `exposed_us` lands on
+/// the request's critical path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverlappedCost {
+    /// The underlying contiguous pull — total wire occupancy.
+    pub pull: TransferCost,
+    /// Critical-path time after the last prefill layer finishes (µs).
+    pub exposed_us: f64,
+}
+
+impl OverlappedCost {
+    /// Transfer time hidden behind prefill compute (µs).
+    pub fn hidden_us(&self) -> f64 {
+        (self.pull.total_us() - self.exposed_us).max(0.0)
+    }
+
+    /// Exposed tail in ms — what the simulator charges into TTFT.
+    pub fn exposed_ms(&self) -> f64 {
+        self.exposed_us / 1e3
+    }
+}
+
 impl RdmaModel {
     /// Pure wire time for `bytes` at full link rate (µs).
     pub fn wire_us(&self, bytes: usize) -> f64 {
@@ -147,6 +172,41 @@ impl RdmaModel {
         let path = hops as f64 * self.hop_latency_us;
         let wire = self.wire_us(bytes) * sharers.max(1) as f64;
         path + layers as f64 * (self.meta_exchange_us + self.per_msg_sw_us) + wire
+    }
+
+    /// Layer-wise pipelined pull overlapped with prefill compute
+    /// (paper §3.6 "flexibility" path, DistServe-style overlap): layer
+    /// *k*'s KV slice becomes pull-eligible when layer *k* finishes, so
+    /// the first `L−1` slices stream while layers `k+1..L` compute and
+    /// only the tail past the last layer is exposed. Consecutive ready
+    /// slices coalesce into one contiguous range, so the degenerate case
+    /// (no compute to hide behind, `compute_us = 0`) is *exactly* the
+    /// single pull — no per-layer setup multiplier.
+    ///
+    /// `compute_us` is the prefill compute time during which the first
+    /// `L−1` layers may stream; the last layer's slice can never start
+    /// before compute ends, which bounds the exposed tail from below.
+    pub fn overlapped_cost(
+        &self,
+        bytes: usize,
+        layers: usize,
+        compute_us: f64,
+        hops: usize,
+        sharers: usize,
+    ) -> OverlappedCost {
+        let layers = layers.max(1);
+        let pull = self.single_pull_cost(bytes, hops, sharers);
+        let full = pull.total_us();
+        // Irreducible tail: the last layer's slice still pays the
+        // meta/doorbell/path latency plus its own wire slot.
+        let tail = self.meta_exchange_us
+            + self.per_msg_sw_us
+            + hops as f64 * self.hop_latency_us
+            + pull.wire_us / layers as f64;
+        // At most (L−1)/L of the compute window hides bytes: layer k's
+        // slice is eligible only after k/L of the compute has run.
+        let hide = compute_us.max(0.0) * (layers - 1) as f64 / layers as f64;
+        OverlappedCost { pull, exposed_us: (full - hide).max(tail).min(full) }
     }
 
     /// Achieved D2D bandwidth utilization in [0, 1]: wire time over total.
@@ -284,6 +344,58 @@ mod tests {
         assert_eq!(RdmaModel::qp_sharers(1, 4), 1);
         assert_eq!(RdmaModel::qp_sharers(0, 4), 1);
         assert_eq!(RdmaModel::qp_sharers(5, 0), 5);
+    }
+
+    #[test]
+    fn overlapped_with_zero_compute_is_exactly_the_single_pull() {
+        // Coalescing: all layers ready at once merge into one contiguous
+        // op, so there is no per-layer setup penalty to pay.
+        let m = m();
+        let bytes = 64 << 20;
+        let o = m.overlapped_cost(bytes, 40, 0.0, 3, 2);
+        let p = m.single_pull_cost(bytes, 3, 2);
+        assert!((o.exposed_us - p.total_us()).abs() < 1e-9);
+        assert!(o.hidden_us().abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapped_exposed_shrinks_monotonically_with_compute() {
+        let m = m();
+        let bytes = 64 << 20;
+        let mut prev = f64::INFINITY;
+        for compute_us in [0.0, 500.0, 2_000.0, 10_000.0, 1e9] {
+            let e = m.overlapped_cost(bytes, 40, compute_us, 3, 1).exposed_us;
+            assert!(e <= prev + 1e-9, "exposed grew: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn overlapped_exposed_bounded_by_tail_and_full() {
+        let m = m();
+        let bytes = 64 << 20;
+        let full = m.single_pull_cost(bytes, 3, 1).total_us();
+        // Even infinite compute cannot hide the last layer's slice.
+        let o = m.overlapped_cost(bytes, 40, 1e12, 3, 1);
+        let last_slice = m.wire_us(bytes) / 40.0;
+        assert!(o.exposed_us >= last_slice);
+        assert!(o.exposed_us < full);
+        assert!(o.exposed_us > 0.0);
+        assert!((o.pull.total_us() - full).abs() < 1e-9);
+        assert!((o.exposed_ms() * 1e3 - o.exposed_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlapped_single_layer_cannot_overlap() {
+        // With one layer nothing is ready before compute ends: exposed
+        // equals the full pull no matter how long compute runs.
+        let m = m();
+        let bytes = 8 << 20;
+        let o = m.overlapped_cost(bytes, 1, 1e9, 3, 1);
+        assert!((o.exposed_us - o.pull.total_us()).abs() < 1e-9);
+        // layers = 0 degrades to 1, never panics.
+        let z = m.overlapped_cost(bytes, 0, 1e9, 3, 1);
+        assert!((z.exposed_us - z.pull.total_us()).abs() < 1e-9);
     }
 
     #[test]

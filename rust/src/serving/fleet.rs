@@ -122,6 +122,15 @@ const LEASE_MARGIN_H: f64 = 0.25;
 /// its instances and the borrower is deferred instead.
 const MIN_LEASE_H: f64 = 0.5;
 
+/// D2D-congestion floor: a window whose achieved transfer utilization
+/// (ideal wire time / occupancy) sits below this is congested — QP
+/// sharing and path collisions, not payload, dominate the handoff.
+const D2D_UTIL_CONGESTED: f64 = 0.55;
+
+/// Consecutive congested control windows before the fleet responds
+/// (one-window blips — a single batched arrival wave — don't trip it).
+const D2D_CONGESTION_STREAK: u32 = 2;
+
 /// Configuration of one simulated fleet day.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
@@ -170,6 +179,13 @@ pub struct FleetConfig {
     /// D2D transfer discipline every group's simulator charges on the
     /// prefill→decode handoff (`repro --fig d2d` pairs the two).
     pub transfer: TransferDiscipline,
+    /// Path-diversity spraying for D2D sub-transfers in every group's
+    /// simulator (off = plain ECMP, which concentrates spine load).
+    pub spray: bool,
+    /// Close the congestion loop: consume the live `d2d_util` signal —
+    /// sustained transfer congestion widens spray fan-out and defers
+    /// D2P ratio flips before timeouts appear (DynaServe direction).
+    pub d2d_response: bool,
     /// Start a rolling upgrade at this virtual time (`pdserve fleet
     /// --upgrade-at <min>`). One wave is cordoned per control tick,
     /// drained via the group cordon path, then restarted cold.
@@ -224,6 +240,8 @@ impl Default for FleetConfig {
             min_window_total: 5,
             route: RouteKind::LeastLoaded,
             transfer: TransferDiscipline::Contiguous,
+            spray: true,
+            d2d_response: false,
             upgrade_at_ms: None,
             upgrade_wave: 1,
             faults_per_week: 0.0,
@@ -266,6 +284,10 @@ pub struct FleetWindow {
     pub xfers: usize,
     /// Mean modeled D2D transfer time this window (ms; 0 when idle).
     pub mean_xfer_ms: f64,
+    /// Mean *exposed* D2D transfer time this window (ms) — what TTFT was
+    /// actually charged; equals `mean_xfer_ms` except under `Overlapped`,
+    /// where prefill compute hides all but the exposed tail.
+    pub mean_xfer_exposed_ms: f64,
     /// Achieved D2D bandwidth utilization this window (0 when idle).
     pub d2d_util: f64,
 }
@@ -291,6 +313,10 @@ pub struct FleetOutput {
     pub xfers: usize,
     /// Mean modeled D2D transfer time over the day (ms).
     pub mean_xfer_ms: f64,
+    /// Mean exposed D2D transfer time over the day (ms) — the TTFT
+    /// charge; under `Overlapped` this is the tail left after prefill
+    /// compute hid the rest.
+    pub mean_xfer_exposed_ms: f64,
     /// Achieved D2D bandwidth utilization over the day (wire/total).
     pub d2d_utilization: f64,
     /// Mid-run P/D ratio migrations.
@@ -314,6 +340,9 @@ pub struct FleetOutput {
     /// Scale-outs deferred because the instance budget could not fund
     /// them (lending on).
     pub scale_deferred: usize,
+    /// D2P ratio flips deferred by the d2d_util congestion response
+    /// (a flip mid-congestion would add QP sharers to a saturated mesh).
+    pub d2d_deferrals: usize,
     /// Leases called in by draining a borrower group.
     pub lease_calls: usize,
     /// Every recovery's (hour, report) — timelines for `repro --fig fault`.
@@ -399,6 +428,7 @@ impl FleetOutput {
                     "protected" => w.protected,
                     "xfers" => w.xfers,
                     "mean_xfer_ms" => w.mean_xfer_ms,
+                    "mean_xfer_exposed_ms" => w.mean_xfer_exposed_ms,
                     "d2d_util" => w.d2d_util,
                 }
             })
@@ -429,6 +459,7 @@ impl FleetOutput {
             "mean_e2e_ms" => self.mean_e2e_ms,
             "xfers" => self.xfers,
             "mean_xfer_ms" => self.mean_xfer_ms,
+            "mean_xfer_exposed_ms" => self.mean_xfer_exposed_ms,
             "d2d_utilization" => self.d2d_utilization,
             "adjustments" => self.adjustments,
             "scale_outs" => self.scale_outs,
@@ -441,6 +472,7 @@ impl FleetOutput {
             "recovery_reports" => recoveries,
             "protected" => self.protected,
             "scale_deferred" => self.scale_deferred,
+            "d2d_deferrals" => self.d2d_deferrals,
             "lease_calls" => self.lease_calls,
             "end_hour" => self.end_hour,
             "peak_instances" => self.peak_instances,
@@ -476,11 +508,18 @@ impl FleetOutput {
         );
         if self.xfers > 0 {
             println!(
-                "D2D: {} transfers | mean {:.2} ms | utilization {:.0}%",
+                "D2D: {} transfers | mean {:.2} ms ({:.2} ms exposed) | utilization {:.0}%",
                 self.xfers,
                 self.mean_xfer_ms,
+                self.mean_xfer_exposed_ms,
                 self.d2d_utilization * 100.0
             );
+            if self.d2d_deferrals > 0 {
+                println!(
+                    "D2D congestion response: {} D2P flips deferred",
+                    self.d2d_deferrals
+                );
+            }
         }
         println!(
             "control actions: {} ratio adjustments, {} scale-outs, {} scale-ins, {} training switches, {} group upgrades",
@@ -672,6 +711,13 @@ pub struct FleetSim {
     protected: usize,
     scale_deferred: usize,
     lease_calls: usize,
+    /// Consecutive control windows with transfers below the congestion
+    /// floor (d2d_response). Resets on any healthy or idle window.
+    congestion_streak: u32,
+    /// Congestion latch: set once the streak trips, cleared when a
+    /// healthy window breaks it. Gates D2P flips one window later.
+    congested: bool,
+    d2d_deferrals: usize,
     recovery_reports: Vec<(f64, RecoveryReport)>,
     peak_instances: usize,
     served_curve: Vec<FleetWindow>,
@@ -804,6 +850,9 @@ impl FleetSim {
             protected: 0,
             scale_deferred: 0,
             lease_calls: 0,
+            congestion_streak: 0,
+            congested: false,
+            d2d_deferrals: 0,
             recovery_reports: Vec::new(),
             peak_instances: 0,
             served_curve: Vec::new(),
@@ -919,6 +968,9 @@ impl FleetSim {
             workload: WorkloadKind::External,
             route: self.cfg.route,
             transfer: self.cfg.transfer,
+            // A group spawned mid-congestion joins with the widened
+            // fan-out already on (the response is fleet-wide).
+            spray: self.cfg.spray || (self.cfg.d2d_response && self.congested),
             seed: self.rng.next_u64(),
             n_gateways: 2,
             ..Default::default()
@@ -1221,7 +1273,15 @@ impl FleetSim {
                 continue;
             }
             let adj = self.classify(&self.groups[gi], &w, period);
-            if adj != Adjustment::Balanced {
+            if adj == Adjustment::MorePrefill && self.cfg.d2d_response && self.congested {
+                // A D2P flip mid-congestion adds prefill entrances — more
+                // concurrent pulls onto a mesh already losing to QP
+                // sharing. Hold the ratio until transfers are healthy.
+                self.d2d_deferrals += 1;
+                let scene = self.groups[gi].scene;
+                let id = self.groups[gi].id();
+                self.log(t_ms, scene, id, "D2P flip deferred (D2D congested)".into());
+            } else if adj != Adjustment::Balanced {
                 self.migrate(gi, adj, t_ms);
             }
         }
@@ -1234,9 +1294,47 @@ impl FleetSim {
             protected: tick.protected,
             xfers: tick.xfers,
             mean_xfer_ms: tick.mean_xfer_ms(),
+            mean_xfer_exposed_ms: tick.mean_xfer_exposed_ms(),
             d2d_util: tick.d2d_utilization(),
         });
         self.win_injected = 0;
+
+        // 1a) Congestion loop (d2d_response): the live d2d_util signal —
+        // ideal wire time over charged occupancy, so QP sharing and path
+        // collisions (not payload size) drag it down — trips after
+        // `D2D_CONGESTION_STREAK` consecutive bad windows. Response:
+        // widen sub-transfer fan-out to path spraying on every serving
+        // group (never narrowed back — ECMP was the mistake) and defer
+        // D2P flips (above, next tick; that gate clears on a healthy
+        // window). This acts *before* timeouts reach the Fig. 12c
+        // detector — the DynaServe-style early signal.
+        if self.cfg.d2d_response {
+            if tick.xfers > 0 && tick.d2d_utilization() < D2D_UTIL_CONGESTED {
+                self.congestion_streak += 1;
+            } else {
+                self.congestion_streak = 0;
+                self.congested = false;
+            }
+            if !self.congested && self.congestion_streak >= D2D_CONGESTION_STREAK {
+                self.congested = true;
+                let any_scene = self.cfg.scenes[0];
+                self.log(
+                    t_ms,
+                    any_scene,
+                    u32::MAX,
+                    format!(
+                        "D2D congested (util {:.0}% for {} windows): spray fan-out widened",
+                        tick.d2d_utilization() * 100.0,
+                        self.congestion_streak
+                    ),
+                );
+            }
+            if self.congested {
+                for g in &mut self.groups {
+                    g.sim.set_spray(true);
+                }
+            }
+        }
 
         // 1b) Rolling upgrade: finalize the draining wave, cordon the next.
         self.step_upgrade(t_ms);
@@ -1737,6 +1835,7 @@ impl FleetSim {
             workload: WorkloadKind::External,
             route: self.cfg.route,
             transfer: self.cfg.transfer,
+            spray: self.cfg.spray || (self.cfg.d2d_response && self.congested),
             seed,
             n_gateways: 2,
             ..Default::default()
@@ -1986,6 +2085,7 @@ impl FleetSim {
             mean_e2e_ms: totals.mean_e2e_ms(),
             xfers: totals.xfers,
             mean_xfer_ms: totals.mean_xfer_ms(),
+            mean_xfer_exposed_ms: totals.mean_xfer_exposed_ms(),
             d2d_utilization: totals.d2d_utilization(),
             adjustments: self.adjustments,
             scale_outs: self.scale_outs,
@@ -1997,6 +2097,7 @@ impl FleetSim {
             recoveries: self.recoveries,
             protected: self.protected,
             scale_deferred: self.scale_deferred,
+            d2d_deferrals: self.d2d_deferrals,
             lease_calls: self.lease_calls,
             recovery_reports: self.recovery_reports,
             ledger,
@@ -2133,6 +2234,78 @@ mod tests {
         assert!(blocked.mean_xfer_ms > out.mean_xfer_ms);
         assert!(blocked.mean_ttft_ms > out.mean_ttft_ms);
         assert!(blocked.d2d_utilization < out.d2d_utilization);
+    }
+
+    #[test]
+    fn overlapped_fleet_day_hides_transfer_behind_prefill() {
+        // Tentpole at fleet level: the paired overlapped day charges only
+        // the exposed tail into TTFT; occupancy (the utilization
+        // denominator) still carries the full pull.
+        let mut cfg = small_cfg();
+        cfg.scale_groups = false;
+        cfg.adjust_ratio = false;
+        let contig = FleetSim::new(cfg.clone()).run();
+        let mut over_cfg = cfg;
+        over_cfg.transfer = TransferDiscipline::Overlapped;
+        let over = FleetSim::new(over_cfg).run();
+        assert_eq!(over.injected, contig.injected, "paired arrivals diverged");
+        assert!(over.xfers > 0);
+        assert!(over.mean_xfer_exposed_ms > 0.0);
+        assert!(
+            over.mean_xfer_exposed_ms < over.mean_xfer_ms,
+            "overlap hid nothing: exposed {} vs occupancy {}",
+            over.mean_xfer_exposed_ms,
+            over.mean_xfer_ms
+        );
+        assert!(over.mean_xfer_exposed_ms < contig.mean_xfer_exposed_ms);
+        assert!(
+            over.mean_ttft_ms < contig.mean_ttft_ms,
+            "hiding the transfer did not improve TTFT: {} vs {}",
+            over.mean_ttft_ms,
+            contig.mean_ttft_ms
+        );
+        // Contiguous charges the full pull into TTFT: the split collapses.
+        assert!((contig.mean_xfer_exposed_ms - contig.mean_xfer_ms).abs() < 1e-12);
+        // The served curve carries the split per window.
+        assert!(over
+            .served_curve
+            .iter()
+            .filter(|c| c.xfers > 0)
+            .all(|c| c.mean_xfer_exposed_ms <= c.mean_xfer_ms + 1e-9));
+    }
+
+    #[test]
+    fn d2d_congestion_response_sprays_and_recovers_transfer_health() {
+        // ECMP (spray off) collides sub-transfers on the spines, so
+        // utilization sits under `D2D_UTIL_CONGESTED` and the responsive
+        // day widens every group to path spraying after the streak.
+        // Frozen control (no ratio/capacity moves) keeps arrivals
+        // identical, so the congestion response is the only difference
+        // from the signal-blind day.
+        let mut blind = small_cfg();
+        blind.scenes = vec![0, 2]; // prompt-heavy: the handoff matters
+        blind.spray = false;
+        blind.scale_groups = false;
+        blind.adjust_ratio = false;
+        let mut responsive = blind.clone();
+        responsive.d2d_response = true;
+        let a = FleetSim::new(blind).run();
+        let b = FleetSim::new(responsive).run();
+        assert_eq!(a.injected, b.injected, "paired arrivals diverged");
+        assert!(
+            b.timeline.iter().any(|e| e.what.contains("D2D congested")),
+            "congestion never tripped under ECMP: {:#?}",
+            b.timeline
+        );
+        assert!(
+            b.d2d_utilization > a.d2d_utilization,
+            "spraying did not recover utilization: {} vs {}",
+            b.d2d_utilization,
+            a.d2d_utilization
+        );
+        assert!(b.mean_xfer_ms < a.mean_xfer_ms);
+        assert!(b.mean_ttft_ms < a.mean_ttft_ms);
+        assert_eq!(b.total(), b.injected);
     }
 
     #[test]

@@ -50,9 +50,37 @@ const SCHEMA: Schema<'static> = Schema {
                 "spares",
                 "route",
                 "transfer",
+                "spray",
+                "d2d_response",
                 "adjust_ratio",
                 "scale_groups",
                 "headroom",
+            ],
+        ),
+        (
+            "engine",
+            &[
+                "prefill_base_ms",
+                "prefill_per_token_ms",
+                "prefill_quad_ms",
+                "decode_base_ms",
+                "decode_per_row_ms",
+                "decode_per_ctx_token_us",
+                "batch_efficiency",
+            ],
+        ),
+        (
+            "serving",
+            &[
+                "ttft_slo_ms_per_1k",
+                "ttft_slo_floor_ms",
+                "retry_candidates",
+                "retry_interval_ms",
+                "prefill_batch",
+                "decode_batch",
+                "retrieval_queue",
+                "local_queue_cap",
+                "report_period_ms",
             ],
         ),
         ("faults", &["per_week", "detect_ms"]),
@@ -91,6 +119,7 @@ pub const ASSERT_METRICS: &[&str] = &[
     "mean_e2e_ms",
     "xfers",
     "mean_xfer_ms",
+    "mean_xfer_exposed_ms",
     "d2d_utilization",
     "adjustments",
     "scale_outs",
@@ -102,6 +131,7 @@ pub const ASSERT_METRICS: &[&str] = &[
     "recoveries",
     "protected",
     "scale_deferred",
+    "d2d_deferrals",
     "lease_calls",
     "end_hour",
     "peak_instances",
@@ -139,6 +169,8 @@ pub const ADHOC_FLEET_FLAGS: &[&str] = &[
     "spares",
     "detect-ms",
     "config",
+    "ecmp",
+    "d2d-response",
 ];
 
 /// The `[day]` table: clock, load and control cadence of the day.
@@ -173,12 +205,132 @@ pub struct FleetSpec {
     pub route: RouteKind,
     /// D2D transfer discipline on every prefill→decode handoff.
     pub transfer: TransferDiscipline,
+    /// Path-diversity spraying for D2D sub-transfers (false = ECMP).
+    pub spray: bool,
+    /// Close the congestion loop on the live `d2d_util` signal.
+    pub d2d_response: bool,
     /// Close the ratio loop (false = static ratios).
     pub adjust_ratio: bool,
     /// Close the capacity loop (false = frozen group counts).
     pub scale_groups: bool,
     /// Scale-out headroom (hysteresis against scale-in).
     pub headroom: f64,
+}
+
+/// The optional `[engine]` table: perf-model constant overrides for
+/// hardware-class what-ifs (ROADMAP carried item). Omitted keys keep
+/// their calibrated defaults, so a pack without the table still
+/// describes a pure workload day.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineOverride {
+    /// Fixed per-batch prefill launch overhead (ms).
+    pub prefill_base_ms: Option<f64>,
+    /// Per-token per-batch-row prefill compute cost (ms).
+    pub prefill_per_token_ms: Option<f64>,
+    /// Superlinear attention term (quadratic in non-cached length).
+    pub prefill_quad_ms: Option<f64>,
+    /// Fixed per-iteration decode overhead (ms).
+    pub decode_base_ms: Option<f64>,
+    /// Per-row decode cost within an iteration (ms).
+    pub decode_per_row_ms: Option<f64>,
+    /// Per cached-token attention read cost per row, decode (µs).
+    pub decode_per_ctx_token_us: Option<f64>,
+    /// Batch efficiency exponent (0 < e <= 1).
+    pub batch_efficiency: Option<f64>,
+}
+
+impl EngineOverride {
+    /// Whether any key was set (controls `to_toml` emission).
+    pub fn is_empty(&self) -> bool {
+        *self == EngineOverride::default()
+    }
+
+    /// Apply the set keys onto a base config.
+    pub fn apply(&self, cfg: &mut crate::util::config::EngineConfig) {
+        if let Some(v) = self.prefill_base_ms {
+            cfg.prefill_base_ms = v;
+        }
+        if let Some(v) = self.prefill_per_token_ms {
+            cfg.prefill_per_token_ms = v;
+        }
+        if let Some(v) = self.prefill_quad_ms {
+            cfg.prefill_quad_ms = v;
+        }
+        if let Some(v) = self.decode_base_ms {
+            cfg.decode_base_ms = v;
+        }
+        if let Some(v) = self.decode_per_row_ms {
+            cfg.decode_per_row_ms = v;
+        }
+        if let Some(v) = self.decode_per_ctx_token_us {
+            cfg.decode_per_ctx_token_us = v;
+        }
+        if let Some(v) = self.batch_efficiency {
+            cfg.batch_efficiency = v;
+        }
+    }
+}
+
+/// The optional `[serving]` table: serving-policy overrides (batch
+/// sizes, SLO scaling, retry pacing). Omitted keys keep their defaults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServingOverride {
+    /// TTFT SLO per 1k prompt tokens (ms).
+    pub ttft_slo_ms_per_1k: Option<f64>,
+    /// Absolute floor for the TTFT timeout threshold (ms).
+    pub ttft_slo_floor_ms: Option<f64>,
+    /// Max prefill candidates the gateway retries.
+    pub retry_candidates: Option<usize>,
+    /// Gateway re-poll interval while all prefills reject (ms).
+    pub retry_interval_ms: Option<f64>,
+    /// Prefill batch size.
+    pub prefill_batch: Option<usize>,
+    /// Decode batch size (slots per decode instance).
+    pub decode_batch: Option<usize>,
+    /// Bounded async-retrieval queue depth at decode.
+    pub retrieval_queue: Option<usize>,
+    /// Baseline-only: per-prefill local queue capacity.
+    pub local_queue_cap: Option<usize>,
+    /// Scheduler report period for the baseline global scheduler (ms).
+    pub report_period_ms: Option<f64>,
+}
+
+impl ServingOverride {
+    /// Whether any key was set (controls `to_toml` emission).
+    pub fn is_empty(&self) -> bool {
+        *self == ServingOverride::default()
+    }
+
+    /// Apply the set keys onto a base config.
+    pub fn apply(&self, cfg: &mut crate::util::config::ServingConfig) {
+        if let Some(v) = self.ttft_slo_ms_per_1k {
+            cfg.ttft_slo_ms_per_1k = v;
+        }
+        if let Some(v) = self.ttft_slo_floor_ms {
+            cfg.ttft_slo_floor_ms = v;
+        }
+        if let Some(v) = self.retry_candidates {
+            cfg.retry_candidates = v;
+        }
+        if let Some(v) = self.retry_interval_ms {
+            cfg.retry_interval_ms = v;
+        }
+        if let Some(v) = self.prefill_batch {
+            cfg.prefill_batch = v;
+        }
+        if let Some(v) = self.decode_batch {
+            cfg.decode_batch = v;
+        }
+        if let Some(v) = self.retrieval_queue {
+            cfg.retrieval_queue = v;
+        }
+        if let Some(v) = self.local_queue_cap {
+            cfg.local_queue_cap = v;
+        }
+        if let Some(v) = self.report_period_ms {
+            cfg.report_period_ms = v;
+        }
+    }
 }
 
 /// One `[[scene]]` entry: a standard scenario by name plus overrides for
@@ -253,6 +405,10 @@ pub struct ScenarioPack {
     pub day: DaySpec,
     /// Group shape and policies.
     pub fleet: FleetSpec,
+    /// Engine perf-model overrides (hardware-class what-ifs).
+    pub engine: EngineOverride,
+    /// Serving-policy overrides.
+    pub serving: ServingOverride,
     /// The day's scenes, in pack order.
     pub scenes: Vec<SceneSpec>,
     /// Fault injection.
@@ -368,12 +524,13 @@ impl ScenarioPack {
         let transfer = match doc.try_str("fleet", "transfer")?.unwrap_or("contiguous") {
             "contiguous" => TransferDiscipline::Contiguous,
             "blocked" => TransferDiscipline::Blocked,
+            "overlapped" => TransferDiscipline::Overlapped,
             other => {
                 return Err(at_key(
                     &doc,
                     "fleet",
                     "transfer",
-                    format!("'transfer' must be contiguous|blocked (got '{other}')"),
+                    format!("'transfer' must be contiguous|blocked|overlapped (got '{other}')"),
                 ));
             }
         };
@@ -384,6 +541,8 @@ impl ScenarioPack {
             spares: doc.try_usize("fleet", "spares")?.unwrap_or(6),
             route,
             transfer,
+            spray: doc.try_bool("fleet", "spray")?.unwrap_or(true),
+            d2d_response: doc.try_bool("fleet", "d2d_response")?.unwrap_or(false),
             adjust_ratio: doc.try_bool("fleet", "adjust_ratio")?.unwrap_or(true),
             scale_groups: doc.try_bool("fleet", "scale_groups")?.unwrap_or(true),
             headroom: pos_finite(
@@ -392,6 +551,65 @@ impl ScenarioPack {
                 "headroom",
                 doc.try_f64("fleet", "headroom")?.unwrap_or(1.2),
             )?,
+        };
+
+        // Optional perf-model overrides. Every set key must be positive
+        // and finite (a zero or negative cost term degenerates the
+        // model); `batch_efficiency` additionally must not exceed 1.
+        let opt_pos = |section: &str, key: &str| -> Result<Option<f64>, String> {
+            match doc.try_f64(section, key)? {
+                Some(v) => pos_finite(&doc, section, key, v).map(Some),
+                None => Ok(None),
+            }
+        };
+        let opt_nonneg = |section: &str, key: &str| -> Result<Option<f64>, String> {
+            match doc.try_f64(section, key)? {
+                Some(v) if v.is_finite() && v >= 0.0 => Ok(Some(v)),
+                Some(_) => Err(at_key(
+                    &doc,
+                    section,
+                    key,
+                    format!("'{key}' must be a finite number >= 0"),
+                )),
+                None => Ok(None),
+            }
+        };
+        let opt_count = |section: &str, key: &str| -> Result<Option<usize>, String> {
+            match doc.try_usize(section, key)? {
+                Some(0) => Err(at_key(&doc, section, key, format!("'{key}' must be >= 1"))),
+                v => Ok(v),
+            }
+        };
+        let engine = EngineOverride {
+            prefill_base_ms: opt_pos("engine", "prefill_base_ms")?,
+            prefill_per_token_ms: opt_pos("engine", "prefill_per_token_ms")?,
+            // Zero is a legitimate model: purely linear prefill.
+            prefill_quad_ms: opt_nonneg("engine", "prefill_quad_ms")?,
+            decode_base_ms: opt_pos("engine", "decode_base_ms")?,
+            decode_per_row_ms: opt_pos("engine", "decode_per_row_ms")?,
+            decode_per_ctx_token_us: opt_nonneg("engine", "decode_per_ctx_token_us")?,
+            batch_efficiency: opt_pos("engine", "batch_efficiency")?,
+        };
+        if let Some(e) = engine.batch_efficiency {
+            if e > 1.0 {
+                return Err(at_key(
+                    &doc,
+                    "engine",
+                    "batch_efficiency",
+                    "'batch_efficiency' must be in (0, 1]".to_string(),
+                ));
+            }
+        }
+        let serving = ServingOverride {
+            ttft_slo_ms_per_1k: opt_pos("serving", "ttft_slo_ms_per_1k")?,
+            ttft_slo_floor_ms: opt_pos("serving", "ttft_slo_floor_ms")?,
+            retry_candidates: opt_count("serving", "retry_candidates")?,
+            retry_interval_ms: opt_pos("serving", "retry_interval_ms")?,
+            prefill_batch: opt_count("serving", "prefill_batch")?,
+            decode_batch: opt_count("serving", "decode_batch")?,
+            retrieval_queue: opt_count("serving", "retrieval_queue")?,
+            local_queue_cap: opt_count("serving", "local_queue_cap")?,
+            report_period_ms: opt_pos("serving", "report_period_ms")?,
         };
 
         let catalogue = crate::workload::standard_scenarios();
@@ -551,6 +769,8 @@ impl ScenarioPack {
             workers,
             day,
             fleet,
+            engine,
+            serving,
             scenes,
             faults,
             lend,
@@ -596,11 +816,56 @@ impl ScenarioPack {
         let transfer = match self.fleet.transfer {
             TransferDiscipline::Contiguous => "contiguous",
             TransferDiscipline::Blocked => "blocked",
+            TransferDiscipline::Overlapped => "overlapped",
         };
         let _ = writeln!(s, "transfer = \"{transfer}\"");
+        let _ = writeln!(s, "spray = {}", self.fleet.spray);
+        let _ = writeln!(s, "d2d_response = {}", self.fleet.d2d_response);
         let _ = writeln!(s, "adjust_ratio = {}", self.fleet.adjust_ratio);
         let _ = writeln!(s, "scale_groups = {}", self.fleet.scale_groups);
         let _ = writeln!(s, "headroom = {}", self.fleet.headroom);
+        if !self.engine.is_empty() {
+            let _ = writeln!(s, "\n[engine]");
+            let e = &self.engine;
+            for (k, v) in [
+                ("prefill_base_ms", e.prefill_base_ms),
+                ("prefill_per_token_ms", e.prefill_per_token_ms),
+                ("prefill_quad_ms", e.prefill_quad_ms),
+                ("decode_base_ms", e.decode_base_ms),
+                ("decode_per_row_ms", e.decode_per_row_ms),
+                ("decode_per_ctx_token_us", e.decode_per_ctx_token_us),
+                ("batch_efficiency", e.batch_efficiency),
+            ] {
+                if let Some(v) = v {
+                    let _ = writeln!(s, "{k} = {v}");
+                }
+            }
+        }
+        if !self.serving.is_empty() {
+            let _ = writeln!(s, "\n[serving]");
+            let sv = &self.serving;
+            for (k, v) in [
+                ("ttft_slo_ms_per_1k", sv.ttft_slo_ms_per_1k),
+                ("ttft_slo_floor_ms", sv.ttft_slo_floor_ms),
+                ("retry_interval_ms", sv.retry_interval_ms),
+                ("report_period_ms", sv.report_period_ms),
+            ] {
+                if let Some(v) = v {
+                    let _ = writeln!(s, "{k} = {v}");
+                }
+            }
+            for (k, v) in [
+                ("retry_candidates", sv.retry_candidates),
+                ("prefill_batch", sv.prefill_batch),
+                ("decode_batch", sv.decode_batch),
+                ("retrieval_queue", sv.retrieval_queue),
+                ("local_queue_cap", sv.local_queue_cap),
+            ] {
+                if let Some(v) = v {
+                    let _ = writeln!(s, "{k} = {v}");
+                }
+            }
+        }
         for sc in &self.scenes {
             let _ = writeln!(s, "\n[[scene]]");
             let _ = writeln!(s, "base = \"{}\"", sc.base);
@@ -658,9 +923,14 @@ impl ScenarioPack {
     /// Compile into the [`FleetConfig`] `run_sharded` consumes: scene
     /// overrides applied to a copy of the standard catalogue, scenes
     /// listed in pack order, everything else mapped 1:1. Engine/serving
-    /// perf-model constants stay at their calibrated defaults — a pack
-    /// describes a *workload day*, not a hardware model.
+    /// perf-model constants start from their calibrated defaults; the
+    /// optional `[engine]`/`[serving]` tables override individual keys
+    /// for hardware-class what-ifs.
     pub fn compile(&self) -> FleetConfig {
+        let mut engine = crate::util::config::EngineConfig::default();
+        self.engine.apply(&mut engine);
+        let mut serving = crate::util::config::ServingConfig::default();
+        self.serving.apply(&mut serving);
         let mut scenarios = crate::workload::standard_scenarios();
         let mut scenes = Vec::with_capacity(self.scenes.len());
         for spec in &self.scenes {
@@ -691,6 +961,8 @@ impl ScenarioPack {
         FleetConfig {
             scenarios,
             scenes,
+            engine,
+            serving,
             peak_total_rps: self.day.peak_rps,
             hours: self.day.hours,
             ms_per_hour: self.day.ms_per_hour,
@@ -706,6 +978,8 @@ impl ScenarioPack {
             headroom: self.fleet.headroom,
             route: self.fleet.route,
             transfer: self.fleet.transfer,
+            spray: self.fleet.spray,
+            d2d_response: self.fleet.d2d_response,
             upgrade_at_ms: self
                 .upgrade
                 .as_ref()
@@ -869,6 +1143,10 @@ min = 1
         assert_eq!(p.fleet.ratio, (3, 3));
         assert_eq!(p.fleet.route, RouteKind::LeastLoaded);
         assert_eq!(p.fleet.transfer, TransferDiscipline::Contiguous);
+        assert!(p.fleet.spray);
+        assert!(!p.fleet.d2d_response);
+        assert!(p.engine.is_empty());
+        assert!(p.serving.is_empty());
         assert!(!p.lend);
         assert!(p.upgrade.is_none());
         assert_eq!(p.scenes.len(), 1);
@@ -950,6 +1228,60 @@ wave = 2
         let p = ScenarioPack::parse(MINI).unwrap();
         let back = ScenarioPack::parse(&p.to_toml()).unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn engine_serving_overrides_apply_and_roundtrip() {
+        // ROADMAP carried item: optional [engine]/[serving] tables for
+        // hardware-class overrides, plus overlapped transfer and the
+        // congestion-loop knobs in [fleet].
+        let text = format!(
+            "{MINI}\n[fleet]\ntransfer = \"overlapped\"\nspray = false\nd2d_response = true\n\n\
+             [engine]\nprefill_per_token_ms = 0.15\nbatch_efficiency = 0.9\n\n\
+             [serving]\ndecode_batch = 32\nttft_slo_ms_per_1k = 450\n"
+        );
+        let p = ScenarioPack::parse(&text).unwrap();
+        assert_eq!(p.fleet.transfer, TransferDiscipline::Overlapped);
+        assert!(!p.fleet.spray);
+        assert!(p.fleet.d2d_response);
+        assert_eq!(p.engine.prefill_per_token_ms, Some(0.15));
+        assert_eq!(p.engine.batch_efficiency, Some(0.9));
+        assert_eq!(p.serving.decode_batch, Some(32));
+        assert_eq!(p.serving.ttft_slo_ms_per_1k, Some(450.0));
+        let cfg = p.compile();
+        assert_eq!(cfg.transfer, TransferDiscipline::Overlapped);
+        assert!(!cfg.spray);
+        assert!(cfg.d2d_response);
+        assert_eq!(cfg.engine.prefill_per_token_ms, 0.15);
+        assert_eq!(cfg.engine.batch_efficiency, 0.9);
+        // Untouched keys keep the calibrated defaults.
+        assert_eq!(cfg.engine.prefill_base_ms, 18.0);
+        assert_eq!(cfg.serving.decode_batch, 32);
+        assert_eq!(cfg.serving.ttft_slo_ms_per_1k, 450.0);
+        assert_eq!(cfg.serving.prefill_batch, 4);
+        // The override tables survive the TOML roundtrip.
+        let back = ScenarioPack::parse(&p.to_toml()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn bad_engine_serving_overrides_are_rejected() {
+        let text = format!("{MINI}\n[engine]\nbatch_efficiency = 1.5\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'batch_efficiency' must be in (0, 1]"), "got: {err}");
+        let text = format!("{MINI}\n[engine]\nprefill_base_ms = 0\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(
+            err.contains("'prefill_base_ms' must be a finite number > 0"),
+            "got: {err}"
+        );
+        let text = format!("{MINI}\n[serving]\ndecode_batch = 0\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'decode_batch' must be >= 1"), "got: {err}");
+        // Unknown keys in the new tables fail fast like everywhere else.
+        let text = format!("{MINI}\n[engine]\nprefill_base = 2\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("unknown key 'prefill_base' in [engine]"), "got: {err}");
     }
 
     // -- fail-fast fixtures -------------------------------------------------

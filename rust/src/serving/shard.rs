@@ -161,6 +161,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
     let mut e2e_sum = 0.0f64;
     let mut xfers = 0usize;
     let mut xfer_sum = 0.0f64;
+    let mut xfer_exposed_sum = 0.0f64;
     let mut wire_sum = 0.0f64;
     let mut adjustments = 0usize;
     let mut scale_outs = 0usize;
@@ -172,6 +173,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
     let mut recoveries = 0usize;
     let mut protected = 0usize;
     let mut scale_deferred = 0usize;
+    let mut d2d_deferrals = 0usize;
     let mut lease_calls = 0usize;
     let mut peak_instances = 0usize;
     let mut end_hour = 0.0f64;
@@ -201,6 +203,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         xfers += o.xfers;
         let xs = o.mean_xfer_ms * o.xfers as f64;
         xfer_sum += xs;
+        xfer_exposed_sum += o.mean_xfer_exposed_ms * o.xfers as f64;
         wire_sum += o.d2d_utilization * xs;
         adjustments += o.adjustments;
         scale_outs += o.scale_outs;
@@ -212,6 +215,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         recoveries += o.recoveries;
         protected += o.protected;
         scale_deferred += o.scale_deferred;
+        d2d_deferrals += o.d2d_deferrals;
         lease_calls += o.lease_calls;
         peak_instances += o.peak_instances;
         if i == 0 {
@@ -246,6 +250,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         let mut w_protected = 0usize;
         let mut w_xfers = 0usize;
         let mut w_xfer_sum = 0.0f64;
+        let mut w_exposed_sum = 0.0f64;
         let mut w_wire_sum = 0.0f64;
         for o in &outs {
             let Some(w) = o.served_curve.get(wi) else { continue };
@@ -259,6 +264,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
             w_xfers += w.xfers;
             let xs = w.mean_xfer_ms * w.xfers as f64;
             w_xfer_sum += xs;
+            w_exposed_sum += w.mean_xfer_exposed_ms * w.xfers as f64;
             w_wire_sum += w.d2d_util * xs;
         }
         served_curve.push(FleetWindow {
@@ -268,6 +274,11 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
             protected: w_protected,
             xfers: w_xfers,
             mean_xfer_ms: if w_xfers == 0 { 0.0 } else { w_xfer_sum / w_xfers as f64 },
+            mean_xfer_exposed_ms: if w_xfers == 0 {
+                0.0
+            } else {
+                w_exposed_sum / w_xfers as f64
+            },
             d2d_util: if w_xfer_sum <= 0.0 { 0.0 } else { (w_wire_sum / w_xfer_sum).min(1.0) },
         });
     }
@@ -295,6 +306,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         mean_e2e_ms: if completed == 0 { 0.0 } else { e2e_sum / completed as f64 },
         xfers,
         mean_xfer_ms: if xfers == 0 { 0.0 } else { xfer_sum / xfers as f64 },
+        mean_xfer_exposed_ms: if xfers == 0 { 0.0 } else { xfer_exposed_sum / xfers as f64 },
         d2d_utilization: if xfer_sum <= 0.0 { 0.0 } else { (wire_sum / xfer_sum).min(1.0) },
         adjustments,
         scale_outs,
@@ -306,6 +318,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         recoveries,
         protected,
         scale_deferred,
+        d2d_deferrals,
         lease_calls,
         recovery_reports,
         ledger,

@@ -49,6 +49,13 @@ pub enum TransferDiscipline {
     Blocked,
     /// Contiguous buffer + RecvScatter (P/D-Serve).
     Contiguous,
+    /// Layer-wise pipelined pull overlapped with prefill compute: layer
+    /// *k*'s KV slice streams while layers *k+1..L* compute, so only the
+    /// exposed tail (plus placement) is charged into TTFT. The wire
+    /// occupancy stays the full single-pull cost — utilization accounting
+    /// is unchanged — but the critical-path charge shrinks with the
+    /// prefill compute it hides behind.
+    Overlapped,
 }
 
 /// How arrivals are generated and when the run terminates.
@@ -117,6 +124,9 @@ pub struct SimConfig {
     pub n_spines: usize,
     /// PageAttention block size in tokens (Blocked discipline).
     pub block_tokens: usize,
+    /// Model depth for the Overlapped discipline: how many per-layer KV
+    /// slices the pipelined pull can stream as prefill computes.
+    pub n_layers: usize,
     /// Per-prefill-instance HBM budget for prefix-aware KVCaches (bytes).
     pub prefix_budget_bytes: usize,
     /// Small window to let a batch fill before prefill launches (ms).
@@ -159,6 +169,7 @@ impl Default for SimConfig {
             devices_per_instance: 8,
             n_spines: 8,
             block_tokens: 16,
+            n_layers: 40, // ~13B-class depth, matches kv_bytes_per_token
             prefix_budget_bytes: 12 << 30, // 12 GB of HBM for prefixes
             batch_window_ms: 6.0,
             baseline_books: false,
@@ -176,6 +187,26 @@ impl SimConfig {
     /// planner (whose healthy-profile ξ must match what measured TTFT
     /// charges).
     pub fn handoff_ms(&self, per_dev_bytes: usize, sharers: usize) -> f64 {
+        // With no compute window the Overlapped discipline degenerates to
+        // the single pull, so the exposed component is the conservative
+        // planning estimate for every discipline.
+        self.handoff_split_ms(per_dev_bytes, sharers, 0.0).1
+    }
+
+    /// The handoff charge split into `(occupancy_ms, exposed_ms)`: how
+    /// long the transfer holds the wire/spine slots vs. what lands on the
+    /// request's first-token critical path. For `Blocked`/`Contiguous`
+    /// the two are identical; for `Overlapped`, `compute_ms` (the prefill
+    /// batch's execution time, during which the first `L−1` layer slices
+    /// stream) shrinks the exposed component down to the irreducible
+    /// last-layer tail while occupancy stays the full single-pull cost —
+    /// keeping `WindowStats::d2d_utilization` meaningful.
+    pub fn handoff_split_ms(
+        &self,
+        per_dev_bytes: usize,
+        sharers: usize,
+        compute_ms: f64,
+    ) -> (f64, f64) {
         let block_bytes = self.block_tokens * self.kv_bytes_per_token
             / self.devices_per_instance.max(1);
         let block_bytes = block_bytes.max(1);
@@ -187,13 +218,14 @@ impl SimConfig {
                 // scatter-free placement pass — no gather. Priced by the
                 // shared `kvcache::d2d` helper so the real server's
                 // staged path charges the identical TransferCost.
-                crate::kvcache::d2d::single_pull_handoff_us(
+                let d = crate::kvcache::d2d::single_pull_handoff_us(
                     &self.rdma,
                     &self.assembly,
                     per_dev_bytes,
                     3,
                     sharers,
-                ) / 1e3
+                ) / 1e3;
+                (d, d)
             }
             TransferDiscipline::Blocked => {
                 // N block sends, each confirmed, plus per-received-block
@@ -201,7 +233,23 @@ impl SimConfig {
                 let n_blocks = per_dev_bytes.div_ceil(block_bytes).max(1);
                 let cost = self.rdma.blocked_cost(per_dev_bytes, block_bytes, 3, sharers);
                 let place = self.assembly.place_blocked_us(per_dev_bytes, n_blocks);
-                (cost.total_us() + place) / 1e3
+                let d = (cost.total_us() + place) / 1e3;
+                (d, d)
+            }
+            TransferDiscipline::Overlapped => {
+                // Layer-wise pipelined pull: shared `kvcache::d2d` pricing
+                // again (the real server's staged per-layer path charges
+                // the identical split — a parity test pins it).
+                let (occ, exp) = crate::kvcache::d2d::overlapped_handoff_us(
+                    &self.rdma,
+                    &self.assembly,
+                    per_dev_bytes,
+                    self.n_layers,
+                    compute_ms * 1e3,
+                    3,
+                    sharers,
+                );
+                (occ / 1e3, exp / 1e3)
             }
         }
     }
@@ -255,6 +303,10 @@ struct ReqState {
     cached_len: usize,
     ttft_ms: f64,
     xfer_ms: f64,
+    /// Execution time of the prefill batch this request ran in (ms) —
+    /// the compute window the Overlapped discipline hides layer slices
+    /// behind when the transfer is priced.
+    prefill_ms: f64,
     entrance: usize,
     /// Owning gateway (fixed at arrival).
     gw: usize,
@@ -373,6 +425,11 @@ pub struct WindowStats {
     /// Summed conflict-free wire time of those transfers (ms) — the
     /// utilization numerator.
     pub xfer_wire_sum_ms: f64,
+    /// Summed *exposed* transfer time (ms): what actually landed on the
+    /// first-token critical path. Equals `xfer_sum_ms` for the
+    /// Blocked/Contiguous disciplines; under Overlapped it is the
+    /// exposed tail only (the rest hid behind prefill compute).
+    pub xfer_exposed_ms: f64,
 }
 
 impl WindowStats {
@@ -401,6 +458,12 @@ impl WindowStats {
         if self.xfers == 0 { 0.0 } else { self.xfer_sum_ms / self.xfers as f64 }
     }
 
+    /// Mean exposed (TTFT-charged) transfer time this window (ms; 0 when
+    /// idle).
+    pub fn mean_xfer_exposed_ms(&self) -> f64 {
+        if self.xfers == 0 { 0.0 } else { self.xfer_exposed_ms / self.xfers as f64 }
+    }
+
     /// Achieved D2D bandwidth utilization this window: conflict-free wire
     /// time over total transfer occupancy (0 when idle).
     pub fn d2d_utilization(&self) -> f64 {
@@ -424,6 +487,7 @@ impl WindowStats {
         self.xfers += o.xfers;
         self.xfer_sum_ms += o.xfer_sum_ms;
         self.xfer_wire_sum_ms += o.xfer_wire_sum_ms;
+        self.xfer_exposed_ms += o.xfer_exposed_ms;
     }
 }
 
@@ -706,6 +770,7 @@ impl Simulation {
             cached_len: 0,
             ttft_ms: 0.0,
             xfer_ms: 0.0,
+            prefill_ms: 0.0,
             entrance: usize::MAX,
             gw: id as usize % self.gw_sse.len(),
             remaining,
@@ -837,6 +902,19 @@ impl Simulation {
     /// Current alive (n_p, n_d).
     pub fn ratio(&self) -> (usize, usize) {
         (self.n_prefill_alive(), self.n_decode_alive())
+    }
+
+    /// Switch sub-transfer spine assignment between plain ECMP and
+    /// path-diversity spraying mid-run — the fleet's d2d_util-driven
+    /// congestion response widens fan-out with this. Affects transfers
+    /// priced from now on; in-flight transfers keep their assignment.
+    pub fn set_spray(&mut self, on: bool) {
+        self.cfg.spray = on;
+    }
+
+    /// Whether sub-transfers currently spray across spine paths.
+    pub fn spray(&self) -> bool {
+        self.cfg.spray
     }
 
     /// Register a new prefill instance; returns its entrance id. The new
@@ -1331,6 +1409,11 @@ impl Simulation {
         self.ps[p].busy = true;
         self.ps[p].busy_ms += dur;
         self.window.prefill_busy_ms += dur;
+        for &id in &batch {
+            // The compute window the Overlapped discipline hides layer
+            // slices behind when this request's transfer is priced.
+            self.reqs[id as usize].prefill_ms = dur;
+        }
         self.batches.insert(p, batch);
         self.q.push_after(dur, Ev::PrefillDone(p));
     }
@@ -1424,27 +1507,36 @@ impl Simulation {
             self.spine_load[s] += 1;
             max_sharers = max_sharers.max(self.spine_load[s]);
         }
-        let dur = self.cfg.handoff_ms(per_dev, max_sharers);
+        // The occupancy/exposed split: occupancy is the full wire charge
+        // (the utilization denominator); exposed is what remains on the
+        // critical path after the overlap with prefill compute. Under
+        // Blocked/Contiguous the two are identical. The hidden portion of
+        // an overlapped pull streamed *during* the prefill window that
+        // already elapsed, so from here only the exposed tail advances
+        // sim time — spine slots are held for that tail.
+        let compute_ms = self.reqs[id as usize].prefill_ms;
+        let (occupancy, exposed) = self.cfg.handoff_split_ms(per_dev, max_sharers, compute_ms);
         let ideal = self.cfg.rdma.wire_us(per_dev) / 1e3;
-        self.util.add((ideal / dur).min(1.0));
-        self.xfer_samples.push(dur);
+        self.util.add((ideal / occupancy).min(1.0));
+        self.xfer_samples.push(exposed);
         self.window.xfers += 1;
-        self.window.xfer_sum_ms += dur;
+        self.window.xfer_sum_ms += occupancy;
         self.window.xfer_wire_sum_ms += ideal;
+        self.window.xfer_exposed_ms += exposed;
         let r = &mut self.reqs[id as usize];
-        r.xfer_ms = dur;
-        // The handoff charge: the modeled transfer (wire + assembly) sits
-        // on the first-token critical path, so it lands in TTFT. Waiting
-        // for decode headroom (parking) is a decode-capacity effect and
-        // stays in E2E only.
-        r.ttft_ms += dur;
+        r.xfer_ms = exposed;
+        // The handoff charge: the exposed transfer tail (wire + assembly)
+        // sits on the first-token critical path, so it lands in TTFT.
+        // Waiting for decode headroom (parking) is a decode-capacity
+        // effect and stays in E2E only.
+        r.ttft_ms += exposed;
         r.phase = ReqPhase::Transferring(d);
         self.ds[d].reserved += 1;
         self.ps[p].awaiting -= 1;
         // Remember spine slots to release at TransferDone, keyed by
         // request id for O(log n) release.
         self.inflight_assignments.insert(id, assignment);
-        self.q.push_after(dur, Ev::TransferDone(id));
+        self.q.push_after(exposed, Ev::TransferDone(id));
     }
 
     fn on_transfer_done(&mut self, id: u64) {
@@ -1833,10 +1925,10 @@ mod tests {
                 } else {
                     Policy::BaselineQueue
                 };
-                let transfer = if r.chance(0.5) {
-                    TransferDiscipline::Contiguous
-                } else {
-                    TransferDiscipline::Blocked
+                let transfer = match r.below(3) {
+                    0 => TransferDiscipline::Contiguous,
+                    1 => TransferDiscipline::Blocked,
+                    _ => TransferDiscipline::Overlapped,
                 };
                 let closed = r.chance(0.5);
                 let scenario = r.below(6);
@@ -2244,7 +2336,176 @@ mod tests {
                     ..SimConfig::default()
                 };
                 assert!(blocked.handoff_ms(per_dev, sharers) > got);
+                // The overlapped discipline prices through the same
+                // shared `kvcache::d2d` helper: occupancy is always the
+                // single-pull charge, and exposure equals it exactly when
+                // there is no compute window to hide behind.
+                let over = SimConfig {
+                    transfer: TransferDiscipline::Overlapped,
+                    ..SimConfig::default()
+                };
+                let (occ0, exp0) = over.handoff_split_ms(per_dev, sharers, 0.0);
+                assert!((occ0 - expect).abs() < 1e-12);
+                assert!((exp0 - expect).abs() < 1e-12);
+                let (occ, exp) = over.handoff_split_ms(per_dev, sharers, 50.0);
+                assert!((occ - expect).abs() < 1e-12, "occupancy moved with compute");
+                assert!(exp <= expect + 1e-12 && exp > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn prop_overlapped_exposure_bounded_and_monotone() {
+        // The exposed-tail math, over random payloads/conflicts: exposed
+        // ∈ (0, full single-pull], equals the single pull at zero
+        // compute, and shrinks monotonically as per-layer compute grows.
+        let cfg = crate::util::prop::Config { cases: 64, ..Default::default() };
+        crate::util::prop::check(
+            "sim-overlapped-exposure",
+            &cfg,
+            |r| {
+                let prompt_len = 16 + r.below(8192);
+                let sharers = 1 + r.below(6);
+                let n_layers = 1 + r.below(96);
+                (prompt_len, sharers, n_layers)
+            },
+            |&(prompt_len, sharers, n_layers)| {
+                let sim = SimConfig {
+                    transfer: TransferDiscipline::Overlapped,
+                    n_layers,
+                    ..Default::default()
+                };
+                let per_dev = sim.per_device_bytes(prompt_len);
+                let full = SimConfig {
+                    transfer: TransferDiscipline::Contiguous,
+                    ..SimConfig::default()
+                }
+                .handoff_ms(per_dev, sharers);
+                let (_, exp0) = sim.handoff_split_ms(per_dev, sharers, 0.0);
+                if (exp0 - full).abs() > 1e-9 {
+                    return Err(format!("zero-compute exposure {exp0} != single pull {full}"));
+                }
+                let mut prev = f64::INFINITY;
+                for compute_ms in [0.0, 5.0, 20.0, 100.0, 1e6] {
+                    let (occ, exp) = sim.handoff_split_ms(per_dev, sharers, compute_ms);
+                    if (occ - full).abs() > 1e-9 {
+                        return Err(format!("occupancy {occ} != single pull {full}"));
+                    }
+                    if !(exp > 0.0 && exp <= full + 1e-9) {
+                        return Err(format!("exposure {exp} outside (0, {full}]"));
+                    }
+                    if exp > prev + 1e-9 {
+                        return Err(format!("exposure grew with compute: {exp} > {prev}"));
+                    }
+                    prev = exp;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn overlapped_day_exposes_less_transfer_and_beats_contiguous_ttft() {
+        // The tentpole's sim-level acceptance shape: same seed, same
+        // arrivals, only the discipline differs — the overlapped day's
+        // mean TTFT-charged transfer must clearly undercut the
+        // single-pull day's, and mean TTFT improves by exactly the
+        // per-request exposure savings (nothing else changed).
+        let run_one = |transfer| {
+            let cfg = SimConfig {
+                transfer,
+                only_scenario: Some(1), // long prompts -> big KVCaches
+                workload: WorkloadKind::Closed { concurrency: 8, requests: 80 },
+                ..Default::default()
+            };
+            let out = Simulation::run(cfg);
+            assert!(out.report.completed > 0);
+            (out.report.ttft.mean(), out.report.xfer.mean())
+        };
+        let (ttft_c, xfer_c) = run_one(TransferDiscipline::Contiguous);
+        let (ttft_o, xfer_o) = run_one(TransferDiscipline::Overlapped);
+        assert!(
+            xfer_o < 0.5 * xfer_c,
+            "overlapped exposure {xfer_o} ms !<= 50% of single pull {xfer_c} ms"
+        );
+        assert!(ttft_o < ttft_c, "overlapped TTFT {ttft_o} !< contiguous {ttft_c}");
+    }
+
+    #[test]
+    fn window_accounts_exposed_separately_from_occupancy() {
+        // Under Overlapped, the window's exposed sum undercuts the
+        // occupancy sum (the gap is what hid behind compute), while
+        // utilization still divides wire by occupancy and stays in (0,1].
+        let mk = |transfer| SimConfig {
+            n_p: 2,
+            n_d: 2,
+            transfer,
+            only_scenario: Some(1),
+            ..Default::default()
+        };
+        let drive = |cfg: SimConfig| {
+            let mut sim = Simulation::external(cfg);
+            let mut g = crate::workload::OpenLoopGen::new(
+                crate::workload::standard_scenarios(),
+                4,
+            )
+            .only_scenario(1);
+            for r in g.window(4.0, 6_000.0) {
+                sim.run_until(r.arrival_ms);
+                sim.inject(r);
+            }
+            sim.drain();
+            sim.take_window()
+        };
+        let over = drive(mk(TransferDiscipline::Overlapped));
+        assert!(over.xfers > 0);
+        assert!(
+            over.xfer_exposed_ms < over.xfer_sum_ms,
+            "nothing hid: exposed {} !< occupancy {}",
+            over.xfer_exposed_ms,
+            over.xfer_sum_ms
+        );
+        assert!(over.mean_xfer_exposed_ms() < over.mean_xfer_ms());
+        assert!(over.d2d_utilization() > 0.0 && over.d2d_utilization() <= 1.0);
+        // Blocked/Contiguous keep the two sums identical.
+        let contig = drive(mk(TransferDiscipline::Contiguous));
+        assert!(contig.xfers > 0);
+        assert!((contig.xfer_exposed_ms - contig.xfer_sum_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_spray_switches_assignment_midrun() {
+        // The congestion response's lever: flipping spray on mid-run is
+        // allowed, deterministic, and loses no requests.
+        let cfg = SimConfig {
+            n_p: 2,
+            n_d: 2,
+            spray: false,
+            transfer: TransferDiscipline::Overlapped,
+            only_scenario: Some(1),
+            ..Default::default()
+        };
+        let mut sim = Simulation::external(cfg);
+        assert!(!sim.spray());
+        let mut g = crate::workload::OpenLoopGen::new(
+            crate::workload::standard_scenarios(),
+            6,
+        )
+        .only_scenario(1);
+        let reqs = g.window(6.0, 8_000.0);
+        let n = reqs.len();
+        for r in reqs {
+            let at = r.arrival_ms;
+            sim.run_until(at);
+            sim.inject(r);
+            if at > 4_000.0 && !sim.spray() {
+                sim.set_spray(true);
+            }
+        }
+        assert!(sim.spray());
+        sim.drain();
+        assert_eq!(sim.in_flight(), 0);
+        let out = sim.into_output();
+        assert_eq!(out.report.total(), n);
     }
 }

@@ -108,6 +108,27 @@ base = "scene6"
 }
 
 #[test]
+fn overlapped_day_is_byte_identical_across_worker_counts() {
+    // The layer-wise pipelined discipline adds per-window exposed-tail
+    // accounting and a congestion latch to the control loop; both must
+    // stay pure functions of the shard config, so an overlapped day with
+    // the d2d_util response armed renders the same bytes at any width.
+    let base = FleetConfig {
+        transfer: pd_serve::serving::sim::TransferDiscipline::Overlapped,
+        d2d_response: true,
+        ..cfg()
+    };
+    let a = run_sharded(base.clone(), 1).to_json().to_string_pretty();
+    let b = run_sharded(base.clone(), 4).to_json().to_string_pretty();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "--workers must not change the overlapped report bytes");
+    // And the overlapped day is genuinely a different day: the exposed
+    // tail lands in TTFT, so the report differs from the contiguous one.
+    let contiguous = run_sharded(cfg(), 1).to_json().to_string_pretty();
+    assert_ne!(a, contiguous, "transfer discipline must influence the report");
+}
+
+#[test]
 fn different_seeds_actually_differ() {
     // Guards the double-run test against vacuous passes (e.g. a to_json
     // that ignores the simulation entirely).

@@ -24,8 +24,8 @@ use std::path::{Path, PathBuf};
 
 use pd_serve::serving::router::RouteKind;
 use pd_serve::serving::scenario::{
-    golden_diff_hint, AssertSpec, DaySpec, FaultSpec, FleetSpec, ScenarioPack, SceneSpec,
-    UpgradeSpec, ASSERT_METRICS,
+    golden_diff_hint, AssertSpec, DaySpec, EngineOverride, FaultSpec, FleetSpec, ScenarioPack,
+    SceneSpec, ServingOverride, UpgradeSpec, ASSERT_METRICS,
 };
 use pd_serve::serving::sim::TransferDiscipline;
 use pd_serve::util::prng::Rng;
@@ -52,7 +52,14 @@ fn pack_library_is_committed_and_complete() {
         .iter()
         .filter_map(|p| p.file_stem().and_then(|s| s.to_str()).map(str::to_string))
         .collect();
-    for required in ["chat_heavy", "example", "flash_crowd", "mixed_day", "region_failover"] {
+    for required in [
+        "chat_heavy",
+        "d2d_congestion",
+        "example",
+        "flash_crowd",
+        "mixed_day",
+        "region_failover",
+    ] {
         assert!(
             names.iter().any(|n| n == required),
             "pack library lost scenarios/{required}.toml (have: {names:?})"
@@ -218,14 +225,27 @@ fn arb_pack(r: &mut Rng) -> ScenarioPack {
             max_groups: min_groups + r.below(3),
             spares: r.below(16),
             route: routes[r.below(routes.len())],
-            transfer: if r.below(2) == 0 {
-                TransferDiscipline::Contiguous
-            } else {
-                TransferDiscipline::Blocked
+            transfer: match r.below(3) {
+                0 => TransferDiscipline::Contiguous,
+                1 => TransferDiscipline::Blocked,
+                _ => TransferDiscipline::Overlapped,
             },
+            spray: r.below(2) == 0,
+            d2d_response: r.below(2) == 0,
             adjust_ratio: r.below(2) == 0,
             scale_groups: r.below(2) == 0,
             headroom: r.uniform(1.0, 1.6),
+        },
+        engine: EngineOverride {
+            prefill_per_token_ms: (r.below(2) == 0).then(|| r.uniform(0.05, 0.6)),
+            decode_base_ms: (r.below(2) == 0).then(|| r.uniform(5.0, 40.0)),
+            batch_efficiency: (r.below(2) == 0).then(|| r.uniform(0.5, 1.0)),
+            ..EngineOverride::default()
+        },
+        serving: ServingOverride {
+            ttft_slo_ms_per_1k: (r.below(2) == 0).then(|| r.uniform(300.0, 1200.0)),
+            decode_batch: (r.below(2) == 0).then(|| 4 + r.below(28)),
+            ..ServingOverride::default()
         },
         scenes,
         faults: FaultSpec {
