@@ -289,11 +289,27 @@ pub fn cmd_bench_diff(args: &crate::util::cli::ParsedArgs) -> i32 {
     }
 }
 
+/// Top-level `BENCH_*.json` keys this reader knows. A report written by
+/// a newer pdserve may carry more; those draw a warning and are
+/// otherwise ignored — warn, never fail, so an old `bench-diff` keeps
+/// gating a new report (same append-only contract as the fleet report's
+/// `schema_version`).
+const KNOWN_BENCH_KEYS: &[&str] = &["bench", "schema", "git_sha", "cases"];
+
 /// Parse one `BENCH_*.json` into `(group/name, mean_ns)` rows in file
 /// order.
 fn load_cases(path: &str) -> Result<Vec<(String, f64)>, String> {
     let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
     let doc = Json::parse(&text)?;
+    if let Json::Obj(map) = &doc {
+        for key in map.keys() {
+            if !KNOWN_BENCH_KEYS.contains(&key.as_str()) {
+                eprintln!(
+                    "bench-diff: {path}: unknown report key '{key}' (newer schema?) — ignored"
+                );
+            }
+        }
+    }
     let cases = doc
         .get("cases")
         .and_then(|c| c.as_arr())
@@ -376,6 +392,27 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         assert!(b.results[0].mean_ns > 0.0);
         assert!(b.finish().contains("\"name\":\"noop\""));
+    }
+
+    #[test]
+    fn bench_diff_tolerates_unknown_report_keys() {
+        let path = std::env::temp_dir().join("pdserve_bench_diff_unknown_keys.json");
+        let text = crate::jobj! {
+            "bench" => "x",
+            "schema" => 1usize,
+            "git_sha" => "abc",
+            "future_field" => 7usize,
+            "cases" => vec![crate::jobj! {
+                "group" => "g",
+                "name" => "n",
+                "mean_ns" => 10.0,
+            }],
+        }
+        .to_string_pretty();
+        std::fs::write(&path, text).unwrap();
+        // Unknown siblings warn on stderr but never fail the load.
+        let cases = load_cases(path.to_str().unwrap()).unwrap();
+        assert_eq!(cases, vec![("g/n".to_string(), 10.0)]);
     }
 
     #[test]

@@ -17,6 +17,45 @@
 
 use crate::util::config::EngineConfig;
 
+/// One named hardware generation in a heterogeneous fleet: an engine
+/// speed profile plus the capacity/cost facts the planner trades off.
+///
+/// A fleet's catalog is an ordered `Vec<HardwareClass>`; instances and
+/// groups reference their class by index into that catalog (indices stay
+/// `Copy` where a `String` name would not). An empty catalog means the
+/// fleet is homogeneous on the ambient `EngineConfig` — the pre-catalog
+/// behavior, bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareClass {
+    /// Human-readable generation name (e.g. `"gen1"`, `"910B"`).
+    pub name: String,
+    /// The engine speed profile this generation runs at.
+    pub engine: EngineConfig,
+    /// Per-device HBM capacity in GiB (bounds resident KVCache).
+    pub hbm_gb: f64,
+    /// Relative device-hour price (goodput-per-cost denominator).
+    pub cost_per_hour: f64,
+}
+
+impl HardwareClass {
+    /// A class running the given engine profile at unit cost with a
+    /// typical HBM size — the implicit class of a homogeneous fleet.
+    pub fn uniform(name: &str, engine: EngineConfig) -> Self {
+        HardwareClass {
+            name: name.to_string(),
+            engine,
+            hbm_gb: 64.0,
+            cost_per_hour: 1.0,
+        }
+    }
+}
+
+impl Default for HardwareClass {
+    fn default() -> Self {
+        HardwareClass::uniform("default", EngineConfig::default())
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct EngineModel {
     cfg: EngineConfig,

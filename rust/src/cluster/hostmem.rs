@@ -16,6 +16,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::prefix::PrefixKey;
+
 /// Where a lookup was served from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TierHit {
@@ -31,11 +33,11 @@ struct Entry {
     last_used: u64,
 }
 
-/// Two-tier LRU keyed by (scenario, prefix_id) at simulation granularity.
+/// Two-tier LRU keyed by [`PrefixKey`] at simulation granularity.
 #[derive(Debug)]
 pub struct TieredPrefixCache {
-    hbm: BTreeMap<(usize, usize), Entry>,
-    host: BTreeMap<(usize, usize), Entry>,
+    hbm: BTreeMap<PrefixKey, Entry>,
+    host: BTreeMap<PrefixKey, Entry>,
     hbm_budget: usize,
     host_budget: usize,
     hbm_used: usize,
@@ -75,7 +77,7 @@ impl TieredPrefixCache {
     /// Look up a prefix; on host hit or miss, the entry ends up resident
     /// in HBM. Returns the tier served from plus the extra latency (ms)
     /// this lookup incurred (0 for HBM hits).
-    pub fn lookup(&mut self, key: (usize, usize), bytes: usize) -> (TierHit, f64) {
+    pub fn lookup(&mut self, key: PrefixKey, bytes: usize) -> (TierHit, f64) {
         self.tick += 1;
         if let Some(e) = self.hbm.get_mut(&key) {
             e.last_used = self.tick;
@@ -98,7 +100,7 @@ impl TieredPrefixCache {
     }
 
     /// Install into HBM, demoting LRU HBM entries to host (flush charged).
-    fn install_hbm(&mut self, key: (usize, usize), bytes: usize) {
+    fn install_hbm(&mut self, key: PrefixKey, bytes: usize) {
         while self.hbm_used + bytes > self.hbm_budget {
             let lru = self
                 .hbm
@@ -166,12 +168,12 @@ mod tests {
     #[test]
     fn hbm_hit_is_free_host_hit_pays_load() {
         let mut c = TieredPrefixCache::new(10 * MB, 100 * MB, 20.0);
-        assert_eq!(c.lookup((0, 1), 4 * MB).0, TierHit::Miss);
-        assert_eq!(c.lookup((0, 1), 4 * MB), (TierHit::Hbm, 0.0));
+        assert_eq!(c.lookup(PrefixKey::new(0, 1), 4 * MB).0, TierHit::Miss);
+        assert_eq!(c.lookup(PrefixKey::new(0, 1), 4 * MB), (TierHit::Hbm, 0.0));
         // Fill HBM so (0,1) demotes to host.
-        c.lookup((0, 2), 4 * MB);
-        c.lookup((0, 3), 4 * MB); // evicts (0,1) -> host
-        let (tier, load_ms) = c.lookup((0, 1), 4 * MB);
+        c.lookup(PrefixKey::new(0, 2), 4 * MB);
+        c.lookup(PrefixKey::new(0, 3), 4 * MB); // evicts (0,1) -> host
+        let (tier, load_ms) = c.lookup(PrefixKey::new(0, 1), 4 * MB);
         assert_eq!(tier, TierHit::Host);
         // 4 MiB at 20 GB/s ≈ 0.21 ms.
         assert!(load_ms > 0.1 && load_ms < 0.5, "load {load_ms}");
@@ -184,7 +186,7 @@ mod tests {
         let mut c = TieredPrefixCache::new(8 * MB, 64 * MB, 20.0);
         for round in 0..5 {
             for p in 0..3 {
-                let (tier, _) = c.lookup((0, p), 4 * MB);
+                let (tier, _) = c.lookup(PrefixKey::new(0, p), 4 * MB);
                 if round > 0 {
                     assert_ne!(tier, TierHit::Miss, "round {round} prefix {p}");
                 }
@@ -200,7 +202,7 @@ mod tests {
         let mut misses = 0;
         for _round in 0..5 {
             for p in 0..3 {
-                if c.lookup((0, p), 4 * MB).0 == TierHit::Miss {
+                if c.lookup(PrefixKey::new(0, p), 4 * MB).0 == TierHit::Miss {
                     misses += 1;
                 }
             }
@@ -212,10 +214,10 @@ mod tests {
     fn staging_time_accumulates() {
         let mut c = TieredPrefixCache::new(8 * MB, 64 * MB, 20.0);
         for p in 0..3 {
-            c.lookup((0, p), 4 * MB);
+            c.lookup(PrefixKey::new(0, p), 4 * MB);
         }
         let before = c.staging_ms;
-        c.lookup((0, 0), 4 * MB); // host hit -> load
+        c.lookup(PrefixKey::new(0, 0), 4 * MB); // host hit -> load
         assert!(c.staging_ms > before);
     }
 
@@ -231,7 +233,7 @@ mod tests {
                     TieredPrefixCache::new(hbm_mb * MB, host_mb * MB, 20.0);
                 let mut rng = Rng::new(seed);
                 for _ in 0..300 {
-                    let key = (rng.below(3), rng.below(12));
+                    let key = PrefixKey::new(rng.below(3), rng.below(12));
                     let bytes = (1 + rng.below(4)) * MB;
                     c.lookup(key, bytes);
                     if c.hbm_used > c.hbm_budget {

@@ -58,6 +58,9 @@ pub struct Instance {
     pub slots_busy: usize,
     /// Prefix-aware KVCache held in this instance's HBM.
     pub prefix_cache: PrefixCache,
+    /// Hardware-class catalog index this container's devices belong to
+    /// (0 in a homogeneous fleet — see `cluster::engine::HardwareClass`).
+    pub class_idx: usize,
 }
 
 impl Instance {
@@ -77,7 +80,14 @@ impl Instance {
             batch_size: 0,
             slots_busy: 0,
             prefix_cache: PrefixCache::new(prefix_budget_bytes, bytes_per_token),
+            class_idx: 0,
         }
+    }
+
+    /// Tag the container with its hardware-class catalog index.
+    pub fn on_class(mut self, class_idx: usize) -> Self {
+        self.class_idx = class_idx;
+        self
     }
 
     /// Assign a role + batch size (group initialization or ratio change).

@@ -26,6 +26,28 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+/// Identity of one prefix stream at simulation granularity: which
+/// scenario it belongs to and which of that scenario's prefix pools it
+/// is. Every prefix-keyed map — the tiered host/HBM cache
+/// (`cluster::hostmem::TieredPrefixCache`), the simulator's
+/// canonical-length memo, the fleet's route-hash memo — keys on this
+/// one type, so the tiers cannot be keyed inconsistently when the host
+/// tier is wired into serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PrefixKey {
+    /// Catalogue index of the scenario the stream belongs to.
+    pub scenario: usize,
+    /// Prefix-pool index within the scenario.
+    pub prefix_id: usize,
+}
+
+impl PrefixKey {
+    /// Key for prefix `prefix_id` of scenario `scenario`.
+    pub fn new(scenario: usize, prefix_id: usize) -> Self {
+        PrefixKey { scenario, prefix_id }
+    }
+}
+
 /// One cached prefix.
 #[derive(Clone, Debug)]
 struct Entry {

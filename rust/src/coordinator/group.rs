@@ -28,6 +28,9 @@ pub struct PdGroup {
     pub connections: BTreeSet<(InstanceId, InstanceId)>,
     /// Serving flag: set once the setup workflow completes.
     pub serving: bool,
+    /// Hardware-class catalog index the group's instances run on
+    /// (0 in a homogeneous fleet — see `cluster::engine::HardwareClass`).
+    pub class_idx: usize,
 }
 
 impl PdGroup {
@@ -40,7 +43,14 @@ impl PdGroup {
             roce_map: BTreeMap::new(),
             connections: BTreeSet::new(),
             serving: false,
+            class_idx: 0,
         }
+    }
+
+    /// Tag the group with its hardware-class catalog index.
+    pub fn on_class(mut self, class_idx: usize) -> Self {
+        self.class_idx = class_idx;
+        self
     }
 
     pub fn add_member(&mut self, id: InstanceId, role: Role, ips: Vec<RoceIp>) {

@@ -29,33 +29,140 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::engine::EngineModel;
+use crate::cluster::engine::{EngineModel, HardwareClass, PrefillItem};
 use crate::workload::traffic::{diurnal_factor, scene_phase, TRAINING_SWITCH_FRACTION};
 
 use super::ratio::{phi_for_ratio, WorkloadProfile};
 
-/// One group's template: its P/D ratio and per-group capability.
+/// One group's template: its P/D ratio, per-group capability, and the
+/// hardware class it runs on.
 #[derive(Clone, Copy, Debug)]
 pub struct GroupTemplate {
     pub n_p: usize,
     pub n_d: usize,
     /// Requests/sec one group sustains (from `ratio::phi_for_ratio`).
     pub group_rps: f64,
+    /// Catalog index of the hardware class the group's instances run on
+    /// (0 in a homogeneous fleet).
+    pub class_idx: usize,
+    /// Requests/sec one group sustains *while holding both SLOs* — equal
+    /// to `group_rps` when the class's analytic TTFT/TPOT estimates meet
+    /// the SLOs given to the builder, `0.0` when the class structurally
+    /// misses one (no request it serves counts as goodput).
+    pub goodput_rps: f64,
 }
 
 impl GroupTemplate {
+    /// Start building a template: engine/hardware, workload profile,
+    /// ratio and (optionally) the SLOs goodput is measured against.
+    pub fn builder() -> GroupTemplateBuilder {
+        GroupTemplateBuilder {
+            engine: EngineModel::default(),
+            class_idx: 0,
+            profile: None,
+            n_p: 1,
+            n_d: 1,
+            slo: None,
+        }
+    }
+
+    /// Positional constructor, superseded by [`GroupTemplate::builder`].
+    #[deprecated(
+        since = "0.10.0",
+        note = "use GroupTemplate::builder().engine(..).profile(..).ratio(..).build()"
+    )]
     pub fn from_profile(
         engine: &EngineModel,
         profile: &WorkloadProfile,
         n_p: usize,
         n_d: usize,
     ) -> Self {
-        let (served, _) = phi_for_ratio(engine, profile, n_p, n_d, f64::INFINITY);
-        GroupTemplate { n_p, n_d, group_rps: served }
+        GroupTemplate::builder().engine(engine).profile(profile).ratio(n_p, n_d).build()
     }
 
     pub fn instances(&self) -> usize {
         self.n_p + self.n_d
+    }
+}
+
+/// Typed builder for [`GroupTemplate`] — adding class/SLO facts without
+/// growing a positional argument list.
+#[derive(Clone, Debug)]
+pub struct GroupTemplateBuilder {
+    engine: EngineModel,
+    class_idx: usize,
+    profile: Option<WorkloadProfile>,
+    n_p: usize,
+    n_d: usize,
+    slo: Option<(f64, f64)>,
+}
+
+impl GroupTemplateBuilder {
+    /// Price the template on this engine profile (homogeneous fleets).
+    pub fn engine(mut self, engine: &EngineModel) -> Self {
+        self.engine = engine.clone();
+        self
+    }
+
+    /// Price the template on catalog class `class_idx` — the template
+    /// remembers the index so groups spawned from it inherit the class.
+    pub fn hardware(mut self, class_idx: usize, class: &HardwareClass) -> Self {
+        self.engine = EngineModel::new(class.engine.clone());
+        self.class_idx = class_idx;
+        self
+    }
+
+    /// The workload the template must carry (required).
+    pub fn profile(mut self, profile: &WorkloadProfile) -> Self {
+        self.profile = Some(*profile);
+        self
+    }
+
+    /// The group's P/D split.
+    pub fn ratio(mut self, n_p: usize, n_d: usize) -> Self {
+        self.n_p = n_p;
+        self.n_d = n_d;
+        self
+    }
+
+    /// Hold the template to a TTFT and TPOT SLO (ms): `goodput_rps`
+    /// becomes 0 when the class's analytic estimates miss either bound.
+    /// Without this call every served request counts as goodput.
+    pub fn slo(mut self, ttft_ms: f64, tpot_ms: f64) -> Self {
+        self.slo = Some((ttft_ms, tpot_ms));
+        self
+    }
+
+    /// Price the template: `group_rps` from the Eq.-1 ratio model, and
+    /// `goodput_rps` gated on the analytic per-class TTFT (a full prefill
+    /// batch plus the transfer estimate) and TPOT (a full decode batch at
+    /// the profile's mean context) holding the SLOs.
+    pub fn build(self) -> GroupTemplate {
+        let profile = match self.profile {
+            Some(p) => p,
+            None => panic!("GroupTemplateBuilder: profile() is required"),
+        };
+        let (served, _) = phi_for_ratio(&self.engine, &profile, self.n_p, self.n_d, f64::INFINITY);
+        let slo_ok = match self.slo {
+            None => true,
+            Some((ttft_slo_ms, tpot_slo_ms)) => {
+                let item = PrefillItem {
+                    prompt_len: profile.prompt_len,
+                    cached_len: profile.cached_len,
+                };
+                let items = vec![item; profile.batch_p.max(1)];
+                let ttft = self.engine.prefill_batch_ms(&items) + profile.xfer_ms;
+                let tpot = self.engine.tpot_ms(profile.batch_d.max(1), profile.ctx_len);
+                ttft <= ttft_slo_ms && tpot <= tpot_slo_ms
+            }
+        };
+        GroupTemplate {
+            n_p: self.n_p,
+            n_d: self.n_d,
+            group_rps: served,
+            class_idx: self.class_idx,
+            goodput_rps: if slo_ok { served } else { 0.0 },
+        }
     }
 }
 
@@ -112,59 +219,252 @@ pub fn plan_day(
     step_h: f64,
     min_groups: usize,
 ) -> Result<Vec<PlannedAction>> {
-    let mut actions = Vec::new();
-    let mut serving = min_groups.max(1);
-    let mut training = false;
-    let phase = scene_phase(scene_idx);
-    let mut t = 0.0;
-    while t < 24.0 {
-        let rate = peak_rps * diurnal_factor(t, phase);
-        // Tidal switch: trough -> release capacity to training.
-        if rate < peak_rps * TRAINING_SWITCH_FRACTION {
-            if !training {
-                training = true;
-                serving = min_groups.max(1);
-                actions.push(PlannedAction {
-                    at_hour: t,
-                    action: Action::SwitchToTraining,
-                    serving_groups: serving,
-                });
-            }
-        } else {
-            if training {
-                training = false;
-                actions.push(PlannedAction {
-                    at_hour: t,
-                    action: Action::SwitchToInference,
-                    serving_groups: serving,
-                });
-            }
-            let need = groups_needed(rate, tpl, 1.2)?.max(min_groups).max(1);
-            if need > serving {
-                actions.push(PlannedAction {
-                    at_hour: t,
-                    action: Action::ScaleOut { groups: need - serving },
-                    serving_groups: need,
-                });
-                serving = need;
-            } else if need < serving {
-                // Hysteresis: shrink only to exact-fit capacity (the 1.2
-                // headroom on the way out vs 1.0 on the way in prevents
-                // flapping while never under-provisioning).
-                let relaxed = groups_needed(rate, tpl, 1.0)?.max(min_groups).max(1);
-                if relaxed < serving {
+    CapacityPlanner.plan_day(scene_idx, peak_rps, tpl, step_h, min_groups)
+}
+
+// ---------------------------------------------------------------------------
+// Planners
+// ---------------------------------------------------------------------------
+
+/// One hardware class a planner can provision a scene's groups on: the
+/// class-priced [`GroupTemplate`] plus the catalog cost fact. The fleet
+/// computes one candidate per catalog class (same P/D ratio search, same
+/// workload profile) and the planner chooses among them.
+#[derive(Clone, Debug)]
+pub struct ClassCandidate {
+    /// Catalog index of the class this candidate prices.
+    pub class_idx: usize,
+    /// The class-priced template (carries `group_rps` and `goodput_rps`).
+    pub template: GroupTemplate,
+    /// The class's relative device-hour price.
+    pub cost_per_hour: f64,
+}
+
+impl ClassCandidate {
+    /// Does this class hold the scene's SLOs (builder's analytic check)?
+    pub fn slo_ok(&self) -> bool {
+        self.template.goodput_rps > 0.0
+    }
+
+    /// SLO-attainment goodput per device-hour: the served rate that
+    /// counts toward the SLO, normalized by group size.
+    pub fn goodput_per_device(&self) -> f64 {
+        self.template.goodput_rps / self.template.instances().max(1) as f64
+    }
+}
+
+/// A capacity-planning policy: how many groups a scene needs, which
+/// hardware class they run on, and where recovery/lending spares come
+/// from. [`CapacityPlanner`] reproduces the pre-trait free functions
+/// bit-for-bit; [`GoodputPlanner`] plans for SLO-attainment goodput per
+/// device-hour instead of raw throughput.
+pub trait Planner {
+    /// Stable policy name (the CLI/pack spelling; logs report it).
+    fn name(&self) -> &'static str;
+
+    /// Groups needed for `rate_rps` with `headroom` slack.
+    fn groups_needed(&self, rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> Result<usize>;
+
+    /// Which catalog class a scene's groups should run on.
+    fn pick_class(&self, candidates: &[ClassCandidate]) -> usize;
+
+    /// Which class funds a recovery substitute or a borrowed scale-out
+    /// for a group currently running on `group_class`.
+    fn spare_class(&self, candidates: &[ClassCandidate], group_class: usize) -> usize;
+
+    /// Simulate one day of tidal traffic for a scenario and produce the
+    /// scaling timeline of Fig. 13b. `peak_rps` is the scene's peak rate;
+    /// decisions are made every `step_h` hours with hysteresis (scale in
+    /// only to exact-fit capacity) to avoid flapping.
+    fn plan_day(
+        &self,
+        scene_idx: usize,
+        peak_rps: f64,
+        tpl: &GroupTemplate,
+        step_h: f64,
+        min_groups: usize,
+    ) -> Result<Vec<PlannedAction>> {
+        let mut actions = Vec::new();
+        let mut serving = min_groups.max(1);
+        let mut training = false;
+        let phase = scene_phase(scene_idx);
+        let mut t = 0.0;
+        while t < 24.0 {
+            let rate = peak_rps * diurnal_factor(t, phase);
+            // Tidal switch: trough -> release capacity to training.
+            if rate < peak_rps * TRAINING_SWITCH_FRACTION {
+                if !training {
+                    training = true;
+                    serving = min_groups.max(1);
                     actions.push(PlannedAction {
                         at_hour: t,
-                        action: Action::ScaleIn { groups: serving - relaxed },
-                        serving_groups: relaxed,
+                        action: Action::SwitchToTraining,
+                        serving_groups: serving,
                     });
-                    serving = relaxed;
+                }
+            } else {
+                if training {
+                    training = false;
+                    actions.push(PlannedAction {
+                        at_hour: t,
+                        action: Action::SwitchToInference,
+                        serving_groups: serving,
+                    });
+                }
+                let need = self.groups_needed(rate, tpl, 1.2)?.max(min_groups).max(1);
+                if need > serving {
+                    actions.push(PlannedAction {
+                        at_hour: t,
+                        action: Action::ScaleOut { groups: need - serving },
+                        serving_groups: need,
+                    });
+                    serving = need;
+                } else if need < serving {
+                    // Hysteresis: shrink only to exact-fit capacity (the 1.2
+                    // headroom on the way out vs 1.0 on the way in prevents
+                    // flapping while never under-provisioning).
+                    let relaxed = self.groups_needed(rate, tpl, 1.0)?.max(min_groups).max(1);
+                    if relaxed < serving {
+                        actions.push(PlannedAction {
+                            at_hour: t,
+                            action: Action::ScaleIn { groups: serving - relaxed },
+                            serving_groups: relaxed,
+                        });
+                        serving = relaxed;
+                    }
                 }
             }
+            t += step_h;
         }
-        t += step_h;
+        Ok(actions)
     }
-    Ok(actions)
+}
+
+/// Today's behavior as a policy object: size by raw `group_rps`, run every
+/// scene on the catalog's first class, fund spares from the group's own
+/// class. Bit-compatible with the free [`groups_needed`]/[`plan_day`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CapacityPlanner;
+
+impl Planner for CapacityPlanner {
+    fn name(&self) -> &'static str {
+        "capacity"
+    }
+
+    fn groups_needed(&self, rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> Result<usize> {
+        groups_needed(rate_rps, tpl, headroom)
+    }
+
+    fn pick_class(&self, candidates: &[ClassCandidate]) -> usize {
+        candidates.first().map(|c| c.class_idx).unwrap_or(0)
+    }
+
+    fn spare_class(&self, _candidates: &[ClassCandidate], group_class: usize) -> usize {
+        group_class
+    }
+}
+
+/// Plans for SLO-attainment goodput per device-hour: scenes run on the
+/// class with the highest goodput per device among those that hold the
+/// SLOs (ties to the cheaper class), spares come from the cheapest class
+/// that still holds the SLO, and sizing uses `goodput_rps` (falling back
+/// to raw capacity when no class holds the SLO — the scene is still
+/// served, it just earns no goodput).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GoodputPlanner;
+
+impl Planner for GoodputPlanner {
+    fn name(&self) -> &'static str {
+        "goodput"
+    }
+
+    fn groups_needed(&self, rate_rps: f64, tpl: &GroupTemplate, headroom: f64) -> Result<usize> {
+        if tpl.goodput_rps.is_finite() && tpl.goodput_rps > 0.0 {
+            let sized = GroupTemplate { group_rps: tpl.goodput_rps, ..*tpl };
+            groups_needed(rate_rps, &sized, headroom)
+        } else {
+            groups_needed(rate_rps, tpl, headroom)
+        }
+    }
+
+    fn pick_class(&self, candidates: &[ClassCandidate]) -> usize {
+        // When at least one class holds the SLO, classes that miss it are
+        // out of the running; when none does, serve as fast as possible
+        // anyway (raw capacity per device — the scene earns no goodput
+        // either way).
+        let any_ok = candidates.iter().any(|c| c.slo_ok());
+        let score = |c: &ClassCandidate| {
+            if any_ok && !c.slo_ok() {
+                f64::NEG_INFINITY
+            } else if any_ok {
+                c.goodput_per_device()
+            } else {
+                c.template.group_rps / c.template.instances().max(1) as f64
+            }
+        };
+        candidates
+            .iter()
+            .max_by(|a, b| {
+                // On equal goodput the cheaper class wins, then the lower
+                // catalog index (max_by keeps the later of equal elements,
+                // so Greater must mean "preferred").
+                score(a)
+                    .total_cmp(&score(b))
+                    .then(b.cost_per_hour.total_cmp(&a.cost_per_hour))
+                    .then(b.class_idx.cmp(&a.class_idx))
+            })
+            .map(|c| c.class_idx)
+            .unwrap_or(0)
+    }
+
+    fn spare_class(&self, candidates: &[ClassCandidate], group_class: usize) -> usize {
+        candidates
+            .iter()
+            .filter(|c| c.slo_ok())
+            .min_by(|a, b| {
+                a.cost_per_hour
+                    .total_cmp(&b.cost_per_hour)
+                    .then(a.class_idx.cmp(&b.class_idx))
+            })
+            .map(|c| c.class_idx)
+            .unwrap_or(group_class)
+    }
+}
+
+/// Which planning policy a fleet runs — the `Copy` config-level handle
+/// behind `--planner capacity|goodput` and the scenario-pack key.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlannerKind {
+    #[default]
+    Capacity,
+    Goodput,
+}
+
+impl PlannerKind {
+    /// Parse the CLI/pack spelling.
+    pub fn parse(s: &str) -> Option<PlannerKind> {
+        match s {
+            "capacity" => Some(PlannerKind::Capacity),
+            "goodput" => Some(PlannerKind::Goodput),
+            _ => None,
+        }
+    }
+
+    /// The CLI/pack spelling (round-trips through [`PlannerKind::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlannerKind::Capacity => "capacity",
+            PlannerKind::Goodput => "goodput",
+        }
+    }
+
+    /// Instantiate the policy object.
+    pub fn build(self) -> Box<dyn Planner> {
+        match self {
+            PlannerKind::Capacity => Box::new(CapacityPlanner),
+            PlannerKind::Goodput => Box::new(GoodputPlanner),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -521,7 +821,7 @@ mod tests {
     fn tpl() -> GroupTemplate {
         let e = EngineModel::default();
         let p = WorkloadProfile::from_means(1800, 1200, 16, 4, 16, 10.0);
-        GroupTemplate::from_profile(&e, &p, 2, 2)
+        GroupTemplate::builder().engine(&e).profile(&p).ratio(2, 2).build()
     }
 
     #[test]
@@ -546,12 +846,12 @@ mod tests {
         // Regression: a zero-capability template divided through to
         // `inf`, which `as usize` saturates to usize::MAX — an absurd
         // "plan" that a caller would happily try to provision.
-        let dead = GroupTemplate { n_p: 2, n_d: 2, group_rps: 0.0 };
+        let t = tpl();
+        let dead = GroupTemplate { group_rps: 0.0, goodput_rps: 0.0, ..t };
         assert!(groups_needed(10.0, &dead, 1.2).is_err());
-        let nan = GroupTemplate { n_p: 1, n_d: 1, group_rps: f64::NAN };
+        let nan = GroupTemplate { group_rps: f64::NAN, goodput_rps: f64::NAN, ..t };
         assert!(groups_needed(10.0, &nan, 1.2).is_err());
         // Invalid queries are errors too, not silent zeros.
-        let t = tpl();
         assert!(groups_needed(f64::INFINITY, &t, 1.2).is_err());
         assert!(groups_needed(10.0, &t, 0.0).is_err());
         // And the planner propagates instead of provisioning usize::MAX.
@@ -741,6 +1041,104 @@ mod tests {
         assert_eq!(l.pool(), 0);
         // 4 seed in service − 2 drained to the bank + 2 borrowed back = 4.
         l.audit(4).unwrap();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_from_profile_matches_builder() {
+        // The one-PR compatibility shim must price identically to the
+        // builder it forwards to.
+        let e = EngineModel::default();
+        let p = WorkloadProfile::from_means(1800, 1200, 16, 4, 16, 10.0);
+        let old = GroupTemplate::from_profile(&e, &p, 2, 2);
+        let new = tpl();
+        assert_eq!(old.group_rps.to_bits(), new.group_rps.to_bits());
+        assert_eq!(old.goodput_rps.to_bits(), new.goodput_rps.to_bits());
+        assert_eq!((old.n_p, old.n_d, old.class_idx), (new.n_p, new.n_d, new.class_idx));
+    }
+
+    #[test]
+    fn builder_slo_gates_goodput() {
+        let e = EngineModel::default();
+        let p = WorkloadProfile::from_means(1800, 1200, 16, 4, 16, 10.0);
+        let b = || GroupTemplate::builder().engine(&e).profile(&p).ratio(2, 2);
+        // No SLO: everything served counts as goodput.
+        let free = b().build();
+        assert_eq!(free.goodput_rps.to_bits(), free.group_rps.to_bits());
+        // Generous SLOs: the default engine holds them, goodput == capacity.
+        let held = b().slo(10_000.0, 1_000.0).build();
+        assert_eq!(held.goodput_rps.to_bits(), held.group_rps.to_bits());
+        // Unholdable SLOs: capacity unchanged, goodput zero.
+        let missed = b().slo(1.0, 0.1).build();
+        assert_eq!(missed.group_rps.to_bits(), free.group_rps.to_bits());
+        assert_eq!(missed.goodput_rps, 0.0);
+        // Hardware selection tags the class index.
+        let hw = HardwareClass::default();
+        let tagged = GroupTemplate::builder().hardware(3, &hw).profile(&p).ratio(2, 2).build();
+        assert_eq!(tagged.class_idx, 3);
+        assert_eq!(tagged.group_rps.to_bits(), free.group_rps.to_bits());
+    }
+
+    #[test]
+    fn capacity_planner_matches_free_functions() {
+        let t = tpl();
+        for mult in [0.0, 0.3, 1.0, 2.7, 6.0] {
+            let rate = t.group_rps * mult;
+            for headroom in [1.0, 1.2] {
+                assert_eq!(
+                    CapacityPlanner.groups_needed(rate, &t, headroom).unwrap(),
+                    groups_needed(rate, &t, headroom).unwrap()
+                );
+            }
+        }
+        let via_trait = CapacityPlanner.plan_day(0, t.group_rps * 6.0, &t, 0.25, 1).unwrap();
+        let via_free = plan_day(0, t.group_rps * 6.0, &t, 0.25, 1).unwrap();
+        assert_eq!(format!("{via_trait:?}"), format!("{via_free:?}"));
+    }
+
+    #[test]
+    fn goodput_planner_picks_slo_class_and_cheapest_spare() {
+        let mk = |class_idx: usize, group_rps: f64, goodput_rps: f64, cost: f64| ClassCandidate {
+            class_idx,
+            template: GroupTemplate { n_p: 2, n_d: 2, group_rps, class_idx, goodput_rps },
+            cost_per_hour: cost,
+        };
+        // Class 0: fastest raw capacity but misses the SLO. Classes 1 and
+        // 2 hold it at equal goodput; 1 is cheaper.
+        let cands = [mk(0, 100.0, 0.0, 0.5), mk(1, 80.0, 80.0, 1.6), mk(2, 80.0, 80.0, 2.0)];
+        assert_eq!(GoodputPlanner.pick_class(&cands), 1, "SLO first, then price");
+        assert_eq!(GoodputPlanner.spare_class(&cands, 0), 1, "cheapest SLO-holding class");
+        assert_eq!(CapacityPlanner.pick_class(&cands), 0, "capacity takes the first class");
+        assert_eq!(CapacityPlanner.spare_class(&cands, 2), 2, "capacity spares in kind");
+        // Nothing holds the SLO: serve on the fastest class anyway, spare
+        // in kind.
+        let none = [mk(0, 100.0, 0.0, 0.5), mk(1, 80.0, 0.0, 1.6)];
+        assert_eq!(GoodputPlanner.pick_class(&none), 0);
+        assert_eq!(GoodputPlanner.spare_class(&none, 1), 1);
+    }
+
+    #[test]
+    fn goodput_sizing_uses_goodput_rps_with_capacity_fallback() {
+        // A class that only *partially* holds the SLO (synthetic: goodput
+        // below capacity) must be sized by what counts, not what fits.
+        let half =
+            GroupTemplate { n_p: 2, n_d: 2, group_rps: 10.0, class_idx: 0, goodput_rps: 5.0 };
+        assert_eq!(GoodputPlanner.groups_needed(10.0, &half, 1.0).unwrap(), 2);
+        assert_eq!(CapacityPlanner.groups_needed(10.0, &half, 1.0).unwrap(), 1);
+        // Zero goodput (class misses the SLO outright): fall back to raw
+        // capacity sizing so the scene is still served.
+        let zero = GroupTemplate { goodput_rps: 0.0, ..half };
+        assert_eq!(GoodputPlanner.groups_needed(10.0, &zero, 1.0).unwrap(), 1);
+    }
+
+    #[test]
+    fn planner_kind_round_trips() {
+        for kind in [PlannerKind::Capacity, PlannerKind::Goodput] {
+            assert_eq!(PlannerKind::parse(kind.as_str()), Some(kind));
+            assert_eq!(kind.build().name(), kind.as_str());
+        }
+        assert_eq!(PlannerKind::parse("greedy"), None);
+        assert_eq!(PlannerKind::default(), PlannerKind::Capacity);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use crate::cluster::engine::EngineModel;
 use crate::cluster::hostmem::{TieredPrefixCache, TierHit};
+use crate::cluster::prefix::PrefixKey;
 use crate::serving::speculative::{k_sweep, DraftPlacement};
 use crate::util::prng::Rng;
 
@@ -60,7 +61,7 @@ pub fn hostmem_ablation() -> HostmemAblation {
             } else {
                 rng.below(n_prefixes_per_scene)
             };
-            let (hit, _ms) = cache.lookup((scene, p), prefix_bytes);
+            let (hit, _ms) = cache.lookup(PrefixKey::new(scene, p), prefix_bytes);
             let _ = hit == TierHit::Hbm;
         }
         (

@@ -17,6 +17,7 @@ pub mod fig04;
 pub mod fig12;
 pub mod fig13;
 pub mod fig14;
+pub mod goodput;
 pub mod headline;
 pub mod routing;
 pub mod scale;
@@ -85,6 +86,9 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         if want(&["d2d", "14e"]) {
             d2d::run(scale, json_dir);
         }
+        if want(&["goodput"]) {
+            goodput::run(scale, json_dir);
+        }
         if want(&["routing"]) {
             routing::run(scale);
         }
@@ -102,7 +106,7 @@ pub fn cmd_repro(args: &ParsedArgs) -> i32 {
         }
     }
     if ran == 0 {
-        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, d2d, routing, scale, headline, all)");
+        eprintln!("unknown figure id '{fig}' (try 1a, 2b, 12d, 14a, fleet, fault, d2d, goodput, routing, scale, headline, all)");
         return 2;
     }
     0

@@ -129,6 +129,10 @@ fn cmd_simulate(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
 /// `--lend` (cross-scene instance lending) `--spares N` (spare pool)
 /// `--detect-ms MS` (fault-detector period, real ms)
 /// `--static` (freeze ratios) `--no-scale` (freeze group counts)
+/// `--planner capacity|goodput` (planning policy: raw capacity, or
+/// SLO-attainment goodput per device-hour — only distinguishable on a
+/// heterogeneous catalog, which ad-hoc runs don't declare; pair it with
+/// a scenario pack's `[[hardware]]` table for a mixed fleet)
 /// `--quiet` (summary only, no timeline)
 /// `--json` (full deterministic JSON report instead of the summary)
 /// `--workers N` (scene-sharded parallel day: one whole `FleetSim` per
@@ -245,6 +249,15 @@ fn cmd_fleet(args: &pd_serve::util::cli::ParsedArgs) -> i32 {
     if args.has("no-scale") {
         cfg.scale_groups = false;
     }
+    cfg.planner = match pd_serve::coordinator::mlops::PlannerKind::parse(
+        args.get_or("planner", "capacity"),
+    ) {
+        Some(p) => p,
+        None => {
+            eprintln!("--planner must be capacity|goodput");
+            return 2;
+        }
+    };
     cfg.route = match pd_serve::serving::router::RouteKind::parse(
         args.get_or("route", "least-loaded"),
     ) {

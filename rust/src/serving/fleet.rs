@@ -14,8 +14,9 @@
 //! 3. migrate instances between the P and D sides of a group — the
 //!    dynamic ratio adjustment, reflected in both the serving pools and
 //!    the group's role map,
-//! 4. plan per-scene capacity from the observed rate
-//!    (`mlops::groups_needed`) and scale groups in/out, registering and
+//! 4. plan per-scene capacity from the observed rate through the
+//!    configured [`Planner`] policy (capacity or SLO-goodput — see
+//!    `coordinator::mlops`) and scale groups in/out, registering and
 //!    removing gateway entrances through `SseRegistry::{add,remove}_entrance`,
 //! 5. release capacity to training at the tidal trough
 //!    (`TRAINING_SWITCH_FRACTION`) and reclaim it on the ramp.
@@ -70,13 +71,15 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::device::{DeviceId, FaultLevel, RoceIp};
-use crate::cluster::engine::{EngineModel, PrefillItem};
+use crate::cluster::engine::{EngineModel, HardwareClass, PrefillItem};
 use crate::cluster::instance::{Instance, InstanceId, InstanceState, Role};
+use crate::cluster::prefix::PrefixKey;
 use crate::coordinator::fault::{detection_delay_ms, FaultEvent, FaultInjector};
 use crate::coordinator::group::{GroupId, PdGroup};
 use crate::coordinator::meta::MetaStore;
 use crate::coordinator::mlops::{
-    groups_needed, rolling_upgrade_waves, GroupTemplate, InstanceLedger, LeaseUse, LedgerReport,
+    rolling_upgrade_waves, ClassCandidate, GroupTemplate, InstanceLedger, LeaseUse, LedgerReport,
+    Planner, PlannerKind,
 };
 use crate::coordinator::ratio::{
     detect_bottleneck, optimal_ratio, Adjustment, DetectorThresholds, WorkloadProfile,
@@ -140,6 +143,12 @@ pub struct FleetConfig {
     pub scenes: Vec<usize>,
     /// Engine performance model shared by every group's simulator.
     pub engine: EngineConfig,
+    /// Hardware-class catalog for heterogeneous fleets. Empty (default)
+    /// means one implicit class built from `engine` — bit-identical to
+    /// the homogeneous fleet day this crate has always produced.
+    pub classes: Vec<HardwareClass>,
+    /// Capacity/goodput planner policy (`--planner capacity|goodput`).
+    pub planner: PlannerKind,
     /// Serving-policy knobs (batch sizes, SLOs, retry pacing).
     pub serving: ServingConfig,
     /// Fleet-wide peak arrival rate; split across scenes by weight and
@@ -219,6 +228,8 @@ impl Default for FleetConfig {
             // (tiny): three shapes with phased peaks.
             scenes: vec![0, 2, 5],
             engine: EngineConfig::default(),
+            classes: Vec::new(),
+            planner: PlannerKind::Capacity,
             serving: ServingConfig::default(),
             peak_total_rps: 40.0,
             hours: 24.0,
@@ -360,7 +371,21 @@ pub struct FleetOutput {
     pub served_curve: Vec<FleetWindow>,
     /// Ordered control-action log.
     pub timeline: Vec<FleetLogEntry>,
+    /// Surviving (non-draining) groups per hardware-class name at end of
+    /// day. A homogeneous day reports its single implicit class.
+    pub class_mix: BTreeMap<String, usize>,
 }
+
+/// Schema version stamped into every `FleetOutput::to_json` report.
+///
+/// Stability contract (see ARCHITECTURE.md "Hardware classes & goodput
+/// planning"): *adding* sibling keys is backwards-compatible and does
+/// **not** bump this number — consumers (`[[assert]]` paths, `bench-diff`,
+/// golden comparisons) must tolerate unknown siblings with a warning, not
+/// a failure. The version bumps only when an existing key is renamed,
+/// removed, or changes meaning/units. The pre-versioned report shape is
+/// retroactively version 1.
+pub const FLEET_SCHEMA_VERSION: usize = 2;
 
 impl FleetOutput {
     /// Requests accounted for (completed + terminated).
@@ -449,7 +474,14 @@ impl FleetOutput {
                 }
             })
             .collect();
+        let class_mix: BTreeMap<String, Json> = self
+            .class_mix
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::from(*v)))
+            .collect();
         jobj! {
+            "schema_version" => FLEET_SCHEMA_VERSION,
+            "class_mix" => Json::Obj(class_mix),
             "injected" => self.injected,
             "completed" => self.completed,
             "timed_out" => self.timed_out,
@@ -602,10 +634,15 @@ impl FleetOutput {
     }
 }
 
-/// Per-scene planning state derived once from the engine model.
+/// Per-scene planning state derived once from the hardware catalog.
 struct ScenePlan {
-    /// Capacity template at the scene's Eq.-1-optimal in-group ratio.
+    /// Capacity template at the picked class's Eq.-1-optimal ratio.
     template: GroupTemplate,
+    /// Catalog index of the class the planner picked for this scene.
+    class_idx: usize,
+    /// One class-priced candidate per catalog class — what the lending
+    /// and recovery spare decisions re-consult mid-day.
+    candidates: Vec<ClassCandidate>,
     /// Analytic healthy-profile reference for the detector:
     /// (E2E ms, T_p share).
     baseline: (f64, f64),
@@ -675,6 +712,12 @@ pub struct FleetSim {
     q: EventQueue<FleetEv>,
     groups: Vec<FleetGroup>,
     plans: BTreeMap<usize, ScenePlan>,
+    /// The hardware-class catalog (one implicit class when `cfg.classes`
+    /// is empty — the homogeneous day).
+    catalog: Vec<HardwareClass>,
+    /// The capacity/goodput policy every sizing and class decision
+    /// routes through.
+    planner: Box<dyn Planner>,
     /// The Zookeeper stand-in the recovery/RoCE workflows run against.
     meta: MetaStore,
     /// Workflow timing knobs (RoCE join, model load) for recoveries.
@@ -692,10 +735,10 @@ pub struct FleetSim {
     next_req_id: u64,
     /// Remaining rolling-upgrade waves (planned once, at trigger time).
     upgrade_waves: Option<VecDeque<Vec<u32>>>,
-    /// Route-hash memo per (scene, prefix_id) — the hash is a pure
+    /// Route-hash memo per (scene, prefix stream) — the hash is a pure
     /// function of the stream, and recomputing it (64 PRNG draws + an
     /// allocation) per arrival would tax the fleet's hottest path.
-    route_hash_memo: BTreeMap<(usize, usize), Option<u64>>,
+    route_hash_memo: BTreeMap<PrefixKey, Option<u64>>,
     // Accounting.
     injected: usize,
     win_injected: usize,
@@ -749,34 +792,61 @@ fn feasible_prefill_batch(
 }
 
 fn scene_plan(
-    engine: &EngineModel,
+    catalog: &[HardwareClass],
+    planner: &dyn Planner,
     serving: &ServingConfig,
     sc: &Scenario,
     group_total: usize,
     xfer_ms: f64,
-) -> (ScenePlan, WorkloadProfile) {
+) -> ScenePlan {
     let prompt = sc.prompt_mean.round() as usize;
     let cached = (sc.prompt_mean * sc.prefix_frac).round() as usize;
     let gen = (sc.gen_mean.round() as usize).max(1);
-    let (bp, ttft_ms) = feasible_prefill_batch(engine, serving, prompt, cached);
     let bd = serving.decode_batch;
-    let profile = WorkloadProfile::from_means(prompt, cached, gen, bp, bd, xfer_ms);
-    let (n_p, n_d) = optimal_ratio(engine, &profile, group_total, 1);
-    let template = GroupTemplate::from_profile(engine, &profile, n_p, n_d);
+    let ttft_slo = serving.ttft_threshold_ms(prompt);
+    // One candidate per catalog class: same ratio search and workload
+    // profile, priced on that class's engine and held to both SLOs.
+    let mut candidates = Vec::with_capacity(catalog.len());
+    for (idx, hc) in catalog.iter().enumerate() {
+        let engine = EngineModel::new(hc.engine.clone());
+        let (bp, _) = feasible_prefill_batch(&engine, serving, prompt, cached);
+        let profile = WorkloadProfile::from_means(prompt, cached, gen, bp, bd, xfer_ms);
+        let (n_p, n_d) = optimal_ratio(&engine, &profile, group_total, 1);
+        let template = GroupTemplate::builder()
+            .hardware(idx, hc)
+            .profile(&profile)
+            .ratio(n_p, n_d)
+            .slo(ttft_slo, serving.tpot_slo_ms)
+            .build();
+        candidates.push(ClassCandidate {
+            class_idx: idx,
+            template,
+            cost_per_hour: hc.cost_per_hour,
+        });
+    }
+    let class_idx = planner.pick_class(&candidates);
+    let template = candidates[class_idx].template;
     assert!(
         template.group_rps.is_finite() && template.group_rps > 0.0,
         "scene '{}' yields a degenerate group template",
         sc.name
     );
-    let e2e = ttft_ms + xfer_ms + engine.tpot_ms(bd, profile.ctx_len) * gen as f64;
-    let plan = ScenePlan {
+    // The detector baseline is priced on the picked class's engine —
+    // identical to the historical single-engine reference when the
+    // catalog is homogeneous.
+    let engine = EngineModel::new(catalog[class_idx].engine.clone());
+    let (_, ttft_ms) = feasible_prefill_batch(&engine, serving, prompt, cached);
+    let ctx_len = prompt + gen / 2;
+    let e2e = ttft_ms + xfer_ms + engine.tpot_ms(bd, ctx_len) * gen as f64;
+    ScenePlan {
         template,
+        class_idx,
+        candidates,
         // Measured TTFT is charged through the D2D handoff, so the
         // healthy-profile reference includes the ξ term too.
         baseline: (e2e, (ttft_ms + xfer_ms) / e2e),
         training: false,
-    };
-    (plan, profile)
+    }
 }
 
 impl FleetSim {
@@ -800,7 +870,14 @@ impl FleetSim {
             "max_groups_per_scene below the per-scene floor"
         );
         assert!(cfg.ms_per_hour > 0.0 && cfg.hours > 0.0);
-        let engine = EngineModel::new(cfg.engine.clone());
+        // Empty catalog = one implicit class from the shared engine: the
+        // homogeneous day, bit-identical to the pre-catalog fleet.
+        let catalog: Vec<HardwareClass> = if cfg.classes.is_empty() {
+            vec![HardwareClass::uniform("default", cfg.engine.clone())]
+        } else {
+            cfg.classes.clone()
+        };
+        let planner = cfg.planner.build();
         let total_weight: f64 = cfg
             .scenes
             .iter()
@@ -810,8 +887,9 @@ impl FleetSim {
         let mut scene_router = BTreeMap::new();
         for &s in &cfg.scenes {
             let xfer_ms = xfer_estimate_ms(cfg.transfer, &cfg.scenarios[s]);
-            let (plan, _) = scene_plan(
-                &engine,
+            let plan = scene_plan(
+                &catalog,
+                planner.as_ref(),
                 &cfg.serving,
                 &cfg.scenarios[s],
                 cfg.group_total,
@@ -825,6 +903,8 @@ impl FleetSim {
             q: EventQueue::new(),
             groups: Vec::new(),
             plans,
+            catalog,
+            planner,
             meta: MetaStore::new(),
             setup: SetupConfig::default(),
             ledger: InstanceLedger::new(0, 0),
@@ -927,13 +1007,14 @@ impl FleetSim {
     }
 
     /// A serving member for a spawning group: stateless container with a
-    /// role and batch size already assumed (setup happens off-path).
-    fn mk_member(&mut self, inst: InstanceId, role: Role) -> Instance {
+    /// role, batch size and hardware class already assumed (setup happens
+    /// off-path).
+    fn mk_member(&mut self, inst: InstanceId, role: Role, class_idx: usize) -> Instance {
         let batch = match role {
             Role::Prefill => self.cfg.serving.prefill_batch,
             Role::Decode => self.cfg.serving.decode_batch,
         };
-        let mut m = self.mk_container(inst);
+        let mut m = self.mk_container(inst).on_class(class_idx);
         m.assume_role(role, batch);
         m.state = InstanceState::Ready;
         m
@@ -957,11 +1038,14 @@ impl FleetSim {
 
     fn spawn_group(&mut self, scene: usize, ratio: (usize, usize), t_ms: f64) -> usize {
         let (n_p, n_d) = ratio;
+        let class_idx = self.plans[&scene].class_idx;
         let sc = &self.cfg.scenarios[scene];
         let sim_cfg = SimConfig {
             n_p,
             n_d,
             engine: self.cfg.engine.clone(),
+            classes: self.cfg.classes.iter().map(|c| c.engine.clone()).collect(),
+            group_class: class_idx,
             serving: self.cfg.serving.clone(),
             scenarios: self.cfg.scenarios.clone(),
             only_scenario: Some(scene),
@@ -978,7 +1062,7 @@ impl FleetSim {
         let sim = Simulation::external(sim_cfg);
         let gid = GroupId(self.next_group_id);
         self.next_group_id += 1;
-        let mut meta = PdGroup::new(gid, sc.service, sc.name);
+        let mut meta = PdGroup::new(gid, sc.service, sc.name).on_class(class_idx);
         let mut members = Vec::with_capacity(n_p + n_d);
         let mut prefill_inst = BTreeMap::new();
         let mut decode_inst = BTreeMap::new();
@@ -986,14 +1070,14 @@ impl FleetSim {
             let inst = InstanceId(self.next_instance_id);
             self.next_instance_id += 1;
             meta.add_member(inst, Role::Prefill, Self::roce_ips(inst));
-            members.push(self.mk_member(inst, Role::Prefill));
+            members.push(self.mk_member(inst, Role::Prefill, class_idx));
             prefill_inst.insert(p, inst);
         }
         for d in 0..n_d {
             let inst = InstanceId(self.next_instance_id);
             self.next_instance_id += 1;
             meta.add_member(inst, Role::Decode, Self::roce_ips(inst));
-            members.push(self.mk_member(inst, Role::Decode));
+            members.push(self.mk_member(inst, Role::Decode, class_idx));
             decode_inst.insert(d, inst);
         }
         // Dynamic RoCE construction: full P×D mesh before serving (§3.2).
@@ -1024,7 +1108,14 @@ impl FleetSim {
             recovering: 0,
         };
         self.groups.push(group);
-        self.log(t_ms, scene, gid.0, format!("group up ({n_p}:{n_d})"));
+        // Heterogeneous fleets log the class; the homogeneous day keeps
+        // its historical log line byte-for-byte.
+        let what = if self.cfg.classes.is_empty() {
+            format!("group up ({n_p}:{n_d})")
+        } else {
+            format!("group up ({n_p}:{n_d}, {})", self.catalog[class_idx].name)
+        };
+        self.log(t_ms, scene, gid.0, what);
         self.groups.len() - 1
     }
 
@@ -1065,7 +1156,7 @@ impl FleetSim {
             let sc = &self.cfg.scenarios[scene];
             *self
                 .route_hash_memo
-                .entry((scene, req.prefix_id))
+                .entry(PrefixKey::new(scene, req.prefix_id))
                 .or_insert_with(|| route_hash(sc, &req))
         } else {
             // Truncated prefix (prompt shorter than the hash depth):
@@ -1165,11 +1256,19 @@ impl FleetSim {
                 if !g.sim.remove_prefill(p) {
                     return false;
                 }
-                let d = g.sim.add_decode();
                 let inst = g
                     .prefill_inst
                     .remove(&p)
                     .expect("prefill entrance has a coordinator instance");
+                // The flipped instance keeps its own hardware class (it
+                // can differ from the group's after a recovery).
+                let class = g
+                    .members
+                    .iter()
+                    .find(|m| m.id == inst)
+                    .map(|m| m.class_idx)
+                    .unwrap_or(g.meta.class_idx);
+                let d = g.sim.add_decode_on(class);
                 g.meta.remove_member(inst);
                 g.meta.add_member(inst, Role::Decode, Self::roce_ips(inst));
                 for (pp, dd) in g.meta.pending_connections_for(inst) {
@@ -1227,7 +1326,14 @@ impl FleetSim {
         if g.sim.decode_commit(d) > 0 {
             return;
         }
-        let p = g.sim.add_prefill();
+        // The flipped instance keeps its own hardware class.
+        let class = g
+            .members
+            .iter()
+            .find(|m| m.id == inst)
+            .map(|m| m.class_idx)
+            .unwrap_or(g.meta.class_idx);
+        let p = g.sim.add_prefill_on(class);
         g.meta.remove_member(inst);
         g.meta.add_member(inst, Role::Prefill, Self::roce_ips(inst));
         for (pp, dd) in g.meta.pending_connections_for(inst) {
@@ -1438,7 +1544,8 @@ impl FleetSim {
         let target = if tidal_trough {
             min_g
         } else {
-            groups_needed(rate, &tpl, self.cfg.headroom)
+            self.planner
+                .groups_needed(rate, &tpl, self.cfg.headroom)
                 .expect("templates validated at construction")
                 .clamp(min_g, self.cfg.max_groups_per_scene)
         };
@@ -1503,7 +1610,8 @@ impl FleetSim {
             let relaxed = if tidal_trough {
                 min_g
             } else {
-                groups_needed(rate, &tpl, 1.0)
+                self.planner
+                    .groups_needed(rate, &tpl, 1.0)
                     .expect("templates validated at construction")
                     .clamp(min_g, self.cfg.max_groups_per_scene)
             };
@@ -1553,7 +1661,9 @@ impl FleetSim {
         while h <= from_hour + 24.0 {
             let rate =
                 scene_rate_rps(sc, scene, h, self.cfg.peak_total_rps, self.total_weight);
-            let need = groups_needed(rate, tpl, self.cfg.headroom)
+            let need = self
+                .planner
+                .groups_needed(rate, tpl, self.cfg.headroom)
                 .map(|n| n.clamp(min_g, self.cfg.max_groups_per_scene))
                 .unwrap_or(self.cfg.max_groups_per_scene);
             if need > active {
@@ -1636,7 +1746,12 @@ impl FleetSim {
             self.ledger.mint(1);
             "emergency mint".to_string()
         };
-        (self.mk_spare(), source)
+        // The substitute's hardware class is the planner's call: capacity
+        // reuses the group's own class, goodput prefers the cheapest
+        // class still holding the SLO.
+        let plan = &self.plans[&scene];
+        let class = self.planner.spare_class(&plan.candidates, plan.class_idx);
+        (self.mk_spare().on_class(class), source)
     }
 
     /// Call in leases nearing their due hour: pool repayment when it
@@ -1815,20 +1930,22 @@ impl FleetSim {
     /// per-instance prefix caches), same coordinator instances re-mapped.
     fn finish_group_upgrade(&mut self, gi: usize, t_ms: f64) {
         let seed = self.rng.next_u64();
-        let (scene, id, ratio, w, old_p, old_d) = {
+        let (scene, id, ratio, w, old_p, old_d, class_idx) = {
             let g = &mut self.groups[gi];
             debug_assert_eq!(g.sim.in_flight(), 0);
             let w = g.sim.take_window();
             let ratio = g.sim.ratio();
             let old_p: Vec<InstanceId> = g.prefill_inst.values().copied().collect();
             let old_d: Vec<InstanceId> = g.decode_inst.values().copied().collect();
-            (g.scene, g.id(), ratio, w, old_p, old_d)
+            (g.scene, g.id(), ratio, w, old_p, old_d, g.meta.class_idx)
         };
         self.totals.merge(&w);
         let sim_cfg = SimConfig {
             n_p: ratio.0,
             n_d: ratio.1,
             engine: self.cfg.engine.clone(),
+            classes: self.cfg.classes.iter().map(|c| c.engine.clone()).collect(),
+            group_class: class_idx,
             serving: self.cfg.serving.clone(),
             scenarios: self.cfg.scenarios.clone(),
             only_scenario: Some(scene),
@@ -2006,13 +2123,21 @@ impl FleetSim {
             return;
         };
         let g = &mut self.groups[gi];
+        // The substitute serves on its own hardware class (the planner's
+        // spare decision), which can differ from the group's class.
+        let class = g
+            .members
+            .iter()
+            .find(|m| m.id == inst)
+            .map(|m| m.class_idx)
+            .unwrap_or(g.meta.class_idx);
         match role {
             Role::Prefill => {
-                let p = g.sim.add_prefill();
+                let p = g.sim.add_prefill_on(class);
                 g.prefill_inst.insert(p, inst);
             }
             Role::Decode => {
-                let d = g.sim.add_decode();
+                let d = g.sim.add_decode_on(class);
                 g.decode_inst.insert(d, inst);
             }
         }
@@ -2071,6 +2196,11 @@ impl FleetSim {
                 (g.scene, n_p, n_d)
             })
             .collect();
+        let mut class_mix: BTreeMap<String, usize> = BTreeMap::new();
+        for g in self.groups.iter().filter(|g| !g.draining) {
+            let name = self.catalog[g.meta.class_idx].name.clone();
+            *class_mix.entry(name).or_insert(0) += 1;
+        }
         FleetOutput {
             injected: self.injected,
             completed: totals.completed,
@@ -2106,6 +2236,7 @@ impl FleetSim {
             final_ratios,
             served_curve: self.served_curve,
             timeline: self.timeline,
+            class_mix,
         }
     }
 }
@@ -2601,6 +2732,88 @@ mod tests {
                     return Err(format!(
                         "scrapped {} != fatal faults {}",
                         out.ledger.scrapped, out.faults_fatal
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_class_fleet_is_planner_invariant() {
+        // On a single-class catalog there is no class decision to make
+        // and goodput sizing degenerates to capacity sizing, so the two
+        // planners must produce byte-identical `fleet --json` reports.
+        let base = FleetConfig {
+            classes: vec![HardwareClass::uniform("only", EngineConfig::default())],
+            ..small_cfg()
+        };
+        let cap = FleetConfig { planner: PlannerKind::Capacity, ..base.clone() };
+        let good = FleetConfig { planner: PlannerKind::Goodput, ..base };
+        let a = FleetSim::new(cap).run().to_json().to_string_pretty();
+        let b = FleetSim::new(good).run().to_json().to_string_pretty();
+        assert_eq!(a, b, "planner choice changed a single-class day");
+    }
+
+    /// `EngineConfig::default()` slowed by `f` on its dominant terms —
+    /// a previous-generation hardware class.
+    fn slowed(f: f64) -> EngineConfig {
+        let e = EngineConfig::default();
+        EngineConfig {
+            prefill_base_ms: e.prefill_base_ms * f,
+            prefill_per_token_ms: e.prefill_per_token_ms * f,
+            decode_base_ms: e.decode_base_ms * f,
+            decode_per_row_ms: e.decode_per_row_ms * f,
+            ..e
+        }
+    }
+
+    #[test]
+    fn prop_goodput_planner_never_loses_slo_attainment() {
+        // At equal device budget (frozen group counts, identical arrival
+        // streams) the goodput planner's SLO attainment is never below
+        // the capacity planner's, for any random mixed-class fleet.
+        let cfg = crate::util::prop::Config { cases: 4, ..Default::default() };
+        crate::util::prop::check(
+            "fleet-goodput-dominance",
+            &cfg,
+            |r| {
+                let slow = 2.0 + r.f64() * 6.0;
+                (slow, r.next_u64())
+            },
+            |&(slow, seed)| {
+                let classes = vec![
+                    // The older generation first: a class-blind pick
+                    // lands on it.
+                    HardwareClass::uniform("gen1", slowed(slow)),
+                    HardwareClass::uniform("gen2", EngineConfig::default()),
+                ];
+                let base = FleetConfig {
+                    scenes: vec![2, 5],
+                    peak_total_rps: 24.0,
+                    hours: 6.0,
+                    ms_per_hour: 1_000.0,
+                    control_period_ms: 1_000.0,
+                    slice_ms: 500.0,
+                    scale_groups: false,
+                    classes,
+                    seed,
+                    ..Default::default()
+                };
+                let cap = FleetConfig { planner: PlannerKind::Capacity, ..base.clone() };
+                let good = FleetConfig { planner: PlannerKind::Goodput, ..base };
+                let a = FleetSim::new(cap).run();
+                let b = FleetSim::new(good).run();
+                if a.injected != b.injected {
+                    return Err(format!(
+                        "paired arrivals diverged: {} vs {}",
+                        a.injected, b.injected
+                    ));
+                }
+                if b.slo_attainment + 1e-9 < a.slo_attainment {
+                    return Err(format!(
+                        "goodput planner lost: {} vs capacity {}",
+                        b.slo_attainment, a.slo_attainment
                     ));
                 }
                 Ok(())

@@ -25,6 +25,8 @@
 //! renders byte-identical JSON for every `--workers N`.
 #![deny(missing_docs)]
 
+use crate::cluster::engine::HardwareClass;
+use crate::coordinator::mlops::PlannerKind;
 use crate::serving::fleet::{FleetConfig, FleetOutput};
 use crate::serving::router::RouteKind;
 use crate::serving::shard::run_sharded;
@@ -55,6 +57,7 @@ const SCHEMA: Schema<'static> = Schema {
                 "adjust_ratio",
                 "scale_groups",
                 "headroom",
+                "planner",
             ],
         ),
         (
@@ -81,6 +84,7 @@ const SCHEMA: Schema<'static> = Schema {
                 "retrieval_queue",
                 "local_queue_cap",
                 "report_period_ms",
+                "tpot_slo_ms",
             ],
         ),
         ("faults", &["per_week", "detect_ms"]),
@@ -88,6 +92,21 @@ const SCHEMA: Schema<'static> = Schema {
         ("upgrade", &["at_minutes", "wave"]),
     ],
     arrays: &[
+        (
+            "hardware",
+            &[
+                "name",
+                "hbm_gb",
+                "cost_per_hour",
+                "prefill_base_ms",
+                "prefill_per_token_ms",
+                "prefill_quad_ms",
+                "decode_base_ms",
+                "decode_per_row_ms",
+                "decode_per_ctx_token_us",
+                "batch_efficiency",
+            ],
+        ),
         (
             "scene",
             &[
@@ -108,8 +127,10 @@ const SCHEMA: Schema<'static> = Schema {
 /// Report metrics an `[[assert]]` row may bound: the numeric top-level
 /// keys of `FleetOutput::to_json`, the `ledger.*` counters,
 /// `ledger.balanced` (bool, bound with `eq`) and `ledger.leases` (bound
-/// by its length).
+/// by its length). `class_mix.<name>` paths are additionally accepted
+/// for any class name (the surviving-group count per hardware class).
 pub const ASSERT_METRICS: &[&str] = &[
+    "schema_version",
     "injected",
     "completed",
     "timed_out",
@@ -145,6 +166,46 @@ pub const ASSERT_METRICS: &[&str] = &[
     "ledger.leases",
 ];
 
+/// Top-level report keys this version of the pack schema knows about. A
+/// report written by a newer schema may carry more; [`ScenarioPack::check_asserts`]
+/// warns about — and otherwise ignores — unknown siblings, per the
+/// `schema_version` stability contract (additive keys must never break
+/// an older consumer).
+pub const KNOWN_REPORT_KEYS: &[&str] = &[
+    "schema_version",
+    "class_mix",
+    "injected",
+    "completed",
+    "timed_out",
+    "rps",
+    "slo_attainment",
+    "mean_ttft_ms",
+    "mean_e2e_ms",
+    "xfers",
+    "mean_xfer_ms",
+    "mean_xfer_exposed_ms",
+    "d2d_utilization",
+    "adjustments",
+    "scale_outs",
+    "scale_ins",
+    "training_switches",
+    "upgraded_groups",
+    "faults_seen",
+    "faults_fatal",
+    "recoveries",
+    "recovery_reports",
+    "protected",
+    "scale_deferred",
+    "d2d_deferrals",
+    "lease_calls",
+    "end_hour",
+    "peak_instances",
+    "ledger",
+    "final_ratios",
+    "served_curve",
+    "timeline",
+];
+
 /// Ad-hoc `pdserve fleet` flags a pack replaces; any of them alongside
 /// `--scenario` is a usage error ([`conflicting_flag`]). `--workers`,
 /// `--json` and `--quiet` stay valid: they change how the day runs or
@@ -171,6 +232,7 @@ pub const ADHOC_FLEET_FLAGS: &[&str] = &[
     "config",
     "ecmp",
     "d2d-response",
+    "planner",
 ];
 
 /// The `[day]` table: clock, load and control cadence of the day.
@@ -215,6 +277,8 @@ pub struct FleetSpec {
     pub scale_groups: bool,
     /// Scale-out headroom (hysteresis against scale-in).
     pub headroom: f64,
+    /// Planning policy: raw capacity or SLO-attainment goodput.
+    pub planner: PlannerKind,
 }
 
 /// The optional `[engine]` table: perf-model constant overrides for
@@ -293,6 +357,8 @@ pub struct ServingOverride {
     pub local_queue_cap: Option<usize>,
     /// Scheduler report period for the baseline global scheduler (ms).
     pub report_period_ms: Option<f64>,
+    /// TPOT SLO goodput planning holds decode to (ms/token).
+    pub tpot_slo_ms: Option<f64>,
 }
 
 impl ServingOverride {
@@ -330,7 +396,28 @@ impl ServingOverride {
         if let Some(v) = self.report_period_ms {
             cfg.report_period_ms = v;
         }
+        if let Some(v) = self.tpot_slo_ms {
+            cfg.tpot_slo_ms = v;
+        }
     }
+}
+
+/// One `[[hardware]]` entry: a named hardware class for heterogeneous
+/// fleets. Row order is the catalog order ([`HardwareClass`] index 0 is
+/// the first row); a pack without the table runs one implicit class
+/// built from `[engine]`. Each row's engine keys override the pack's
+/// (possibly `[engine]`-overridden) base engine, so a pack can state the
+/// common model once and per-class deltas per row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareSpec {
+    /// Class name (unique across rows; reported in logs and `class_mix`).
+    pub name: String,
+    /// HBM per device (GB); defaults to the catalog default (64).
+    pub hbm_gb: Option<f64>,
+    /// Relative device-hour price; defaults to 1.
+    pub cost_per_hour: Option<f64>,
+    /// Per-class engine perf-model overrides on the pack's base engine.
+    pub engine: EngineOverride,
 }
 
 /// One `[[scene]]` entry: a standard scenario by name plus overrides for
@@ -409,6 +496,8 @@ pub struct ScenarioPack {
     pub engine: EngineOverride,
     /// Serving-policy overrides.
     pub serving: ServingOverride,
+    /// Hardware classes, in catalog order (empty = one implicit class).
+    pub hardware: Vec<HardwareSpec>,
     /// The day's scenes, in pack order.
     pub scenes: Vec<SceneSpec>,
     /// Fault injection.
@@ -534,6 +623,15 @@ impl ScenarioPack {
                 ));
             }
         };
+        let planner_str = doc.try_str("fleet", "planner")?.unwrap_or("capacity");
+        let Some(planner) = PlannerKind::parse(planner_str) else {
+            return Err(at_key(
+                &doc,
+                "fleet",
+                "planner",
+                format!("'planner' must be capacity|goodput (got '{planner_str}')"),
+            ));
+        };
         let fleet = FleetSpec {
             ratio: (parts[0], parts[1]),
             min_groups,
@@ -551,6 +649,7 @@ impl ScenarioPack {
                 "headroom",
                 doc.try_f64("fleet", "headroom")?.unwrap_or(1.2),
             )?,
+            planner,
         };
 
         // Optional perf-model overrides. Every set key must be positive
@@ -610,7 +709,68 @@ impl ScenarioPack {
             retrieval_queue: opt_count("serving", "retrieval_queue")?,
             local_queue_cap: opt_count("serving", "local_queue_cap")?,
             report_period_ms: opt_pos("serving", "report_period_ms")?,
+            tpot_slo_ms: opt_pos("serving", "tpot_slo_ms")?,
         };
+
+        let mut hardware: Vec<HardwareSpec> = Vec::new();
+        for e in doc.arrays.get("hardware").map(Vec::as_slice).unwrap_or(&[]) {
+            let name = e.req_str("hardware", "name")?.to_string();
+            if name.is_empty() {
+                return Err(format!(
+                    "line {}: 'name' must not be empty",
+                    e.key_lines.get("name").copied().unwrap_or(e.line)
+                ));
+            }
+            if hardware.iter().any(|h| h.name == name) {
+                return Err(format!(
+                    "line {}: duplicate [[hardware]] name '{name}' — class names must be unique",
+                    e.line
+                ));
+            }
+            let row_pos = |key: &str| -> Result<Option<f64>, String> {
+                match e.try_f64("hardware", key)? {
+                    Some(v) if v.is_finite() && v > 0.0 => Ok(Some(v)),
+                    Some(_) => Err(format!(
+                        "line {}: '{key}' must be a finite number > 0",
+                        e.key_lines.get(key).copied().unwrap_or(e.line)
+                    )),
+                    None => Ok(None),
+                }
+            };
+            let row_nonneg = |key: &str| -> Result<Option<f64>, String> {
+                match e.try_f64("hardware", key)? {
+                    Some(v) if v.is_finite() && v >= 0.0 => Ok(Some(v)),
+                    Some(_) => Err(format!(
+                        "line {}: '{key}' must be a finite number >= 0",
+                        e.key_lines.get(key).copied().unwrap_or(e.line)
+                    )),
+                    None => Ok(None),
+                }
+            };
+            let row_engine = EngineOverride {
+                prefill_base_ms: row_pos("prefill_base_ms")?,
+                prefill_per_token_ms: row_pos("prefill_per_token_ms")?,
+                prefill_quad_ms: row_nonneg("prefill_quad_ms")?,
+                decode_base_ms: row_pos("decode_base_ms")?,
+                decode_per_row_ms: row_pos("decode_per_row_ms")?,
+                decode_per_ctx_token_us: row_nonneg("decode_per_ctx_token_us")?,
+                batch_efficiency: row_pos("batch_efficiency")?,
+            };
+            if let Some(be) = row_engine.batch_efficiency {
+                if be > 1.0 {
+                    return Err(format!(
+                        "line {}: 'batch_efficiency' must be in (0, 1]",
+                        e.key_lines.get("batch_efficiency").copied().unwrap_or(e.line)
+                    ));
+                }
+            }
+            hardware.push(HardwareSpec {
+                name,
+                hbm_gb: row_pos("hbm_gb")?,
+                cost_per_hour: row_pos("cost_per_hour")?,
+                engine: row_engine,
+            });
+        }
 
         let catalogue = crate::workload::standard_scenarios();
         let known_scenes: Vec<&str> = catalogue.iter().map(|s| s.name).collect();
@@ -724,9 +884,11 @@ impl ScenarioPack {
         let mut asserts = Vec::new();
         for e in doc.arrays.get("assert").map(Vec::as_slice).unwrap_or(&[]) {
             let metric = e.req_str("assert", "metric")?.to_string();
-            if !ASSERT_METRICS.contains(&metric.as_str()) {
+            let known = ASSERT_METRICS.contains(&metric.as_str())
+                || metric.strip_prefix("class_mix.").is_some_and(|n| !n.is_empty());
+            if !known {
                 return Err(format!(
-                    "line {}: unknown assert metric '{metric}' (known: {})",
+                    "line {}: unknown assert metric '{metric}' (known: {}, plus class_mix.<name>)",
                     e.key_lines.get("metric").copied().unwrap_or(e.line),
                     ASSERT_METRICS.join(", ")
                 ));
@@ -771,6 +933,7 @@ impl ScenarioPack {
             fleet,
             engine,
             serving,
+            hardware,
             scenes,
             faults,
             lend,
@@ -824,6 +987,7 @@ impl ScenarioPack {
         let _ = writeln!(s, "adjust_ratio = {}", self.fleet.adjust_ratio);
         let _ = writeln!(s, "scale_groups = {}", self.fleet.scale_groups);
         let _ = writeln!(s, "headroom = {}", self.fleet.headroom);
+        let _ = writeln!(s, "planner = \"{}\"", self.fleet.planner.as_str());
         if !self.engine.is_empty() {
             let _ = writeln!(s, "\n[engine]");
             let e = &self.engine;
@@ -849,6 +1013,7 @@ impl ScenarioPack {
                 ("ttft_slo_floor_ms", sv.ttft_slo_floor_ms),
                 ("retry_interval_ms", sv.retry_interval_ms),
                 ("report_period_ms", sv.report_period_ms),
+                ("tpot_slo_ms", sv.tpot_slo_ms),
             ] {
                 if let Some(v) = v {
                     let _ = writeln!(s, "{k} = {v}");
@@ -860,6 +1025,30 @@ impl ScenarioPack {
                 ("decode_batch", sv.decode_batch),
                 ("retrieval_queue", sv.retrieval_queue),
                 ("local_queue_cap", sv.local_queue_cap),
+            ] {
+                if let Some(v) = v {
+                    let _ = writeln!(s, "{k} = {v}");
+                }
+            }
+        }
+        for h in &self.hardware {
+            let _ = writeln!(s, "\n[[hardware]]");
+            let _ = writeln!(s, "name = \"{}\"", h.name);
+            if let Some(v) = h.hbm_gb {
+                let _ = writeln!(s, "hbm_gb = {v}");
+            }
+            if let Some(v) = h.cost_per_hour {
+                let _ = writeln!(s, "cost_per_hour = {v}");
+            }
+            let e = &h.engine;
+            for (k, v) in [
+                ("prefill_base_ms", e.prefill_base_ms),
+                ("prefill_per_token_ms", e.prefill_per_token_ms),
+                ("prefill_quad_ms", e.prefill_quad_ms),
+                ("decode_base_ms", e.decode_base_ms),
+                ("decode_per_row_ms", e.decode_per_row_ms),
+                ("decode_per_ctx_token_us", e.decode_per_ctx_token_us),
+                ("batch_efficiency", e.batch_efficiency),
             ] {
                 if let Some(v) = v {
                     let _ = writeln!(s, "{k} = {v}");
@@ -925,12 +1114,26 @@ impl ScenarioPack {
     /// listed in pack order, everything else mapped 1:1. Engine/serving
     /// perf-model constants start from their calibrated defaults; the
     /// optional `[engine]`/`[serving]` tables override individual keys
-    /// for hardware-class what-ifs.
+    /// for hardware-class what-ifs. `[[hardware]]` rows compile, in
+    /// order, into the [`HardwareClass`] catalog: each row applies its
+    /// engine keys on top of the pack's (possibly `[engine]`-overridden)
+    /// base engine.
     pub fn compile(&self) -> FleetConfig {
         let mut engine = crate::util::config::EngineConfig::default();
         self.engine.apply(&mut engine);
         let mut serving = crate::util::config::ServingConfig::default();
         self.serving.apply(&mut serving);
+        let mut classes = Vec::with_capacity(self.hardware.len());
+        for h in &self.hardware {
+            let mut class_engine = engine.clone();
+            h.engine.apply(&mut class_engine);
+            classes.push(HardwareClass {
+                name: h.name.clone(),
+                engine: class_engine,
+                hbm_gb: h.hbm_gb.unwrap_or(64.0),
+                cost_per_hour: h.cost_per_hour.unwrap_or(1.0),
+            });
+        }
         let mut scenarios = crate::workload::standard_scenarios();
         let mut scenes = Vec::with_capacity(self.scenes.len());
         for spec in &self.scenes {
@@ -976,6 +1179,8 @@ impl ScenarioPack {
             adjust_ratio: self.fleet.adjust_ratio,
             scale_groups: self.fleet.scale_groups,
             headroom: self.fleet.headroom,
+            classes,
+            planner: self.fleet.planner,
             route: self.fleet.route,
             transfer: self.fleet.transfer,
             spray: self.fleet.spray,
@@ -1002,8 +1207,22 @@ impl ScenarioPack {
 
     /// Evaluate every `[[assert]]` row against the day's JSON report.
     /// Returns the number of rows checked; the first violated bound is an
-    /// error naming the pack, the assertion and the actual value.
+    /// error naming the pack, the assertion and the actual value. Report
+    /// keys this schema version does not know ([`KNOWN_REPORT_KEYS`])
+    /// draw a warning and are otherwise ignored — a newer report must
+    /// stay consumable by an older pack.
     pub fn check_asserts(&self, report: &Json) -> Result<usize, String> {
+        if let Json::Obj(map) = report {
+            for key in map.keys() {
+                if !KNOWN_REPORT_KEYS.contains(&key.as_str()) {
+                    eprintln!(
+                        "warning: pack '{}': unknown report key '{key}' (newer report schema?) \
+                         — ignored",
+                        self.name
+                    );
+                }
+            }
+        }
         let fmt = |x: f64| Json::Num(x).to_string_pretty();
         for a in &self.asserts {
             let path: Vec<&str> = a.metric.split('.').collect();
@@ -1147,6 +1366,8 @@ min = 1
         assert!(!p.fleet.d2d_response);
         assert!(p.engine.is_empty());
         assert!(p.serving.is_empty());
+        assert!(p.hardware.is_empty());
+        assert_eq!(p.fleet.planner, PlannerKind::Capacity);
         assert!(!p.lend);
         assert!(p.upgrade.is_none());
         assert_eq!(p.scenes.len(), 1);
@@ -1262,6 +1483,68 @@ wave = 2
         // The override tables survive the TOML roundtrip.
         let back = ScenarioPack::parse(&p.to_toml()).unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn hardware_classes_and_planner_parse_compile_and_roundtrip() {
+        let text = format!(
+            "{MINI}\n[fleet]\nplanner = \"goodput\"\n\n\
+             [engine]\nprefill_base_ms = 20\n\n\
+             [serving]\ntpot_slo_ms = 120\n\n\
+             [[hardware]]\nname = \"gen1\"\nhbm_gb = 32\ncost_per_hour = 0.5\n\
+             decode_per_row_ms = 0.8\n\n\
+             [[hardware]]\nname = \"gen2\"\n"
+        );
+        let p = ScenarioPack::parse(&text).unwrap();
+        assert_eq!(p.fleet.planner, PlannerKind::Goodput);
+        assert_eq!(p.serving.tpot_slo_ms, Some(120.0));
+        assert_eq!(p.hardware.len(), 2);
+        assert_eq!(p.hardware[0].name, "gen1");
+        assert_eq!(p.hardware[0].engine.decode_per_row_ms, Some(0.8));
+        let cfg = p.compile();
+        assert_eq!(cfg.planner, PlannerKind::Goodput);
+        assert_eq!(cfg.serving.tpot_slo_ms, 120.0);
+        assert_eq!(cfg.classes.len(), 2);
+        // Row overrides stack on the pack's [engine]-overridden base.
+        assert_eq!(cfg.classes[0].name, "gen1");
+        assert_eq!(cfg.classes[0].engine.prefill_base_ms, 20.0);
+        assert_eq!(cfg.classes[0].engine.decode_per_row_ms, 0.8);
+        assert_eq!(cfg.classes[0].hbm_gb, 32.0);
+        assert_eq!(cfg.classes[0].cost_per_hour, 0.5);
+        // A bare row inherits the base engine and the catalog defaults.
+        assert_eq!(cfg.classes[1].engine.prefill_base_ms, 20.0);
+        assert_eq!(cfg.classes[1].hbm_gb, 64.0);
+        assert_eq!(cfg.classes[1].cost_per_hour, 1.0);
+        // The new tables survive the TOML roundtrip.
+        let back = ScenarioPack::parse(&p.to_toml()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn bad_planner_and_bad_hardware_rows_are_rejected() {
+        let text = format!("{MINI}\n[fleet]\nplanner = \"cheapest\"\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'planner' must be capacity|goodput"), "got: {err}");
+        let text = format!("{MINI}\n[[hardware]]\nname = \"a\"\n\n[[hardware]]\nname = \"a\"\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("duplicate [[hardware]] name 'a'"), "got: {err}");
+        let text = format!("{MINI}\n[[hardware]]\nname = \"a\"\nhbm_gb = -1\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'hbm_gb' must be a finite number > 0"), "got: {err}");
+        let text = format!("{MINI}\n[[hardware]]\nname = \"a\"\nbatch_efficiency = 1.5\n");
+        let err = ScenarioPack::parse(&text).unwrap_err();
+        assert!(err.contains("'batch_efficiency' must be in (0, 1]"), "got: {err}");
+    }
+
+    #[test]
+    fn class_mix_assert_paths_are_accepted() {
+        let text = MINI.replace("metric = \"injected\"", "metric = \"class_mix.gen2\"");
+        let p = ScenarioPack::parse(&text).unwrap();
+        assert_eq!(p.asserts[0].metric, "class_mix.gen2");
+        // The bare prefix is not a metric.
+        let bad = MINI.replace("metric = \"injected\"", "metric = \"class_mix.\"");
+        let err = ScenarioPack::parse(&bad).unwrap_err();
+        assert!(err.contains("unknown assert metric 'class_mix.'"), "got: {err}");
     }
 
     #[test]

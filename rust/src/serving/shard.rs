@@ -62,6 +62,7 @@
 //! cannot bypass this oracle.
 #![deny(missing_docs)]
 
+use std::collections::BTreeMap;
 use std::thread;
 
 use crate::coordinator::mlops::LedgerReport;
@@ -188,6 +189,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         balanced: true,
     };
     let mut next_lease_id = 0u64;
+    let mut class_mix: BTreeMap<String, usize> = BTreeMap::new();
     for (i, o) in outs.iter().enumerate() {
         injected += o.injected;
         completed += o.completed;
@@ -220,6 +222,10 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         peak_instances += o.peak_instances;
         if i == 0 {
             end_hour = o.end_hour;
+        }
+        // Class mix sums per name: every shard's surviving groups count.
+        for (name, n) in &o.class_mix {
+            *class_mix.entry(name.clone()).or_insert(0) += n;
         }
         ledger.seed_total += o.ledger.seed_total;
         ledger.minted += o.ledger.minted;
@@ -327,6 +333,7 @@ fn merge(cfg: &FleetConfig, outs: Vec<FleetOutput>) -> FleetOutput {
         final_ratios,
         served_curve,
         timeline,
+        class_mix,
     }
 }
 

@@ -17,7 +17,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::engine::{EngineModel, PrefillItem};
-use crate::cluster::prefix::SharedPrefixCache;
+use crate::cluster::prefix::{PrefixKey, SharedPrefixCache};
 use crate::gateway::baseline::StaleQueueScheduler;
 use crate::gateway::forward::{ForwardDecision, OnDemandForwarder};
 use crate::gateway::sse::SseRegistry;
@@ -90,8 +90,19 @@ pub struct SimConfig {
     pub n_p: usize,
     /// Decode instances at start.
     pub n_d: usize,
-    /// Execution-time model (prefill batch / decode iteration costs).
+    /// Execution-time model (prefill batch / decode iteration costs) for
+    /// a homogeneous group (and the fallback when `classes` is empty).
     pub engine: EngineConfig,
+    /// Heterogeneous hardware catalog: one engine profile per hardware
+    /// class, indexed by each instance's class tag. Empty means the group
+    /// is homogeneous on `engine` — bit-identical to the pre-catalog
+    /// behavior. Non-empty means every instance is priced from
+    /// `classes[class]` and `engine` is not consulted.
+    pub classes: Vec<EngineConfig>,
+    /// Class index newly created instances default to (the initial pools
+    /// and `add_prefill`/`add_decode`; cross-class spares use
+    /// `add_prefill_on`/`add_decode_on`).
+    pub group_class: usize,
     /// RDMA wire model for the D2D transfer.
     pub rdma: RdmaModel,
     /// Host/HBM-side assembly costs around the wire (gather/placement) —
@@ -154,6 +165,8 @@ impl Default for SimConfig {
             n_p: 4,
             n_d: 4,
             engine: EngineConfig::default(),
+            classes: Vec::new(),
+            group_class: 0,
             rdma: RdmaModel::default(),
             assembly: AssemblyModel::default(),
             serving: ServingConfig::default(),
@@ -356,10 +369,13 @@ struct PState {
     /// batch admission, and the source of the hit length credited back
     /// into prefill service time (cached tokens are not recomputed).
     prefix: SharedPrefixCache,
+    /// Hardware-class index pricing this instance's prefill batches
+    /// (into `Simulation::engines`).
+    class: usize,
 }
 
 impl PState {
-    fn new(prefix_budget_bytes: usize, bytes_per_token: usize) -> Self {
+    fn new(prefix_budget_bytes: usize, bytes_per_token: usize, class: usize) -> Self {
         PState {
             alive: true,
             busy: false,
@@ -369,6 +385,7 @@ impl PState {
             busy_ms: 0.0,
             window_open: false,
             prefix: SharedPrefixCache::new(prefix_budget_bytes, bytes_per_token),
+            class,
         }
     }
 }
@@ -381,16 +398,19 @@ struct DState {
     /// Transfers in flight toward this instance.
     reserved: usize,
     iter_scheduled: bool,
+    /// Hardware-class index pricing this instance's decode iterations.
+    class: usize,
 }
 
 impl DState {
-    fn new() -> Self {
+    fn new(class: usize) -> Self {
         DState {
             alive: true,
             active: Vec::new(),
             retrieval: VecDeque::new(),
             reserved: 0,
             iter_scheduled: false,
+            class,
         }
     }
 }
@@ -500,13 +520,14 @@ fn prefill_accepts(
     arena: &[Vec<i32>],
     ps: &[PState],
     reqs: &[ReqState],
-    engine: &EngineModel,
+    engines: &[EngineModel],
     prefill_batch: usize,
     p: usize,
     id: u64,
     now: f64,
 ) -> bool {
     let st = &ps[p];
+    let engine = &engines[st.class];
     let bp = prefill_batch;
     if !st.alive || st.busy || st.accepted.len() >= bp || st.awaiting >= bp {
         return false;
@@ -544,7 +565,10 @@ enum Ev {
 /// workloads) or [`Simulation::external`] (fleet mode).
 pub struct Simulation {
     cfg: SimConfig,
-    engine: EngineModel,
+    /// One execution-time model per hardware class (a single entry for a
+    /// homogeneous group); instances price their work through their
+    /// `class` tag.
+    engines: Vec<EngineModel>,
     q: EventQueue<Ev>,
     reqs: Vec<ReqState>,
     ps: Vec<PState>,
@@ -561,7 +585,7 @@ pub struct Simulation {
     /// referenced by id from every `ReqState` of that stream.
     prefix_arena: Vec<Vec<i32>>,
     /// Stream → arena-slot memo behind the interning.
-    prefix_memo: BTreeMap<(usize, usize), u32>,
+    prefix_memo: BTreeMap<PrefixKey, u32>,
     baseline: StaleQueueScheduler,
     pending: VecDeque<u64>, // gateway-held (on-demand)
     /// Requests in `AwaitTransfer` (all decodes were saturated) — retried
@@ -603,11 +627,16 @@ pub struct Simulation {
 impl Simulation {
     /// Build a simulation in its initial state (no events queued yet).
     pub fn new(cfg: SimConfig) -> Self {
-        let engine = EngineModel::new(cfg.engine.clone());
+        let engines: Vec<EngineModel> = if cfg.classes.is_empty() {
+            vec![EngineModel::new(cfg.engine.clone())]
+        } else {
+            cfg.classes.iter().map(|c| EngineModel::new(c.clone())).collect()
+        };
+        let class0 = cfg.group_class.min(engines.len() - 1);
         let ps = (0..cfg.n_p)
-            .map(|_| PState::new(cfg.prefix_budget_bytes, cfg.kv_bytes_per_token))
+            .map(|_| PState::new(cfg.prefix_budget_bytes, cfg.kv_bytes_per_token, class0))
             .collect();
-        let ds = (0..cfg.n_d).map(|_| DState::new()).collect();
+        let ds = (0..cfg.n_d).map(|_| DState::new(class0)).collect();
         let gw_sse: Vec<SseRegistry> = (0..cfg.n_gateways.max(1))
             .map(|_| SseRegistry::new(0..cfg.n_p as u32))
             .collect();
@@ -620,7 +649,7 @@ impl Simulation {
         let rng = Rng::new(cfg.seed ^ 0xABCD);
         let spine_load = vec![0usize; cfg.n_spines];
         Simulation {
-            engine,
+            engines,
             q: EventQueue::new(),
             reqs: Vec::new(),
             ps,
@@ -752,7 +781,7 @@ impl Simulation {
             let arena = &mut self.prefix_arena;
             let idx = *self
                 .prefix_memo
-                .entry((req.scenario, req.prefix_id))
+                .entry(PrefixKey::new(req.scenario, req.prefix_id))
                 .or_insert_with(|| {
                     arena.push(sc.prefix_tokens(req.scenario, req.prefix_id, canon));
                     (arena.len() - 1) as u32
@@ -921,9 +950,17 @@ impl Simulation {
     /// entrance joins every gateway's SSE registry (`add_entrance` — the
     /// scale-out hook).
     pub fn add_prefill(&mut self) -> usize {
+        self.add_prefill_on(self.cfg.group_class)
+    }
+
+    /// `add_prefill` on an explicit hardware class (a cross-class
+    /// recovery spare or mixed scale-out). The index is clamped into the
+    /// engine catalog.
+    pub fn add_prefill_on(&mut self, class_idx: usize) -> usize {
         let p = self.ps.len();
+        let class = class_idx.min(self.engines.len() - 1);
         self.ps
-            .push(PState::new(self.cfg.prefix_budget_bytes, self.cfg.kv_bytes_per_token));
+            .push(PState::new(self.cfg.prefix_budget_bytes, self.cfg.kv_bytes_per_token, class));
         for gw in &mut self.gw_sse {
             gw.add_entrance(p as u32);
         }
@@ -1001,8 +1038,14 @@ impl Simulation {
 
     /// Register a new decode instance; parked transfers retry immediately.
     pub fn add_decode(&mut self) -> usize {
+        self.add_decode_on(self.cfg.group_class)
+    }
+
+    /// `add_decode` on an explicit hardware class (clamped into the
+    /// engine catalog).
+    pub fn add_decode_on(&mut self, class_idx: usize) -> usize {
         let d = self.ds.len();
-        self.ds.push(DState::new());
+        self.ds.push(DState::new(class_idx.min(self.engines.len() - 1)));
         self.report.n_decode += 1;
         self.retry_parked();
         d
@@ -1239,7 +1282,7 @@ impl Simulation {
             let salt = self.rng.next_u64();
             let decision = {
                 let Simulation {
-                    policy, forwarder, gw_sse, ps, reqs, engine, cfg, prefix_arena, ..
+                    policy, forwarder, gw_sse, ps, reqs, engines, cfg, prefix_arena, ..
                 } = &mut *self;
                 let bp = cfg.serving.prefill_batch;
                 forwarder.probe(
@@ -1249,7 +1292,7 @@ impl Simulation {
                     salt,
                     now,
                     deadline,
-                    |e| prefill_accepts(prefix_arena, ps, reqs, engine, bp, e as usize, id, now),
+                    |e| prefill_accepts(prefix_arena, ps, reqs, engines, bp, e as usize, id, now),
                 )
             };
             match decision {
@@ -1364,7 +1407,7 @@ impl Simulation {
             // the whole item vector per candidate made batch formation
             // O(batch²) allocations.
             items.push(cand_item);
-            let predicted = self.engine.prefill_batch_ms(&items);
+            let predicted = self.engines[self.ps[p].class].prefill_batch_ms(&items);
             let slack = (self.reqs[id as usize].deadline_ms - now).max(0.0);
             let new_min_slack = min_slack.min(slack);
             if predicted > new_min_slack * 0.95 && !batch.is_empty() {
@@ -1405,7 +1448,7 @@ impl Simulation {
             self.try_open_window(p);
             return;
         }
-        let dur = self.engine.prefill_batch_ms(&items);
+        let dur = self.engines[self.ps[p].class].prefill_batch_ms(&items);
         self.ps[p].busy = true;
         self.ps[p].busy_ms += dur;
         self.window.prefill_busy_ms += dur;
@@ -1575,7 +1618,7 @@ impl Simulation {
                 r.prompt_len + r.gen_len / 2
             })
             .collect();
-        let dur = self.engine.decode_iter_ms(&ctx);
+        let dur = self.engines[self.ds[d].class].decode_iter_ms(&ctx);
         self.window.decode_occ_ms +=
             dur * ctx.len() as f64 / self.cfg.serving.decode_batch.max(1) as f64;
         self.ds[d].iter_scheduled = true;

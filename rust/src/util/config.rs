@@ -643,6 +643,8 @@ pub struct ServingConfig {
     pub ttft_slo_ms_per_1k: f64,
     /// Absolute floor for the TTFT timeout threshold (ms).
     pub ttft_slo_floor_ms: f64,
+    /// TPOT SLO (ms between tokens) the goodput planner holds classes to.
+    pub tpot_slo_ms: f64,
     /// Max number of prefill candidates the gateway retries (top-ranked).
     pub retry_candidates: usize,
     /// Gateway re-poll interval while all prefills reject (ms).
@@ -665,6 +667,7 @@ impl Default for ServingConfig {
         ServingConfig {
             ttft_slo_ms_per_1k: 600.0,
             ttft_slo_floor_ms: 300.0,
+            tpot_slo_ms: 200.0,
             retry_candidates: 4,
             retry_interval_ms: 5.0,
             prefill_batch: 4,
@@ -682,6 +685,7 @@ impl ServingConfig {
         ServingConfig {
             ttft_slo_ms_per_1k: doc.f64_or("serving", "ttft_slo_ms_per_1k", d.ttft_slo_ms_per_1k),
             ttft_slo_floor_ms: doc.f64_or("serving", "ttft_slo_floor_ms", d.ttft_slo_floor_ms),
+            tpot_slo_ms: doc.f64_or("serving", "tpot_slo_ms", d.tpot_slo_ms),
             retry_candidates: doc.usize_or("serving", "retry_candidates", d.retry_candidates),
             retry_interval_ms: doc.f64_or("serving", "retry_interval_ms", d.retry_interval_ms),
             prefill_batch: doc.usize_or("serving", "prefill_batch", d.prefill_batch),

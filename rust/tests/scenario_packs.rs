@@ -22,10 +22,11 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use pd_serve::coordinator::mlops::PlannerKind;
 use pd_serve::serving::router::RouteKind;
 use pd_serve::serving::scenario::{
-    golden_diff_hint, AssertSpec, DaySpec, EngineOverride, FaultSpec, FleetSpec, ScenarioPack,
-    SceneSpec, ServingOverride, UpgradeSpec, ASSERT_METRICS,
+    golden_diff_hint, AssertSpec, DaySpec, EngineOverride, FaultSpec, FleetSpec, HardwareSpec,
+    ScenarioPack, SceneSpec, ServingOverride, UpgradeSpec, ASSERT_METRICS,
 };
 use pd_serve::serving::sim::TransferDiscipline;
 use pd_serve::util::prng::Rng;
@@ -58,6 +59,7 @@ fn pack_library_is_committed_and_complete() {
         "example",
         "flash_crowd",
         "mixed_day",
+        "mixed_generations",
         "region_failover",
     ] {
         assert!(
@@ -235,6 +237,7 @@ fn arb_pack(r: &mut Rng) -> ScenarioPack {
             adjust_ratio: r.below(2) == 0,
             scale_groups: r.below(2) == 0,
             headroom: r.uniform(1.0, 1.6),
+            planner: if r.below(2) == 0 { PlannerKind::Capacity } else { PlannerKind::Goodput },
         },
         engine: EngineOverride {
             prefill_per_token_ms: (r.below(2) == 0).then(|| r.uniform(0.05, 0.6)),
@@ -245,7 +248,24 @@ fn arb_pack(r: &mut Rng) -> ScenarioPack {
         serving: ServingOverride {
             ttft_slo_ms_per_1k: (r.below(2) == 0).then(|| r.uniform(300.0, 1200.0)),
             decode_batch: (r.below(2) == 0).then(|| 4 + r.below(28)),
+            tpot_slo_ms: (r.below(2) == 0).then(|| r.uniform(50.0, 400.0)),
             ..ServingOverride::default()
+        },
+        hardware: match r.below(3) {
+            // Homogeneous a third of the time; otherwise 2-3 classes.
+            0 => Vec::new(),
+            n => (0..n + 1)
+                .map(|i| HardwareSpec {
+                    name: format!("class{i}"),
+                    hbm_gb: (r.below(2) == 0).then(|| r.uniform(16.0, 96.0)),
+                    cost_per_hour: (r.below(2) == 0).then(|| r.uniform(0.3, 2.0)),
+                    engine: EngineOverride {
+                        prefill_per_token_ms: (r.below(2) == 0).then(|| r.uniform(0.05, 0.6)),
+                        decode_per_row_ms: (r.below(2) == 0).then(|| r.uniform(0.2, 2.0)),
+                        ..EngineOverride::default()
+                    },
+                })
+                .collect(),
         },
         scenes,
         faults: FaultSpec {
